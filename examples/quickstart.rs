@@ -1,0 +1,80 @@
+//! Quickstart: load an AOT artifact, evaluate, take one UNIQ training
+//! step, and inspect quantization complexity — in under a minute.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+use uniq::bops::{resnet_imagenet, BitConfig};
+use uniq::coordinator::Trainer;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::runtime::state::StepConfig;
+use uniq::runtime::Engine;
+
+fn main() -> Result<()> {
+    // 1. PJRT CPU engine + the small residual-net artifact
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let mut trainer =
+        Trainer::new(&engine, std::path::Path::new("artifacts/resnet8"))?;
+    let m = trainer.manifest.clone();
+    println!(
+        "loaded '{}': {} quantizable layers, {} parameters",
+        m.name,
+        m.n_qlayers(),
+        m.n_param_elems()
+    );
+
+    // 2. synthetic CIFAR-like data (drop CIFAR-10 .bin files under
+    //    data/cifar-10/ to use the real thing; see README)
+    let data = SynthDataset::generate(SynthConfig {
+        n: 256,
+        ..Default::default()
+    });
+    let (loss, acc) = trainer.evaluate(&data, 256.0, 0.0)?;
+    println!("untrained eval: loss {loss:.3}, top-1 {:.1}%", acc * 100.0);
+
+    // 3. one training step with UNIQ noise injection in every layer,
+    //    emulating 4-bit weight quantization (k = 16 levels)
+    let batch = Batcher::new(data.clone(), m.batch, true, 1).next_batch();
+    let cfg = StepConfig {
+        lr: 0.02,
+        k_w: 16.0,  // 2^4 levels
+        k_a: 256.0, // 2^8 levels
+        aq: 0.0,
+        seed: 42,
+        mode_vec: vec![1.0; m.n_qlayers()], // 1 = noise-inject
+        qthresh: None,
+    };
+    let (loss, acc) = trainer.step(&batch.x, &batch.y, &cfg)?;
+    println!("one UNIQ step:  loss {loss:.3}, batch acc {:.1}%", acc * 100.0);
+
+    // 4. freeze layer 0 at its exact 16-level k-quantile values
+    trainer.freeze_layer(
+        0,
+        uniq::coordinator::FreezeQuant::KQuantileGauss,
+        16,
+    )?;
+    let w = trainer.state.qlayer_weights(&m, 0).unwrap();
+    let mut lv: Vec<f32> = w.to_vec();
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup();
+    println!("layer 0 frozen: {} distinct weight values", lv.len());
+
+    // 5. what 4-bit weights buy at ImageNet scale (paper Table 1)
+    let arch = resnet_imagenet(18);
+    let fp = arch.complexity(BitConfig::baseline());
+    let q = arch.complexity(BitConfig::uniq(4, 8));
+    println!(
+        "ResNet-18 @ (4,8) bits: {:.0} -> {:.0} GBOPs ({:.1}x), \
+         {:.0} -> {:.0} Mbit ({:.1}x)",
+        fp.gbops(),
+        q.gbops(),
+        fp.gbops() / q.gbops(),
+        fp.mbit(),
+        q.mbit(),
+        fp.mbit() / q.mbit()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

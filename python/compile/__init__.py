@@ -1,0 +1,1 @@
+"""UNIQ compile path: L1 Pallas kernels + L2 JAX models + AOT lowering."""

@@ -1,0 +1,261 @@
+"""AOT pipeline: lower every model variant ONCE to HLO text + manifest.
+
+Per variant, emits under artifacts/<variant>/:
+  train_step.hlo.txt   forward + backward + SGD update, UNIQ in-graph
+  eval_step.hlo.txt    forward only (host-quantized weights)
+  manifest.json        ordered input/output specs + param/state metadata
+  init.bin             initial parameters and state (He init), f32 LE
+
+Plus artifacts/golden/: cross-language test vectors the rust test suite
+asserts against (quantizers, normal CDF/ICDF, Lloyd-Max centroids).
+
+Python runs only here — never on the request path. `make artifacts` skips
+the work when inputs are unchanged (mtime-based, see Makefile).
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import normal_cdf, normal_icdf
+from .lowering import lower_to_text
+from .model import KMAX, VARIANTS, make_steps
+
+INIT_SEED = 20180201  # fixed: init.bin is part of the artifact contract
+
+
+def init_array(meta, rng):
+    kind = meta["init"][0]
+    shape = meta["shape"]
+    if kind == "he_normal":
+        fan_in = meta["init"][1]
+        return rng.normal(0.0, np.sqrt(2.0 / fan_in), shape).astype(np.float32)
+    if kind == "zeros":
+        return np.zeros(shape, np.float32)
+    if kind == "ones":
+        return np.ones(shape, np.float32)
+    raise ValueError(f"unknown init {kind}")
+
+
+def spec_entry(name, kind, shape, dtype="f32", **extra):
+    d = dict(name=name, kind=kind, shape=list(shape), dtype=dtype)
+    d.update(extra)
+    return d
+
+
+def build_variant(name, cfg, out_root):
+    b, apply_fn = cfg["build"]()
+    noise_cfg = cfg["noise_cfg"]
+    batch, classes, image = cfg["batch"], cfg["classes"], cfg["image"]
+    train_step, eval_step = make_steps(b, apply_fn, noise_cfg=noise_cfg)
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    n_layers = len(b.qlayers)
+
+    p_specs = [sds(m["shape"], f32) for m in b.params]
+    s_specs = [sds(m["shape"], f32) for m in b.state]
+    x_spec = sds((batch,) + tuple(image), f32)
+    y_spec = sds((batch,), i32)
+    scalar = sds((), f32)
+
+    train_in = (p_specs + p_specs + s_specs +
+                [x_spec, y_spec, scalar, scalar, scalar, scalar,
+                 sds((), i32), sds((n_layers,), f32)])
+    if noise_cfg == "generic":
+        train_in.append(sds((KMAX + 1,), f32))
+    eval_in = p_specs + s_specs + [x_spec, y_spec, scalar, scalar]
+
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    print(f"[{name}] lowering train_step ({len(train_in)} inputs)...",
+          flush=True)
+    train_hlo = lower_to_text(train_step, *train_in)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+    print(f"[{name}] train_step: {len(train_hlo)} chars", flush=True)
+
+    print(f"[{name}] lowering eval_step...", flush=True)
+    eval_hlo = lower_to_text(eval_step, *eval_in)
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(eval_hlo)
+    print(f"[{name}] eval_step: {len(eval_hlo)} chars", flush=True)
+
+    # --- init blob: params then state, f32 little-endian, manifest order
+    rng = np.random.default_rng(INIT_SEED)
+    offset = 0
+    blob = []
+    for m in b.params + b.state:
+        arr = init_array(m, rng)
+        m["offset"] = offset
+        m["size"] = arr.size
+        offset += arr.size
+        blob.append(arr.reshape(-1))
+    with open(os.path.join(out_dir, "init.bin"), "wb") as f:
+        f.write(np.concatenate(blob).astype("<f4").tobytes())
+
+    # --- manifest
+    train_inputs = (
+        [spec_entry(m["name"], "param", m["shape"]) for m in b.params] +
+        [spec_entry(m["name"], "momentum", m["shape"]) for m in b.params] +
+        [spec_entry(m["name"], "state", m["shape"]) for m in b.state] +
+        [spec_entry("x", "x", (batch,) + tuple(image)),
+         spec_entry("y", "y", (batch,), dtype="i32"),
+         spec_entry("lr", "lr", ()),
+         spec_entry("k_w", "k_w", ()),
+         spec_entry("k_a", "k_a", ()),
+         spec_entry("aq", "aq", ()),
+         spec_entry("seed", "seed", (), dtype="i32"),
+         spec_entry("mode_vec", "mode_vec", (n_layers,))])
+    if noise_cfg == "generic":
+        train_inputs.append(spec_entry("qthresh", "qthresh", (KMAX + 1,)))
+    train_outputs = (
+        [spec_entry(m["name"], "param", m["shape"]) for m in b.params] +
+        [spec_entry(m["name"], "momentum", m["shape"]) for m in b.params] +
+        [spec_entry(m["name"], "state", m["shape"]) for m in b.state] +
+        [spec_entry("loss", "loss", ()), spec_entry("acc", "acc", ())])
+    eval_inputs = (
+        [spec_entry(m["name"], "param", m["shape"]) for m in b.params] +
+        [spec_entry(m["name"], "state", m["shape"]) for m in b.state] +
+        [spec_entry("x", "x", (batch,) + tuple(image)),
+         spec_entry("y", "y", (batch,), dtype="i32"),
+         spec_entry("k_a", "k_a", ()),
+         spec_entry("aq", "aq", ())])
+    eval_outputs = [spec_entry("loss", "loss", ()),
+                    spec_entry("acc", "acc", ())]
+
+    manifest = dict(
+        name=name,
+        batch=batch,
+        image=list(image),
+        classes=classes,
+        noise_cfg=noise_cfg,
+        kmax=KMAX,
+        qlayers=b.qlayers,
+        params=[dict(name=m["name"], shape=list(m["shape"]),
+                     qlayer=m["qlayer"], wd=m["wd"], offset=m["offset"],
+                     size=m["size"]) for m in b.params],
+        state=[dict(name=m["name"], shape=list(m["shape"]),
+                    offset=m["offset"], size=m["size"]) for m in b.state],
+        train_inputs=train_inputs,
+        train_outputs=train_outputs,
+        eval_inputs=eval_inputs,
+        eval_outputs=eval_outputs,
+    )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{name}] done: {len(b.params)} params, {len(b.state)} state, "
+          f"{n_layers} quantizable layers", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for the rust test suite
+# ---------------------------------------------------------------------------
+
+def _norm_ppf(u):
+    return np.asarray(normal_icdf(jnp.asarray(u, jnp.float32)))
+
+
+def lloyd_max_n01(k, iters=500):
+    xs = np.linspace(-6, 6, 200001)
+    pdf = np.exp(-0.5 * xs * xs)
+    pdf /= pdf.sum()
+    centroids = _norm_ppf((np.arange(k) + 0.5) / k).astype(np.float64)
+    for _ in range(iters):
+        thresh = 0.5 * (centroids[1:] + centroids[:-1])
+        idx = np.searchsorted(thresh, xs)
+        new = np.array([
+            (xs[idx == i] * pdf[idx == i]).sum() / max(pdf[idx == i].sum(),
+                                                       1e-30)
+            for i in range(k)])
+        if np.max(np.abs(new - centroids)) < 1e-10:
+            centroids = new
+            break
+        centroids = new
+    thresh = 0.5 * (centroids[1:] + centroids[:-1])
+    return centroids, thresh
+
+
+def write_golden(out_root):
+    gdir = os.path.join(out_root, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    meta = {}
+
+    def dump(name, arr):
+        arr = np.asarray(arr, dtype=np.float32)
+        with open(os.path.join(gdir, name + ".bin"), "wb") as f:
+            f.write(arr.astype("<f4").tobytes())
+        meta[name] = dict(size=int(arr.size))
+
+    # normal cdf/icdf grids (rust stats/ must match within 2e-6)
+    zs = np.linspace(-4.0, 4.0, 1001).astype(np.float32)
+    dump("norm_z", zs)
+    dump("norm_cdf", np.asarray(normal_cdf(jnp.asarray(zs))))
+    us = np.linspace(0.001, 0.999, 999).astype(np.float32)
+    dump("norm_u", us)
+    dump("norm_icdf", np.asarray(normal_icdf(jnp.asarray(us))))
+
+    # Gaussian k-quantile quantizer on a fixed vector (k = 4, 8, 16)
+    rng = np.random.default_rng(7)
+    x = rng.normal(0.1, 0.7, 512).astype(np.float32)
+    dump("kq_input", x)
+    from .kernels.ref import fake_quant_ref
+    for k in (4, 8, 16):
+        out = np.asarray(fake_quant_ref(jnp.asarray(x), 0.1, 0.7, float(k)))
+        dump(f"kq_gauss_k{k}", out)
+
+    # empirical k-quantile quantizer (thresholds = empirical quantiles,
+    # level = bin median), same vector, k = 8
+    for k in (4, 8):
+        qs = np.quantile(x, np.arange(1, k) / k)
+        idx = np.searchsorted(qs, x, side="right")
+        levels = np.array([np.median(x[idx == i]) if (idx == i).any() else 0.0
+                           for i in range(k)])
+        dump(f"kq_emp_k{k}", levels[idx].astype(np.float32))
+        dump(f"kq_emp_k{k}_thresh", qs.astype(np.float32))
+        dump(f"kq_emp_k{k}_levels", levels.astype(np.float32))
+
+    # Lloyd-Max on N(0,1): centroids + thresholds, k = 4, 8
+    for k in (4, 8):
+        c, t = lloyd_max_n01(k)
+        dump(f"lloyd_n01_k{k}_centroids", c)
+        dump(f"lloyd_n01_k{k}_thresh", t)
+
+    # uniform [-3, 3] sigma thresholds in the uniformized domain, k = 8
+    k = 8
+    t_real = np.linspace(-3.0, 3.0, k + 1)[1:-1]
+    u_t = np.asarray(normal_cdf(jnp.asarray(t_real, jnp.float32)))
+    dump("uniform_k8_uthresh", u_t)
+
+    with open(os.path.join(gdir, "golden.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[golden] wrote {len(meta)} vectors", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of variants to build")
+    args = ap.parse_args()
+    out_root = args.out
+    os.makedirs(out_root, exist_ok=True)
+    write_golden(out_root)
+    names = args.only if args.only else list(VARIANTS)
+    for name in names:
+        build_variant(name, VARIANTS[name], out_root)
+    # build stamp consumed by the Makefile
+    with open(os.path.join(out_root, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Shared numeric helpers for the UNIQ compile path (L1 + L2).
+
+Everything here must lower to plain HLO ops (xla_extension 0.5.1 CPU):
+`erf` and `erf_inv` are the only special functions used; both are expanded
+by XLA/StableHLO into polynomial approximations.
+"""
+
+import jax.numpy as jnp
+
+# Clamp for the uniformized variable: keeps Phi^-1 finite. 2**-20 keeps the
+# de-uniformized value within ~4.8 sigma, far outside any k <= 256 bin
+# center, so it never perturbs a representation level.
+UNIF_EPS = 2.0**-20
+
+# Guard for degenerate (constant) weight tensors.
+SIGMA_EPS = 1e-8
+
+_SQRT2 = 1.4142135623730951
+
+# NOTE on erf/erf_inv: jax's lax.erf/lax.erf_inv lower to the first-class
+# `erf`/`erf-inv` HLO opcodes of modern XLA, which the 0.5.1 HLO text
+# parser behind the `xla` 0.1.6 crate rejects ("Unknown opcode: erf").
+# We therefore expand both into polynomial approximations built from
+# classic opcodes (exp/log/sqrt/select) — exactly what a TPU VPU kernel
+# does anyway. Accuracy: erf ~1.5e-7 abs (Abramowitz-Stegun 7.1.26),
+# erf_inv ~1e-6 rel (Giles 2010 single-precision branch).
+
+
+def erf(x):
+    """Abramowitz & Stegun 7.1.26 rational approximation (f32-accurate)."""
+    a1, a2, a3 = 0.254829592, -0.284496736, 1.421413741
+    a4, a5, p = -1.453152027, 1.061405429, 0.3275911
+    s = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    y = 1.0 - ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t * jnp.exp(
+        -ax * ax)
+    return s * y
+
+
+def erf_inv(y):
+    """Giles (2010) 'approximating the erfinv function', single-precision
+    central branch + tail branch."""
+    y = jnp.clip(y, -1.0 + 1e-7, 1.0 - 1e-7)
+    w = -jnp.log((1.0 - y) * (1.0 + y))
+
+    # central region: w < 5
+    wc = w - 2.5
+    pc = 2.81022636e-08
+    pc = 3.43273939e-07 + pc * wc
+    pc = -3.5233877e-06 + pc * wc
+    pc = -4.39150654e-06 + pc * wc
+    pc = 0.00021858087 + pc * wc
+    pc = -0.00125372503 + pc * wc
+    pc = -0.00417768164 + pc * wc
+    pc = 0.246640727 + pc * wc
+    pc = 1.50140941 + pc * wc
+
+    # tail region: w >= 5
+    wt = jnp.sqrt(jnp.maximum(w, 5.0)) - 3.0
+    pt = -0.000200214257
+    pt = 0.000100950558 + pt * wt
+    pt = 0.00134934322 + pt * wt
+    pt = -0.00367342844 + pt * wt
+    pt = 0.00573950773 + pt * wt
+    pt = -0.0076224613 + pt * wt
+    pt = 0.00943887047 + pt * wt
+    pt = 1.00167406 + pt * wt
+    pt = 2.83297682 + pt * wt
+
+    return jnp.where(w < 5.0, pc, pt) * y
+
+
+def normal_cdf(z):
+    """Standard normal CDF Phi(z) via erf."""
+    return 0.5 * (1.0 + erf(z / _SQRT2))
+
+
+def normal_icdf(u):
+    """Standard normal quantile Phi^-1(u) via erf_inv."""
+    return _SQRT2 * erf_inv(2.0 * u - 1.0)
+
+
+def tensor_stats(w):
+    """Per-tensor (mu, sigma) used to Gaussian-uniformize a weight tensor.
+
+    The paper (S3.1) estimates mu, sigma per layer and uses the normal
+    CDF/quantile for the uniformization trick; Fig C.1 justifies the
+    Gaussian assumption (Shapiro-Wilk W > 0.82 on all ResNet-18 layers).
+    """
+    mu = jnp.mean(w)
+    sigma = jnp.std(w) + SIGMA_EPS
+    return mu, sigma
+
+
+def pad_to_2d(x, lanes=128):
+    """Flatten `x` and pad into a (rows, lanes) tile.
+
+    TPU VPU lanes are 128 wide; Pallas kernels in this repo operate on the
+    flattened-and-padded view and the wrapper reshapes back. Returns
+    (tiled, n) where n is the original element count.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // lanes)
+    padded = jnp.pad(flat, (0, rows * lanes - n))
+    return padded.reshape(rows, lanes), n
+
+
+def unpad_from_2d(tiled, n, shape):
+    return tiled.reshape(-1)[:n].reshape(shape)

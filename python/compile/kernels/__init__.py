@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the UNIQ hot-spots + pure-jnp oracles."""
+
+from .fake_quant import fake_quant, fake_quant_raw
+from .matmul import matmul
+from .uniq_noise import uniq_noise
+
+__all__ = ["fake_quant", "fake_quant_raw", "matmul", "uniq_noise"]

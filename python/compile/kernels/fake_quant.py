@@ -1,0 +1,76 @@
+"""Pallas kernel: deterministic Gaussian k-quantile fake-quantization.
+
+Inference-time emulation of the paper's k-quantile quantizer (S3.1) used
+in-graph for (a) activations of quantized-frozen layers during gradual
+training and (b) global activation quantization at eval. Same streaming
+(BLOCK_ROWS, 128) tiling story as uniq_noise.py.
+
+The public wrapper exposes a straight-through gradient: floor() is zero-
+gradient a.e., which would sever the loss -> earlier-block path during
+iteration >= 2 of the gradual schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import UNIF_EPS, normal_cdf, normal_icdf, pad_to_2d, unpad_from_2d
+
+BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, mu_ref, sigma_ref, k_ref, o_ref):
+    mu = mu_ref[0, 0]
+    sigma = sigma_ref[0, 0]
+    k = k_ref[0, 0]
+    x = x_ref[...]
+    u = normal_cdf((x - mu) / sigma)
+    idx = jnp.clip(jnp.floor(u * k), 0.0, k - 1.0)
+    u_hat = jnp.clip((idx + 0.5) / k, UNIF_EPS, 1.0 - UNIF_EPS)
+    o_ref[...] = mu + sigma * normal_icdf(u_hat)
+
+
+def fake_quant_raw(x, mu, sigma, k):
+    """k-quantile quantize `x` (any shape); no gradient correction."""
+    orig_shape = x.shape
+    x2, n = pad_to_2d(x)
+    rows = x2.shape[0]
+    block_rows = min(BLOCK_ROWS, rows)
+    grid = (-(-rows // block_rows),)
+
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    block = pl.BlockSpec((block_rows, 128), lambda i: (i, 0))
+    rep = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[block, rep, rep, rep],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2, scalar(mu), scalar(sigma), scalar(k))
+    return unpad_from_2d(out, n, orig_shape)
+
+
+@jax.custom_vjp
+def fake_quant(x, mu, sigma, k):
+    """k-quantile quantize with straight-through estimator gradient.
+
+    custom_vjp rather than the stop_gradient trick: pallas_call aborts
+    linearization even inside stop_gradient, so the STE must bypass the
+    kernel entirely on the backward path.
+    """
+    return fake_quant_raw(x, mu, sigma, k)
+
+
+def _fq_fwd(x, mu, sigma, k):
+    return fake_quant_raw(x, mu, sigma, k), None
+
+
+def _fq_bwd(_, g):
+    # Straight-through: identity to x, nothing to mu/sigma/k.
+    return g, None, None, None
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

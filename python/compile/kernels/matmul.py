@@ -1,0 +1,87 @@
+"""Pallas kernel: MXU-oriented blocked matmul (classifier head / MLP).
+
+Canonical TPU schedule: C[bm, bn] accumulates over a K-loop carried as the
+innermost grid dimension; A and B stream (bm, bk) / (bk, bn) tiles through
+VMEM while the partial product stays resident in the output block. fp32
+accumulation (preferred_element_type) matches MXU behaviour.
+
+interpret=True (CPU PJRT cannot run Mosaic); the static grid unrolls at
+trace time so default blocks are sized for the small matrices in this repo.
+VMEM budget at (bm, bn, bk) = (128, 128, 128), f32: 3 tiles x 64 KiB =
+192 KiB — comfortably inside the ~16 MiB/core VMEM of a modern TPU, leaving
+room for double-buffering (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad_dim(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """C = A @ B with A: (M, K), B: (K, N), f32 accumulation.
+
+    Differentiable: the backward pass is itself two blocked Pallas matmuls
+    (dA = g @ B^T, dB = A^T @ g) — pallas_call defines no AD rule.
+    """
+    return matmul_raw(a, b)
+
+
+def matmul_raw(a, b, bm=128, bn=128, bk=128):
+    """C = A @ B with A: (M, K), B: (K, N), f32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    a_p = _pad_dim(_pad_dim(a.astype(jnp.float32), 0, bm), 1, bk)
+    b_p = _pad_dim(_pad_dim(b.astype(jnp.float32), 0, bk), 1, bn)
+    grid = (a_p.shape[0] // bm, b_p.shape[1] // bn, a_p.shape[1] // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]),
+                                       jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _matmul_fwd(a, b):
+    return matmul_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul_raw(g, b.T), matmul_raw(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

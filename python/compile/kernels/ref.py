@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match its oracle to float32 tolerance for all shapes/dtypes
+the hypothesis sweep generates (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..common import UNIF_EPS, normal_cdf, normal_icdf  # polynomial erf path
+
+
+def uniq_noise_ref(w, noise_u, mu, sigma, k):
+    """UNIQ training-time transform (paper S3.2, uniformization trick).
+
+    w       : weight tensor (any shape)
+    noise_u : U[0,1) tensor, same shape as w
+    mu,sigma: scalars, the layer's Gaussian fit
+    k       : number of quantization levels (scalar, may be traced)
+
+    u  = Phi((w - mu)/sigma)
+    e  = (noise_u - 1/2)/k            ~ U[-1/2k, 1/2k]
+    w^ = mu + sigma * Phi^-1(clip(u + e))
+    """
+    u = normal_cdf((w - mu) / sigma)
+    e = (noise_u - 0.5) / k
+    u_hat = jnp.clip(u + e, UNIF_EPS, 1.0 - UNIF_EPS)
+    return mu + sigma * normal_icdf(u_hat)
+
+
+def fake_quant_ref(x, mu, sigma, k):
+    """Deterministic Gaussian k-quantile quantizer (paper S3.1).
+
+    Uniformize, snap to the k equiprobable bin centers (i - 1/2)/k —
+    which de-uniformize to the bin medians q_i = F^-1((i - 1/2)/k) —
+    and de-uniformize.
+    """
+    u = normal_cdf((x - mu) / sigma)
+    idx = jnp.clip(jnp.floor(u * k), 0.0, k - 1.0)
+    u_hat = (idx + 0.5) / k
+    return mu + sigma * normal_icdf(jnp.clip(u_hat, UNIF_EPS, 1.0 - UNIF_EPS))
+
+
+def fake_quant_ste_ref(x, mu, sigma, k):
+    """fake_quant with a straight-through gradient (identity backward).
+
+    Needed when quantized-frozen layers sit *downstream* of the block being
+    trained (gradual-quantization iteration >= 2): floor() has zero gradient
+    a.e., which would cut the path from the loss to earlier blocks.
+    """
+    return x + lax.stop_gradient(fake_quant_ref(x, mu, sigma, k) - x)
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle for the Pallas blocked kernel."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

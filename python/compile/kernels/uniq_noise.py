@@ -1,0 +1,88 @@
+"""Pallas kernel: UNIQ uniformize -> uniform-noise -> de-uniformize.
+
+The paper's training-time hot-spot (S3.2). Elementwise and bandwidth-bound,
+so the TPU design target is streaming: the flattened tensor is tiled into
+(BLOCK_ROWS, 128) VMEM blocks (128 = VPU lane width) and processed in a
+single pass with a 1-D grid; mu/sigma/k ride along as (1,1) SMEM-like
+scalars replicated to every grid step.
+
+interpret=True is mandatory on this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Under interpret mode the
+static grid unrolls at trace time, so BLOCK_ROWS is chosen to keep the
+number of blocks small for the tensor sizes in this repo while still being
+a realistic VMEM tile (64 rows x 128 lanes x 4 B = 32 KiB/operand).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import UNIF_EPS, normal_cdf, normal_icdf, pad_to_2d, unpad_from_2d
+
+BLOCK_ROWS = 64
+
+
+def _kernel(w_ref, noise_ref, mu_ref, sigma_ref, k_ref, o_ref):
+    mu = mu_ref[0, 0]
+    sigma = sigma_ref[0, 0]
+    k = k_ref[0, 0]
+    w = w_ref[...]
+    # uniformize: u = Phi((w - mu) / sigma)
+    u = normal_cdf((w - mu) / sigma)
+    # inject U[-1/2k, 1/2k] noise in the uniform domain
+    u = u + (noise_ref[...] - 0.5) / k
+    u = jnp.clip(u, UNIF_EPS, 1.0 - UNIF_EPS)
+    # de-uniformize: w^ = mu + sigma * Phi^-1(u)
+    o_ref[...] = mu + sigma * normal_icdf(u)
+
+
+@jax.custom_vjp
+def uniq_noise(w, noise_u, mu, sigma, k):
+    """Apply the UNIQ noise transform to tensor `w` (any shape).
+
+    noise_u: U[0,1) tensor shaped like w; mu/sigma/k: scalars (traced ok).
+
+    Differentiable: pallas_call has no reverse-mode rule (even under
+    interpret=True), so the VJP is supplied analytically through the
+    pure-jnp oracle — mathematically the same function, and the paper's
+    training scheme (S3.2) differentiates through exactly this transform.
+    """
+    return _uniq_noise_fwd_impl(w, noise_u, mu, sigma, k)
+
+
+def _uniq_noise_fwd_impl(w, noise_u, mu, sigma, k):
+    orig_shape = w.shape
+    w2, n = pad_to_2d(w)
+    noise2, _ = pad_to_2d(noise_u)
+    rows = w2.shape[0]
+    block_rows = min(BLOCK_ROWS, rows)
+    grid = (-(-rows // block_rows),)
+
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    block = pl.BlockSpec((block_rows, 128), lambda i: (i, 0))
+    rep = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[block, block, rep, rep, rep],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct(w2.shape, jnp.float32),
+        interpret=True,
+    )(w2, noise2, scalar(mu), scalar(sigma), scalar(k))
+    return unpad_from_2d(out, n, orig_shape)
+
+
+def _uniq_noise_vjp_fwd(w, noise_u, mu, sigma, k):
+    return _uniq_noise_fwd_impl(w, noise_u, mu, sigma, k), (w, noise_u, mu,
+                                                            sigma, k)
+
+
+def _uniq_noise_vjp_bwd(res, g):
+    from .ref import uniq_noise_ref
+    w, noise_u, mu, sigma, k = res
+    _, vjp = jax.vjp(uniq_noise_ref, w, noise_u, mu, sigma, k)
+    return vjp(g)
+
+
+uniq_noise.defvjp(_uniq_noise_vjp_fwd, _uniq_noise_vjp_bwd)

@@ -1,0 +1,182 @@
+"""L2 layer framework: parameter registry + UNIQ-aware layers.
+
+Models are built functionally: a `Builder` collects parameter/state
+declarations in construction order (this order IS the artifact/manifest
+order the rust coordinator relies on), and layer constructors return
+`apply(ctx, x)` closures. `Ctx` carries the flat parameter list plus the
+runtime scalars that make a single compiled train-step serve every
+bitwidth and every gradual-quantization stage:
+
+  mode_vec[i] per quantizable layer i: 0 = full precision,
+                                       1 = noise-injection (UNIQ training),
+                                       2 = frozen at host-quantized values
+  k_w / k_a : quantization levels for weights / activations (f32 scalars)
+  aq        : global activation-quantization flag (eval of (w,a) configs)
+
+Frozen layers' weights are replaced host-side (rust, exact k-quantile) —
+in-graph they are used as-is and masked out of the SGD update; their
+activations are fake-quantized in-graph (paper S3.3/S3.4).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import UNIF_EPS, normal_cdf, normal_icdf, tensor_stats
+from .kernels import fake_quant, matmul, uniq_noise
+
+
+class Builder:
+    """Collects params, state and quantizable-layer registry."""
+
+    def __init__(self):
+        self.params = []   # dicts: name, shape, init, qlayer, wd
+        self.state = []    # dicts: name, shape, init
+        self.qlayers = []  # names, in topological order
+
+    def add_param(self, name, shape, init, qlayer=None, wd=False):
+        self.params.append(dict(name=name, shape=tuple(shape), init=init,
+                                qlayer=qlayer, wd=wd))
+        return len(self.params) - 1
+
+    def add_state(self, name, shape, init):
+        self.state.append(dict(name=name, shape=tuple(shape), init=init))
+        return len(self.state) - 1
+
+    def add_qlayer(self, name):
+        self.qlayers.append(name)
+        return len(self.qlayers) - 1
+
+
+class Ctx:
+    """Per-application context threaded through the layer closures."""
+
+    def __init__(self, params, state_in, *, train, k_w=None, k_a=None,
+                 aq=None, mode_vec=None, key=None, noise_cfg="quantile",
+                 qthresh=None):
+        self.params = params
+        self.state_in = list(state_in)
+        self.state_out = list(state_in)
+        self.train = train
+        self.k_w = k_w
+        self.k_a = k_a
+        self.aq = aq
+        self.mode_vec = mode_vec
+        self.key = key
+        self.noise_cfg = noise_cfg
+        self.qthresh = qthresh
+
+    def param(self, idx):
+        return self.params[idx]
+
+
+def generic_noise(w, noise_u, mu, sigma, uthresh, kmax):
+    """Noise injection for a *generic* (non-equiprobable) quantizer.
+
+    `uthresh`: f32[kmax+1] quantizer thresholds translated to the
+    uniformized domain (0 = t_0 < t_1 < ... <= 1), padded with 1.0 past the
+    active k. Bin widths differ, so each weight first needs its bin index —
+    the extra search the paper blames for the ~2.4x slower training of the
+    k-means/uniform ablations (Table 3).
+    """
+    u = normal_cdf((w - mu) / sigma)
+    # count interior thresholds <= u  ->  bin index in [0, kmax-1]
+    idx = jnp.sum(u[..., None] >= uthresh[1:kmax], axis=-1)
+    lo = uthresh[idx]
+    hi = uthresh[idx + 1]
+    e = (noise_u - 0.5) * (hi - lo)
+    u_hat = jnp.clip(u + e, UNIF_EPS, 1.0 - UNIF_EPS)
+    return mu + sigma * normal_icdf(u_hat)
+
+
+def quant_weight(ctx, w, qidx):
+    """Training-time weight transform for quantizable layer `qidx`."""
+    if not ctx.train or qidx is None:
+        return w  # eval path: rust supplies already-quantized weights
+    mode = ctx.mode_vec[qidx]
+    mu, sigma = tensor_stats(w)
+    noise = jax.random.uniform(jax.random.fold_in(ctx.key, qidx), w.shape)
+    if ctx.noise_cfg == "quantile":
+        w_noise = uniq_noise(w, noise, mu, sigma, ctx.k_w)
+    else:
+        w_noise = generic_noise(w, noise, mu, sigma, ctx.qthresh,
+                                ctx.qthresh.shape[0] - 1)
+    inject = jnp.logical_and(mode > 0.5, mode < 1.5)
+    return jnp.where(inject, w_noise, w)
+
+
+def act_quant(ctx, x, qidx):
+    """Activation quantization after layer `qidx` (paper S3.4).
+
+    Applied when the producing layer is frozen (mode==2, gradual schedule)
+    or when the global eval flag `aq` is set.
+    """
+    if qidx is None:
+        return x
+    mu, sigma = tensor_stats(x)
+    xq = fake_quant(x, mu, sigma, ctx.k_a)
+    do = ctx.aq > 0.5
+    if ctx.train:
+        do = jnp.logical_or(do, ctx.mode_vec[qidx] > 1.5)
+    return jnp.where(do, xq, x)
+
+
+def conv2d(b, name, cin, cout, ksize, stride=1, quant=True):
+    """3x3/1x1 conv, He-normal init, NHWC/HWIO, SAME padding."""
+    qidx = b.add_qlayer(name) if quant else None
+    fan_in = ksize * ksize * cin
+    wi = b.add_param(f"{name}/w", (ksize, ksize, cin, cout),
+                     ("he_normal", fan_in), qlayer=qidx, wd=True)
+
+    def apply(ctx, x):
+        w = quant_weight(ctx, ctx.param(wi), qidx)
+        y = lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y
+
+    apply.qidx = qidx
+    return apply
+
+
+def batchnorm(b, name, c, momentum=0.9):
+    gi = b.add_param(f"{name}/gamma", (c,), ("ones",))
+    bi = b.add_param(f"{name}/beta", (c,), ("zeros",))
+    mi = b.add_state(f"{name}/mean", (c,), ("zeros",))
+    vi = b.add_state(f"{name}/var", (c,), ("ones",))
+
+    def apply(ctx, x):
+        gamma, beta = ctx.param(gi), ctx.param(bi)
+        if ctx.train:
+            mu = jnp.mean(x, axis=(0, 1, 2))
+            var = jnp.var(x, axis=(0, 1, 2))
+            # running stats updated outside the gradient path
+            ctx.state_out[mi] = lax.stop_gradient(
+                momentum * ctx.state_in[mi] + (1 - momentum) * mu)
+            ctx.state_out[vi] = lax.stop_gradient(
+                momentum * ctx.state_in[vi] + (1 - momentum) * var)
+        else:
+            mu, var = ctx.state_in[mi], ctx.state_in[vi]
+        inv = lax.rsqrt(var + 1e-5)
+        return gamma * (x - mu) * inv + beta
+
+    return apply
+
+
+def dense(b, name, cin, cout, quant=True):
+    """Fully connected layer on the Pallas blocked-matmul kernel."""
+    qidx = b.add_qlayer(name) if quant else None
+    wi = b.add_param(f"{name}/w", (cin, cout), ("he_normal", cin),
+                     qlayer=qidx, wd=True)
+    bi = b.add_param(f"{name}/b", (cout,), ("zeros",))
+
+    def apply(ctx, x):
+        w = quant_weight(ctx, ctx.param(wi), qidx)
+        return matmul(x, w) + ctx.param(bi)
+
+    apply.qidx = qidx
+    return apply
+
+
+def global_avg_pool(ctx, x):
+    return jnp.mean(x, axis=(1, 2))

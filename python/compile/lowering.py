@@ -1,0 +1,30 @@
+"""jax -> HLO-text lowering (the AOT interchange format).
+
+HLO *text*, NOT `lowered.compile().serialize()` or a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published `xla` 0.1.6 crate)
+rejects with `proto.id() <= INT_MAX`. The HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True calling
+    convention: rust unwraps the result tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_text(fn, *specs) -> str:
+    """jit-lower `fn` at the given ShapeDtypeStructs and emit HLO text.
+
+    keep_unused=True: jit prunes unused arguments by default, which would
+    silently break the manifest's positional input contract (e.g. k_w is
+    unused on the generic-quantizer path)."""
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))

@@ -1,0 +1,23 @@
+"""MLP smoke model: exercises the Pallas matmul kernel end to end."""
+
+import jax.numpy as jnp
+
+from .layers import Builder, act_quant, dense
+
+
+def mlp(hidden=256, classes=10, image=(32, 32, 3)):
+    b = Builder()
+    d_in = image[0] * image[1] * image[2]
+    fc1 = dense(b, "fc1", d_in, hidden)
+    fc2 = dense(b, "fc2", hidden, hidden)
+    fc3 = dense(b, "fc3", hidden, classes)
+
+    def apply(ctx, x):
+        y = x.reshape(x.shape[0], -1)
+        y = jnp.maximum(fc1(ctx, y), 0.0)
+        y = act_quant(ctx, y, fc1.qidx)
+        y = jnp.maximum(fc2(ctx, y), 0.0)
+        y = act_quant(ctx, y, fc2.qidx)
+        return fc3(ctx, y)
+
+    return b, apply

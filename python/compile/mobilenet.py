@@ -1,0 +1,78 @@
+"""MobileNet-mini: depthwise-separable CNN for 32x32 inputs.
+
+Stands in for the paper's MobileNet (Howard et al. 2017) — the harder-to-
+quantize low-redundancy architecture class. Depthwise and pointwise convs
+are *separate quantizable layers*, matching the paper's per-layer gradual
+schedule (it injects noise into 2 consecutive layers per stage for
+MobileNet precisely because dw/pw pairs are thin).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import (Builder, act_quant, batchnorm, conv2d, dense,
+                     global_avg_pool, quant_weight)
+
+
+def depthwise_conv(b, name, c, stride=1):
+    """3x3 depthwise conv (one filter per channel), quantizable."""
+    qidx = b.add_qlayer(name)
+    wi = b.add_param(f"{name}/w", (3, 3, 1, c), ("he_normal", 9),
+                     qlayer=qidx, wd=True)
+
+    def apply(ctx, x):
+        w = quant_weight(ctx, ctx.param(wi), qidx)
+        return lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+
+    apply.qidx = qidx
+    return apply
+
+
+def _ds_block(b, name, cin, cout, stride):
+    dw = depthwise_conv(b, f"{name}/dw", cin, stride)
+    bn_dw = batchnorm(b, f"{name}/bn_dw", cin)
+    pw = conv2d(b, f"{name}/pw", cin, cout, 1, 1)
+    bn_pw = batchnorm(b, f"{name}/bn_pw", cout)
+
+    def apply(ctx, x):
+        y = dw(ctx, x)
+        y = bn_dw(ctx, y)
+        y = jnp.maximum(y, 0.0)
+        y = act_quant(ctx, y, dw.qidx)
+        y = pw(ctx, y)
+        y = bn_pw(ctx, y)
+        y = jnp.maximum(y, 0.0)
+        y = act_quant(ctx, y, pw.qidx)
+        return y
+
+    return apply
+
+
+def mobilenet_mini(width=16, classes=10):
+    """conv + 6 depthwise-separable blocks + fc: 14 quantizable layers."""
+    b = Builder()
+    conv1 = conv2d(b, "conv1", 3, width, 3, 1)
+    bn1 = batchnorm(b, "bn1", width)
+
+    cfg = [(width, width * 2, 1), (width * 2, width * 2, 2),
+           (width * 2, width * 4, 1), (width * 4, width * 4, 2),
+           (width * 4, width * 8, 1), (width * 8, width * 8, 2)]
+    blocks = [_ds_block(b, f"ds{i}", cin, cout, s)
+              for i, (cin, cout, s) in enumerate(cfg)]
+
+    fc = dense(b, "fc", width * 8, classes)
+
+    def apply(ctx, x):
+        y = conv1(ctx, x)
+        y = bn1(ctx, y)
+        y = jnp.maximum(y, 0.0)
+        y = act_quant(ctx, y, conv1.qidx)
+        for blk in blocks:
+            y = blk(ctx, y)
+        y = global_avg_pool(ctx, y)
+        return fc(ctx, y)
+
+    return b, apply

@@ -1,0 +1,131 @@
+"""L2 top level: build train_step / eval_step functions for a model variant.
+
+The train step is one self-contained differentiable program: forward with
+UNIQ noise injection (per-layer mode vector), softmax cross-entropy,
+backward, SGD-with-momentum update with frozen-layer masking and weight
+decay — all in-graph, AOT-lowered once. Rust feeds flat argument lists in
+manifest order and swaps updated state back in.
+
+Train inputs : params*, momenta*, state*, x, y, lr, k_w, k_a, aq, seed,
+               mode_vec [, qthresh]
+Train outputs: params'*, momenta'*, state'*, loss, acc
+Eval inputs  : params*, state*, x, y, k_a, aq
+Eval outputs : loss, acc
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx
+from .mlp import mlp
+from .mobilenet import mobilenet_mini
+from .resnet import resnet8, resnet18n
+
+MOMENTUM = 0.9      # paper S4 training details
+WEIGHT_DECAY = 1e-4
+KMAX = 32           # max quantization levels for the generic-quantizer path
+
+
+def cross_entropy_and_acc(logits, y):
+    """Mean softmax CE + top-1 accuracy; y: i32[B] labels."""
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1,
+                                                  keepdims=True)
+    b = logits.shape[0]
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = -jnp.mean(picked)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def make_steps(builder, apply_fn, *, noise_cfg="quantile"):
+    """Returns (train_step, eval_step) flat-argument functions."""
+    n_p = len(builder.params)
+    n_s = len(builder.state)
+    metas = builder.params
+
+    def train_step(*args):
+        params = list(args[0:n_p])
+        moms = list(args[n_p:2 * n_p])
+        state = list(args[2 * n_p:2 * n_p + n_s])
+        rest = args[2 * n_p + n_s:]
+        if noise_cfg == "quantile":
+            x, y, lr, k_w, k_a, aq, seed, mode_vec = rest
+            qthresh = None
+        else:
+            x, y, lr, k_w, k_a, aq, seed, mode_vec, qthresh = rest
+        key = jax.random.PRNGKey(seed)
+
+        def loss_fn(params):
+            ctx = Ctx(params, state, train=True, k_w=k_w, k_a=k_a, aq=aq,
+                      mode_vec=mode_vec, key=key, noise_cfg=noise_cfg,
+                      qthresh=qthresh)
+            logits = apply_fn(ctx, x)
+            loss, acc = cross_entropy_and_acc(logits, y)
+            return loss, (ctx.state_out, acc)
+
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        new_params, new_moms = [], []
+        for p, v, g, meta in zip(params, moms, grads, metas):
+            if meta["wd"]:
+                g = g + WEIGHT_DECAY * p
+            v_new = MOMENTUM * v + g
+            if meta["qlayer"] is not None:
+                # frozen (mode==2) layers: no update, momentum flushed
+                frozen = mode_vec[meta["qlayer"]] > 1.5
+                v_new = jnp.where(frozen, 0.0, v_new)
+                p_new = jnp.where(frozen, p, p - lr * v_new)
+            else:
+                p_new = p - lr * v_new
+            new_params.append(p_new)
+            new_moms.append(v_new)
+
+        return tuple(new_params) + tuple(new_moms) + tuple(new_state) + (
+            loss, acc)
+
+    def eval_step(*args):
+        params = list(args[0:n_p])
+        state = list(args[n_p:n_p + n_s])
+        x, y, k_a, aq = args[n_p + n_s:]
+        ctx = Ctx(params, state, train=False, k_a=k_a, aq=aq)
+        logits = apply_fn(ctx, x)
+        loss, acc = cross_entropy_and_acc(logits, y)
+        return loss, acc
+
+    return train_step, eval_step
+
+
+# ---------------------------------------------------------------------------
+# Variant registry: everything `make artifacts` lowers.
+# ---------------------------------------------------------------------------
+
+def _v(build, batch, classes=10, noise_cfg="quantile", image=(32, 32, 3)):
+    return dict(build=build, batch=batch, classes=classes,
+                noise_cfg=noise_cfg, image=image)
+
+
+VARIANTS = {
+    # smoke / CI
+    "mlp": _v(lambda: mlp(hidden=256, classes=10), batch=32),
+    "resnet8": _v(lambda: resnet8(width=8, classes=10), batch=32),
+    # paper workhorses
+    "resnet18n": _v(lambda: resnet18n(width=16, classes=10), batch=32),
+    "resnet18n_c100": _v(lambda: resnet18n(width=16, classes=100),
+                         batch=32, classes=100),
+    "resnet8_c100": _v(lambda: resnet8(width=8, classes=100), batch=32,
+                       classes=100),
+    # wider (4x params) variant: the redundancy regime the paper's
+    # quantizer-ablation claims live in (Table 3)
+    "resnet8w16": _v(lambda: resnet8(width=16, classes=10), batch=32),
+    "resnet8w16_generic": _v(lambda: resnet8(width=16, classes=10),
+                             batch=32, noise_cfg="generic"),
+    "mobilenet_mini": _v(lambda: mobilenet_mini(width=16, classes=10),
+                         batch=32),
+    # Table 3 ablation: generic-quantizer noise path (k-means / uniform
+    # thresholds supplied at runtime in the uniformized domain)
+    "resnet8_generic": _v(lambda: resnet8(width=8, classes=10), batch=32,
+                          noise_cfg="generic"),
+    "resnet18n_generic": _v(lambda: resnet18n(width=16, classes=10),
+                            batch=32, noise_cfg="generic"),
+}

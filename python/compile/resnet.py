@@ -1,0 +1,84 @@
+"""CIFAR-style ResNets (He et al. 2016) with UNIQ-quantizable layers.
+
+`resnet18n` is the paper's CIFAR workhorse — a narrow ResNet-18 (Table A.1
+explicitly uses "a narrow version of ResNet-18"): 4 groups x 2 basic
+blocks, base width configurable (default 16). `resnet8` is the fast-CI
+variant (3 groups x 1 block). Every conv and the final fc register as
+quantizable layers (the paper stresses it quantizes first and last layers
+too — Table 1 footnote).
+"""
+
+import jax.numpy as jnp
+
+from .layers import (Builder, act_quant, batchnorm, conv2d, dense,
+                     global_avg_pool)
+
+
+def _basic_block(b, name, cin, cout, stride):
+    conv_a = conv2d(b, f"{name}/conv1", cin, cout, 3, stride)
+    bn_a = batchnorm(b, f"{name}/bn1", cout)
+    conv_b = conv2d(b, f"{name}/conv2", cout, cout, 3, 1)
+    bn_b = batchnorm(b, f"{name}/bn2", cout)
+    if stride != 1 or cin != cout:
+        conv_s = conv2d(b, f"{name}/down", cin, cout, 1, stride)
+        bn_s = batchnorm(b, f"{name}/bn_down", cout)
+    else:
+        conv_s = bn_s = None
+
+    def apply(ctx, x):
+        y = conv_a(ctx, x)
+        y = bn_a(ctx, y)
+        y = jnp.maximum(y, 0.0)
+        y = act_quant(ctx, y, conv_a.qidx)
+        y = conv_b(ctx, y)
+        y = bn_b(ctx, y)
+        if conv_s is not None:
+            x = bn_s(ctx, conv_s(ctx, x))
+            x = act_quant(ctx, x, conv_s.qidx)
+        y = jnp.maximum(y + x, 0.0)
+        y = act_quant(ctx, y, conv_b.qidx)
+        return y
+
+    return apply
+
+
+def make_resnet(blocks_per_group, width=16, classes=10, groups=(1, 2, 4, 8)):
+    """Returns (builder, apply). `blocks_per_group` e.g. [2,2,2,2] -> ResNet-18
+    topology for 32x32 inputs; [1,1,1] -> ResNet-8."""
+    b = Builder()
+    widths = [width * g for g in groups[:len(blocks_per_group)]]
+
+    conv1 = conv2d(b, "conv1", 3, widths[0], 3, 1)
+    bn1 = batchnorm(b, "bn1", widths[0])
+
+    blocks = []
+    cin = widths[0]
+    for gi, (n, cout) in enumerate(zip(blocks_per_group, widths)):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and gi > 0) else 1
+            blocks.append(_basic_block(b, f"g{gi}b{bi}", cin, cout, stride))
+            cin = cout
+
+    fc = dense(b, "fc", cin, classes)
+
+    def apply(ctx, x):
+        y = conv1(ctx, x)
+        y = bn1(ctx, y)
+        y = jnp.maximum(y, 0.0)
+        y = act_quant(ctx, y, conv1.qidx)
+        for blk in blocks:
+            y = blk(ctx, y)
+        y = global_avg_pool(ctx, y)
+        return fc(ctx, y)
+
+    return b, apply
+
+
+def resnet18n(width=16, classes=10):
+    """Narrow ResNet-18 (paper Table A.1 / ablation workhorse)."""
+    return make_resnet([2, 2, 2, 2], width=width, classes=classes)
+
+
+def resnet8(width=8, classes=10):
+    """Minimal residual net for fast CI and smoke experiments."""
+    return make_resnet([1, 1, 1], width=width, classes=classes)

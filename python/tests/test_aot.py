@@ -1,0 +1,107 @@
+"""AOT pipeline contract tests: manifests, init blobs, HLO text shape."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "mlp", "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def load_manifest(name):
+    with open(os.path.join(ARTIFACTS, name, "manifest.json")) as f:
+        return json.load(f)
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", ["mlp", "resnet8", "resnet18n",
+                                  "mobilenet_mini", "resnet8_generic"])
+def test_manifest_input_ordering_contract(name):
+    m = load_manifest(name)
+    kinds = [s["kind"] for s in m["train_inputs"]]
+    n_p = len(m["params"])
+    n_s = len(m["state"])
+    assert kinds[:n_p] == ["param"] * n_p
+    assert kinds[n_p:2 * n_p] == ["momentum"] * n_p
+    assert kinds[2 * n_p:2 * n_p + n_s] == ["state"] * n_s
+    tail = kinds[2 * n_p + n_s:]
+    want_tail = ["x", "y", "lr", "k_w", "k_a", "aq", "seed", "mode_vec"]
+    if m["noise_cfg"] == "generic":
+        want_tail.append("qthresh")
+    assert tail == want_tail
+
+
+@needs_artifacts
+def test_init_blob_matches_manifest_offsets():
+    m = load_manifest("mlp")
+    blob = np.fromfile(
+        os.path.join(ARTIFACTS, "mlp", "init.bin"), dtype="<f4")
+    total = sum(p["size"] for p in m["params"] + m["state"])
+    assert blob.size == total
+    for p in m["params"]:
+        assert p["size"] == int(np.prod(p["shape"])) or p["shape"] == []
+        chunk = blob[p["offset"]:p["offset"] + p["size"]]
+        assert np.all(np.isfinite(chunk))
+    # he-normal conv weights: roughly zero-mean
+    w0 = m["params"][0]
+    chunk = blob[w0["offset"]:w0["offset"] + w0["size"]]
+    assert abs(float(chunk.mean())) < 0.05
+
+
+@needs_artifacts
+def test_hlo_text_parses_as_hlo_module_header():
+    path = os.path.join(ARTIFACTS, "mlp", "train_step.hlo.txt")
+    with open(path) as f:
+        head = f.read(200)
+    assert head.startswith("HloModule")
+
+
+@needs_artifacts
+def test_hlo_avoids_unparseable_opcodes():
+    """xla_extension 0.5.1's text parser rejects newer opcodes (erf,
+    erf-inv, round-nearest-even as ops...). Guard the whole artifact set."""
+    banned = [" erf(", " erf-inv(", " erf_inv(", " tan(", " cbrt("]
+    for name in os.listdir(ARTIFACTS):
+        d = os.path.join(ARTIFACTS, name)
+        if not os.path.isdir(d) or name == "golden":
+            continue
+        for f in os.listdir(d):
+            if not f.endswith(".hlo.txt"):
+                continue
+            text = open(os.path.join(d, f)).read()
+            for op in banned:
+                assert op not in text, f"{name}/{f} contains '{op}'"
+
+
+@needs_artifacts
+def test_golden_vectors_exist_and_are_finite():
+    gdir = os.path.join(ARTIFACTS, "golden")
+    with open(os.path.join(gdir, "golden.json")) as f:
+        meta = json.load(f)
+    assert len(meta) >= 15
+    for name, info in meta.items():
+        arr = np.fromfile(os.path.join(gdir, name + ".bin"), dtype="<f4")
+        assert arr.size == info["size"], name
+        assert np.all(np.isfinite(arr)), name
+
+
+@needs_artifacts
+def test_qlayer_to_param_mapping():
+    m = load_manifest("resnet18n")
+    qlayers = m["qlayers"]
+    mapped = [p["qlayer"] for p in m["params"] if p["qlayer"] is not None]
+    # every quantizable layer has exactly one weight tensor
+    assert sorted(mapped) == list(range(len(qlayers)))
+    # weight-decay exactly on quantizable weights (conv/fc kernels)
+    for p in m["params"]:
+        if p["qlayer"] is not None:
+            assert p["wd"], p["name"]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

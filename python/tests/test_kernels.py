@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and parameter ranges; every kernel must match its
+oracle to f32 tolerance for any input. This is the CORE correctness signal
+of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.common import normal_cdf, normal_icdf
+from compile.kernels import fake_quant, fake_quant_raw, matmul, uniq_noise
+from compile.kernels.ref import (fake_quant_ref, matmul_ref,
+                                 uniq_noise_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = st.sampled_from([
+    (7,), (128,), (130,), (1, 1), (3, 3, 4, 8), (64, 130), (2, 5, 7),
+    (257,), (32, 32, 3),
+])
+KS = st.sampled_from([2.0, 4.0, 8.0, 16.0, 32.0, 256.0])
+
+
+def rand(shape, seed, scale=1.0, loc=0.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.normal(loc, scale, shape).astype(np.float32))
+
+
+class TestUniqNoise:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=SHAPES, k=KS, seed=st.integers(0, 2**16),
+           sigma=st.floats(0.05, 3.0))
+    def test_matches_ref(self, shape, k, seed, sigma):
+        w = rand(shape, seed, sigma, 0.1)
+        nz = jnp.asarray(
+            np.random.default_rng(seed + 1).random(shape, np.float32))
+        out = uniq_noise(w, nz, 0.1, sigma, k)
+        ref = uniq_noise_ref(w, nz, 0.1, sigma, k)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_zero_noise_is_near_identity(self):
+        # e = (0.5 - 0.5)/k = 0 -> transform reduces to icdf(cdf(w)) ~ w
+        w = rand((64, 130), 0, 0.5)
+        nz = jnp.full(w.shape, 0.5)
+        out = uniq_noise(w, nz, 0.0, 0.5, 8.0)
+        np.testing.assert_allclose(out, w, atol=2e-3)
+
+    def test_noise_magnitude_shrinks_with_k(self):
+        w = rand((1024,), 3, 0.3)
+        nz = jnp.asarray(
+            np.random.default_rng(9).random(w.shape, np.float32))
+        d_small_k = jnp.mean(
+            jnp.abs(uniq_noise(w, nz, 0.0, 0.3, 4.0) - w))
+        d_big_k = jnp.mean(
+            jnp.abs(uniq_noise(w, nz, 0.0, 0.3, 64.0) - w))
+        assert float(d_big_k) < float(d_small_k) / 4.0
+
+    def test_gradient_matches_ref_gradient(self):
+        w = rand((8, 130), 4, 0.2)
+        nz = jnp.asarray(
+            np.random.default_rng(5).random(w.shape, np.float32))
+
+        def f(fn):
+            return jax.grad(
+                lambda w: jnp.sum(fn(w, nz, jnp.mean(w),
+                                     jnp.std(w) + 1e-8, 8.0)))(w)
+
+        np.testing.assert_allclose(f(uniq_noise), f(uniq_noise_ref),
+                                   atol=1e-5, rtol=1e-4)
+
+
+class TestFakeQuant:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=SHAPES, k=KS, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, k, seed):
+        x = rand(shape, seed, 0.8)
+        out = fake_quant_raw(x, 0.0, 0.8, k)
+        ref = fake_quant_ref(x, 0.0, 0.8, k)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.sampled_from([2, 4, 8, 16]), seed=st.integers(0, 100))
+    def test_at_most_k_levels(self, k, seed):
+        x = rand((2048,), seed)
+        out = np.asarray(fake_quant_raw(x, 0.0, 1.0, float(k)))
+        assert len(np.unique(out)) <= k
+
+    def test_idempotent(self):
+        x = rand((512,), 11)
+        once = fake_quant_raw(x, 0.0, 1.0, 8.0)
+        twice = fake_quant_raw(once, 0.0, 1.0, 8.0)
+        np.testing.assert_allclose(once, twice, atol=1e-6)
+
+    def test_levels_are_bin_medians(self):
+        # k=2 on N(0,1): levels must be Phi^-1(0.25), Phi^-1(0.75)
+        x = jnp.asarray([-0.9, -0.1, 0.1, 0.9], jnp.float32)
+        out = np.asarray(fake_quant_raw(x, 0.0, 1.0, 2.0))
+        want = float(normal_icdf(jnp.float32(0.75)))
+        np.testing.assert_allclose(out, [-want, -want, want, want],
+                                   atol=1e-5)
+
+    def test_ste_gradient_is_identity(self):
+        x = rand((256,), 12)
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, 0.0, 1.0, 4.0)))(x)
+        np.testing.assert_array_equal(np.asarray(g), np.ones_like(g))
+
+    def test_monotone_nondecreasing(self):
+        xs = jnp.linspace(-3, 3, 500)
+        out = np.asarray(fake_quant_raw(xs, 0.0, 1.0, 8.0))
+        assert np.all(np.diff(out) >= -1e-6)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 150), k=st.integers(1, 150),
+           n=st.integers(1, 150), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, seed):
+        a = rand((m, k), seed)
+        b = rand((k, n), seed + 1)
+        np.testing.assert_allclose(matmul(a, b), matmul_ref(a, b),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_identity(self):
+        eye = jnp.eye(64)
+        a = rand((64, 64), 20)
+        np.testing.assert_allclose(matmul(a, eye), a, atol=1e-6)
+
+    def test_gradients_match_ref(self):
+        a = rand((40, 70), 21)
+        b = rand((70, 30), 22)
+        ga = jax.grad(lambda a: jnp.sum(matmul(a, b) ** 2))(a)
+        gr = jax.grad(lambda a: jnp.sum(matmul_ref(a, b) ** 2))(a)
+        np.testing.assert_allclose(ga, gr, atol=1e-3, rtol=1e-4)
+        gb = jax.grad(lambda b: jnp.sum(matmul(a, b) ** 2))(b)
+        gbr = jax.grad(lambda b: jnp.sum(matmul_ref(a, b) ** 2))(b)
+        np.testing.assert_allclose(gb, gbr, atol=1e-3, rtol=1e-4)
+
+    def test_blocking_invariance(self):
+        from compile.kernels.matmul import matmul_raw
+        a = rand((100, 90), 23)
+        b = rand((90, 110), 24)
+        full = matmul_raw(a, b, bm=128, bn=128, bk=128)
+        tiled = matmul_raw(a, b, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(full, tiled, atol=1e-4)
+
+
+class TestNormalHelpers:
+    @settings(max_examples=40, deadline=None)
+    @given(z=st.floats(-4.0, 4.0))
+    def test_cdf_icdf_roundtrip(self, z):
+        back = float(normal_icdf(normal_cdf(jnp.float32(z))))
+        assert abs(back - z) < 5e-4
+
+    def test_cdf_bounds_and_symmetry(self):
+        zs = jnp.linspace(-5, 5, 101)
+        u = np.asarray(normal_cdf(zs))
+        assert np.all((u >= 0) & (u <= 1))
+        np.testing.assert_allclose(u + u[::-1], 1.0, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

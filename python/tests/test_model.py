@@ -1,0 +1,159 @@
+"""L2 correctness: model builders, UNIQ mode semantics, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import INIT_SEED, init_array
+from compile.layers import Ctx, generic_noise
+from compile.model import VARIANTS, cross_entropy_and_acc, make_steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def build(name):
+    cfg = VARIANTS[name]
+    b, apply_fn = cfg["build"]()
+    rng = np.random.default_rng(INIT_SEED)
+    params = [jnp.asarray(init_array(m, rng)) for m in b.params]
+    state = [jnp.asarray(init_array(m, rng)) for m in b.state]
+    return cfg, b, apply_fn, params, state
+
+
+def batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(
+        0, 1, (cfg["batch"], *cfg["image"])).astype(np.float32))
+    y = jnp.asarray(rng.integers(
+        0, cfg["classes"], cfg["batch"]).astype(np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("name", ["mlp", "resnet8", "resnet18n",
+                                  "mobilenet_mini"])
+def test_forward_shapes(name):
+    cfg, b, apply_fn, params, state = build(name)
+    x, _ = batch(cfg)
+    ctx = Ctx(params, state, train=False, k_a=256.0, aq=0.0)
+    logits = apply_fn(ctx, x)
+    assert logits.shape == (cfg["batch"], cfg["classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_qlayer_counts():
+    # resnet18n: 17 convs + 3 downsample + 1 fc = 21 quantizable layers
+    _, b, _, _, _ = build("resnet18n")
+    assert len(b.qlayers) == 21
+    _, b, _, _, _ = build("mobilenet_mini")
+    assert len(b.qlayers) == 14  # conv1 + 6*(dw+pw) + fc
+
+
+def test_mode_zero_equals_plain_forward():
+    """mode=0 (full precision) must be exactly the unnoised network."""
+    cfg, b, apply_fn, params, state = build("resnet8")
+    train_step, _ = make_steps(b, apply_fn)
+    x, y = batch(cfg)
+    L = len(b.qlayers)
+    moms = [jnp.zeros_like(p) for p in params]
+
+    def loss_at(mode, seed):
+        out = train_step(*params, *moms, *state, x, y,
+                         jnp.float32(0.0), jnp.float32(4.0),
+                         jnp.float32(256.0), jnp.float32(0.0),
+                         jnp.int32(seed), jnp.full((L,), mode, jnp.float32))
+        return float(out[-2])
+
+    # mode 0 is seed-independent; mode 1 is not
+    assert loss_at(0.0, 1) == loss_at(0.0, 2)
+    assert loss_at(1.0, 1) != loss_at(1.0, 2)
+
+
+def test_noise_perturbs_less_at_higher_k():
+    cfg, b, apply_fn, params, state = build("resnet8")
+    train_step, _ = make_steps(b, apply_fn)
+    x, y = batch(cfg)
+    L = len(b.qlayers)
+    moms = [jnp.zeros_like(p) for p in params]
+
+    def loss_at_k(k):
+        out = train_step(*params, *moms, *state, x, y,
+                         jnp.float32(0.0), jnp.float32(k),
+                         jnp.float32(256.0), jnp.float32(0.0),
+                         jnp.int32(3), jnp.ones((L,), jnp.float32))
+        return float(out[-2])
+
+    base = loss_at_k(1e9)  # effectively no noise
+    d4 = abs(loss_at_k(4.0) - base)
+    d64 = abs(loss_at_k(64.0) - base)
+    assert d64 < d4
+
+
+def test_train_step_reduces_loss_mlp():
+    cfg, b, apply_fn, params, state = build("mlp")
+    train_step, _ = make_steps(b, apply_fn)
+    jit = jax.jit(train_step)
+    L = len(b.qlayers)
+    moms = [jnp.zeros_like(p) for p in params]
+    nP, nS = len(params), len(state)
+    losses = []
+    for i in range(20):
+        x, y = batch(cfg, seed=i % 4)  # small fixed pool -> must memorize
+        out = jit(*params, *moms, *state, x, y,
+                  jnp.float32(0.01), jnp.float32(16.0), jnp.float32(256.0),
+                  jnp.float32(0.0), jnp.int32(i), jnp.ones((L,), jnp.float32))
+        params = list(out[:nP])
+        moms = list(out[nP:2 * nP])
+        state = list(out[2 * nP:2 * nP + nS])
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_generic_noise_bin_widths():
+    """generic_noise must scale noise by the bin's uniformized width."""
+    w = jnp.asarray(np.linspace(-2, 2, 101).astype(np.float32))
+    noise = jnp.full(w.shape, 1.0)  # max positive noise
+    # one huge bin [0, 1): noise e = 0.5 everywhere
+    kmax = 4
+    uthresh = jnp.asarray([0.0, 1.0, 1.0, 1.0, 1.0], jnp.float32)
+    out = generic_noise(w, noise, 0.0, 1.0, uthresh, kmax)
+    # u + 0.5 clipped below 1 -> all outputs >= original
+    assert bool(jnp.all(out >= w - 1e-5))
+    # four equal bins ~ k-quantile with k=4
+    from compile.kernels.ref import uniq_noise_ref
+    uthresh = jnp.asarray([0.0, 0.25, 0.5, 0.75, 1.0], jnp.float32)
+    nz = jnp.asarray(np.random.default_rng(0).random(w.shape, np.float32))
+    got = generic_noise(w, nz, 0.0, 1.0, uthresh, kmax)
+    want = uniq_noise_ref(w, nz, 0.0, 1.0, 4.0)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_cross_entropy_known_case():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    y = jnp.asarray([0, 1], jnp.int32)
+    loss, acc = cross_entropy_and_acc(logits, y)
+    assert float(loss) < 1e-3
+    assert float(acc) == 1.0
+    loss_bad, acc_bad = cross_entropy_and_acc(logits, 1 - y)
+    assert float(loss_bad) > 5.0
+    assert float(acc_bad) == 0.0
+
+
+def test_bn_state_updates_in_train_only():
+    cfg, b, apply_fn, params, state = build("resnet8")
+    x, _ = batch(cfg)
+    ctx = Ctx(params, state, train=True, k_w=16.0, k_a=256.0, aq=0.0,
+              mode_vec=jnp.zeros(len(b.qlayers)),
+              key=jax.random.PRNGKey(0))
+    apply_fn(ctx, x)
+    changed = sum(int(not np.allclose(a, b_))
+                  for a, b_ in zip(ctx.state_out, ctx.state_in))
+    assert changed == len(state)
+    ctx = Ctx(params, state, train=False, k_a=256.0, aq=0.0)
+    apply_fn(ctx, x)
+    assert all(np.allclose(a, b_)
+               for a, b_ in zip(ctx.state_out, ctx.state_in))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,55 @@
+//! Data-pipeline benchmarks: the producer side of the training loop.
+//!
+//! Target: batch assembly + augmentation must stay well under the
+//! train-step latency (~100 ms for resnet8) so the double-buffered
+//! prefetcher hides it completely.
+
+use uniq::data::augment::{augment_train, hflip, pad_crop};
+use uniq::data::batcher::Prefetcher;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::util::bench::Bench;
+use uniq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("data_pipeline");
+
+    b.run("synth/generate_1k_images", || {
+        SynthDataset::generate(SynthConfig {
+            n: 1000,
+            ..Default::default()
+        })
+    });
+
+    let data = SynthDataset::generate(SynthConfig {
+        n: 4096,
+        ..Default::default()
+    });
+    let img: Vec<f32> = data.image(0).to_vec();
+    let mut rng = Rng::new(3);
+    b.run_throughput("augment/pad_crop", 3072, || {
+        pad_crop(&img, 32, 32, 3, 4, &mut rng)
+    });
+    let mut buf = img.clone();
+    b.run_throughput("augment/hflip", 3072, || hflip(&mut buf, 32, 32, 3));
+    b.run_throughput("augment/full", 3072, || {
+        augment_train(&img, 32, 32, 3, &mut rng)
+    });
+
+    let mut batcher = Batcher::new(data.clone(), 32, true, 1);
+    b.run_throughput("batcher/next_batch_32_augmented", 32 * 3072, || {
+        batcher.next_batch()
+    });
+    let mut plain = Batcher::new(data.clone(), 32, false, 1);
+    b.run_throughput("batcher/next_batch_32_plain", 32 * 3072, || {
+        plain.next_batch()
+    });
+
+    // prefetcher steady-state (consumer-side latency once the thread is
+    // ahead: should be near-zero channel receive time)
+    let pf = Prefetcher::new(Batcher::new(data, 32, true, 2), 2);
+    pf.next_batch(); // let the producer spin up
+    b.run("prefetcher/steady_state_recv", || pf.next_batch());
+
+    b.finish();
+}

@@ -1,0 +1,61 @@
+//! Host-quantizer microbenchmarks (the coordinator's freeze hot path).
+//!
+//! The gradual schedule quantizes one block per phase; for big layers the
+//! fit+quantize must stay negligible next to a train step (~100 ms).
+
+use uniq::quant::{
+    KMeans, KQuantileEmpirical, KQuantileGauss, QuantizerFit, Uniform,
+};
+use uniq::stats::{norm_cdf, norm_icdf, shapiro_wilk};
+use uniq::util::bench::Bench;
+use uniq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("quantizers");
+    let mut rng = Rng::new(7);
+    for n in [10_000usize, 1_000_000] {
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let label = if n >= 1_000_000 { "1M" } else { "10k" };
+
+        b.run_throughput(&format!("fit/kquantile_gauss/{label}"), n, || {
+            KQuantileGauss.fit(&data, 16)
+        });
+        b.run_throughput(&format!("fit/kquantile_empirical/{label}"), n, || {
+            KQuantileEmpirical.fit(&data, 16)
+        });
+        b.run_throughput(&format!("fit/kmeans/{label}"), n, || {
+            KMeans::default().fit(&data, 16)
+        });
+        b.run_throughput(&format!("fit/uniform/{label}"), n, || {
+            Uniform.fit(&data, 16)
+        });
+
+        let q = KQuantileGauss.fit(&data, 16);
+        let mut buf = data.clone();
+        b.run_throughput(&format!("quantize/k16/{label}"), n, || {
+            buf.copy_from_slice(&data);
+            q.quantize(&mut buf);
+        });
+        let q256 = KQuantileGauss.fit(&data, 256);
+        b.run_throughput(&format!("quantize/k256/{label}"), n, || {
+            buf.copy_from_slice(&data);
+            q256.quantize(&mut buf);
+        });
+    }
+
+    // special functions used per-element by the host paths
+    let zs: Vec<f64> = (0..4096).map(|i| -4.0 + i as f64 / 512.0).collect();
+    b.run_throughput("norm_cdf/4k", zs.len(), || {
+        zs.iter().map(|&z| norm_cdf(z)).sum::<f64>()
+    });
+    let us: Vec<f64> = (1..4096).map(|i| i as f64 / 4096.0).collect();
+    b.run_throughput("norm_icdf/4k", us.len(), || {
+        us.iter().map(|&u| norm_icdf(u)).sum::<f64>()
+    });
+
+    // Fig C.1 path: Shapiro-Wilk on a 2000-sample layer
+    let sample: Vec<f32> = (0..2000).map(|_| rng.normal()).collect();
+    b.run("shapiro_wilk/2000", || shapiro_wilk(&sample));
+
+    b.finish();
+}

@@ -1,0 +1,78 @@
+//! End-to-end step benchmarks over the AOT executables (requires
+//! `make artifacts`; exits with a notice otherwise).
+//!
+//! Covers the hot path of every experiment harness: train step (the
+//! noise-injection path), eval step, the generic-quantizer step (Table 3
+//! overhead), the host freeze, and the literal-marshalling overhead that
+//! the coordinator adds around the XLA execution.
+
+use std::path::Path;
+
+use uniq::coordinator::{FreezeQuant, Trainer};
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::runtime::state::StepConfig;
+use uniq::runtime::Engine;
+use uniq::util::bench::Bench;
+
+fn main() {
+    if !Path::new("artifacts/resnet8/train_step.hlo.txt").exists() {
+        eprintln!("SKIP train_step bench: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let mut b = Bench::new("train_step");
+    b.min_time = std::time::Duration::from_secs(3);
+
+    let data = SynthDataset::generate(SynthConfig {
+        n: 64,
+        ..Default::default()
+    });
+
+    for variant in ["mlp", "resnet8", "resnet8_generic"] {
+        let mut t =
+            Trainer::new(&engine, &Path::new("artifacts").join(variant))
+                .expect("trainer");
+        let batch = Batcher::eval_batches(&data, t.manifest.batch).remove(0);
+        let n = t.manifest.n_qlayers();
+        let generic = t.manifest.noise_cfg == "generic";
+        let cfg = StepConfig {
+            lr: 1e-4,
+            k_w: 8.0,
+            k_a: 256.0,
+            aq: 0.0,
+            seed: 1,
+            mode_vec: vec![1.0; n],
+            qthresh: generic.then(|| {
+                FreezeQuant::Uniform
+                    .uniformized_thresholds(8, t.manifest.kmax)
+            }),
+        };
+        b.run(&format!("{variant}/train_step"), || {
+            t.step(&batch.x, &batch.y, &cfg).expect("step")
+        });
+        b.run(&format!("{variant}/eval_step_batch"), || {
+            let inputs = t
+                .state
+                .eval_inputs(&t.manifest, &batch.x, &batch.y, 256.0, 1.0)
+                .unwrap();
+            t.eval_exe.run(&inputs).expect("eval")
+        });
+        // coordinator-side marshalling only (no XLA execution)
+        b.run(&format!("{variant}/literal_marshalling"), || {
+            t.state
+                .train_inputs(&t.manifest, &batch.x, &batch.y, &cfg)
+                .expect("inputs")
+        });
+        // host freeze of the biggest layer
+        let m = t.manifest.clone();
+        let big = (0..n)
+            .max_by_key(|&q| t.state.qlayer_weights(&m, q).unwrap().len())
+            .unwrap();
+        b.run(&format!("{variant}/freeze_biggest_layer"), || {
+            t.freeze_layer(big, FreezeQuant::KQuantileGauss, 16).unwrap()
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,16 @@
+// Smoke: load the RNG+erf_inv+pallas HLO text and check numerics.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/smoke.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let seed = xla::Literal::scalar(7i32);
+    let n = 64 * 130;
+    let w: Vec<f32> = (0..n).map(|i| 0.5 + 0.1 * i as f32 / (n - 1) as f32).collect();
+    let w = xla::Literal::vec1(&w).reshape(&[64, 130])?;
+    let result = exe.execute::<xla::Literal>(&[seed, w])?[0][0].to_literal_sync()?;
+    let (a, b) = result.to_tuple2()?;
+    println!("got {} {}", a.to_vec::<f32>()?[0], b.to_vec::<f32>()?[0]);
+    Ok(())
+}

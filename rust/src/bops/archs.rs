@@ -1,0 +1,182 @@
+//! Full-size ImageNet architecture definitions for Table 1 / Fig 1.
+//!
+//! Layer lists match the standard torchvision topologies (the paper
+//! fine-tunes Cadene pretrained models). Parameter counts are asserted in
+//! tests against the published totals (ResNet-18 11.7M, ResNet-34 21.8M,
+//! ResNet-50 25.6M, MobileNet 4.2M, AlexNet 61M).
+
+use super::{Arch, Layer};
+
+/// ResNet-18/34 (BasicBlock) and ResNet-50 (Bottleneck) for 224x224.
+pub fn resnet_imagenet(depth: usize) -> Arch {
+    let (blocks, bottleneck): (&[usize], bool) = match depth {
+        18 => (&[2, 2, 2, 2], false),
+        34 => (&[3, 4, 6, 3], false),
+        50 => (&[3, 4, 6, 3], true),
+        _ => panic!("unsupported resnet depth {depth}"),
+    };
+    let mut layers = vec![Layer::conv("conv1", 112 * 112, 3, 64, 7)];
+    let widths = [64u64, 128, 256, 512];
+    let spatial = [56u64, 28, 14, 7];
+    let expansion = if bottleneck { 4 } else { 1 };
+    let mut cin = 64u64;
+    for g in 0..4 {
+        let w = widths[g];
+        let sp = spatial[g] * spatial[g];
+        for b in 0..blocks[g] {
+            let name = |s: &str| format!("g{g}b{b}/{s}");
+            if bottleneck {
+                layers.push(Layer::conv(&name("c1"), sp, cin, w, 1));
+                layers.push(Layer::conv(&name("c2"), sp, w, w, 3));
+                layers.push(Layer::conv(&name("c3"), sp, w, w * 4, 1));
+                if b == 0 {
+                    layers.push(Layer::conv(&name("down"), sp, cin, w * 4, 1));
+                }
+                cin = w * 4;
+            } else {
+                layers.push(Layer::conv(&name("c1"), sp, cin, w, 3));
+                layers.push(Layer::conv(&name("c2"), sp, w, w, 3));
+                if b == 0 && cin != w {
+                    layers.push(Layer::conv(&name("down"), sp, cin, w, 1));
+                }
+                cin = w;
+            }
+        }
+    }
+    layers.push(Layer::fc("fc", 512 * expansion, 1000));
+    Arch { name: format!("ResNet-{depth}"), layers }
+}
+
+/// MobileNet v1 1.0-224 (Howard et al. 2017).
+pub fn mobilenet224() -> Arch {
+    let mut layers = vec![Layer::conv("conv1", 112 * 112, 3, 32, 3)];
+    // (cin, cout, out_spatial_side)
+    let cfg: [(u64, u64, u64); 13] = [
+        (32, 64, 112),
+        (64, 128, 56),
+        (128, 128, 56),
+        (128, 256, 28),
+        (256, 256, 28),
+        (256, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 1024, 7),
+        (1024, 1024, 7),
+    ];
+    for (i, &(cin, cout, side)) in cfg.iter().enumerate() {
+        let sp = side * side;
+        layers.push(Layer::depthwise(&format!("ds{i}/dw"), sp, cin, 3));
+        layers.push(Layer::conv(&format!("ds{i}/pw"), sp, cin, cout, 1));
+    }
+    layers.push(Layer::fc("fc", 1024, 1000));
+    Arch { name: "MobileNet".into(), layers }
+}
+
+/// AlexNet (Krizhevsky 2012, single-column torchvision variant).
+pub fn alexnet() -> Arch {
+    Arch {
+        name: "AlexNet".into(),
+        layers: vec![
+            Layer::conv("conv1", 55 * 55, 3, 64, 11),
+            Layer::conv("conv2", 27 * 27, 64, 192, 5),
+            Layer::conv("conv3", 13 * 13, 192, 384, 3),
+            Layer::conv("conv4", 13 * 13, 384, 256, 3),
+            Layer::conv("conv5", 13 * 13, 256, 256, 3),
+            Layer::fc("fc6", 256 * 6 * 6, 4096),
+            Layer::fc("fc7", 4096, 4096),
+            Layer::fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bops::BitConfig;
+
+    fn total_params(a: &Arch) -> u64 {
+        a.layers.iter().map(|l| l.params()).sum()
+    }
+
+    #[test]
+    fn resnet18_published_counts() {
+        let a = resnet_imagenet(18);
+        let p = total_params(&a);
+        // 11.69M conv+fc weights (biases/bn excluded, as in the paper's
+        // 374.4 Mbit = 11.7M x 32 model size)
+        assert!((p as f64 - 11.68e6).abs() < 0.1e6, "params {p}");
+        let m: u64 = a.layers.iter().map(|l| l.macs()).sum();
+        assert!((m as f64 - 1.82e9).abs() < 0.08e9, "macs {m}");
+    }
+
+    #[test]
+    fn resnet34_published_counts() {
+        let p = total_params(&resnet_imagenet(34));
+        assert!((p as f64 - 21.8e6).abs() < 0.2e6, "params {p}");
+    }
+
+    #[test]
+    fn resnet50_published_counts() {
+        let a = resnet_imagenet(50);
+        let p = total_params(&a);
+        assert!((p as f64 - 25.5e6).abs() < 0.3e6, "params {p}");
+        let m: u64 = a.layers.iter().map(|l| l.macs()).sum();
+        // 3.86G conv+fc MACs (the "4.1 GFLOPs" figure counts extras)
+        assert!((m as f64 - 3.86e9).abs() < 0.1e9, "macs {m}");
+    }
+
+    #[test]
+    fn mobilenet_published_counts() {
+        let a = mobilenet224();
+        let p = total_params(&a);
+        assert!((p as f64 - 4.2e6).abs() < 0.15e6, "params {p}");
+        let m: u64 = a.layers.iter().map(|l| l.macs()).sum();
+        assert!((m as f64 - 569e6).abs() < 30e6, "macs {m}");
+    }
+
+    #[test]
+    fn alexnet_published_counts() {
+        let p = total_params(&alexnet());
+        assert!((p as f64 - 61e6).abs() < 1e6, "params {p}");
+    }
+
+    #[test]
+    fn table1_model_size_column() {
+        // paper Table 1 model sizes (Mbit) regenerate analytically
+        let cases: [(&str, Arch, u32, f64); 5] = [
+            ("mobilenet 4b", mobilenet224(), 4, 16.8),
+            ("mobilenet 8b", mobilenet224(), 8, 33.6),
+            ("resnet18 32b", resnet_imagenet(18), 32, 374.4),
+            ("resnet34 32b", resnet_imagenet(34), 32, 697.6),
+            ("resnet50 32b", resnet_imagenet(50), 32, 817.6),
+        ];
+        for (name, arch, bw, want) in cases {
+            let got = arch.complexity(BitConfig::uniq(bw, 8)).mbit();
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{name}: got {got:.1} Mbit, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_baseline_gbops_column() {
+        // paper Table 1 baseline complexity (GBOPs), 32/32
+        let cases: [(&str, Arch, f64, f64); 4] = [
+            ("mobilenet", mobilenet224(), 626.0, 0.06),
+            ("resnet18", resnet_imagenet(18), 1920.0, 0.06),
+            ("resnet34", resnet_imagenet(34), 3930.0, 0.06),
+            ("resnet50", resnet_imagenet(50), 4190.0, 0.12),
+        ];
+        for (name, arch, want, tol) in cases {
+            let got = arch.complexity(BitConfig::baseline()).gbops();
+            assert!(
+                (got - want).abs() / want < tol,
+                "{name}: got {got:.0} GBOPs, paper {want}"
+            );
+        }
+    }
+}

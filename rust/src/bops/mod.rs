@@ -1,0 +1,211 @@
+//! BOPs (bit-operations) complexity metric — paper §4.2.
+//!
+//! Per conv layer with b_w-bit weights and b_a-bit activations, n input
+//! channels, m output channels, k×k filters and H×W output positions:
+//!
+//!   BOPs ≈ H·W · m·n·k² · (b_a·b_w + b_a + b_w + log₂(n·k²))
+//!
+//! (the parenthesised factor is the per-MAC cost: one b_a×b_w multiply
+//! plus one accumulate at width b_o = b_a + b_w + log₂(n·k²)), plus the
+//! memory-fetch term: each parameter fetched once at b_w BOPs/bit.
+//!
+//! The module also carries full-size architecture descriptions
+//! (AlexNet, MobileNet-224, ResNet-18/34/50) so the Table 1 / Fig 1
+//! complexity and model-size columns regenerate analytically.
+
+pub mod archs;
+
+pub use archs::{alexnet, mobilenet224, resnet_imagenet};
+
+/// One parameterised layer for complexity accounting.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    /// output spatial positions (H_out * W_out); 1 for fully connected
+    pub spatial: u64,
+    /// input channels (per group), output channels, kernel side
+    pub cin: u64,
+    pub cout: u64,
+    pub ksize: u64,
+    pub groups: u64,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        spatial: u64,
+        cin: u64,
+        cout: u64,
+        ksize: u64,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            spatial,
+            cin,
+            cout,
+            ksize,
+            groups: 1,
+        }
+    }
+
+    pub fn depthwise(name: &str, spatial: u64, c: u64, ksize: u64) -> Layer {
+        Layer { name: name.into(), spatial, cin: c, cout: c, ksize, groups: c }
+    }
+
+    pub fn fc(name: &str, cin: u64, cout: u64) -> Layer {
+        Layer { name: name.into(), spatial: 1, cin, cout, ksize: 1, groups: 1 }
+    }
+
+    /// Number of weight parameters.
+    pub fn params(&self) -> u64 {
+        self.cout * (self.cin / self.groups) * self.ksize * self.ksize
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.spatial * self.cout * (self.cin / self.groups)
+            * self.ksize
+            * self.ksize
+    }
+
+    /// BOPs for this layer at (b_w, b_a)-bit weights/activations.
+    pub fn bops(&self, b_w: u32, b_a: u32) -> f64 {
+        let n = (self.cin / self.groups) as f64;
+        let k2 = (self.ksize * self.ksize) as f64;
+        let acc_tail = (n * k2).log2();
+        let per_mac =
+            (b_a as f64) * (b_w as f64) + b_a as f64 + b_w as f64 + acc_tail;
+        self.macs() as f64 * per_mac
+    }
+}
+
+/// A whole network for complexity accounting.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// Per-layer bit assignment: which layers are quantized to (b_w, b_a) and
+/// which stay at full precision (the "don't quantize first/last" practice
+/// of competing methods — UNIQ quantizes everything, Table 1 note).
+#[derive(Debug, Clone, Copy)]
+pub struct BitConfig {
+    pub b_w: u32,
+    pub b_a: u32,
+    /// keep first layer at 32/32 (competitors' practice)
+    pub fp_first: bool,
+    /// keep last layer at 32/32
+    pub fp_last: bool,
+}
+
+impl BitConfig {
+    pub fn uniq(b_w: u32, b_a: u32) -> Self {
+        BitConfig { b_w, b_a, fp_first: false, fp_last: false }
+    }
+
+    pub fn skip_first_last(b_w: u32, b_a: u32) -> Self {
+        BitConfig { b_w, b_a, fp_first: true, fp_last: true }
+    }
+
+    pub fn baseline() -> Self {
+        BitConfig { b_w: 32, b_a: 32, fp_first: false, fp_last: false }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Complexity {
+    /// compute + memory-fetch bit operations
+    pub bops: f64,
+    /// model size in bits
+    pub model_bits: f64,
+    pub params: u64,
+    pub macs: u64,
+}
+
+impl Complexity {
+    pub fn gbops(&self) -> f64 {
+        self.bops / 1e9
+    }
+
+    pub fn mbit(&self) -> f64 {
+        self.model_bits / 1e6
+    }
+}
+
+impl Arch {
+    pub fn complexity(&self, cfg: BitConfig) -> Complexity {
+        let mut bops = 0.0;
+        let mut model_bits = 0.0;
+        let mut params = 0;
+        let mut macs = 0;
+        let last = self.layers.len().saturating_sub(1);
+        for (i, l) in self.layers.iter().enumerate() {
+            let fp = (i == 0 && cfg.fp_first) || (i == last && cfg.fp_last);
+            let (bw, ba) =
+                if fp { (32, 32) } else { (cfg.b_w, cfg.b_a) };
+            bops += l.bops(bw, ba);
+            // memory fetch: each parameter fetched once, b BOPs per b-bit
+            bops += l.params() as f64 * bw as f64;
+            model_bits += l.params() as f64 * bw as f64;
+            params += l.params();
+            macs += l.macs();
+        }
+        Complexity { bops, model_bits, params, macs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formula_hand_checked() {
+        // 1 conv layer: 8x8 out, 16 in, 32 out channels, 3x3
+        let l = Layer::conv("c", 64, 16, 32, 3);
+        assert_eq!(l.macs(), 64 * 32 * 16 * 9);
+        assert_eq!(l.params(), 32 * 16 * 9);
+        let per_mac = 4.0 * 8.0 + 4.0 + 8.0 + (144f64).log2();
+        let want = l.macs() as f64 * per_mac;
+        assert!((l.bops(4, 8) - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn depthwise_groups_reduce_macs() {
+        let dw = Layer::depthwise("dw", 100, 64, 3);
+        assert_eq!(dw.macs(), 100 * 64 * 9);
+        assert_eq!(dw.params(), 64 * 9);
+    }
+
+    #[test]
+    fn quantization_reduces_bops_monotonically() {
+        let arch = resnet_imagenet(18);
+        let b32 = arch.complexity(BitConfig::baseline()).bops;
+        let b8 = arch.complexity(BitConfig::uniq(8, 8)).bops;
+        let b4 = arch.complexity(BitConfig::uniq(4, 8)).bops;
+        let b2 = arch.complexity(BitConfig::uniq(2, 8)).bops;
+        assert!(b32 > b8 && b8 > b4 && b4 > b2);
+    }
+
+    #[test]
+    fn fp_first_last_costs_more() {
+        let arch = resnet_imagenet(18);
+        let uniq = arch.complexity(BitConfig::uniq(4, 8));
+        let skip = arch.complexity(BitConfig::skip_first_last(4, 8));
+        assert!(skip.bops > uniq.bops);
+        assert!(skip.model_bits > uniq.model_bits);
+    }
+
+    #[test]
+    fn diminishing_returns_of_weight_bits() {
+        // paper: once b_a*b_w stops dominating log2(n k^2), halving bits
+        // shaves less than half the BOPs
+        let arch = resnet_imagenet(18);
+        let b4 = arch.complexity(BitConfig::uniq(4, 8)).bops;
+        let b2 = arch.complexity(BitConfig::uniq(2, 8)).bops;
+        let b1 = arch.complexity(BitConfig::uniq(1, 8)).bops;
+        let drop42 = b4 - b2;
+        let drop21 = b2 - b1;
+        assert!(drop21 < drop42);
+    }
+}

@@ -1,0 +1,127 @@
+//! Command-line interface (hand-rolled; no clap in the vendor set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, --flags and key=val.
+#[derive(Debug, Default, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key value | --key=value | --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    cli.flags.insert(
+                        name.to_string(),
+                        it.next().unwrap().clone(),
+                    );
+                } else {
+                    cli.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if let Some((k, v)) = a.split_once('=') {
+                cli.flags.insert(k.to_string(), v.to_string());
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        cli
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+pub const USAGE: &str = "\
+uniq — UNIQ (Uniform Noise Injection for Non-Uniform Quantization) \
+reproduction
+
+USAGE: uniq <command> [options]
+
+COMMANDS:
+  info                         platform + artifact inventory
+  train      --model M         run the gradual-quantization training loop
+             [--steps N --stages S --iters I --bits-w B --bits-a B
+              --lr F --policy gradual|simultaneous|fp --quantizer
+              gauss|empirical|kmeans|uniform --train-size N --val-size N
+              --save ckpt.bin --metrics out.csv --data synth|DIR]
+  eval       --model M --ckpt C [--bits-a B]   evaluate a checkpoint
+  quantize   --model M --ckpt C --out O --bits-w B [--quantizer Q]
+                               host-side exact quantization of weights
+  bops       --arch A --bits-w B --bits-a B [--skip-first-last]
+                               BOPs/model-size for a full-size arch
+  experiment <id> [key=val]    regenerate a paper table/figure:
+                               table1 fig1 table2 table3 tableA1 figB1
+                               figC1 all   (scale=2 doubles budgets)
+  help                         this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Cli {
+        Cli::parse(&s.iter().map(|v| v.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let c = parse(&[
+            "train", "--model", "resnet8", "--steps=50", "scale=2",
+            "extra", "--verbose",
+        ]);
+        assert_eq!(c.command, "train");
+        assert_eq!(c.get("model"), Some("resnet8"));
+        assert_eq!(c.get_usize("steps", 0), 50);
+        assert_eq!(c.get("scale"), Some("2"));
+        assert_eq!(c.positional, vec!["extra"]);
+        assert!(c.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse(&["eval"]);
+        assert_eq!(c.get_usize("steps", 7), 7);
+        assert_eq!(c.get_f32("lr", 0.5), 0.5);
+        assert!(!c.has("anything"));
+    }
+
+    #[test]
+    fn double_dash_value_not_swallowed() {
+        let c = parse(&["x", "--a", "--b", "v"]);
+        assert_eq!(c.get("a"), Some("true"));
+        assert_eq!(c.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Training metrics: per-step records, moving averages, CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetric {
+    pub step: u64,
+    pub phase: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub step_ms: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub steps: Vec<StepMetric>,
+    pub evals: Vec<(u64, f32, f32)>, // (step, loss, acc)
+}
+
+impl Metrics {
+    pub fn record(&mut self, m: StepMetric) {
+        self.steps.push(m);
+    }
+
+    pub fn record_eval(&mut self, step: u64, loss: f32, acc: f32) {
+        self.evals.push((step, loss, acc));
+    }
+
+    /// Mean of the last `n` training losses.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|m| m.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn recent_acc(&self, n: usize) -> f32 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|m| m.acc).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Mean step latency (ms) over all recorded steps.
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        self.steps.iter().map(|m| m.step_ms).sum::<f64>()
+            / self.steps.len() as f64
+    }
+
+    pub fn best_eval_acc(&self) -> Option<f32> {
+        self.evals
+            .iter()
+            .map(|&(_, _, a)| a)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,phase,loss,acc,step_ms\n");
+        for m in &self.steps {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{}",
+                m.step, m.phase, m.loss, m.acc, m.step_ms
+            );
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: u64, loss: f32, acc: f32) -> StepMetric {
+        StepMetric { step, phase: 0, loss, acc, step_ms: 1.0 }
+    }
+
+    #[test]
+    fn recent_windows() {
+        let mut ms = Metrics::default();
+        for i in 0..10 {
+            ms.record(m(i, i as f32, 0.1 * i as f32));
+        }
+        assert_eq!(ms.recent_loss(2), 8.5);
+        assert!((ms.recent_acc(10) - 0.45).abs() < 1e-6);
+        assert!(ms.recent_loss(100) > 0.0); // over-long window clamps
+    }
+
+    #[test]
+    fn empty_metrics_are_nan_not_panic() {
+        let ms = Metrics::default();
+        assert!(ms.recent_loss(5).is_nan());
+        assert!(ms.mean_step_ms().is_nan());
+        assert!(ms.best_eval_acc().is_none());
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut ms = Metrics::default();
+        ms.record(m(1, 2.0, 0.5));
+        let csv = ms.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("1,0,2,0.5"));
+    }
+
+    #[test]
+    fn best_eval() {
+        let mut ms = Metrics::default();
+        ms.record_eval(1, 2.0, 0.3);
+        ms.record_eval(2, 1.0, 0.7);
+        ms.record_eval(3, 1.5, 0.5);
+        assert_eq!(ms.best_eval_acc(), Some(0.7));
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator — the paper's training-schedule contribution (§3.3).
+//!
+//! Owns the event loop: gradual-quantization stage scheduling, host-side
+//! freezing (exact quantizers), the train/eval loops over the AOT
+//! executables, LR policy, metrics and checkpoints.
+
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{Metrics, StepMetric};
+pub use schedule::{LayerMode, Schedule, SchedulePolicy};
+pub use trainer::{FreezeQuant, TrainConfig, Trainer};

@@ -1,0 +1,250 @@
+//! Gradual-quantization schedule (paper §3.3, supplementary B).
+//!
+//! The L quantizable layers are split into `stages` blocks of about equal
+//! size. At stage s: blocks < s are FROZEN at their host-quantized values,
+//! block s gets NOISE injection, blocks > s stay full precision. The whole
+//! sweep can be iterated (`iterations`, paper uses 2): from iteration 2 on,
+//! *later* blocks are frozen too (they were quantized at the end of the
+//! previous iteration), letting earlier blocks adapt to them.
+
+/// Per-layer mode fed to the compiled train step's `mode_vec` input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerMode {
+    /// full precision, normal gradient updates
+    FullPrecision,
+    /// UNIQ noise injection (the block being trained)
+    Noise,
+    /// frozen at host-quantized values, activations quantized in-graph
+    Frozen,
+}
+
+impl LayerMode {
+    pub fn code(self) -> f32 {
+        match self {
+            LayerMode::FullPrecision => 0.0,
+            LayerMode::Noise => 1.0,
+            LayerMode::Frozen => 2.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// the paper's gradual scheme
+    Gradual,
+    /// noise into every layer at once (the "does not perform well for
+    /// deeper networks" baseline of §3.3 / Fig B.1's 1-stage point)
+    Simultaneous,
+    /// no noise anywhere (full-precision training / baseline rows)
+    FullPrecision,
+}
+
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub n_layers: usize,
+    pub stages: usize,
+    pub iterations: usize,
+    pub policy: SchedulePolicy,
+    /// block boundaries: block b = layers [bounds[b], bounds[b+1])
+    bounds: Vec<usize>,
+}
+
+impl Schedule {
+    pub fn new(
+        n_layers: usize,
+        stages: usize,
+        iterations: usize,
+        policy: SchedulePolicy,
+    ) -> Schedule {
+        let stages = stages.clamp(1, n_layers.max(1));
+        // split n_layers into `stages` contiguous blocks, sizes differing
+        // by at most 1 ("about same number of consecutive layers")
+        let base = n_layers / stages;
+        let extra = n_layers % stages;
+        let mut bounds = vec![0usize];
+        for b in 0..stages {
+            bounds.push(bounds[b] + base + usize::from(b < extra));
+        }
+        Schedule { n_layers, stages, iterations, policy, bounds }
+    }
+
+    /// Total number of (iteration, stage) phases.
+    pub fn n_phases(&self) -> usize {
+        match self.policy {
+            SchedulePolicy::Gradual => self.stages * self.iterations,
+            _ => 1,
+        }
+    }
+
+    /// Layers of block `b`.
+    pub fn block(&self, b: usize) -> std::ops::Range<usize> {
+        self.bounds[b]..self.bounds[b + 1]
+    }
+
+    /// Per-layer modes during phase `phase` (= iter * stages + stage).
+    pub fn modes(&self, phase: usize) -> Vec<LayerMode> {
+        match self.policy {
+            SchedulePolicy::FullPrecision => {
+                vec![LayerMode::FullPrecision; self.n_layers]
+            }
+            SchedulePolicy::Simultaneous => {
+                vec![LayerMode::Noise; self.n_layers]
+            }
+            SchedulePolicy::Gradual => {
+                let iter = phase / self.stages;
+                let stage = phase % self.stages;
+                let mut modes = Vec::with_capacity(self.n_layers);
+                for b in 0..self.stages {
+                    let mode = if b < stage {
+                        LayerMode::Frozen
+                    } else if b == stage {
+                        LayerMode::Noise
+                    } else if iter > 0 {
+                        // iteration >= 2: later blocks already quantized
+                        LayerMode::Frozen
+                    } else {
+                        LayerMode::FullPrecision
+                    };
+                    for _ in self.block(b) {
+                        modes.push(mode);
+                    }
+                }
+                modes
+            }
+        }
+    }
+
+    /// `mode_vec` encoding for the compiled step.
+    pub fn mode_vec(&self, phase: usize) -> Vec<f32> {
+        self.modes(phase).iter().map(|m| m.code()).collect()
+    }
+
+    /// Layers to freeze (host-quantize) when phase `phase` ENDS.
+    pub fn freeze_after(&self, phase: usize) -> Vec<usize> {
+        match self.policy {
+            SchedulePolicy::Gradual => {
+                let stage = phase % self.stages;
+                self.block(stage).collect()
+            }
+            // simultaneous: quantize everything at the very end
+            SchedulePolicy::Simultaneous => (0..self.n_layers).collect(),
+            SchedulePolicy::FullPrecision => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn blocks_partition_layers() {
+        prop(50, 401, |g| {
+            let n = g.usize_in(1, 40);
+            let stages = g.usize_in(1, 45);
+            let s = Schedule::new(n, stages, 2, SchedulePolicy::Gradual);
+            let mut covered = vec![false; n];
+            for b in 0..s.stages {
+                for l in s.block(b) {
+                    assert!(!covered[l], "layer {l} in two blocks");
+                    covered[l] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "layers uncovered");
+            // block sizes differ by at most one
+            let sizes: Vec<usize> =
+                (0..s.stages).map(|b| s.block(b).len()).collect();
+            let (lo, hi) = (
+                sizes.iter().min().unwrap(),
+                sizes.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "sizes {sizes:?}");
+        });
+    }
+
+    #[test]
+    fn first_iteration_structure() {
+        let s = Schedule::new(6, 3, 2, SchedulePolicy::Gradual);
+        // stage 0: first block noise, rest fp
+        assert_eq!(
+            s.modes(0),
+            vec![
+                LayerMode::Noise,
+                LayerMode::Noise,
+                LayerMode::FullPrecision,
+                LayerMode::FullPrecision,
+                LayerMode::FullPrecision,
+                LayerMode::FullPrecision,
+            ]
+        );
+        // stage 1: block0 frozen, block1 noise, block2 fp
+        assert_eq!(
+            s.modes(1)[..4],
+            [
+                LayerMode::Frozen,
+                LayerMode::Frozen,
+                LayerMode::Noise,
+                LayerMode::Noise
+            ]
+        );
+    }
+
+    #[test]
+    fn second_iteration_freezes_later_blocks() {
+        let s = Schedule::new(6, 3, 2, SchedulePolicy::Gradual);
+        let m = s.modes(3); // iter 1, stage 0
+        assert_eq!(m[0], LayerMode::Noise);
+        assert_eq!(m[2], LayerMode::Frozen); // later block now frozen
+        assert_eq!(m[4], LayerMode::Frozen);
+    }
+
+    #[test]
+    fn exactly_one_block_noised_per_gradual_phase() {
+        prop(40, 402, |g| {
+            let n = g.usize_in(2, 30);
+            let stages = g.usize_in(1, n);
+            let iters = g.usize_in(1, 3);
+            let s = Schedule::new(n, stages, iters, SchedulePolicy::Gradual);
+            for phase in 0..s.n_phases() {
+                let modes = s.modes(phase);
+                let noised: Vec<usize> = (0..n)
+                    .filter(|&l| modes[l] == LayerMode::Noise)
+                    .collect();
+                let stage = phase % s.stages;
+                assert_eq!(noised, s.block(stage).collect::<Vec<_>>());
+            }
+        });
+    }
+
+    #[test]
+    fn all_layers_frozen_after_full_sweep() {
+        let s = Schedule::new(9, 4, 1, SchedulePolicy::Gradual);
+        let mut frozen = vec![false; 9];
+        for phase in 0..s.n_phases() {
+            for l in s.freeze_after(phase) {
+                frozen[l] = true;
+            }
+        }
+        assert!(frozen.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn stage_count_clamps() {
+        let s = Schedule::new(3, 10, 1, SchedulePolicy::Gradual);
+        assert_eq!(s.stages, 3);
+        let s = Schedule::new(5, 0, 1, SchedulePolicy::Gradual);
+        assert_eq!(s.stages, 1);
+    }
+
+    #[test]
+    fn full_precision_policy_never_freezes() {
+        let s = Schedule::new(5, 5, 2, SchedulePolicy::FullPrecision);
+        assert_eq!(s.n_phases(), 1);
+        assert!(s.freeze_after(0).is_empty());
+        assert!(s
+            .modes(0)
+            .iter()
+            .all(|&m| m == LayerMode::FullPrecision));
+    }
+}

@@ -1,0 +1,322 @@
+//! Trainer: binds engine + artifacts + data + schedule into the paper's
+//! training procedure, with host-side exact quantization on freeze.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::{Metrics, StepMetric};
+use super::schedule::{Schedule, SchedulePolicy};
+use crate::data::{Batcher, Dataset};
+use crate::quant::{
+    KMeans, KQuantileEmpirical, KQuantileGauss, Quantizer, QuantizerFit,
+    Uniform,
+};
+use crate::runtime::engine::scalar_f32;
+use crate::runtime::state::StepConfig;
+use crate::runtime::{Engine, Executable, Manifest, ModelState};
+use crate::stats::mean_std;
+
+/// Which exact quantizer freezes layers (and supplies generic-noise
+/// thresholds for the Table 3 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FreezeQuant {
+    /// paper default: Gaussian k-quantile (matches the in-graph kernel)
+    KQuantileGauss,
+    /// empirical k-quantile ("actual percentiles", §2)
+    KQuantileEmpirical,
+    /// Lloyd-Max fitted to N(0,1), scaled per layer (§4.3 ablation)
+    KMeans,
+    /// uniform bins on [-3σ, 3σ] (§4.3 ablation)
+    Uniform,
+}
+
+impl FreezeQuant {
+    pub fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        match self {
+            FreezeQuant::KQuantileGauss => KQuantileGauss.fit(xs, k),
+            FreezeQuant::KQuantileEmpirical => {
+                KQuantileEmpirical.fit(xs, k)
+            }
+            FreezeQuant::KMeans => {
+                // pre-calculated N(0,1) table scaled to the layer stats
+                let s = mean_std(xs);
+                let base = KMeans::fit_gaussian(k, 200);
+                let (mu, sg) = (s.mean as f32, s.std.max(1e-8) as f32);
+                Quantizer {
+                    thresholds: base
+                        .thresholds
+                        .iter()
+                        .map(|t| mu + sg * t)
+                        .collect(),
+                    levels: base.levels.iter().map(|l| mu + sg * l).collect(),
+                }
+            }
+            FreezeQuant::Uniform => Uniform.fit(xs, k),
+        }
+    }
+
+    /// Uniformized-domain thresholds for the generic-noise train path.
+    pub fn uniformized_thresholds(&self, k: usize, kmax: usize) -> Vec<f32> {
+        // distribution-normalized (N(0,1)) thresholds; layer-independent
+        // because the in-graph path re-normalizes by per-layer (μ, σ)
+        let base: Quantizer = match self {
+            FreezeQuant::KMeans => KMeans::fit_gaussian(k, 200),
+            FreezeQuant::Uniform => {
+                let width = 6.0 / k as f32;
+                Quantizer {
+                    thresholds: (1..k)
+                        .map(|i| -3.0 + width * i as f32)
+                        .collect(),
+                    levels: (0..k)
+                        .map(|i| -3.0 + width * (i as f32 + 0.5))
+                        .collect(),
+                }
+            }
+            _ => {
+                // k-quantile in the uniform domain = equal bins
+                return equal_bins(k, kmax);
+            }
+        };
+        base.uniformized_thresholds(0.0, 1.0, kmax)
+    }
+}
+
+fn equal_bins(k: usize, kmax: usize) -> Vec<f32> {
+    let mut u: Vec<f32> =
+        (0..=k).map(|i| i as f32 / k as f32).collect();
+    while u.len() < kmax + 1 {
+        u.push(1.0);
+    }
+    u
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps_per_phase: usize,
+    pub stages: usize,
+    pub iterations: usize,
+    pub policy: SchedulePolicy,
+    pub lr: f32,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    /// quantize activations at eval time (the "a" in (w,a) configs)
+    pub eval_act_quant: bool,
+    pub freeze_quant: FreezeQuant,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    /// quiet mode for benches/experiments
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps_per_phase: 100,
+            stages: 0, // 0 = one stage per layer (paper's best, Fig B.1)
+            iterations: 2,
+            policy: SchedulePolicy::Gradual,
+            lr: 1e-4, // paper §4 fine-tuning LR
+            bits_w: 4,
+            bits_a: 8,
+            eval_act_quant: true,
+            freeze_quant: FreezeQuant::KQuantileGauss,
+            seed: 7,
+            log_every: 50,
+            eval_every: 0,
+            verbose: true,
+        }
+    }
+}
+
+pub struct Trainer {
+    pub manifest: Manifest,
+    pub train_exe: Executable,
+    pub eval_exe: Executable,
+    pub state: ModelState,
+    pub metrics: Metrics,
+    pub dir: PathBuf,
+}
+
+impl Trainer {
+    /// Load + compile an artifact directory.
+    pub fn new(engine: &Engine, dir: &Path) -> Result<Trainer> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest in {dir:?}"))?;
+        let train_exe = engine.compile_file(&dir.join("train_step.hlo.txt"))?;
+        let eval_exe = engine.compile_file(&dir.join("eval_step.hlo.txt"))?;
+        let state = ModelState::load_init(&manifest, dir)?;
+        Ok(Trainer {
+            manifest,
+            train_exe,
+            eval_exe,
+            state,
+            metrics: Metrics::default(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Reset to the artifact's initial state (reuse the compiled
+    /// executables across experiment cells — XLA compiles are expensive).
+    pub fn reset_state(&mut self) -> Result<()> {
+        self.state = ModelState::load_init(&self.manifest, &self.dir)?;
+        self.metrics = Metrics::default();
+        Ok(())
+    }
+
+    /// One train step; returns (loss, acc).
+    pub fn step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        cfg: &StepConfig,
+    ) -> Result<(f32, f32)> {
+        let inputs = self.state.train_inputs(&self.manifest, x, y, cfg)?;
+        let outputs = self.train_exe.run(&inputs)?;
+        self.state.absorb_train_outputs(&self.manifest, outputs)
+    }
+
+    /// Evaluate over a dataset; returns (mean loss, accuracy).
+    pub fn evaluate(
+        &self,
+        data: &Dataset,
+        k_a: f32,
+        aq: f32,
+    ) -> Result<(f32, f32)> {
+        let batches = Batcher::eval_batches(data, self.manifest.batch);
+        if batches.is_empty() {
+            return Err(anyhow!("dataset smaller than one batch"));
+        }
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for b in &batches {
+            let inputs =
+                self.state.eval_inputs(&self.manifest, &b.x, &b.y, k_a, aq)?;
+            let out = self.eval_exe.run(&inputs)?;
+            loss += scalar_f32(&out[0])?;
+            acc += scalar_f32(&out[1])?;
+        }
+        let n = batches.len() as f32;
+        Ok((loss / n, acc / n))
+    }
+
+    /// Host-quantize (freeze) the weights of quantizable layer `qidx`.
+    pub fn freeze_layer(
+        &mut self,
+        qidx: usize,
+        fq: FreezeQuant,
+        k: usize,
+    ) -> Result<()> {
+        let m = self.manifest.clone();
+        let w = self
+            .state
+            .qlayer_weights_mut(&m, qidx)
+            .ok_or_else(|| anyhow!("no weights for qlayer {qidx}"))?;
+        let q = fq.fit(w, k);
+        q.quantize(w);
+        Ok(())
+    }
+
+    /// Run the full gradual-quantization procedure. Returns final
+    /// (eval_loss, eval_acc) on `val`.
+    pub fn run(
+        &mut self,
+        train: &Dataset,
+        val: &Dataset,
+        cfg: &TrainConfig,
+    ) -> Result<(f32, f32)> {
+        let n_layers = self.manifest.n_qlayers();
+        let stages = if cfg.stages == 0 { n_layers } else { cfg.stages };
+        let schedule =
+            Schedule::new(n_layers, stages, cfg.iterations, cfg.policy);
+        let k_w = (1u32 << cfg.bits_w.min(16)) as f32;
+        let k_a = (1u32 << cfg.bits_a.min(16)) as f32;
+        let needs_thresh = self.manifest.noise_cfg == "generic";
+        let qthresh = needs_thresh.then(|| {
+            cfg.freeze_quant
+                .uniformized_thresholds(k_w as usize, self.manifest.kmax)
+        });
+
+        let mut batcher = Batcher::new(
+            train.clone(),
+            self.manifest.batch,
+            true,
+            cfg.seed,
+        );
+
+        for phase in 0..schedule.n_phases() {
+            let mode_vec = schedule.mode_vec(phase);
+            for s in 0..cfg.steps_per_phase {
+                let b = batcher.next_batch();
+                let step_cfg = StepConfig {
+                    lr: cfg.lr,
+                    k_w,
+                    k_a,
+                    aq: 0.0,
+                    seed: (self.state.step as i32).wrapping_add(13),
+                    mode_vec: mode_vec.clone(),
+                    qthresh: qthresh.clone(),
+                };
+                let t0 = Instant::now();
+                let (loss, acc) = self.step(&b.x, &b.y, &step_cfg)?;
+                self.metrics.record(StepMetric {
+                    step: self.state.step,
+                    phase,
+                    loss,
+                    acc,
+                    step_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                if cfg.verbose
+                    && cfg.log_every > 0
+                    && (s + 1) % cfg.log_every == 0
+                {
+                    println!(
+                        "phase {:>3}/{} step {:>6} loss {:.4} acc {:.3}",
+                        phase + 1,
+                        schedule.n_phases(),
+                        self.state.step,
+                        self.metrics.recent_loss(cfg.log_every),
+                        self.metrics.recent_acc(cfg.log_every),
+                    );
+                }
+                if cfg.eval_every > 0
+                    && self.state.step % cfg.eval_every as u64 == 0
+                {
+                    let (el, ea) = self.evaluate(
+                        val,
+                        k_a,
+                        if cfg.eval_act_quant { 1.0 } else { 0.0 },
+                    )?;
+                    self.metrics.record_eval(self.state.step, el, ea);
+                    if cfg.verbose {
+                        println!(
+                            "  eval @ {:>6}: loss {el:.4} acc {ea:.3}",
+                            self.state.step
+                        );
+                    }
+                }
+            }
+            // end of phase: freeze the block that was just noise-trained
+            for l in schedule.freeze_after(phase) {
+                self.freeze_layer(l, cfg.freeze_quant, k_w as usize)?;
+            }
+        }
+
+        // final freeze sweep (idempotent for k-quantile; guarantees every
+        // weight sits exactly on a representation level at eval)
+        if cfg.policy != SchedulePolicy::FullPrecision {
+            for l in 0..n_layers {
+                self.freeze_layer(l, cfg.freeze_quant, k_w as usize)?;
+            }
+        }
+        let (el, ea) = self.evaluate(
+            val,
+            k_a,
+            if cfg.eval_act_quant { 1.0 } else { 0.0 },
+        )?;
+        self.metrics.record_eval(self.state.step, el, ea);
+        Ok((el, ea))
+    }
+}

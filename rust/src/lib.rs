@@ -1,0 +1,21 @@
+//! UNIQ — Uniform Noise Injection for Non-Uniform Quantization of Neural
+//! Networks (Baskin et al., 2018): a three-layer reproduction.
+//!
+//! * L3 (this crate): coordinator — gradual-quantization scheduling,
+//!   training loop, host-side exact quantizers, data pipeline, BOPs
+//!   analyzer, experiment harnesses.
+//! * L2/L1 (python/compile, build-time only): JAX model fwd/bwd with the
+//!   UNIQ transform, Pallas kernels; AOT-lowered to `artifacts/*.hlo.txt`
+//!   and executed here through the PJRT C API (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod bops;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,253 @@
+//! `uniq` — leader binary: CLI entry for training, evaluation, host-side
+//! quantization, BOPs analysis and the paper-experiment harnesses.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use uniq::bops::BitConfig;
+use uniq::cli::{Cli, USAGE};
+use uniq::coordinator::{
+    FreezeQuant, SchedulePolicy, TrainConfig, Trainer,
+};
+use uniq::data::cifar;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Dataset;
+use uniq::experiments;
+use uniq::experiments::common::ExpCtx;
+use uniq::runtime::{Engine, ModelState};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&args);
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(cli: &Cli) -> PathBuf {
+    PathBuf::from(cli.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn parse_policy(s: &str) -> Result<SchedulePolicy> {
+    Ok(match s {
+        "gradual" => SchedulePolicy::Gradual,
+        "simultaneous" => SchedulePolicy::Simultaneous,
+        "fp" | "full-precision" => SchedulePolicy::FullPrecision,
+        _ => return Err(anyhow!("unknown policy {s}")),
+    })
+}
+
+fn parse_quantizer(s: &str) -> Result<FreezeQuant> {
+    Ok(match s {
+        "gauss" | "kquantile" => FreezeQuant::KQuantileGauss,
+        "empirical" => FreezeQuant::KQuantileEmpirical,
+        "kmeans" => FreezeQuant::KMeans,
+        "uniform" => FreezeQuant::Uniform,
+        _ => return Err(anyhow!("unknown quantizer {s}")),
+    })
+}
+
+fn load_data(cli: &Cli, classes: usize, n: usize) -> Result<Dataset> {
+    match cli.get("data").unwrap_or("synth") {
+        "synth" => Ok(SynthDataset::generate(SynthConfig {
+            classes,
+            n,
+            noise: cli.get_f32("noise", 0.6),
+            seed: cli.get_usize("data-seed", 1234) as u64,
+            ..Default::default()
+        })),
+        dir => {
+            let d = cifar::load_dir(Path::new(dir), classes)?;
+            println!("loaded {} images from {dir}", d.n);
+            Ok(d)
+        }
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(cli),
+        "train" => cmd_train(cli),
+        "eval" => cmd_eval(cli),
+        "quantize" => cmd_quantize(cli),
+        "bops" => cmd_bops(cli),
+        "experiment" => cmd_experiment(cli),
+        other => Err(anyhow!("unknown command '{other}'; try `uniq help`")),
+    }
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let dir = artifacts_dir(cli);
+    println!("artifacts: {}", dir.display());
+    let mut names: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow!("{e}; run `make artifacts` first"))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    for name in names {
+        let m = uniq::runtime::Manifest::load(&dir.join(&name))?;
+        println!(
+            "  {:<20} batch {:>3}  classes {:>3}  {:>2} qlayers  \
+             {:>9} params  noise_cfg {}",
+            m.name,
+            m.batch,
+            m.classes,
+            m.n_qlayers(),
+            m.n_param_elems(),
+            m.noise_cfg
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let model = cli.get("model").unwrap_or("resnet8");
+    let engine = Engine::cpu()?;
+    println!("compiling {model}...");
+    let mut t = Trainer::new(&engine, &artifacts_dir(cli).join(model))?;
+    if let Some(ckpt) = cli.get("ckpt") {
+        t.state = ModelState::load(Path::new(ckpt))?;
+        println!("resumed from {ckpt} (step {})", t.state.step);
+    }
+    let classes = t.manifest.classes;
+    let train = load_data(cli, classes, cli.get_usize("train-size", 4096))?;
+    let val_n = cli.get_usize("val-size", 512);
+    let (train, val) = if cli.get("data").unwrap_or("synth") == "synth" {
+        let val = SynthDataset::generate(SynthConfig {
+            classes,
+            n: val_n,
+            noise: cli.get_f32("noise", 0.6),
+            sample_seed: 4321, // same task (seed), fresh samples
+            ..Default::default()
+        });
+        (train, val)
+    } else {
+        train.split(val_n)
+    };
+
+    let cfg = TrainConfig {
+        steps_per_phase: cli.get_usize("steps", 100),
+        stages: cli.get_usize("stages", 0),
+        iterations: cli.get_usize("iters", 2),
+        policy: parse_policy(cli.get("policy").unwrap_or("gradual"))?,
+        lr: cli.get_f32("lr", 0.02),
+        bits_w: cli.get_u32("bits-w", 4),
+        bits_a: cli.get_u32("bits-a", 8),
+        eval_act_quant: cli.get_u32("bits-a", 8) < 32,
+        freeze_quant: parse_quantizer(
+            cli.get("quantizer").unwrap_or("gauss"),
+        )?,
+        seed: cli.get_usize("seed", 7) as u64,
+        log_every: cli.get_usize("log-every", 25),
+        eval_every: cli.get_usize("eval-every", 0),
+        verbose: true,
+    };
+    println!("{cfg:?}");
+    let (loss, acc) = t.run(&train, &val, &cfg)?;
+    println!(
+        "final: val loss {loss:.4}  val acc {:.2}%  ({} steps, mean \
+         {:.0} ms/step)",
+        acc * 100.0,
+        t.state.step,
+        t.metrics.mean_step_ms()
+    );
+    if let Some(path) = cli.get("save") {
+        t.state.save(Path::new(path))?;
+        println!("checkpoint -> {path}");
+    }
+    if let Some(path) = cli.get("metrics") {
+        t.metrics.save_csv(Path::new(path))?;
+        println!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let model = cli.get("model").unwrap_or("resnet8");
+    let engine = Engine::cpu()?;
+    let mut t = Trainer::new(&engine, &artifacts_dir(cli).join(model))?;
+    if let Some(ckpt) = cli.get("ckpt") {
+        t.state = ModelState::load(Path::new(ckpt))?;
+    }
+    let val = load_data(cli, t.manifest.classes,
+                        cli.get_usize("val-size", 512))?;
+    let bits_a = cli.get_u32("bits-a", 32);
+    let k_a = (1u64 << bits_a.min(16)) as f32;
+    let aq = if bits_a < 32 { 1.0 } else { 0.0 };
+    let (loss, acc) = t.evaluate(&val, k_a, aq)?;
+    println!("eval: loss {loss:.4}  top-1 {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+fn cmd_quantize(cli: &Cli) -> Result<()> {
+    let model = cli.get("model").unwrap_or("resnet8");
+    let ckpt = cli.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let out = cli.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let bits = cli.get_u32("bits-w", 4);
+    let fq = parse_quantizer(cli.get("quantizer").unwrap_or("gauss"))?;
+    let dir = artifacts_dir(cli).join(model);
+    let m = uniq::runtime::Manifest::load(&dir)?;
+    let mut state = ModelState::load(Path::new(ckpt))?;
+    let k = 1usize << bits.min(16);
+    for qidx in 0..m.n_qlayers() {
+        if let Some(w) = state.qlayer_weights_mut(&m, qidx) {
+            let q = fq.fit(w, k);
+            q.quantize(w);
+        }
+    }
+    state.save(Path::new(out))?;
+    println!(
+        "quantized {} layers of {ckpt} to {k} levels ({fq:?}) -> {out}",
+        m.n_qlayers()
+    );
+    Ok(())
+}
+
+fn cmd_bops(cli: &Cli) -> Result<()> {
+    let arch_name = cli.get("arch").unwrap_or("resnet18");
+    let arch = uniq::experiments::table1::arch_by_name(arch_name);
+    let bw = cli.get_u32("bits-w", 4);
+    let ba = cli.get_u32("bits-a", 8);
+    let cfg = if cli.has("skip-first-last") {
+        BitConfig::skip_first_last(bw, ba)
+    } else {
+        BitConfig::uniq(bw, ba)
+    };
+    let c = arch.complexity(cfg);
+    println!("{} at ({bw},{ba}) bits:", arch.name);
+    println!("  params     : {:>14}", c.params);
+    println!("  MACs       : {:>14}", c.macs);
+    println!("  model size : {:>11.1} Mbit", c.mbit());
+    println!("  complexity : {:>11.1} GBOPs", c.gbops());
+    for l in &arch.layers {
+        println!(
+            "    {:<16} {:>12} MACs  {:>10.2} GBOPs",
+            l.name,
+            l.macs(),
+            l.bops(bw, ba) / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(cli: &Cli) -> Result<()> {
+    let name = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment id required; see `uniq help`"))?
+        .clone();
+    let args: HashMap<String, String> = cli.flags.clone();
+    let ctx = ExpCtx::new(artifacts_dir(cli), args)?;
+    experiments::run(&name, &ctx)
+}

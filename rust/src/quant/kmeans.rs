@@ -1,0 +1,197 @@
+//! k-means (Lloyd-Max) quantizer — the ℓ₂-optimal baseline (paper §3.1).
+//!
+//! 1-D Lloyd iterations: levels ← bin centroids, thresholds ← level
+//! midpoints. NP-hard in general; this is the standard heuristic the
+//! paper references (Lloyd 1982). Also provides `fit_gaussian`, the
+//! pre-calculated N(0,1) table the paper's ablation uses (§4.3), verified
+//! against the python golden.
+
+use super::{Quantizer, QuantizerFit};
+use crate::stats::norm_icdf;
+
+#[derive(Debug, Clone, Copy)]
+pub struct KMeans {
+    pub iters: usize,
+}
+
+impl Default for KMeans {
+    fn default() -> Self {
+        KMeans { iters: 100 }
+    }
+}
+
+impl KMeans {
+    /// Lloyd-Max on the *standard normal density* (grid-approximated),
+    /// giving the distribution-matched table for weights ~ N(μ, σ²):
+    /// scale levels by σ and shift by μ at use site.
+    pub fn fit_gaussian(k: usize, iters: usize) -> Quantizer {
+        let n = 20_001;
+        let xs: Vec<f64> =
+            (0..n).map(|i| -6.0 + 12.0 * i as f64 / (n - 1) as f64).collect();
+        let pdf: Vec<f64> =
+            xs.iter().map(|&x| (-0.5 * x * x).exp()).collect();
+        let mut levels: Vec<f64> = (0..k)
+            .map(|i| norm_icdf((i as f64 + 0.5) / k as f64))
+            .collect();
+        for _ in 0..iters {
+            let thresh: Vec<f64> = levels
+                .windows(2)
+                .map(|w| 0.5 * (w[0] + w[1]))
+                .collect();
+            let mut num = vec![0.0f64; k];
+            let mut den = vec![0.0f64; k];
+            let mut bin = 0usize;
+            for (i, &x) in xs.iter().enumerate() {
+                while bin < thresh.len() && x >= thresh[bin] {
+                    bin += 1;
+                }
+                num[bin] += x * pdf[i];
+                den[bin] += pdf[i];
+            }
+            let mut moved = 0.0f64;
+            for i in 0..k {
+                if den[i] > 0.0 {
+                    let c = num[i] / den[i];
+                    moved = moved.max((c - levels[i]).abs());
+                    levels[i] = c;
+                }
+            }
+            if moved < 1e-12 {
+                break;
+            }
+        }
+        let thresholds = levels
+            .windows(2)
+            .map(|w| (0.5 * (w[0] + w[1])) as f32)
+            .collect();
+        Quantizer {
+            thresholds,
+            levels: levels.into_iter().map(|v| v as f32).collect(),
+        }
+    }
+}
+
+impl QuantizerFit for KMeans {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        assert!(k >= 2 && !xs.is_empty());
+        let mut sorted: Vec<f64> =
+            xs.iter().map(|&v| v as f64).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // init at k-quantile medians (good + deterministic)
+        let n = sorted.len();
+        let mut levels: Vec<f64> = (0..k)
+            .map(|i| {
+                let idx = ((i as f64 + 0.5) / k as f64 * n as f64) as usize;
+                sorted[idx.min(n - 1)]
+            })
+            .collect();
+        // prefix sums for O(1) range means
+        let mut prefix = vec![0.0f64; n + 1];
+        for i in 0..n {
+            prefix[i + 1] = prefix[i] + sorted[i];
+        }
+        for _ in 0..self.iters {
+            let thresh: Vec<f64> =
+                levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+            let mut moved = 0.0f64;
+            let mut start = 0usize;
+            for i in 0..k {
+                let end = if i < thresh.len() {
+                    sorted.partition_point(|&v| v < thresh[i])
+                } else {
+                    n
+                };
+                if end > start {
+                    let c = (prefix[end] - prefix[start])
+                        / (end - start) as f64;
+                    moved = moved.max((c - levels[i]).abs());
+                    levels[i] = c;
+                }
+                start = end;
+            }
+            if moved < 1e-10 {
+                break;
+            }
+        }
+        let thresholds = levels
+            .windows(2)
+            .map(|w| (0.5 * (w[0] + w[1])) as f32)
+            .collect();
+        Quantizer {
+            thresholds,
+            levels: levels.into_iter().map(|v| v as f32).collect(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "k-means (Lloyd-Max)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{KQuantileEmpirical, QuantizerFit, Uniform};
+    use crate::util::prop::prop;
+
+    #[test]
+    fn lloyd_is_l2_optimal_among_our_quantizers() {
+        // the defining property: lowest MSE of the three families
+        prop(15, 301, |g| {
+            let n = g.usize_in(500, 2000);
+            let xs = g.normal_vec(n, 0.0, 1.0);
+            let k = *[4usize, 8].get(g.usize_in(0, 1)).unwrap();
+            let km = KMeans::default().fit(&xs, k).mse(&xs);
+            let kq = KQuantileEmpirical.fit(&xs, k).mse(&xs);
+            let un = Uniform.fit(&xs, k).mse(&xs);
+            assert!(km <= kq * 1.001, "kmeans {km} vs kquantile {kq}");
+            assert!(km <= un * 1.001, "kmeans {km} vs uniform {un}");
+        });
+    }
+
+    #[test]
+    fn gaussian_table_symmetric() {
+        let q = KMeans::fit_gaussian(8, 500);
+        for i in 0..4 {
+            assert!(
+                (q.levels[i] + q.levels[7 - i]).abs() < 2e-3,
+                "{:?}",
+                q.levels
+            );
+        }
+    }
+
+    #[test]
+    fn gaussian_k2_matches_analytic() {
+        // optimal 2-level quantizer for N(0,1): levels at ±sqrt(2/π)
+        let q = KMeans::fit_gaussian(2, 500);
+        let want = (2.0f64 / std::f64::consts::PI).sqrt() as f32;
+        assert!((q.levels[1] - want).abs() < 1e-3, "{:?}", q.levels);
+    }
+
+    #[test]
+    fn clusters_separate_clear_modes() {
+        let mut xs = vec![];
+        for i in 0..100 {
+            xs.push(-5.0 + 0.01 * i as f32);
+            xs.push(5.0 + 0.01 * i as f32);
+        }
+        let q = KMeans::default().fit(&xs, 2);
+        assert!(q.levels[0] < 0.0 && q.levels[1] > 0.0);
+        assert!((q.levels[0] + 5.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn mse_never_increases_with_k() {
+        let mut g = crate::util::prop::Gen {
+            rng: crate::util::rng::Rng::new(42),
+        };
+        let xs = g.normal_vec(1000, 0.3, 1.2);
+        let mut prev = f64::INFINITY;
+        for k in [2usize, 4, 8, 16] {
+            let mse = KMeans::default().fit(&xs, k).mse(&xs);
+            assert!(mse <= prev * 1.001, "k={k}: {mse} > {prev}");
+            prev = mse;
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! k-quantile quantizers — the paper's proposed family (§3.1).
+//!
+//! Equiprobable bins: P(X ∈ bin_i) = 1/k. Thresholds are quantiles
+//! t_i = F⁻¹(i/k) and representation levels are the bin medians
+//! q_i = F⁻¹((i − ½)/k). Two fits:
+//!   * Gaussian: F = Φ((x−μ)/σ) with per-tensor μ, σ — matches the
+//!     in-graph Pallas `fake_quant` kernel exactly (golden-tested).
+//!   * Empirical: F from the sample itself (what "updated every forward
+//!     pass" would use); levels are empirical bin medians.
+
+use super::{Quantizer, QuantizerFit};
+use crate::stats::{mean_std, norm_icdf};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KQuantileGauss;
+
+impl QuantizerFit for KQuantileGauss {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        assert!(k >= 2);
+        let s = mean_std(xs);
+        let (mu, sigma) = (s.mean, s.std.max(1e-8));
+        let thresholds = (1..k)
+            .map(|i| (mu + sigma * norm_icdf(i as f64 / k as f64)) as f32)
+            .collect();
+        let levels = (0..k)
+            .map(|i| {
+                (mu + sigma * norm_icdf((i as f64 + 0.5) / k as f64)) as f32
+            })
+            .collect();
+        Quantizer { thresholds, levels }
+    }
+
+    fn name(&self) -> &'static str {
+        "k-quantile (gaussian)"
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KQuantileEmpirical;
+
+/// Linear-interpolated empirical quantile (numpy default method).
+fn quantile_sorted(sorted: &[f32], q: f64) -> f32 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+fn median_of(slice: &[f32]) -> f32 {
+    // slice must be sorted
+    let n = slice.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        slice[n / 2]
+    } else {
+        0.5 * (slice[n / 2 - 1] + slice[n / 2])
+    }
+}
+
+impl QuantizerFit for KQuantileEmpirical {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        assert!(k >= 2 && !xs.is_empty());
+        let mut sorted: Vec<f32> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thresholds: Vec<f32> = (1..k)
+            .map(|i| quantile_sorted(&sorted, i as f64 / k as f64))
+            .collect();
+        // bin medians from the sorted sample (searchsorted side="right"
+        // semantics to match Quantizer::bin and the numpy golden)
+        let mut levels = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for i in 0..k {
+            let end = if i + 1 < k {
+                sorted.partition_point(|&v| v < thresholds[i])
+            } else {
+                sorted.len()
+            };
+            levels.push(if end > start {
+                median_of(&sorted[start..end])
+            } else if i > 0 {
+                // empty bin (repeated values): reuse previous level
+                levels[i - 1]
+            } else {
+                sorted[0]
+            });
+            start = end;
+        }
+        Quantizer { thresholds, levels }
+    }
+
+    fn name(&self) -> &'static str {
+        "k-quantile (empirical)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn gauss_levels_symmetric_for_standard_normal_fit() {
+        // construct data with mu ~ 0, sigma ~ 1
+        let xs: Vec<f32> = (0..10_001)
+            .map(|i| norm_icdf((i as f64 + 0.5) / 10_001.0) as f32)
+            .collect();
+        let q = KQuantileGauss.fit(&xs, 8);
+        for i in 0..4 {
+            assert!(
+                (q.levels[i] + q.levels[7 - i]).abs() < 1e-3,
+                "levels not symmetric: {:?}",
+                q.levels
+            );
+        }
+    }
+
+    #[test]
+    fn equiprobable_bins_property() {
+        // each bin of the empirical k-quantile quantizer holds ~n/k samples
+        prop(30, 101, |g| {
+            let n = g.usize_in(200, 2000);
+            let k = *[2usize, 4, 8, 16].get(g.usize_in(0, 3)).unwrap();
+            let mu = g.f32_in(-2.0, 2.0);
+            let sigma = g.f32_in(0.1, 3.0);
+            let xs = g.normal_vec(n, mu, sigma);
+            let q = KQuantileEmpirical.fit(&xs, k);
+            let mut counts = vec![0usize; k];
+            for &x in &xs {
+                counts[q.bin(x)] += 1;
+            }
+            let expect = n as f64 / k as f64;
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(
+                    (c as f64) > 0.5 * expect && (c as f64) < 1.5 * expect,
+                    "bin {i} has {c} of ~{expect} (n={n}, k={k})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn thresholds_strictly_increasing_gauss() {
+        prop(50, 102, |g| {
+            let n = g.usize_in(10, 500);
+            let xs = g.normal_vec(n, 0.0, 1.0);
+            let k = g.usize_in(2, 32);
+            let q = KQuantileGauss.fit(&xs, k);
+            for w in q.thresholds.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+            assert_eq!(q.levels.len(), k);
+        });
+    }
+
+    #[test]
+    fn level_inside_its_bin() {
+        prop(30, 103, |g| {
+            let n = g.usize_in(50, 500);
+            let xs = g.nasty_vec(n);
+            let q = KQuantileEmpirical.fit(&xs, 8);
+            for (i, &lvl) in q.levels.iter().enumerate() {
+                assert_eq!(q.bin(lvl), i, "level {lvl} escaped bin {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn empirical_handles_constant_input() {
+        let xs = vec![1.5f32; 100];
+        let q = KQuantileEmpirical.fit(&xs, 4);
+        assert!(q.levels.iter().all(|&l| l == 1.5));
+    }
+
+    #[test]
+    fn quantile_interp_matches_numpy_convention() {
+        let sorted = [0.0f32, 1.0, 2.0, 3.0];
+        assert_eq!(quantile_sorted(&sorted, 0.5), 1.5);
+        assert_eq!(quantile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&sorted, 1.0), 3.0);
+    }
+}

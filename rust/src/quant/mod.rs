@@ -1,0 +1,161 @@
+//! Host-side exact quantizers (paper §3.1).
+//!
+//! These run in the coordinator when a layer is *frozen* during the
+//! gradual schedule and at inference time; the in-graph Pallas kernels
+//! only emulate them with noise during training. Parity between the two
+//! is asserted against the python-generated golden vectors.
+//!
+//! Implemented quantizers (all used by the Table 3 ablation):
+//!   * `KQuantileGauss` — the paper's k-quantile with a Gaussian fit
+//!     (thresholds `F⁻¹(i/k)`, levels = bin medians `F⁻¹((i-½)/k)`).
+//!   * `KQuantileEmpirical` — same, with empirical quantiles/medians.
+//!   * `Uniform` — equal-width bins on `[-3σ, 3σ]`, midpoint levels.
+//!   * `KMeans` — Lloyd-Max (ℓ₂-optimal) quantizer.
+
+pub mod kmeans;
+pub mod kquantile;
+pub mod uniform;
+
+pub use kmeans::KMeans;
+pub use kquantile::{KQuantileEmpirical, KQuantileGauss};
+pub use uniform::Uniform;
+
+/// A fitted scalar quantizer: a set of increasing thresholds partitioning
+/// the line into `levels.len()` bins, and one representation level per bin.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    /// len k-1 interior thresholds, strictly increasing.
+    pub thresholds: Vec<f32>,
+    /// len k representation levels.
+    pub levels: Vec<f32>,
+}
+
+impl Quantizer {
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Bin index of `x` (levels[bin] is its representation).
+    pub fn bin(&self, x: f32) -> usize {
+        // binary search over interior thresholds; ties go right like
+        // numpy searchsorted(side="right")
+        let mut lo = 0usize;
+        let mut hi = self.thresholds.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if x >= self.thresholds[mid] {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    pub fn quantize_one(&self, x: f32) -> f32 {
+        self.levels[self.bin(x)]
+    }
+
+    /// Quantize in place (the freeze path of the coordinator).
+    pub fn quantize(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.quantize_one(*x);
+        }
+    }
+
+    /// Mean squared quantization error over `xs`.
+    pub fn mse(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let e = (x - self.quantize_one(x)) as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    /// Thresholds mapped into the uniformized domain of N(mu, sigma) —
+    /// what the generic-noise training path consumes (padded to kmax+1
+    /// with leading 0 / trailing 1).
+    pub fn uniformized_thresholds(
+        &self,
+        mu: f32,
+        sigma: f32,
+        kmax: usize,
+    ) -> Vec<f32> {
+        use crate::stats::norm_cdf;
+        let mut u = Vec::with_capacity(kmax + 1);
+        u.push(0.0);
+        for &t in &self.thresholds {
+            u.push(norm_cdf(((t - mu) / sigma) as f64) as f32);
+        }
+        while u.len() < kmax + 1 {
+            u.push(1.0);
+        }
+        u.truncate(kmax + 1);
+        u
+    }
+}
+
+/// Trait for quantizer families: fit to data, yielding a `Quantizer`.
+pub trait QuantizerFit {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q2() -> Quantizer {
+        Quantizer { thresholds: vec![0.0], levels: vec![-1.0, 1.0] }
+    }
+
+    #[test]
+    fn bin_search_matches_linear() {
+        let q = Quantizer {
+            thresholds: vec![-1.0, 0.0, 2.0],
+            levels: vec![-2.0, -0.5, 1.0, 3.0],
+        };
+        for &(x, want) in
+            &[(-5.0, 0usize), (-1.0, 1), (-0.5, 1), (0.0, 2), (1.9, 2),
+              (2.0, 3), (9.0, 3)]
+        {
+            assert_eq!(q.bin(x), want, "x = {x}");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let q = q2();
+        let mut xs = vec![-3.0, -0.1, 0.1, 7.0];
+        q.quantize(&mut xs);
+        let once = xs.clone();
+        q.quantize(&mut xs);
+        assert_eq!(once, xs);
+    }
+
+    #[test]
+    fn mse_zero_on_levels() {
+        let q = q2();
+        assert_eq!(q.mse(&[-1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn uniformized_thresholds_padded_monotone() {
+        let q = Quantizer {
+            thresholds: vec![-0.5, 0.5],
+            levels: vec![-1.0, 0.0, 1.0],
+        };
+        let u = q.uniformized_thresholds(0.0, 1.0, 8);
+        assert_eq!(u.len(), 9);
+        assert_eq!(u[0], 0.0);
+        assert_eq!(*u.last().unwrap(), 1.0);
+        for w in u.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Uniform quantizer baseline (paper §4.3 ablation).
+//!
+//! Bins allocated evenly over [μ − 3σ, μ + 3σ] (the paper's ablation
+//! setup), representation level = bin midpoint.
+
+use super::{Quantizer, QuantizerFit};
+use crate::stats::mean_std;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Uniform;
+
+impl QuantizerFit for Uniform {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        assert!(k >= 2);
+        let s = mean_std(xs);
+        let (mu, sigma) = (s.mean as f32, (s.std as f32).max(1e-8));
+        let lo = mu - 3.0 * sigma;
+        let width = 6.0 * sigma / k as f32;
+        let thresholds = (1..k).map(|i| lo + width * i as f32).collect();
+        let levels =
+            (0..k).map(|i| lo + width * (i as f32 + 0.5)).collect();
+        Quantizer { thresholds, levels }
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform [-3σ,3σ]"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn equal_bin_widths() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 / 500.0) - 1.0).collect();
+        let q = Uniform.fit(&xs, 8);
+        let widths: Vec<f32> =
+            q.thresholds.windows(2).map(|w| w[1] - w[0]).collect();
+        for w in &widths {
+            assert!((w - widths[0]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn midpoint_levels() {
+        prop(30, 201, |g| {
+            let n = g.usize_in(20, 300);
+            let xs = g.normal_vec(n, 0.0, 1.0);
+            let k = g.usize_in(2, 16);
+            let q = Uniform.fit(&xs, k);
+            for i in 0..k - 2 {
+                // level i is midway between thresholds i-1 and i
+                if i >= 1 {
+                    let mid = 0.5 * (q.thresholds[i - 1] + q.thresholds[i]);
+                    assert!((q.levels[i] - mid).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn covers_centre_of_mass() {
+        // quantizing N(0,1) data with a uniform quantizer keeps MSE small
+        let xs: Vec<f32> = (0..4001)
+            .map(|i| {
+                crate::stats::norm_icdf((i as f64 + 0.5) / 4001.0) as f32
+            })
+            .collect();
+        let q = Uniform.fit(&xs, 16);
+        // bin width 6/16 sigma -> MSE ~ width^2/12 ~ 0.012
+        assert!(q.mse(&xs) < 0.02);
+    }
+}

@@ -1,0 +1,84 @@
+//! PJRT engine: one CPU client + compiled executables.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO text -> HloModuleProto
+//! (text parser reassigns the 64-bit jax instruction ids that
+//! xla_extension 0.5.1 would reject in proto form) -> compile -> execute.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Wrapper around the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Executable {
+            exe: self.client.compile(&comp)?,
+            name: path.display().to_string(),
+        })
+    }
+}
+
+/// A compiled step function following the return_tuple=True convention.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unpacks the result tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+///
+/// Perf: `create_from_shape_and_untyped_data` copies ONCE; the earlier
+/// `vec1(..).reshape(..)` path copied twice and ran an XLA reshape per
+/// input tensor per step (see EXPERIMENTS.md §Perf).
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Extract an f32 scalar from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

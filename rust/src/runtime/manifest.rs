@@ -1,0 +1,170 @@
+//! Artifact manifest: the contract between aot.py and the coordinator.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input/output slot of a compiled step function.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    /// "param" | "momentum" | "state" | "x" | "y" | "lr" | "k_w" | "k_a"
+    /// | "aq" | "seed" | "mode_vec" | "qthresh" | "loss" | "acc"
+    pub kind: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parameter/state tensor metadata (offsets into init.bin).
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// index into `qlayers` if this is a quantizable weight
+    pub qlayer: Option<usize>,
+    pub wd: bool,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub batch: usize,
+    pub image: Vec<usize>,
+    pub classes: usize,
+    pub noise_cfg: String,
+    pub kmax: usize,
+    pub qlayers: Vec<String>,
+    pub params: Vec<ParamMeta>,
+    pub state: Vec<ParamMeta>,
+    pub train_inputs: Vec<IoSpec>,
+    pub train_outputs: Vec<IoSpec>,
+    pub eval_inputs: Vec<IoSpec>,
+    pub eval_outputs: Vec<IoSpec>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req("name").map_err(anyhow::Error::msg)?.as_str()
+            .unwrap_or("").to_string(),
+        kind: j.req("kind").map_err(anyhow::Error::msg)?.as_str()
+            .unwrap_or("").to_string(),
+        shape: parse_shape(j.req("shape").map_err(anyhow::Error::msg)?)?,
+        dtype: j.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32")
+            .to_string(),
+    })
+}
+
+fn parse_param(j: &Json) -> Result<ParamMeta> {
+    let qlayer = match j.get("qlayer") {
+        Some(Json::Num(n)) => Some(*n as usize),
+        _ => None,
+    };
+    Ok(ParamMeta {
+        name: j.req("name").map_err(anyhow::Error::msg)?.as_str()
+            .unwrap_or("").to_string(),
+        shape: parse_shape(j.req("shape").map_err(anyhow::Error::msg)?)?,
+        qlayer,
+        wd: j.get("wd").and_then(|v| v.as_bool()).unwrap_or(false),
+        offset: j.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+        size: j.get("size").and_then(|v| v.as_usize()).unwrap_or(0),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let arr = |key: &str| -> Result<Vec<Json>> {
+            Ok(j.req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .to_vec())
+        };
+        Ok(Manifest {
+            name: j.req("name").map_err(anyhow::Error::msg)?.as_str()
+                .unwrap_or("").to_string(),
+            batch: j.req("batch").map_err(anyhow::Error::msg)?
+                .as_usize().unwrap_or(0),
+            image: parse_shape(j.req("image").map_err(anyhow::Error::msg)?)?,
+            classes: j.req("classes").map_err(anyhow::Error::msg)?
+                .as_usize().unwrap_or(0),
+            noise_cfg: j.req("noise_cfg").map_err(anyhow::Error::msg)?
+                .as_str().unwrap_or("quantile").to_string(),
+            kmax: j.get("kmax").and_then(|v| v.as_usize()).unwrap_or(32),
+            qlayers: arr("qlayers")?
+                .iter()
+                .map(|v| v.as_str().unwrap_or("").to_string())
+                .collect(),
+            params: arr("params")?.iter().map(parse_param)
+                .collect::<Result<_>>()?,
+            state: arr("state")?.iter().map(parse_param)
+                .collect::<Result<_>>()?,
+            train_inputs: arr("train_inputs")?.iter().map(parse_iospec)
+                .collect::<Result<_>>()?,
+            train_outputs: arr("train_outputs")?.iter().map(parse_iospec)
+                .collect::<Result<_>>()?,
+            eval_inputs: arr("eval_inputs")?.iter().map(parse_iospec)
+                .collect::<Result<_>>()?,
+            eval_outputs: arr("eval_outputs")?.iter().map(parse_iospec)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_qlayers(&self) -> usize {
+        self.qlayers.len()
+    }
+
+    /// Total parameter element count (model "size" in f32 elements).
+    pub fn n_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.size).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_artifact_manifest_if_built() {
+        // integration-ish: only runs when artifacts exist (make artifacts)
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/mlp");
+        if !dir.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "mlp");
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.qlayers.len(), 3);
+        // ordering contract: inputs start with params, then momenta
+        assert_eq!(m.train_inputs[0].kind, "param");
+        let n_p = m.params.len();
+        assert_eq!(m.train_inputs[n_p].kind, "momentum");
+        // mode_vec length matches qlayers
+        let mv = m.train_inputs.iter().find(|s| s.kind == "mode_vec")
+            .unwrap();
+        assert_eq!(mv.shape, vec![m.qlayers.len()]);
+    }
+}

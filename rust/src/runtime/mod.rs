@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! contract (HLO text + return_tuple=True calling convention, manifests
+//! describing flat input/output orderings) is produced by
+//! `python/compile/aot.py` — python never runs at coordinator time.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{IoSpec, Manifest, ParamMeta};
+pub use state::ModelState;

@@ -1,0 +1,294 @@
+//! Model state store: parameters, momenta and BN state live host-side in
+//! rust between steps; the manifest defines how they map onto the flat
+//! argument list of the compiled step functions.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{literal_f32, literal_i32};
+use super::manifest::Manifest;
+
+/// Host copy of everything the train step threads through.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: Vec<Vec<f32>>,
+    pub momenta: Vec<Vec<f32>>,
+    pub state: Vec<Vec<f32>>,
+    pub step: u64,
+}
+
+/// Scalar knobs of one train step (what the schedule varies).
+#[derive(Debug, Clone)]
+pub struct StepConfig {
+    pub lr: f32,
+    pub k_w: f32,
+    pub k_a: f32,
+    pub aq: f32,
+    pub seed: i32,
+    pub mode_vec: Vec<f32>,
+    /// uniformized thresholds for the generic-noise path (len kmax+1)
+    pub qthresh: Option<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Load initial params/state from the artifact's init.bin.
+    pub fn load_init(m: &Manifest, dir: &Path) -> Result<ModelState> {
+        let mut blob = Vec::new();
+        std::fs::File::open(dir.join("init.bin"))
+            .with_context(|| format!("opening {}/init.bin", dir.display()))?
+            .read_to_end(&mut blob)?;
+        let floats: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let slice = |off: usize, size: usize| -> Result<Vec<f32>> {
+            floats
+                .get(off..off + size)
+                .map(|s| s.to_vec())
+                .ok_or_else(|| anyhow!("init.bin too short"))
+        };
+        let params = m
+            .params
+            .iter()
+            .map(|p| slice(p.offset, p.size))
+            .collect::<Result<Vec<_>>>()?;
+        let momenta = m.params.iter().map(|p| vec![0.0; p.size]).collect();
+        let state = m
+            .state
+            .iter()
+            .map(|p| slice(p.offset, p.size))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelState { params, momenta, state, step: 0 })
+    }
+
+    /// Assemble the train-step input literals in manifest order.
+    pub fn train_inputs(
+        &self,
+        m: &Manifest,
+        x: &[f32],
+        y: &[i32],
+        cfg: &StepConfig,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(m.train_inputs.len());
+        let (mut pi, mut mi, mut si) = (0usize, 0usize, 0usize);
+        for spec in &m.train_inputs {
+            let lit = match spec.kind.as_str() {
+                "param" => {
+                    pi += 1;
+                    literal_f32(&self.params[pi - 1], &spec.shape)?
+                }
+                "momentum" => {
+                    mi += 1;
+                    literal_f32(&self.momenta[mi - 1], &spec.shape)?
+                }
+                "state" => {
+                    si += 1;
+                    literal_f32(&self.state[si - 1], &spec.shape)?
+                }
+                "x" => literal_f32(x, &spec.shape)?,
+                "y" => literal_i32(y, &spec.shape)?,
+                "lr" => literal_f32(&[cfg.lr], &[])?,
+                "k_w" => literal_f32(&[cfg.k_w], &[])?,
+                "k_a" => literal_f32(&[cfg.k_a], &[])?,
+                "aq" => literal_f32(&[cfg.aq], &[])?,
+                "seed" => literal_i32(&[cfg.seed], &[])?,
+                "mode_vec" => literal_f32(&cfg.mode_vec, &spec.shape)?,
+                "qthresh" => {
+                    let t = cfg.qthresh.as_ref().ok_or_else(|| {
+                        anyhow!("variant needs qthresh but none configured")
+                    })?;
+                    literal_f32(t, &spec.shape)?
+                }
+                k => return Err(anyhow!("unknown input kind {k}")),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Assemble eval-step inputs.
+    pub fn eval_inputs(
+        &self,
+        m: &Manifest,
+        x: &[f32],
+        y: &[i32],
+        k_a: f32,
+        aq: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(m.eval_inputs.len());
+        let (mut pi, mut si) = (0usize, 0usize);
+        for spec in &m.eval_inputs {
+            let lit = match spec.kind.as_str() {
+                "param" => {
+                    pi += 1;
+                    literal_f32(&self.params[pi - 1], &spec.shape)?
+                }
+                "state" => {
+                    si += 1;
+                    literal_f32(&self.state[si - 1], &spec.shape)?
+                }
+                "x" => literal_f32(x, &spec.shape)?,
+                "y" => literal_i32(y, &spec.shape)?,
+                "k_a" => literal_f32(&[k_a], &[])?,
+                "aq" => literal_f32(&[aq], &[])?,
+                k => return Err(anyhow!("unknown eval input kind {k}")),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Absorb train-step outputs (params', momenta', state', loss, acc).
+    pub fn absorb_train_outputs(
+        &mut self,
+        m: &Manifest,
+        outputs: Vec<xla::Literal>,
+    ) -> Result<(f32, f32)> {
+        if outputs.len() != m.train_outputs.len() {
+            return Err(anyhow!(
+                "expected {} outputs, got {}",
+                m.train_outputs.len(),
+                outputs.len()
+            ));
+        }
+        let (mut pi, mut mi, mut si) = (0usize, 0usize, 0usize);
+        let mut loss = f32::NAN;
+        let mut acc = f32::NAN;
+        for (spec, lit) in m.train_outputs.iter().zip(outputs) {
+            match spec.kind.as_str() {
+                "param" => {
+                    self.params[pi] = lit.to_vec::<f32>()?;
+                    pi += 1;
+                }
+                "momentum" => {
+                    self.momenta[mi] = lit.to_vec::<f32>()?;
+                    mi += 1;
+                }
+                "state" => {
+                    self.state[si] = lit.to_vec::<f32>()?;
+                    si += 1;
+                }
+                "loss" => loss = lit.to_vec::<f32>()?[0],
+                "acc" => acc = lit.to_vec::<f32>()?[0],
+                k => return Err(anyhow!("unknown output kind {k}")),
+            }
+        }
+        self.step += 1;
+        Ok((loss, acc))
+    }
+
+    /// Mutable weight slice of quantizable layer `qidx` (its conv/fc
+    /// kernel — the tensor the freeze path quantizes host-side).
+    pub fn qlayer_weights_mut(
+        &mut self,
+        m: &Manifest,
+        qidx: usize,
+    ) -> Option<&mut Vec<f32>> {
+        m.params
+            .iter()
+            .position(|p| p.qlayer == Some(qidx))
+            .map(|i| &mut self.params[i])
+    }
+
+    pub fn qlayer_weights(&self, m: &Manifest, qidx: usize) -> Option<&[f32]> {
+        m.params
+            .iter()
+            .position(|p| p.qlayer == Some(qidx))
+            .map(|i| self.params[i].as_slice())
+    }
+
+    /// Save a checkpoint: params + momenta + state + step, simple binary
+    /// format (u64 counts + f32 LE payloads), manifest order.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"UNIQCKPT")?;
+        f.write_all(&self.step.to_le_bytes())?;
+        for group in [&self.params, &self.momenta, &self.state] {
+            f.write_all(&(group.len() as u64).to_le_bytes())?;
+            for t in group {
+                f.write_all(&(t.len() as u64).to_le_bytes())?;
+                let bytes: Vec<u8> =
+                    t.iter().flat_map(|v| v.to_le_bytes()).collect();
+                f.write_all(&bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelState> {
+        let mut blob = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut blob)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = blob
+                .get(*pos..*pos + n)
+                .ok_or_else(|| anyhow!("truncated checkpoint"))?;
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != b"UNIQCKPT" {
+            return Err(anyhow!("bad checkpoint magic"));
+        }
+        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let mut groups = Vec::new();
+        for _ in 0..3 {
+            let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let mut group = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                let len =
+                    u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                let bytes = take(&mut pos, len as usize * 4)?;
+                group.push(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| {
+                            f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+                        })
+                        .collect(),
+                );
+            }
+            groups.push(group);
+        }
+        let state = groups.pop().unwrap();
+        let momenta = groups.pop().unwrap();
+        let params = groups.pop().unwrap();
+        Ok(ModelState { params, momenta, state, step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = ModelState {
+            params: vec![vec![1.0, 2.0], vec![3.0]],
+            momenta: vec![vec![0.5, 0.5], vec![0.0]],
+            state: vec![vec![7.0; 4]],
+            step: 42,
+        };
+        let dir = std::env::temp_dir().join("uniq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        s.save(&path).unwrap();
+        let loaded = ModelState::load(&path).unwrap();
+        assert_eq!(loaded.params, s.params);
+        assert_eq!(loaded.momenta, s.momenta);
+        assert_eq!(loaded.state, s.state);
+        assert_eq!(loaded.step, 42);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("uniq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ModelState::load(&path).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Statistics substrate: normal distribution, Shapiro-Wilk normality test
+//! (Fig C.1), histograms and summary statistics.
+
+pub mod normal;
+pub mod shapiro;
+pub mod summary;
+
+pub use normal::{norm_cdf, norm_icdf};
+pub use shapiro::shapiro_wilk;
+pub use summary::{histogram, mean_std, Summary};

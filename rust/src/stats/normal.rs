@@ -1,0 +1,111 @@
+//! Standard normal CDF / inverse CDF.
+//!
+//! Same polynomial approximations as the Python compile path
+//! (`python/compile/common.py`): erf via Abramowitz & Stegun 7.1.26,
+//! erf_inv via Giles (2010). Bit-for-bit parity with the kernels is
+//! asserted against the `artifacts/golden/norm_*` vectors in
+//! `rust/tests/golden.rs` — the host-side quantizers MUST agree with the
+//! in-graph quantizers or frozen layers would drift.
+
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+
+/// erf via A&S 7.1.26 (|err| < 1.5e-7, matches the compile path).
+pub fn erf(x: f64) -> f64 {
+    let (a1, a2, a3) = (0.254829592, -0.284496736, 1.421413741);
+    let (a4, a5, p) = (-1.453152027, 1.061405429, 0.3275911);
+    let s = x.signum();
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + p * ax);
+    let y = 1.0
+        - ((((a5 * t + a4) * t + a3) * t + a2) * t + a1)
+            * t
+            * (-ax * ax).exp();
+    s * y
+}
+
+/// erf^-1 via Giles (2010), single-precision branch.
+pub fn erf_inv(y: f64) -> f64 {
+    let y = y.clamp(-1.0 + 1e-7, 1.0 - 1e-7);
+    let w = -((1.0 - y) * (1.0 + y)).ln();
+    let p = if w < 5.0 {
+        let w = w - 2.5;
+        let mut p = 2.810_226_36e-08;
+        p = 3.432_739_39e-07 + p * w;
+        p = -3.523_387_7e-06 + p * w;
+        p = -4.391_506_54e-06 + p * w;
+        p = 0.000_218_580_87 + p * w;
+        p = -0.001_253_725_03 + p * w;
+        p = -0.004_177_681_64 + p * w;
+        p = 0.246_640_727 + p * w;
+        1.501_409_41 + p * w
+    } else {
+        let w = w.sqrt() - 3.0;
+        let mut p = -0.000_200_214_257;
+        p = 0.000_100_950_558 + p * w;
+        p = 0.001_349_343_22 + p * w;
+        p = -0.003_673_428_44 + p * w;
+        p = 0.005_739_507_73 + p * w;
+        p = -0.007_622_461_3 + p * w;
+        p = 0.009_438_870_47 + p * w;
+        p = 1.001_674_06 + p * w;
+        2.832_976_82 + p * w
+    };
+    p * y
+}
+
+/// Phi(z): standard normal CDF.
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / SQRT2))
+}
+
+/// Phi^-1(u): standard normal quantile.
+pub fn norm_icdf(u: f64) -> f64 {
+    SQRT2 * erf_inv(2.0 * u - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_known_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.0) - 0.841_344_7).abs() < 1e-6);
+        assert!((norm_cdf(-1.96) - 0.024_998).abs() < 1e-5);
+    }
+
+    #[test]
+    fn icdf_known_values() {
+        assert!(norm_icdf(0.5).abs() < 1e-7);
+        assert!((norm_icdf(0.975) - 1.959_964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for i in 1..100 {
+            let z = -4.0 + 8.0 * i as f64 / 100.0;
+            let back = norm_icdf(norm_cdf(z));
+            // tails amplify the ~1.5e-7 erf error; 5e-4 is far below
+            // the 2^-20 uniformization clamp resolution we rely on
+            assert!((back - z).abs() < 5e-4, "z={z} back={back}");
+        }
+    }
+
+    #[test]
+    fn erf_odd_symmetry() {
+        for i in 0..50 {
+            let x = i as f64 / 10.0;
+            assert!((erf(x) + erf(-x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut prev = 0.0;
+        for i in 0..=200 {
+            let v = norm_cdf(-5.0 + i as f64 / 20.0);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+}

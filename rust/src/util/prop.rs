@@ -1,0 +1,101 @@
+//! Tiny property-testing harness (the vendor set has no proptest).
+//!
+//! `prop(cases, seed, |g| { ... })` runs a closure over `cases` generated
+//! inputs; on failure it reports the case index and seed so the case can
+//! be replayed exactly. Generators are methods on `Gen`.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of standard-normal samples scaled/shifted.
+    pub fn normal_vec(&mut self, n: usize, mu: f32, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| mu + sigma * self.rng.normal()).collect()
+    }
+
+    /// Vector of uniform samples in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A "nasty" float vector: mixes normal bulk with outliers, repeats
+    /// and exact zeros — the shapes that break quantizers.
+    pub fn nasty_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match self.rng.below(10) {
+                0 => 0.0,
+                1 => self.f32_in(-100.0, 100.0),
+                2 => 1.0,
+                _ => self.rng.normal(),
+            })
+            .collect()
+    }
+}
+
+/// Run `f` over `cases` generated cases. Panics with replay info on the
+/// first failure (any panic inside `f`).
+pub fn prop<F: FnMut(&mut Gen)>(cases: usize, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)) };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut g),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        prop(25, 1, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failure() {
+        prop(50, 2, |g| {
+            let v = g.usize_in(0, 10);
+            assert!(v < 10, "boom {v}");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        prop(100, 3, |g| {
+            let lo = g.f32_in(-5.0, 0.0);
+            let hi = g.f32_in(1.0, 5.0);
+            let x = g.f32_in(lo, hi);
+            assert!(x >= lo && x <= hi);
+            let n = g.usize_in(1, 64);
+            assert!((1..=64).contains(&n));
+            assert_eq!(g.normal_vec(n, 0.0, 1.0).len(), n);
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! Fast experiment-harness integration: the analytic harnesses (table1,
+//! fig1) run end to end and leave machine-readable results behind.
+//! The training-based harnesses are exercised by `make experiments`
+//! and asserted at the claim level in their unit tests.
+
+use std::collections::HashMap;
+
+use uniq::experiments;
+use uniq::experiments::common::ExpCtx;
+
+fn ctx() -> Option<ExpCtx> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("mlp/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(ExpCtx::new(artifacts, HashMap::new()).unwrap())
+}
+
+#[test]
+fn table1_and_fig1_regenerate() {
+    let Some(ctx) = ctx() else { return };
+    experiments::run("table1", &ctx).unwrap();
+    experiments::run("fig1", &ctx).unwrap();
+    let t1 = std::fs::read_to_string("results/table1.tsv").unwrap();
+    // all 31 rows + header
+    assert_eq!(t1.lines().count(), 32);
+    // spot-check one row: UNIQ mobilenet (4,8) -> 16.8 Mbit
+    let row = t1
+        .lines()
+        .find(|l| l.starts_with("mobilenet\tUNIQ\t4\t8"))
+        .expect("row missing");
+    let mbit: f64 = row.split('\t').nth(4).unwrap().parse().unwrap();
+    assert!((mbit - 16.8).abs() < 0.2, "{row}");
+
+    let f1 = std::fs::read_to_string("results/fig1.tsv").unwrap();
+    assert!(f1.lines().count() >= 32);
+    let plot = std::fs::read_to_string("results/fig1.txt").unwrap();
+    assert!(plot.contains('U') && plot.contains('B'));
+}
+
+#[test]
+fn unknown_experiment_is_an_error() {
+    let Some(ctx) = ctx() else { return };
+    assert!(experiments::run("tableZZ", &ctx).is_err());
+}

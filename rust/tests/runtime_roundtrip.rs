@@ -1,0 +1,258 @@
+//! Integration: AOT artifacts -> PJRT compile -> train/eval from rust.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise). Uses the
+//! small `mlp` and `resnet8` variants to keep compile times in CI range.
+
+use std::path::{Path, PathBuf};
+
+use uniq::coordinator::{
+    FreezeQuant, SchedulePolicy, TrainConfig, Trainer,
+};
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::quant::QuantizerFit;
+use uniq::runtime::{Engine, Manifest, ModelState};
+use uniq::runtime::state::StepConfig;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("mlp/train_step.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn tiny_data(n: usize, classes: usize) -> uniq::data::Dataset {
+    SynthDataset::generate(SynthConfig {
+        n,
+        classes,
+        noise: 0.5,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn mlp_train_step_runs_and_learns() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut t = Trainer::new(&engine, &root.join("mlp")).unwrap();
+    let data = tiny_data(256, 10);
+    let n_layers = t.manifest.n_qlayers();
+    let mut batcher =
+        uniq::data::Batcher::new(data, t.manifest.batch, false, 3);
+
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for i in 0..30 {
+        let b = batcher.next_batch();
+        let cfg = StepConfig {
+            lr: 0.005,
+            k_w: 16.0,
+            k_a: 256.0,
+            aq: 0.0,
+            seed: i,
+            mode_vec: vec![1.0; n_layers],
+            qthresh: None,
+        };
+        let (loss, _) = t.step(&b.x, &b.y, &cfg).unwrap();
+        assert!(loss.is_finite(), "loss went non-finite at step {i}");
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.9,
+        "no learning: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn frozen_mode_keeps_weights_fixed() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut t = Trainer::new(&engine, &root.join("mlp")).unwrap();
+    let data = tiny_data(64, 10);
+    let b = uniq::data::Batcher::eval_batches(&data, t.manifest.batch)
+        .remove(0);
+    let n_layers = t.manifest.n_qlayers();
+    let before = t.state.params.clone();
+    let cfg = StepConfig {
+        lr: 0.5,
+        k_w: 4.0,
+        k_a: 16.0,
+        aq: 0.0,
+        seed: 1,
+        mode_vec: vec![2.0; n_layers],
+        qthresh: None,
+    };
+    t.step(&b.x, &b.y, &cfg).unwrap();
+    // quantizable weights unchanged; biases/etc may move
+    for (i, p) in t.manifest.params.clone().iter().enumerate() {
+        if p.qlayer.is_some() {
+            assert_eq!(
+                t.state.params[i], before[i],
+                "frozen layer {} drifted",
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_step_deterministic() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let t = Trainer::new(&engine, &root.join("mlp")).unwrap();
+    let data = tiny_data(64, 10);
+    let (l1, a1) = t.evaluate(&data, 256.0, 0.0).unwrap();
+    let (l2, a2) = t.evaluate(&data, 256.0, 0.0).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+#[test]
+fn activation_quantization_changes_eval_but_not_wildly() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let t = Trainer::new(&engine, &root.join("mlp")).unwrap();
+    let data = tiny_data(64, 10);
+    let (l_fp, _) = t.evaluate(&data, 256.0, 0.0).unwrap();
+    let (l_q8, _) = t.evaluate(&data, 256.0, 1.0).unwrap();
+    assert_ne!(l_fp, l_q8, "aq flag had no effect");
+    assert!((l_fp - l_q8).abs() < 2.0, "8-bit act quant exploded");
+}
+
+#[test]
+fn freeze_layer_snaps_weights_to_k_levels() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut t = Trainer::new(&engine, &root.join("mlp")).unwrap();
+    t.freeze_layer(0, FreezeQuant::KQuantileGauss, 8).unwrap();
+    let m = t.manifest.clone();
+    let w = t.state.qlayer_weights(&m, 0).unwrap();
+    let mut distinct: Vec<f32> = w.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    assert!(
+        distinct.len() <= 8,
+        "{} distinct values after k=8 freeze",
+        distinct.len()
+    );
+}
+
+#[test]
+fn gradual_run_end_to_end_resnet8() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut t = Trainer::new(&engine, &root.join("resnet8")).unwrap();
+    let train = tiny_data(512, 10);
+    let val = tiny_data(128, 10);
+    let cfg = TrainConfig {
+        steps_per_phase: 6,
+        stages: 3,
+        iterations: 1,
+        policy: SchedulePolicy::Gradual,
+        lr: 0.02,
+        bits_w: 4,
+        bits_a: 8,
+        verbose: false,
+        log_every: 0,
+        ..Default::default()
+    };
+    let (loss, acc) = t.run(&train, &val, &cfg).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    // every quantizable layer must now sit on <= 16 levels
+    let m = t.manifest.clone();
+    for q in 0..m.n_qlayers() {
+        let w = t.state.qlayer_weights(&m, q).unwrap();
+        let mut d: Vec<f32> = w.to_vec();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d.dedup();
+        assert!(d.len() <= 16, "layer {q}: {} levels", d.len());
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_via_trainer_state() {
+    let Some(root) = artifacts() else { return };
+    let m = Manifest::load(&root.join("mlp")).unwrap();
+    let s = ModelState::load_init(&m, &root.join("mlp")).unwrap();
+    let path = std::env::temp_dir().join("uniq_rt_ckpt.bin");
+    s.save(&path).unwrap();
+    let loaded = ModelState::load(&path).unwrap();
+    assert_eq!(s.params, loaded.params);
+}
+
+#[test]
+fn golden_quantizer_parity_with_python() {
+    // host quantizers must match the python/compile quantizers bit-near
+    let Some(root) = artifacts() else { return };
+    let g = root.join("golden");
+    let read = |name: &str| -> Vec<f32> {
+        let b = std::fs::read(g.join(format!("{name}.bin"))).unwrap();
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    // normal cdf/icdf grids
+    let zs = read("norm_z");
+    let cdf = read("norm_cdf");
+    for (z, c) in zs.iter().zip(&cdf) {
+        let ours = uniq::stats::norm_cdf(*z as f64) as f32;
+        assert!((ours - c).abs() < 2e-6, "cdf({z}): {ours} vs {c}");
+    }
+    let us = read("norm_u");
+    let icdf = read("norm_icdf");
+    for (u, v) in us.iter().zip(&icdf) {
+        let ours = uniq::stats::norm_icdf(*u as f64) as f32;
+        assert!((ours - v).abs() < 2e-5, "icdf({u}): {ours} vs {v}");
+    }
+    // gaussian k-quantile quantizer on the shared input vector
+    let x = read("kq_input");
+    for k in [4usize, 8, 16] {
+        let want = read(&format!("kq_gauss_k{k}"));
+        // python used exact mu=0.1 sigma=0.7; emulate via direct quantizer
+        let q = uniq::quant::Quantizer {
+            thresholds: (1..k)
+                .map(|i| {
+                    0.1 + 0.7 * uniq::stats::norm_icdf(i as f64 / k as f64)
+                        as f32
+                })
+                .collect(),
+            levels: (0..k)
+                .map(|i| {
+                    0.1 + 0.7
+                        * uniq::stats::norm_icdf((i as f64 + 0.5) / k as f64)
+                            as f32
+                })
+                .collect(),
+        };
+        for (xi, wi) in x.iter().zip(&want) {
+            let got = q.quantize_one(*xi);
+            assert!(
+                (got - wi).abs() < 3e-4,
+                "k={k} x={xi}: {got} vs {wi}"
+            );
+        }
+    }
+    // empirical k-quantile levels
+    for k in [4usize, 8] {
+        let want_levels = read(&format!("kq_emp_k{k}_levels"));
+        let q = uniq::quant::KQuantileEmpirical.fit(&x, k);
+        for (a, b) in q.levels.iter().zip(&want_levels) {
+            assert!((a - b).abs() < 1e-5, "k={k} levels {a} vs {b}");
+        }
+    }
+    // Lloyd-Max N(0,1) centroids
+    for k in [4usize, 8] {
+        let want = read(&format!("lloyd_n01_k{k}_centroids"));
+        let q = uniq::quant::KMeans::fit_gaussian(k, 500);
+        for (a, b) in q.levels.iter().zip(&want) {
+            assert!((a - b).abs() < 5e-3, "k={k} centroid {a} vs {b}");
+        }
+    }
+}
