@@ -1,26 +1,42 @@
 //! Mobile-deployment scenario (the paper's motivating workload): train
 //! the depthwise-separable MobileNet-mini with UNIQ, freeze to 4-bit
-//! weights, then measure *serving* latency/throughput of the quantized
-//! model and its analytic deployment cost in BOPs.
+//! weights, then serve the frozen model through the *native LUT
+//! inference engine* (`uniq::infer`) — codebook-indexed kernels behind a
+//! batched request queue, no PJRT on the request path — and compare the
+//! measured throughput against the dequantized-f32 reference and the
+//! analytic deployment cost in BOPs. Emits `BENCH_inference.json`.
 //!
 //!     cargo run --release --offline --example mobilenet_deploy [-- fast]
+//!
+//! Works without AOT artifacts/PJRT too: it falls back to a synthetic
+//! UNIQ-frozen MobileNet-mini with the same manifest contract.
 
-use std::time::Instant;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use uniq::bops::{mobilenet224, BitConfig};
-use uniq::coordinator::{SchedulePolicy, TrainConfig, Trainer};
+use uniq::coordinator::{FreezeQuant, SchedulePolicy, TrainConfig, Trainer};
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
+use uniq::infer::{
+    synthetic, FrozenModel, KernelMode, ServeConfig, ServeModel, Server,
+};
 use uniq::runtime::Engine;
+use uniq::util::bench::Bench;
+use uniq::util::json::{num, obj, s, Json};
 
-fn main() -> Result<()> {
-    let fast = std::env::args().any(|a| a == "fast");
+const BITS_W: u32 = 4;
+
+/// The original PJRT flow: UNIQ-train mobilenet_mini, then freeze.
+/// Needs `make artifacts` and a real xla backend.
+fn train_and_freeze(fast: bool) -> Result<FrozenModel> {
     let engine = Engine::cpu()?;
-    println!("compiling mobilenet_mini...");
+    println!("compiling mobilenet_mini ({})...", engine.platform());
     let mut trainer = Trainer::new(
         &engine,
-        std::path::Path::new("artifacts/mobilenet_mini"),
+        Path::new("artifacts/mobilenet_mini"),
     )?;
     let train = SynthDataset::generate(SynthConfig {
         n: 2048,
@@ -31,17 +47,16 @@ fn main() -> Result<()> {
         sample_seed: 4321,
         ..Default::default()
     });
-
     // UNIQ training: 2 consecutive layers per stage (the paper's
     // MobileNet-specific schedule, supplementary B)
     let n_layers = trainer.manifest.n_qlayers();
     let cfg = TrainConfig {
         steps_per_phase: if fast { 8 } else { 25 },
-        stages: n_layers / 2, // 2 layers per stage
+        stages: n_layers / 2,
         iterations: 1,
         policy: SchedulePolicy::Gradual,
         lr: 0.02,
-        bits_w: 4,
+        bits_w: BITS_W,
         bits_a: 8,
         eval_act_quant: true,
         log_every: 50,
@@ -52,42 +67,173 @@ fn main() -> Result<()> {
         "quantized mobilenet-mini: val loss {loss:.4} top-1 {:.2}%\n",
         acc * 100.0
     );
+    FrozenModel::export(
+        &trainer.manifest,
+        &trainer.state,
+        FreezeQuant::KQuantileGauss,
+        BITS_W,
+    )
+}
 
-    // ---- serving loop: batched inference on the frozen 4-bit model
-    let batches = Batcher::eval_batches(&val, trainer.manifest.batch);
-    let reps = if fast { 2 } else { 8 };
-    let t0 = Instant::now();
-    let mut n_imgs = 0usize;
-    let mut lat_ms: Vec<f64> = Vec::new();
-    for _ in 0..reps {
-        for b in &batches {
-            let t1 = Instant::now();
-            let inputs = trainer.state.eval_inputs(
-                &trainer.manifest,
-                &b.x,
-                &b.y,
-                256.0,
-                1.0,
-            )?;
-            trainer.eval_exe.run(&inputs)?;
-            lat_ms.push(t1.elapsed().as_secs_f64() * 1e3);
-            n_imgs += b.n;
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+
+    // ---- obtain a frozen 4-bit model: PJRT training when available,
+    //      synthetic UNIQ-frozen fallback otherwise
+    let frozen = match train_and_freeze(fast) {
+        Ok(f) => f,
+        Err(e) => {
+            println!(
+                "PJRT training path unavailable ({e:#});\n\
+                 serving a synthetic UNIQ-frozen mobilenet_mini instead\n"
+            );
+            let (m, state) = synthetic::model("mobilenet_mini", 16, 10, 7)?;
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, BITS_W)?
         }
-    }
-    let total_s = t0.elapsed().as_secs_f64();
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p = |q: f64| lat_ms[((lat_ms.len() - 1) as f64 * q) as usize];
-    println!("serving {} batched requests ({} images):", lat_ms.len(), n_imgs);
+    };
     println!(
-        "  throughput {:.0} img/s;  batch latency p50 {:.1} ms  p90 \
-         {:.1} ms  p99 {:.1} ms",
-        n_imgs as f64 / total_s,
-        p(0.5),
-        p(0.9),
-        p(0.99)
+        "frozen model: {} layers, {} weights at {} bits -> {:.1} KiB \
+         (packed indices + codebooks)",
+        frozen.layers.len(),
+        frozen.n_quantized_weights(),
+        frozen.bits_w,
+        frozen.quantized_bytes() as f64 / 1024.0
+    );
+    let sm = Arc::new(ServeModel::new(frozen)?);
+
+    // ---- parity: LUT kernels vs the dequantized-f32 reference
+    let val = SynthDataset::generate(SynthConfig {
+        n: 128,
+        sample_seed: 9,
+        ..Default::default()
+    });
+    let probe = Batcher::eval_batches(&val, 64).remove(0);
+    let lut = sm
+        .graph
+        .forward(&sm.model, &sm.weights, &probe.x, probe.n, KernelMode::Lut)?;
+    let refr = sm.graph.forward(
+        &sm.model,
+        &sm.weights,
+        &probe.x,
+        probe.n,
+        KernelMode::DequantF32,
+    )?;
+    let max_diff = lut
+        .iter()
+        .zip(&refr)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("parity: max |LUT - dequant-f32| = {max_diff:.2e} (64 images)");
+    assert!(
+        max_diff <= 1e-5,
+        "LUT outputs diverged from the f32 reference: {max_diff}"
     );
 
+    // ---- serving loop: batched requests through infer::serve
+    let n_requests = if fast { 256 } else { 2048 };
+    let server = Server::start(
+        Arc::clone(&sm),
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        pending.push(server.submit(val.image(i % val.n).to_vec())?);
+    }
+    let mut served = 0usize;
+    for rx in pending {
+        rx.recv()?;
+        served += 1;
+    }
+    let stats = server.shutdown();
+    assert_eq!(served, n_requests);
+    stats.print();
+
+    // ---- LUT vs dequantized-f32 vs PJRT at batch 1 / 8 / 32 / 64
+    // (32 is the AOT variants' native batch — the only size the
+    // fixed-batch PJRT executable can join the comparison at)
+    let mut b = if fast { Bench::quick("inference") } else { Bench::new("inference") };
+    let mut jbatches = Vec::new();
+    let mut lut64 = None;
+    let mut f3264 = None;
+    for batch in [1usize, 8, 32, 64] {
+        let x = &probe.x[..batch * val.image_len()];
+        let lut_stats = b.run_throughput(
+            &format!("mobilenet_mini/lut/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward(&sm.model, &sm.weights, x, batch, KernelMode::Lut)
+                    .unwrap()
+            },
+        );
+        let f32_stats = b.run_throughput(
+            &format!("mobilenet_mini/dequant_f32/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward(
+                        &sm.model,
+                        &sm.weights,
+                        x,
+                        batch,
+                        KernelMode::DequantF32,
+                    )
+                    .unwrap()
+            },
+        );
+        // PJRT eval-step comparison point (only with artifacts + backend)
+        let pjrt = uniq::runtime::bench_eval_step(
+            &mut b,
+            Path::new("artifacts/mobilenet_mini"),
+            batch,
+            x,
+        );
+        if batch == 64 {
+            lut64 = Some(lut_stats);
+            f3264 = Some(f32_stats);
+        }
+        jbatches.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("lut", lut_stats.to_json()),
+            ("dequant_f32", f32_stats.to_json()),
+            (
+                "pjrt",
+                pjrt.map(|p| p.to_json()).unwrap_or(Json::Null),
+            ),
+            (
+                "lut_vs_f32_speedup",
+                num(f32_stats.median_ns / lut_stats.median_ns),
+            ),
+        ]));
+    }
+    b.finish();
+
+    let (lut64, f3264) = (lut64.unwrap(), f3264.unwrap());
+    let speedup64 = f3264.median_ns / lut64.median_ns;
+    println!(
+        "batch 64: LUT {:.1} img/s vs dequant-f32 {:.1} img/s ({speedup64:.2}x)",
+        64.0 / lut64.median_ns * 1e9,
+        64.0 / f3264.median_ns * 1e9,
+    );
+
+    let report = obj(vec![
+        ("bench", s("inference")),
+        ("model", s("mobilenet_mini")),
+        ("bits_w", num(BITS_W as f64)),
+        ("parity_max_abs_diff", num(max_diff as f64)),
+        ("batches", Json::Arr(jbatches)),
+        ("lut_ge_f32_batch64", Json::Bool(speedup64 >= 1.0)),
+        ("serve", stats.to_json()),
+    ]);
+    std::fs::write("BENCH_inference.json", report.to_string())?;
+    println!("[written] BENCH_inference.json");
+
     // ---- deployment cost at full MobileNet-224 scale (Table 1 rows)
+    println!();
     let arch = mobilenet224();
     for (bw, ba) in [(32u32, 32u32), (8, 8), (5, 8), (4, 8)] {
         let c = arch.complexity(if bw == 32 {

@@ -1,0 +1,11 @@
+"""Make `compile` importable regardless of pytest's invocation directory.
+
+The package lives at python/compile with no installed distribution; the
+tier-1 gate runs `pytest python/tests` from the repository root, so the
+python/ directory has to be put on sys.path explicitly.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -9,6 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# environment-dependent: the offline image may lack hypothesis; the
+# property sweeps below are meaningless without it, so skip the module
+# (the deterministic golden vectors in the rust suite still cover parity)
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.common import normal_cdf, normal_icdf

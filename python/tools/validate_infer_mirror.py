@@ -1,0 +1,249 @@
+"""Python mirror of the Rust infer/ algorithms, validated against jax.
+
+Mirrors (1:1 port of the Rust code): same_pads, im2col, matmul_f32,
+blocked lut_matmul, depthwise, bit packing, and the graph executor's
+stride rules. Ground truth: lax.conv_general_dilated + the actual
+python/compile models in eval mode.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+jax.config.update("jax_platform_name", "cpu")
+rng = np.random.default_rng(0)
+FAIL = []
+
+def check(name, cond, msg=""):
+    print(("PASS " if cond else "FAIL ") + name + (" " + msg if msg else ""))
+    if not cond:
+        FAIL.append(name)
+
+# ---- same_pads (mirror of kernels::same_pads) ----
+def same_pads(inp, k, stride):
+    out = -(-inp // stride)
+    needed = (out - 1) * stride + k
+    pad_total = max(needed - inp, 0)
+    return out, pad_total // 2
+
+# ---- im2col mirror ----
+def im2col(x, batch, h, w, c, k, stride):
+    oh, ph = same_pads(h, k, stride)
+    ow, pw = same_pads(w, k, stride)
+    rl = k * k * c
+    patches = np.zeros((batch * oh * ow, rl), np.float32)
+    for b in range(batch):
+        img = x[b]
+        for oy in range(oh):
+            for ox in range(ow):
+                row = patches[(b * oh + oy) * ow + ox]
+                for kh in range(k):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h: continue
+                    for kw in range(k):
+                        ix = ox * stride + kw - pw
+                        if ix < 0 or ix >= w: continue
+                        row[(kh * k + kw) * c:(kh * k + kw) * c + c] = img[iy, ix]
+    return patches, oh, ow
+
+def conv_via_im2col(x, wt, stride):
+    b, h, w, c = x.shape
+    k, _, cin, cout = wt.shape
+    patches, oh, ow = im2col(x, b, h, w, c, k, stride)
+    out = patches @ wt.reshape(-1, cout)
+    return out.reshape(b, oh, ow, cout)
+
+# validate conv vs lax for strides and shapes
+for (h, w, cin, cout, k, stride) in [(6,5,3,4,3,1),(6,5,3,4,3,2),(32,32,3,16,3,1),
+                                      (7,7,2,3,3,2),(16,16,8,8,1,1),(9,9,4,2,1,2)]:
+    x = rng.normal(size=(2, h, w, cin)).astype(np.float32)
+    wt = rng.normal(size=(k, k, cin, cout)).astype(np.float32)
+    want = np.asarray(lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wt), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    got = conv_via_im2col(x, wt, stride)
+    check(f"conv h{h}w{w} k{k} s{stride}", got.shape == want.shape and
+          np.abs(got - want).max() < 1e-4, f"maxdiff={np.abs(got-want).max():.2e}")
+
+# ---- depthwise mirror vs lax feature_group_count ----
+def depthwise(x, wflat, k, stride):
+    b, h, w, c = x.shape
+    oh, ph = same_pads(h, k, stride)
+    ow, pw = same_pads(w, k, stride)
+    out = np.zeros((b, oh, ow, c), np.float32)
+    for bi in range(b):
+        for oy in range(oh):
+            for ox in range(ow):
+                for kh in range(k):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h: continue
+                    for kw in range(k):
+                        ix = ox * stride + kw - pw
+                        if ix < 0 or ix >= w: continue
+                        tap = kh * k + kw
+                        out[bi, oy, ox] += x[bi, iy, ix] * wflat[tap]
+    return out
+
+for stride in (1, 2):
+    c = 4
+    x = rng.normal(size=(2, 8, 7, c)).astype(np.float32)
+    wt = rng.normal(size=(3, 3, 1, c)).astype(np.float32)
+    want = np.asarray(lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wt), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c))
+    got = depthwise(x, wt.reshape(9, c), 3, stride)
+    check(f"depthwise s{stride}", np.abs(got - want).max() < 1e-4,
+          f"maxdiff={np.abs(got-want).max():.2e}")
+
+# ---- bit packing mirror ----
+def pack(vals, bits):
+    nbytes = (len(vals) * bits + 7) // 8
+    data = bytearray(nbytes)
+    for i, v in enumerate(vals):
+        bitpos = i * bits
+        byte, off = divmod(bitpos, 8)
+        w = v << off
+        data[byte] |= w & 0xFF
+        if off + bits > 8:
+            data[byte + 1] |= w >> 8
+    return bytes(data)
+
+def get(data, bits, i):
+    bitpos = i * bits
+    byte, off = divmod(bitpos, 8)
+    lo = data[byte]
+    hi = data[byte + 1] if off + bits > 8 else 0
+    return ((lo | (hi << 8)) >> off) & ((1 << bits) - 1)
+
+ok = True
+for bits in range(1, 9):
+    vals = [int(v) for v in rng.integers(0, 1 << bits, size=1000)]
+    p = pack(vals, bits)
+    if [get(p, bits, i) for i in range(len(vals))] != vals:
+        ok = False
+# hand-check the documented 3-bit example
+p3 = pack([0b001, 0b011, 0b111], 3)
+ok = ok and list(p3) == [0b11011001, 0b00000001]
+check("bitpack roundtrip all widths + layout", ok)
+
+# ---- blocked LUT matmul mirror: parity with plain matmul ----
+def lut_matmul_blocked(x, idx_t, cb, rows, cin, cout, block=128):
+    out = np.zeros((rows, cout), np.float32)
+    r0 = 0
+    while r0 < rows:
+        rb = min(block, rows - r0)
+        xt = x[r0:r0+rb].T.copy()            # [cin, rb]
+        acc = np.zeros((cout, rb), np.float32)
+        for o in range(cout):
+            for j in range(cin):
+                acc[o] += cb[idx_t[o, j]] * xt[j]
+        out[r0:r0+rb] = acc.T
+        r0 += rb
+    return out
+
+rows, cin, cout, kq = 300, 17, 5, 16
+x = rng.normal(size=(rows, cin)).astype(np.float32)
+wraw = rng.normal(size=(cin, cout)).astype(np.float32)
+levels = np.sort(rng.normal(size=kq)).astype(np.float32)
+idx = rng.integers(0, kq, size=(cin, cout))
+wq = levels[idx]
+want = (x @ wq).astype(np.float32)
+got = lut_matmul_blocked(x, idx.T, levels, rows, cin, cout)
+check("blocked lut matmul", np.abs(got - want).max() < 2e-4,
+      f"maxdiff={np.abs(got-want).max():.2e}")
+
+# ---- full-graph check: python/compile models in eval mode vs mirror ----
+from compile.layers import Ctx
+from compile.mlp import mlp
+from compile.resnet import resnet8
+from compile.mobilenet import mobilenet_mini
+
+def init_params(b, seed):
+    r = np.random.default_rng(seed)
+    out = []
+    for m in b.params:
+        kind = m["init"][0]
+        if kind == "he_normal":
+            out.append(r.normal(0, np.sqrt(2.0 / m["init"][1]), m["shape"]).astype(np.float32))
+        elif kind == "zeros":
+            out.append(np.zeros(m["shape"], np.float32))
+        else:
+            out.append(np.ones(m["shape"], np.float32))
+    state = []
+    for m in b.state:
+        state.append(np.zeros(m["shape"], np.float32) if m["init"][0] == "zeros"
+                     else np.ones(m["shape"], np.float32))
+    return out, state
+
+def bn_mirror(x, gamma, beta, mean, var):
+    inv = gamma / np.sqrt(var + 1e-5)
+    return (x - mean) * inv + beta
+
+def mirror_forward(arch, b, params, state, x):
+    """Mirror of graph.rs: name-keyed ops with the Rust stride rules."""
+    P = {m["name"]: p for m, p in zip(b.params, params)}
+    S = {m["name"]: s for m, s in zip(b.state, state)}
+    def conv(y, name, stride):
+        return conv_via_im2col(y, P[name + "/w"], stride)
+    def dw(y, name, stride):
+        return depthwise(y, P[name + "/w"].reshape(9, -1), 3, stride)
+    def bn(y, name):
+        return bn_mirror(y, P[name + "/gamma"], P[name + "/beta"],
+                         S[name + "/mean"], S[name + "/var"])
+    relu = lambda v: np.maximum(v, 0.0)
+    if arch == "mlp":
+        y = x.reshape(x.shape[0], -1)
+        names = [q for q in b.qlayers]
+        for i, n in enumerate(names):
+            y = y @ P[n + "/w"] + P[n + "/b"]
+            if i < len(names) - 1:
+                y = relu(y)
+        return y
+    if arch == "mobilenet":
+        y = relu(bn(conv(x, "conv1", 1), "bn1"))
+        nblocks = sum(1 for q in b.qlayers if q.endswith("/dw"))
+        for i in range(nblocks):
+            stride = 2 if i % 2 == 1 else 1
+            y = relu(bn(dw(y, f"ds{i}/dw", stride), f"ds{i}/bn_dw"))
+            y = relu(bn(conv(y, f"ds{i}/pw", 1), f"ds{i}/bn_pw"))
+        y = y.mean(axis=(1, 2))
+        return y @ P["fc/w"] + P["fc/b"]
+    if arch == "resnet":
+        y = relu(bn(conv(x, "conv1", 1), "bn1"))
+        prefixes = []
+        for q in b.qlayers:
+            if "/" in q:
+                p = q.split("/")[0]
+                if p not in prefixes:
+                    prefixes.append(p)
+        for p in prefixes:
+            gi = int(p[1:p.index("b")]); bi = int(p[p.index("b")+1:])
+            stride = 2 if (gi > 0 and bi == 0) else 1
+            saved = y
+            y = relu(bn(conv(y, f"{p}/conv1", stride), f"{p}/bn1"))
+            y = bn(conv(y, f"{p}/conv2", 1), f"{p}/bn2")
+            if f"{p}/down" in b.qlayers:
+                saved = bn(conv(saved, f"{p}/down", stride), f"{p}/bn_down")
+            y = relu(y + saved)
+        y = y.mean(axis=(1, 2))
+        return y @ P["fc/w"] + P["fc/b"]
+    raise ValueError(arch)
+
+x = rng.normal(size=(2, 32, 32, 3)).astype(np.float32)
+for arch, build in [("mlp", lambda: mlp(hidden=64)),
+                    ("resnet", lambda: resnet8(width=8)),
+                    ("mobilenet", lambda: mobilenet_mini(width=8))]:
+    b, apply_fn = build()
+    params, state = init_params(b, 42)
+    ctx = Ctx([jnp.asarray(p) for p in params],
+              [jnp.asarray(s) for s in state],
+              train=False, k_a=256.0, aq=0.0)
+    want = np.asarray(apply_fn(ctx, jnp.asarray(x)))
+    got = mirror_forward(arch, b, params, state, x)
+    diff = np.abs(got - want).max()
+    check(f"graph mirror {arch}", diff < 2e-3, f"maxdiff={diff:.2e}")
+
+print("\n%d failures" % len(FAIL))
+sys.exit(1 if FAIL else 0)

@@ -1,0 +1,105 @@
+//! Native inference benchmarks: LUT kernels vs dequantized-f32 vs the
+//! PJRT eval step, at serving batch sizes 1 / 8 / 64. Emits
+//! `BENCH_inference.json` (machine-readable, `util::bench` stats).
+//!
+//! Runs everywhere: models are synthetic UNIQ-frozen replicas of the AOT
+//! variants; the PJRT column appears only when artifacts and a real xla
+//! backend are present (recorded as null otherwise, with the reason).
+
+use std::path::Path;
+
+use uniq::coordinator::FreezeQuant;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::infer::{synthetic, FrozenModel, KernelMode, ServeModel};
+use uniq::util::bench::Bench;
+use uniq::util::json::{num, obj, s, Json};
+
+// 32 is the AOT variants' native batch — the only size the fixed-batch
+// PJRT executables can be compared at.
+const BATCHES: [usize; 4] = [1, 8, 32, 64];
+
+fn main() {
+    let mut b = Bench::quick("inference");
+    b.min_time = std::time::Duration::from_millis(400);
+    let data = SynthDataset::generate(SynthConfig {
+        n: 64,
+        ..Default::default()
+    });
+    let probe = Batcher::eval_batches(&data, 64).remove(0);
+
+    let mut jmodels = Vec::new();
+    for (name, width) in [("mobilenet_mini", 16usize), ("mlp", 16)] {
+        let (m, state) = synthetic::model(name, width, 10, 7).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let sm = ServeModel::new(frozen).unwrap();
+        let mut jbatches = Vec::new();
+        for batch in BATCHES {
+            let x = &probe.x[..batch * data.image_len()];
+            let lut = b.run_throughput(
+                &format!("{name}/lut/b{batch}"),
+                batch,
+                || {
+                    sm.graph
+                        .forward(
+                            &sm.model,
+                            &sm.weights,
+                            x,
+                            batch,
+                            KernelMode::Lut,
+                        )
+                        .unwrap()
+                },
+            );
+            let deq = b.run_throughput(
+                &format!("{name}/dequant_f32/b{batch}"),
+                batch,
+                || {
+                    sm.graph
+                        .forward(
+                            &sm.model,
+                            &sm.weights,
+                            x,
+                            batch,
+                            KernelMode::DequantF32,
+                        )
+                        .unwrap()
+                },
+            );
+            let pjrt = uniq::runtime::bench_eval_step(
+                &mut b,
+                &Path::new("artifacts").join(name),
+                batch,
+                x,
+            );
+            jbatches.push(obj(vec![
+                ("batch", num(batch as f64)),
+                ("lut", lut.to_json()),
+                ("dequant_f32", deq.to_json()),
+                ("pjrt", pjrt.map(|p| p.to_json()).unwrap_or(Json::Null)),
+                ("lut_vs_f32_speedup", num(deq.median_ns / lut.median_ns)),
+            ]));
+        }
+        jmodels.push(obj(vec![
+            ("model", s(name)),
+            ("bits_w", num(4.0)),
+            ("batches", Json::Arr(jbatches)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("bench", s("inference")),
+        ("models", Json::Arr(jmodels)),
+        ("all_runs", b.report_json()),
+        (
+            "note",
+            s("median_ns per forward call; throughput = batch / median"),
+        ),
+    ]);
+    std::fs::write("BENCH_inference.json", report.to_string())
+        .expect("writing BENCH_inference.json");
+    println!("[written] BENCH_inference.json");
+    b.finish();
+}

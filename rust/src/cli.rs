@@ -82,6 +82,14 @@ COMMANDS:
                                host-side exact quantization of weights
   bops       --arch A --bits-w B --bits-a B [--skip-first-last]
                                BOPs/model-size for a full-size arch
+  infer      --model M [--ckpt C --frozen DIR --export DIR --bits-w B
+              --quantizer Q --batch N --val-size N --synth --width W]
+                               native LUT inference of a frozen model:
+                               parity vs dequantized f32, throughput, and
+                               measured vs analytic BOPs (no PJRT)
+  serve      --model M [--requests N --workers W --max-batch B
+              --max-wait-ms T --synth --width W --stats out.json]
+                               batched native serving with latency stats
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

@@ -1,0 +1,402 @@
+//! Frozen-model export: the bridge from the coordinator's freeze path to
+//! the native LUT inference engine.
+//!
+//! A `FrozenModel` is what the paper's cost model actually prices: each
+//! quantizable layer keeps only a k-entry f32 codebook plus one bit-packed
+//! bin index per weight ("assuming a look-up table availability for the
+//! non-uniform case", §4.2). Non-quantized parameters (BN affine, biases)
+//! and BN running statistics stay f32. Disk format is `frozen.json`
+//! (metadata + inline codebooks, via `util::json`) next to `frozen.bin`
+//! (packed indices and f32 tensors, offsets recorded in the json).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::packed::PackedBits;
+use crate::coordinator::FreezeQuant;
+use crate::quant::Quantizer;
+use crate::runtime::{Manifest, ModelState};
+use crate::util::json::{num, obj, s, Json};
+
+/// One frozen quantizable layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCodebook {
+    /// qlayer name from the manifest ("conv1", "ds0/dw", "fc", ...)
+    pub name: String,
+    /// weight tensor shape: HWIO for convs, [cin, cout] for fc
+    pub shape: Vec<usize>,
+    /// k representation levels, ascending
+    pub codebook: Vec<f32>,
+    /// one bin index per weight, flattened in tensor order
+    pub indices: PackedBits,
+}
+
+impl LayerCodebook {
+    pub fn k(&self) -> usize {
+        self.codebook.len()
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.indices.len
+    }
+
+    /// Quantize a weight tensor against a fitted quantizer.
+    pub fn from_weights(
+        name: &str,
+        shape: &[usize],
+        w: &[f32],
+        q: &Quantizer,
+    ) -> LayerCodebook {
+        let bits = PackedBits::bits_for_k(q.k());
+        let idx: Vec<u8> = w.iter().map(|&x| q.bin(x) as u8).collect();
+        LayerCodebook {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            codebook: q.levels.clone(),
+            indices: PackedBits::pack(&idx, bits),
+        }
+    }
+
+    /// Expand to f32 (the dequantized reference path).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let idx = self.indices.unpack();
+        idx.iter().map(|&i| self.codebook[i as usize]).collect()
+    }
+}
+
+/// A named f32 tensor (BN affine/stats, biases).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A frozen model ready for native LUT inference — no PJRT anywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrozenModel {
+    /// artifact variant name ("mobilenet_mini", ...)
+    pub name: String,
+    /// input image shape [h, w, c]
+    pub image: Vec<usize>,
+    pub classes: usize,
+    /// weight bits the codebooks were built for (k = 2^bits levels)
+    pub bits_w: u8,
+    /// one entry per qlayer, manifest order
+    pub layers: Vec<LayerCodebook>,
+    /// non-quantized parameters, manifest order
+    pub params: Vec<NamedTensor>,
+    /// BN running statistics, manifest order
+    pub state: Vec<NamedTensor>,
+}
+
+impl FrozenModel {
+    /// Export from the coordinator's state: fit `fq` per quantizable layer
+    /// (idempotent when the weights are already frozen on its levels) and
+    /// bit-pack the bin indices.
+    pub fn export(
+        m: &Manifest,
+        state: &ModelState,
+        fq: FreezeQuant,
+        bits_w: u32,
+    ) -> Result<FrozenModel> {
+        let bits_w = bits_w.clamp(1, 8) as u8;
+        let k = 1usize << bits_w;
+        let mut layers = Vec::with_capacity(m.n_qlayers());
+        for (qidx, qname) in m.qlayers.iter().enumerate() {
+            let pi = m
+                .params
+                .iter()
+                .position(|p| p.qlayer == Some(qidx))
+                .ok_or_else(|| anyhow!("no weight param for qlayer {qname}"))?;
+            let meta = &m.params[pi];
+            let w = &state.params[pi];
+            let q = fq.fit(w, k);
+            layers.push(LayerCodebook::from_weights(qname, &meta.shape, w, &q));
+        }
+        let params = m
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.qlayer.is_none())
+            .map(|(i, p)| NamedTensor {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                data: state.params[i].clone(),
+            })
+            .collect();
+        let st = m
+            .state
+            .iter()
+            .zip(&state.state)
+            .map(|(p, d)| NamedTensor {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                data: d.clone(),
+            })
+            .collect();
+        Ok(FrozenModel {
+            name: m.name.clone(),
+            image: m.image.clone(),
+            classes: m.classes,
+            bits_w,
+            layers,
+            params,
+            state: st,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&NamedTensor> {
+        self.params.iter().find(|t| t.name == name)
+    }
+
+    pub fn state_tensor(&self, name: &str) -> Option<&NamedTensor> {
+        self.state.iter().find(|t| t.name == name)
+    }
+
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Total quantized weight count.
+    pub fn n_quantized_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.n_weights()).sum()
+    }
+
+    /// Size of the quantized weights on disk (packed indices + codebooks).
+    pub fn quantized_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.indices.byte_len() + 4 * l.k())
+            .sum()
+    }
+
+    // -- disk format ------------------------------------------------------
+
+    /// Write `frozen.json` + `frozen.bin` under `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut blob: Vec<u8> = Vec::new();
+        let mut jlayers = Vec::new();
+        for l in &self.layers {
+            let offset = blob.len();
+            blob.extend_from_slice(&l.indices.data);
+            jlayers.push(obj(vec![
+                ("name", s(&l.name)),
+                ("shape", usize_arr(&l.shape)),
+                ("bits", num(l.indices.bits as f64)),
+                ("n", num(l.indices.len as f64)),
+                ("offset", num(offset as f64)),
+                ("codebook", f32_arr(&l.codebook)),
+            ]));
+        }
+        let jtensors = |ts: &[NamedTensor], blob: &mut Vec<u8>| -> Vec<Json> {
+            ts.iter()
+                .map(|t| {
+                    let offset = blob.len();
+                    for v in &t.data {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                    obj(vec![
+                        ("name", s(&t.name)),
+                        ("shape", usize_arr(&t.shape)),
+                        ("offset", num(offset as f64)),
+                        ("size", num(t.data.len() as f64)),
+                    ])
+                })
+                .collect()
+        };
+        let jparams = jtensors(&self.params, &mut blob);
+        let jstate = jtensors(&self.state, &mut blob);
+        let meta = obj(vec![
+            ("name", s(&self.name)),
+            ("image", usize_arr(&self.image)),
+            ("classes", num(self.classes as f64)),
+            ("bits_w", num(self.bits_w as f64)),
+            ("layers", Json::Arr(jlayers)),
+            ("params", Json::Arr(jparams)),
+            ("state", Json::Arr(jstate)),
+        ]);
+        std::fs::write(dir.join("frozen.json"), meta.to_string())
+            .with_context(|| format!("writing {}/frozen.json", dir.display()))?;
+        std::fs::write(dir.join("frozen.bin"), &blob)
+            .with_context(|| format!("writing {}/frozen.bin", dir.display()))?;
+        Ok(())
+    }
+
+    /// Load a model saved with [`FrozenModel::save`].
+    pub fn load(dir: &Path) -> Result<FrozenModel> {
+        let text = std::fs::read_to_string(dir.join("frozen.json"))
+            .with_context(|| format!("reading {}/frozen.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let blob = std::fs::read(dir.join("frozen.bin"))
+            .with_context(|| format!("reading {}/frozen.bin", dir.display()))?;
+        fn blob_slice(blob: &[u8], off: usize, n: usize) -> Result<Vec<u8>> {
+            blob.get(off..off + n).map(|s| s.to_vec()).ok_or_else(|| {
+                anyhow!("frozen.bin too short ({} bytes)", blob.len())
+            })
+        }
+
+        let mut layers = Vec::new();
+        for jl in req_arr(&j, "layers")? {
+            let bits = req_usize(jl, "bits")? as u8;
+            let n = req_usize(jl, "n")?;
+            let offset = req_usize(jl, "offset")?;
+            let nbytes = (n * bits as usize).div_ceil(8);
+            let data = blob_slice(&blob, offset, nbytes)?;
+            layers.push(LayerCodebook {
+                name: req_str(jl, "name")?,
+                shape: req_usizes(jl, "shape")?,
+                codebook: req_f32s(jl, "codebook")?,
+                indices: PackedBits::from_bytes(bits, n, data)
+                    .map_err(anyhow::Error::msg)?,
+            });
+        }
+        let tensors = |key: &str| -> Result<Vec<NamedTensor>> {
+            let mut out = Vec::new();
+            for jt in req_arr(&j, key)? {
+                let offset = req_usize(jt, "offset")?;
+                let size = req_usize(jt, "size")?;
+                let bytes = blob_slice(&blob, offset, size * 4)?;
+                out.push(NamedTensor {
+                    name: req_str(jt, "name")?,
+                    shape: req_usizes(jt, "shape")?,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                });
+            }
+            Ok(out)
+        };
+        Ok(FrozenModel {
+            name: req_str(&j, "name")?,
+            image: req_usizes(&j, "image")?,
+            classes: req_usize(&j, "classes")?,
+            bits_w: req_usize(&j, "bits_w")? as u8,
+            layers,
+            params: tensors("params")?,
+            state: tensors("state")?,
+        })
+    }
+}
+
+fn f32_arr(vs: &[f32]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn usize_arr(vs: &[usize]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key} not a string"))?
+        .to_string())
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key} not a number"))
+}
+
+fn req_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key} not an array"))
+}
+
+fn req_usizes(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(req_arr(j, key)?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+fn req_f32s(j: &Json, key: &str) -> Result<Vec<f32>> {
+    req_arr(j, key)?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|n| n as f32)
+                .ok_or_else(|| anyhow!("{key} holds a non-number"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizerFit;
+    use crate::util::rng::Rng;
+
+    fn normal_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.1).collect()
+    }
+
+    #[test]
+    fn dequantize_matches_quantize() {
+        let w = normal_vec(1000, 3);
+        let q = crate::quant::KQuantileGauss.fit(&w, 16);
+        let l = LayerCodebook::from_weights("t", &[10, 100], &w, &q);
+        let mut want = w.clone();
+        q.quantize(&mut want);
+        assert_eq!(l.dequantize(), want, "LUT expand must equal exact freeze");
+        assert_eq!(l.k(), 16);
+        assert_eq!(l.indices.bits, 4);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let w = normal_vec(300, 5);
+        let q = crate::quant::KQuantileGauss.fit(&w, 8);
+        let model = FrozenModel {
+            name: "t".into(),
+            image: vec![4, 4, 3],
+            classes: 10,
+            bits_w: 3,
+            layers: vec![LayerCodebook::from_weights("conv1", &[3, 100], &w, &q)],
+            params: vec![NamedTensor {
+                name: "fc/b".into(),
+                shape: vec![10],
+                data: vec![0.5; 10],
+            }],
+            state: vec![NamedTensor {
+                name: "bn1/mean".into(),
+                shape: vec![3],
+                data: vec![-1.0, 0.0, 1.0],
+            }],
+        };
+        let dir = std::env::temp_dir().join("uniq_frozen_test");
+        model.save(&dir).unwrap();
+        let loaded = FrozenModel::load(&dir).unwrap();
+        assert_eq!(loaded, model);
+    }
+
+    #[test]
+    fn quantized_bytes_shrink() {
+        let w = normal_vec(4096, 9);
+        let q = crate::quant::KQuantileGauss.fit(&w, 16);
+        let l = LayerCodebook::from_weights("t", &[4096], &w, &q);
+        let m = FrozenModel {
+            name: "t".into(),
+            image: vec![],
+            classes: 0,
+            bits_w: 4,
+            layers: vec![l],
+            params: vec![],
+            state: vec![],
+        };
+        // 4-bit packing: 8x smaller than f32 (+ 64-byte codebook)
+        assert_eq!(m.quantized_bytes(), 4096 / 2 + 4 * 16);
+        assert_eq!(m.n_quantized_weights(), 4096);
+    }
+}

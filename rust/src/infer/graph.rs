@@ -1,0 +1,599 @@
+//! Minimal inference graph reconstructed from the AOT manifest.
+//!
+//! The manifest's qlayer/param naming scheme (python/compile builders) is
+//! enough to rebuild the forward pass of every variant host-side:
+//! `fc*` → MLP, `ds*/dw` → MobileNet-mini, `g*b*/conv*` → ResNet. The
+//! executor is a tiny stack machine (push/pop for residual branches) over
+//! the LUT kernels, with a dequantized-f32 mode that runs the identical
+//! graph for parity checks and baseline benchmarks.
+
+use anyhow::{anyhow, Result};
+
+use super::codebook::FrozenModel;
+use super::kernels as kn;
+use crate::bops;
+
+/// Which weight representation the executor reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// codebook-indexed products (the paper's LUT regime)
+    Lut,
+    /// dequantized f32 weights, same graph and accumulation order
+    DequantF32,
+}
+
+/// One step of the stack-machine program.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// NHWC → flat features
+    Flatten,
+    /// SAME conv, HWIO weights of qlayer `q`
+    Conv { q: usize, stride: usize },
+    /// SAME depthwise conv of qlayer `q`
+    Depthwise { q: usize, stride: usize },
+    /// fully connected; `bias` indexes `FrozenModel::params`
+    Dense { q: usize, bias: Option<usize> },
+    /// inference-mode BN; indices into params (affine) / state (stats)
+    BatchNorm { gamma: usize, beta: usize, mean: usize, var: usize },
+    Relu,
+    GlobalAvgPool,
+    /// save the current activation for a residual connection
+    PushResidual,
+    /// 1×1-conv + BN the *saved* activation (ResNet downsample branch)
+    DownsampleResidual {
+        q: usize,
+        stride: usize,
+        gamma: usize,
+        beta: usize,
+        mean: usize,
+        var: usize,
+    },
+    /// pop the saved activation and add it elementwise
+    AddResidual,
+}
+
+/// Decoded working set: per-layer unpacked indices (LUT path) and
+/// dequantized f32 weights (reference path). Build once, share across
+/// worker threads.
+///
+/// GEMM-backed layers (dense/pointwise/full convs) keep their indices
+/// *transposed* to `[cout, K]` — the layout [`kn::lut_matmul`] wants;
+/// depthwise layers stay tap-major. The f32 reference copies stay in raw
+/// manifest order.
+#[derive(Debug, Clone)]
+pub struct PreparedWeights {
+    pub idx: Vec<Vec<u8>>,
+    pub deq: Vec<Vec<f32>>,
+}
+
+impl PreparedWeights {
+    /// Both working sets: LUT indices and dequantized f32 copies.
+    pub fn new(m: &FrozenModel, graph: &Graph) -> PreparedWeights {
+        let mut w = Self::lut_only(m, graph);
+        w.deq = m.layers.iter().map(|l| l.dequantize()).collect();
+        w
+    }
+
+    /// LUT working set only — no resident f32 weight copies (the 4-bit
+    /// deployment footprint). [`Graph::forward`] rejects
+    /// `KernelMode::DequantF32` on this.
+    pub fn lut_only(m: &FrozenModel, graph: &Graph) -> PreparedWeights {
+        let mut gemm = vec![false; m.layers.len()];
+        for op in &graph.ops {
+            match *op {
+                Op::Conv { q, .. }
+                | Op::Dense { q, .. }
+                | Op::DownsampleResidual { q, .. } => gemm[q] = true,
+                _ => {}
+            }
+        }
+        let idx = m
+            .layers
+            .iter()
+            .zip(&gemm)
+            .map(|(l, &g)| {
+                let raw = l.indices.unpack();
+                if g {
+                    let cout = *l.shape.last().unwrap_or(&1);
+                    let k = raw.len() / cout.max(1);
+                    kn::transpose_idx(&raw, k, cout)
+                } else {
+                    raw
+                }
+            })
+            .collect();
+        PreparedWeights { idx, deq: Vec::new() }
+    }
+
+    /// True when the f32 reference copies are resident.
+    pub fn has_dequantized(&self, m: &FrozenModel) -> bool {
+        self.deq.len() == m.layers.len()
+    }
+}
+
+/// An activation tensor: `[batch, h, w, c]`, or `[batch, c]` when
+/// `h == w == 1` (post-flatten / post-pool).
+#[derive(Debug, Clone)]
+struct Act {
+    data: Vec<f32>,
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub ops: Vec<Op>,
+    /// recognised family: "mlp" | "resnet" | "mobilenet"
+    pub arch: String,
+}
+
+fn pidx(m: &FrozenModel, name: &str) -> Result<usize> {
+    m.params
+        .iter()
+        .position(|t| t.name == name)
+        .ok_or_else(|| anyhow!("missing param tensor {name}"))
+}
+
+fn sidx(m: &FrozenModel, name: &str) -> Result<usize> {
+    m.state
+        .iter()
+        .position(|t| t.name == name)
+        .ok_or_else(|| anyhow!("missing state tensor {name}"))
+}
+
+fn qidx(m: &FrozenModel, name: &str) -> Result<usize> {
+    m.layer_index(name)
+        .ok_or_else(|| anyhow!("missing quantized layer {name}"))
+}
+
+/// (gamma, beta, mean, var) tensor indices of a batchnorm `prefix`.
+fn bn_indices(
+    m: &FrozenModel,
+    prefix: &str,
+) -> Result<(usize, usize, usize, usize)> {
+    Ok((
+        pidx(m, &format!("{prefix}/gamma"))?,
+        pidx(m, &format!("{prefix}/beta"))?,
+        sidx(m, &format!("{prefix}/mean"))?,
+        sidx(m, &format!("{prefix}/var"))?,
+    ))
+}
+
+fn bn_op(m: &FrozenModel, prefix: &str) -> Result<Op> {
+    let (gamma, beta, mean, var) = bn_indices(m, prefix)?;
+    Ok(Op::BatchNorm { gamma, beta, mean, var })
+}
+
+/// Parse a ResNet block prefix "g{gi}b{bi}" into (group, block) indices.
+fn parse_block(prefix: &str) -> Result<(usize, usize)> {
+    let rest = prefix
+        .strip_prefix('g')
+        .ok_or_else(|| anyhow!("bad block prefix {prefix}"))?;
+    let (gi, bi) = rest
+        .split_once('b')
+        .ok_or_else(|| anyhow!("bad block prefix {prefix}"))?;
+    Ok((
+        gi.parse().map_err(|_| anyhow!("bad group index in {prefix}"))?,
+        bi.parse().map_err(|_| anyhow!("bad block index in {prefix}"))?,
+    ))
+}
+
+impl Graph {
+    /// Rebuild the forward graph from qlayer/param names.
+    pub fn from_model(m: &FrozenModel) -> Result<Graph> {
+        let names: Vec<&str> =
+            m.layers.iter().map(|l| l.name.as_str()).collect();
+        if names.is_empty() {
+            return Err(anyhow!("model has no quantizable layers"));
+        }
+        if names.iter().all(|n| n.starts_with("fc")) {
+            Self::build_mlp(m)
+        } else if names.iter().any(|n| n.ends_with("/dw")) {
+            Self::build_mobilenet(m)
+        } else if names.iter().any(|n| n.starts_with('g') && n.contains('/'))
+        {
+            Self::build_resnet(m)
+        } else {
+            Err(anyhow!("unrecognised architecture (qlayers: {names:?})"))
+        }
+    }
+
+    fn build_mlp(m: &FrozenModel) -> Result<Graph> {
+        let mut ops = vec![Op::Flatten];
+        let last = m.layers.len() - 1;
+        for (i, l) in m.layers.iter().enumerate() {
+            let bias = pidx(m, &format!("{}/b", l.name)).ok();
+            ops.push(Op::Dense { q: i, bias });
+            if i < last {
+                ops.push(Op::Relu);
+            }
+        }
+        Ok(Graph { ops, arch: "mlp".into() })
+    }
+
+    fn build_mobilenet(m: &FrozenModel) -> Result<Graph> {
+        let mut ops = vec![
+            Op::Conv { q: qidx(m, "conv1")?, stride: 1 },
+            bn_op(m, "bn1")?,
+            Op::Relu,
+        ];
+        let n_blocks = m.layers.iter().filter(|l| l.name.ends_with("/dw")).count();
+        for i in 0..n_blocks {
+            // python/compile/mobilenet.py block config: stride 2 on the
+            // odd-indexed (channel-preserving) blocks
+            let stride = if i % 2 == 1 { 2 } else { 1 };
+            ops.push(Op::Depthwise { q: qidx(m, &format!("ds{i}/dw"))?, stride });
+            ops.push(bn_op(m, &format!("ds{i}/bn_dw"))?);
+            ops.push(Op::Relu);
+            ops.push(Op::Conv { q: qidx(m, &format!("ds{i}/pw"))?, stride: 1 });
+            ops.push(bn_op(m, &format!("ds{i}/bn_pw"))?);
+            ops.push(Op::Relu);
+        }
+        ops.push(Op::GlobalAvgPool);
+        ops.push(Op::Dense { q: qidx(m, "fc")?, bias: pidx(m, "fc/b").ok() });
+        Ok(Graph { ops, arch: "mobilenet".into() })
+    }
+
+    fn build_resnet(m: &FrozenModel) -> Result<Graph> {
+        let mut ops = vec![
+            Op::Conv { q: qidx(m, "conv1")?, stride: 1 },
+            bn_op(m, "bn1")?,
+            Op::Relu,
+        ];
+        // block prefixes ("g0b0", "g1b0", ...) in qlayer order
+        let mut prefixes: Vec<String> = Vec::new();
+        for l in &m.layers {
+            if let Some((p, _)) = l.name.split_once('/') {
+                if !prefixes.iter().any(|q| q == p) {
+                    prefixes.push(p.to_string());
+                }
+            }
+        }
+        for p in &prefixes {
+            let (gi, bi) = parse_block(p)?;
+            let stride = if gi > 0 && bi == 0 { 2 } else { 1 };
+            ops.push(Op::PushResidual);
+            ops.push(Op::Conv { q: qidx(m, &format!("{p}/conv1"))?, stride });
+            ops.push(bn_op(m, &format!("{p}/bn1"))?);
+            ops.push(Op::Relu);
+            ops.push(Op::Conv { q: qidx(m, &format!("{p}/conv2"))?, stride: 1 });
+            ops.push(bn_op(m, &format!("{p}/bn2"))?);
+            if let Some(qd) = m.layer_index(&format!("{p}/down")) {
+                let (gamma, beta, mean, var) =
+                    bn_indices(m, &format!("{p}/bn_down"))?;
+                ops.push(Op::DownsampleResidual {
+                    q: qd,
+                    stride,
+                    gamma,
+                    beta,
+                    mean,
+                    var,
+                });
+            }
+            ops.push(Op::AddResidual);
+            ops.push(Op::Relu);
+        }
+        ops.push(Op::GlobalAvgPool);
+        ops.push(Op::Dense { q: qidx(m, "fc")?, bias: pidx(m, "fc/b").ok() });
+        Ok(Graph { ops, arch: "resnet".into() })
+    }
+
+    /// Run a batch: `x` is NHWC `[batch, image]`, returns logits
+    /// `[batch, classes]`.
+    pub fn forward(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+    ) -> Result<Vec<f32>> {
+        if m.image.len() != 3 {
+            return Err(anyhow!("model image shape {:?} not HWC", m.image));
+        }
+        let (ih, iw, ic) = (m.image[0], m.image[1], m.image[2]);
+        if x.len() != batch * ih * iw * ic {
+            return Err(anyhow!(
+                "input is {} floats, batch {batch} of {:?} needs {}",
+                x.len(),
+                m.image,
+                batch * ih * iw * ic
+            ));
+        }
+        if mode == KernelMode::DequantF32 && !weights.has_dequantized(m) {
+            return Err(anyhow!(
+                "dequantized f32 weights not prepared (LUT-only working \
+                 set); build with PreparedWeights::new"
+            ));
+        }
+        let mut cur = Act { data: x.to_vec(), h: ih, w: iw, c: ic };
+        let mut stack: Vec<Act> = Vec::new();
+        for op in &self.ops {
+            cur = self.apply(op, m, weights, cur, batch, mode, &mut stack)?;
+        }
+        if !stack.is_empty() {
+            return Err(anyhow!("unbalanced residual stack"));
+        }
+        Ok(cur.data)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply(
+        &self,
+        op: &Op,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        cur: Act,
+        batch: usize,
+        mode: KernelMode,
+        stack: &mut Vec<Act>,
+    ) -> Result<Act> {
+        match *op {
+            Op::Flatten => Ok(Act {
+                c: cur.h * cur.w * cur.c,
+                h: 1,
+                w: 1,
+                data: cur.data,
+            }),
+            Op::Conv { q, stride } => {
+                conv_apply(m, weights, q, stride, cur, batch, mode)
+            }
+            Op::Depthwise { q, stride } => {
+                let l = &m.layers[q];
+                let (ksize, c) = (l.shape[0], l.shape[3]);
+                if cur.c != c {
+                    return Err(anyhow!(
+                        "{}: expected {c} channels, got {}",
+                        l.name,
+                        cur.c
+                    ));
+                }
+                let (data, oh, ow) = match mode {
+                    KernelMode::Lut => kn::lut_depthwise(
+                        &cur.data,
+                        &weights.idx[q],
+                        &l.codebook,
+                        batch,
+                        cur.h,
+                        cur.w,
+                        c,
+                        ksize,
+                        stride,
+                    ),
+                    KernelMode::DequantF32 => kn::depthwise_f32(
+                        &cur.data,
+                        &weights.deq[q],
+                        batch,
+                        cur.h,
+                        cur.w,
+                        c,
+                        ksize,
+                        stride,
+                    ),
+                };
+                Ok(Act { data, h: oh, w: ow, c })
+            }
+            Op::Dense { q, bias } => {
+                let l = &m.layers[q];
+                let (cin, cout) = (l.shape[0], l.shape[1]);
+                let d = cur.h * cur.w * cur.c;
+                if d != cin {
+                    return Err(anyhow!(
+                        "{}: expected {cin} features, got {d}",
+                        l.name
+                    ));
+                }
+                let mut out = vec![0.0f32; batch * cout];
+                match mode {
+                    KernelMode::Lut => kn::lut_matmul(
+                        &cur.data,
+                        &weights.idx[q],
+                        &l.codebook,
+                        batch,
+                        cin,
+                        cout,
+                        &mut out,
+                    ),
+                    KernelMode::DequantF32 => kn::matmul_f32(
+                        &cur.data,
+                        &weights.deq[q],
+                        batch,
+                        cin,
+                        cout,
+                        &mut out,
+                    ),
+                }
+                if let Some(b) = bias {
+                    kn::bias_add(&mut out, &m.params[b].data, batch, cout);
+                }
+                Ok(Act { data: out, h: 1, w: 1, c: cout })
+            }
+            Op::BatchNorm { gamma, beta, mean, var } => {
+                let mut cur = cur;
+                kn::batchnorm(
+                    &mut cur.data,
+                    &m.params[gamma].data,
+                    &m.params[beta].data,
+                    &m.state[mean].data,
+                    &m.state[var].data,
+                    cur.c,
+                );
+                Ok(cur)
+            }
+            Op::Relu => {
+                let mut cur = cur;
+                kn::relu(&mut cur.data);
+                Ok(cur)
+            }
+            Op::GlobalAvgPool => {
+                let data = kn::global_avg_pool(
+                    &cur.data, batch, cur.h, cur.w, cur.c,
+                );
+                Ok(Act { data, h: 1, w: 1, c: cur.c })
+            }
+            Op::PushResidual => {
+                stack.push(cur.clone());
+                Ok(cur)
+            }
+            Op::DownsampleResidual { q, stride, gamma, beta, mean, var } => {
+                let saved = stack
+                    .pop()
+                    .ok_or_else(|| anyhow!("downsample with empty stack"))?;
+                let mut short =
+                    conv_apply(m, weights, q, stride, saved, batch, mode)?;
+                kn::batchnorm(
+                    &mut short.data,
+                    &m.params[gamma].data,
+                    &m.params[beta].data,
+                    &m.state[mean].data,
+                    &m.state[var].data,
+                    short.c,
+                );
+                stack.push(short);
+                Ok(cur)
+            }
+            Op::AddResidual => {
+                let saved = stack
+                    .pop()
+                    .ok_or_else(|| anyhow!("residual add with empty stack"))?;
+                if (saved.h, saved.w, saved.c) != (cur.h, cur.w, cur.c) {
+                    return Err(anyhow!(
+                        "residual shape mismatch: {:?} vs {:?}",
+                        (saved.h, saved.w, saved.c),
+                        (cur.h, cur.w, cur.c)
+                    ));
+                }
+                let mut cur = cur;
+                kn::add_inplace(&mut cur.data, &saved.data);
+                Ok(cur)
+            }
+        }
+    }
+
+    /// Analytic complexity description of this graph, for the measured-vs
+    /// -analytic BOPs comparison (`bops::Arch::complexity`).
+    pub fn to_arch(&self, m: &FrozenModel) -> bops::Arch {
+        let (mut h, mut w) = (m.image[0], m.image[1]);
+        let mut dims: Vec<(usize, usize)> = Vec::new();
+        let mut layers = Vec::new();
+        for op in &self.ops {
+            match *op {
+                Op::Conv { q, stride } => {
+                    let l = &m.layers[q];
+                    let (oh, _) = kn::same_pads(h, l.shape[0], stride);
+                    let (ow, _) = kn::same_pads(w, l.shape[1], stride);
+                    layers.push(bops::Layer::conv(
+                        &l.name,
+                        (oh * ow) as u64,
+                        l.shape[2] as u64,
+                        l.shape[3] as u64,
+                        l.shape[0] as u64,
+                    ));
+                    h = oh;
+                    w = ow;
+                }
+                Op::Depthwise { q, stride } => {
+                    let l = &m.layers[q];
+                    let (oh, _) = kn::same_pads(h, l.shape[0], stride);
+                    let (ow, _) = kn::same_pads(w, l.shape[1], stride);
+                    layers.push(bops::Layer::depthwise(
+                        &l.name,
+                        (oh * ow) as u64,
+                        l.shape[3] as u64,
+                        l.shape[0] as u64,
+                    ));
+                    h = oh;
+                    w = ow;
+                }
+                Op::Dense { q, .. } => {
+                    let l = &m.layers[q];
+                    layers.push(bops::Layer::fc(
+                        &l.name,
+                        l.shape[0] as u64,
+                        l.shape[1] as u64,
+                    ));
+                }
+                Op::DownsampleResidual { q, stride, .. } => {
+                    // applies to the saved (pre-block) dims
+                    let (sh, sw) =
+                        dims.pop().unwrap_or((h, w));
+                    let l = &m.layers[q];
+                    let (oh, _) = kn::same_pads(sh, l.shape[0], stride);
+                    let (ow, _) = kn::same_pads(sw, l.shape[1], stride);
+                    layers.push(bops::Layer::conv(
+                        &l.name,
+                        (oh * ow) as u64,
+                        l.shape[2] as u64,
+                        l.shape[3] as u64,
+                        l.shape[0] as u64,
+                    ));
+                    dims.push((oh, ow));
+                }
+                Op::PushResidual => dims.push((h, w)),
+                Op::AddResidual => {
+                    dims.pop();
+                }
+                Op::Flatten | Op::GlobalAvgPool => {
+                    h = 1;
+                    w = 1;
+                }
+                Op::BatchNorm { .. } | Op::Relu => {}
+            }
+        }
+        bops::Arch { name: format!("{} ({})", m.name, self.arch), layers }
+    }
+
+    /// Per-image multiply-accumulate count (reference-path cost).
+    pub fn macs(&self, m: &FrozenModel) -> u64 {
+        self.to_arch(m).layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+fn conv_apply(
+    m: &FrozenModel,
+    weights: &PreparedWeights,
+    q: usize,
+    stride: usize,
+    cur: Act,
+    batch: usize,
+    mode: KernelMode,
+) -> Result<Act> {
+    let l = &m.layers[q];
+    if l.shape.len() != 4 {
+        return Err(anyhow!("{}: weight shape {:?} not HWIO", l.name, l.shape));
+    }
+    let (ksize, cin, cout) = (l.shape[0], l.shape[2], l.shape[3]);
+    if cur.c != cin {
+        return Err(anyhow!(
+            "{}: expected {cin} channels, got {}",
+            l.name,
+            cur.c
+        ));
+    }
+    let (patches, oh, ow) =
+        kn::im2col(&cur.data, batch, cur.h, cur.w, cin, ksize, stride);
+    let rows = batch * oh * ow;
+    let klen = ksize * ksize * cin;
+    let mut out = vec![0.0f32; rows * cout];
+    match mode {
+        KernelMode::Lut => kn::lut_matmul(
+            &patches,
+            &weights.idx[q],
+            &l.codebook,
+            rows,
+            klen,
+            cout,
+            &mut out,
+        ),
+        KernelMode::DequantF32 => kn::matmul_f32(
+            &patches,
+            &weights.deq[q],
+            rows,
+            klen,
+            cout,
+            &mut out,
+        ),
+    }
+    Ok(Act { data: out, h: oh, w: ow, c: cout })
+}

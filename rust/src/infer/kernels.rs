@@ -1,0 +1,538 @@
+//! LUT kernels + dequantized-f32 reference paths.
+//!
+//! The LUT-GEMM never touches an f32 weight tensor: weights exist only
+//! as 1-byte codebook indices, expanded through the k-entry table at the
+//! moment of use and amortised over a block of activations — so the
+//! weight-side memory traffic is that of the packed model (the paper's
+//! §4.2 "look-up table availability" storage regime), not of an f32
+//! matrix. The arithmetic itself is ordinary fused multiply-adds: on
+//! scalar/SIMD CPUs a real multiply is as cheap as a table-indexed add,
+//! so this is the profitable realisation of the LUT regime there (the
+//! multiply-free accumulate variant pays off on adder-only hardware,
+//! which the analytic `bops` module prices). The f32 reference kernels
+//! use the *same per-output accumulation order*, so LUT and dequantized
+//! outputs agree bit-for-bit; parity tests assert ≤ 1e-5 to stay robust
+//! if either path is ever reordered (e.g. SIMD blocking).
+//!
+//! Convs lower to im2col + GEMM: HWIO weights flattened over (kh, kw, cin)
+//! line up with patch rows extracted in the same order. Depthwise convs
+//! (one filter per channel, 9 taps) skip im2col and dequantize through the
+//! codebook in place.
+
+/// TensorFlow/XLA "SAME" padding: output size and leading pad.
+pub fn same_pads(input: usize, ksize: usize, stride: usize) -> (usize, usize) {
+    let out = input.div_ceil(stride);
+    let needed = (out - 1) * stride + ksize;
+    let pad_total = needed.saturating_sub(input);
+    (out, pad_total / 2)
+}
+
+/// Extract SAME-padded conv patches.
+///
+/// `x`: NHWC `[batch, h, w, c]`. Returns `(patches, oh, ow)` where
+/// `patches` is `[batch*oh*ow, ksize*ksize*c]` with the inner dimension
+/// ordered (kh, kw, c) — the HWIO weight flattening.
+pub fn im2col(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (oh, pad_h) = same_pads(h, ksize, stride);
+    let (ow, pad_w) = same_pads(w, ksize, stride);
+    let row_len = ksize * ksize * c;
+    let mut patches = vec![0.0f32; batch * oh * ow * row_len];
+    for b in 0..batch {
+        let img = &x[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row0 = ((b * oh + oy) * ow + ox) * row_len;
+                for kh in 0..ksize {
+                    let iy = (oy * stride + kh) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for kw in 0..ksize {
+                        let ix = (ox * stride + kw) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        let dst = row0 + (kh * ksize + kw) * c;
+                        patches[dst..dst + c]
+                            .copy_from_slice(&img[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (patches, oh, ow)
+}
+
+/// Row-block size of the LUT-GEMM: one weight fetch (1-byte index +
+/// codebook lookup) is amortised over this many activations. 128 rows of
+/// f32 stay comfortably inside L1 per operand.
+const ROW_BLOCK: usize = 128;
+
+/// Transpose a row-major `[rows, cols]` index matrix to `[cols, rows]`
+/// (the LUT-GEMM weight layout: per-output index rows become contiguous).
+pub fn transpose_idx(raw: &[u8], rows: usize, cols: usize) -> Vec<u8> {
+    debug_assert_eq!(raw.len(), rows * cols);
+    let mut t = vec![0u8; raw.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = raw[r * cols + c];
+        }
+    }
+    t
+}
+
+/// LUT-GEMM: `out[r, o] = Σ_j x[r, j] · codebook[idx_t[o, j]]`.
+///
+/// `idx_t` is the *transposed* weight index matrix, `[cout, cin]`
+/// (see [`transpose_idx`]); `out` (`[rows, cout]`) is fully overwritten.
+///
+/// Shape of the kernel: activations are transposed block-wise to
+/// `[cin, block]`, then each output channel runs an axpy over the block
+/// with a weight reconstructed once per (o, j) from its 1-byte index —
+/// the codebook expansion costs one lookup per weight per block (not
+/// per activation) and weight traffic drops ~4x vs an f32 GEMM, while
+/// the inner loop stays a plain saxpy that vectorises. Per-(r, o)
+/// accumulation order is j-ascending, identical to [`matmul_f32`], so
+/// the two paths agree bit-for-bit.
+pub fn lut_matmul(
+    x: &[f32],
+    idx_t: &[u8],
+    codebook: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(idx_t.len(), cin * cout);
+    debug_assert_eq!(out.len(), rows * cout);
+    debug_assert!(codebook.len() <= 256);
+    let block = ROW_BLOCK.min(rows.max(1));
+    let mut xt = vec![0.0f32; block * cin];
+    let mut acc = vec![0.0f32; block * cout];
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = block.min(rows - r0);
+        for rr in 0..rb {
+            let xrow = &x[(r0 + rr) * cin..(r0 + rr + 1) * cin];
+            for (j, &v) in xrow.iter().enumerate() {
+                xt[j * rb + rr] = v;
+            }
+        }
+        acc[..cout * rb].fill(0.0);
+        for o in 0..cout {
+            let irow = &idx_t[o * cin..(o + 1) * cin];
+            let arow = &mut acc[o * rb..(o + 1) * rb];
+            for (j, &ix) in irow.iter().enumerate() {
+                let w = codebook[ix as usize];
+                let xrow = &xt[j * rb..j * rb + rb];
+                for (a, &v) in arow.iter_mut().zip(xrow) {
+                    *a += w * v;
+                }
+            }
+        }
+        for o in 0..cout {
+            for rr in 0..rb {
+                out[(r0 + rr) * cout + o] = acc[o * rb + rr];
+            }
+        }
+        r0 += rb;
+    }
+}
+
+/// f32 reference GEMM with the same accumulation order as [`lut_matmul`].
+pub fn matmul_f32(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(out.len(), rows * cout);
+    for r in 0..rows {
+        let xrow = &x[r * cin..(r + 1) * cin];
+        let orow = &mut out[r * cout..(r + 1) * cout];
+        for (j, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[j * cout..(j + 1) * cout];
+            for (o, &wv) in wrow.iter().enumerate() {
+                orow[o] += xv * wv;
+            }
+        }
+    }
+}
+
+/// Depthwise 2D conv (one `ksize×ksize` filter per channel), LUT weights.
+///
+/// `idx` is the HWIO `(ksize, ksize, 1, c)` weight tensor flattened, i.e.
+/// tap (kh, kw) of channel `ch` lives at `(kh*ksize + kw) * c + ch`.
+/// Returns `(out, oh, ow)` with `out` shaped `[batch, oh, ow, c]`.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_depthwise(
+    x: &[f32],
+    idx: &[u8],
+    codebook: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    depthwise_impl(x, batch, h, w, c, ksize, stride, |tap, ch| {
+        codebook[idx[tap * c + ch] as usize]
+    })
+}
+
+/// f32 reference depthwise conv; `wflat` is the flattened HWIO tensor.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_f32(
+    x: &[f32],
+    wflat: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    depthwise_impl(x, batch, h, w, c, ksize, stride, |tap, ch| {
+        wflat[tap * c + ch]
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn depthwise_impl<F: Fn(usize, usize) -> f32>(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    weight: F,
+) -> (Vec<f32>, usize, usize) {
+    let (oh, pad_h) = same_pads(h, ksize, stride);
+    let (ow, pad_w) = same_pads(w, ksize, stride);
+    let mut out = vec![0.0f32; batch * oh * ow * c];
+    for b in 0..batch {
+        let img = &x[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let o0 = ((b * oh + oy) * ow + ox) * c;
+                for kh in 0..ksize {
+                    let iy = (oy * stride + kh) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..ksize {
+                        let ix =
+                            (ox * stride + kw) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        let tap = kh * ksize + kw;
+                        for ch in 0..c {
+                            out[o0 + ch] += img[src + ch] * weight(tap, ch);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Add a per-output bias row-wise: `x[r, o] += bias[o]`.
+pub fn bias_add(x: &mut [f32], bias: &[f32], rows: usize, cout: usize) {
+    debug_assert_eq!(x.len(), rows * cout);
+    for r in 0..rows {
+        for (v, b) in x[r * cout..(r + 1) * cout].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Inference-mode batchnorm over the channel (last) dimension.
+pub fn batchnorm(
+    x: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    c: usize,
+) {
+    debug_assert_eq!(x.len() % c, 0);
+    // same epsilon as the python layer framework (layers.py batchnorm)
+    let inv: Vec<f32> = var
+        .iter()
+        .zip(gamma)
+        .map(|(&v, &g)| g / (v + 1e-5).sqrt())
+        .collect();
+    for row in x.chunks_exact_mut(c) {
+        for ch in 0..c {
+            row[ch] = (row[ch] - mean[ch]) * inv[ch] + beta[ch];
+        }
+    }
+}
+
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `a += b` elementwise (residual connections).
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// NHWC global average pool: `[batch, h, w, c]` → `[batch, c]`.
+pub fn global_avg_pool(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * c];
+    let hw = (h * w) as f32;
+    for b in 0..batch {
+        let acc = &mut out[b * c..(b + 1) * c];
+        for p in 0..h * w {
+            let src = (b * h * w + p) * c;
+            for ch in 0..c {
+                acc[ch] += x[src + ch];
+            }
+        }
+        for v in acc.iter_mut() {
+            *v /= hw;
+        }
+    }
+    out
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{KQuantileGauss, QuantizerFit};
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Independent direct conv (no im2col) to cross-check the lowering.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_direct(
+        x: &[f32],
+        w: &[f32], // HWIO (k, k, cin, cout)
+        batch: usize,
+        h: usize,
+        wd: usize,
+        cin: usize,
+        cout: usize,
+        ksize: usize,
+        stride: usize,
+    ) -> (Vec<f32>, usize, usize) {
+        let (oh, pad_h) = same_pads(h, ksize, stride);
+        let (ow, pad_w) = same_pads(wd, ksize, stride);
+        let mut out = vec![0.0f32; batch * oh * ow * cout];
+        for b in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for o in 0..cout {
+                        let mut acc = 0.0f32;
+                        for kh in 0..ksize {
+                            for kw in 0..ksize {
+                                let iy = (oy * stride + kh) as isize
+                                    - pad_h as isize;
+                                let ix = (ox * stride + kw) as isize
+                                    - pad_w as isize;
+                                if iy < 0
+                                    || iy >= h as isize
+                                    || ix < 0
+                                    || ix >= wd as isize
+                                {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xi = ((b * h + iy as usize) * wd
+                                        + ix as usize)
+                                        * cin
+                                        + ci;
+                                    let wi = ((kh * ksize + kw) * cin + ci)
+                                        * cout
+                                        + o;
+                                    acc += x[xi] * w[wi];
+                                }
+                            }
+                        }
+                        out[((b * oh + oy) * ow + ox) * cout + o] = acc;
+                    }
+                }
+            }
+        }
+        (out, oh, ow)
+    }
+
+    #[test]
+    fn same_pads_match_tf() {
+        // stride 1: full padding, output = input
+        assert_eq!(same_pads(32, 3, 1), (32, 1));
+        // stride 2, even input: 32 -> 16, one-sided pad
+        assert_eq!(same_pads(32, 3, 2), (16, 0));
+        // stride 2, odd input: 7 -> 4
+        assert_eq!(same_pads(7, 3, 2), (4, 1));
+        // 1x1 stride 1: no padding
+        assert_eq!(same_pads(16, 1, 1), (16, 0));
+    }
+
+    #[test]
+    fn im2col_matmul_equals_direct_conv() {
+        let (batch, h, w, cin, cout, k) = (2usize, 6, 5, 3, 4, 3);
+        let x = randvec(batch * h * w * cin, 1);
+        let wt = randvec(k * k * cin * cout, 2);
+        for stride in [1usize, 2] {
+            let (want, oh, ow) =
+                conv_direct(&x, &wt, batch, h, w, cin, cout, k, stride);
+            let (patches, oh2, ow2) = im2col(&x, batch, h, w, cin, k, stride);
+            assert_eq!((oh, ow), (oh2, ow2));
+            let rows = batch * oh * ow;
+            let mut got = vec![0.0f32; rows * cout];
+            matmul_f32(&patches, &wt, rows, k * k * cin, cout, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "stride {stride}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matmul_matches_f32_exactly() {
+        // rows > ROW_BLOCK to cover the blocked path and the tail block
+        for (rows, cin, cout) in [(4usize, 32usize, 16usize), (300, 17, 5)] {
+            let x = randvec(rows * cin, 3 + rows as u64);
+            let wraw = randvec(cin * cout, 4 + rows as u64);
+            let q = KQuantileGauss.fit(&wraw, 16);
+            let idx: Vec<u8> =
+                wraw.iter().map(|&v| q.bin(v) as u8).collect();
+            let wq: Vec<f32> =
+                idx.iter().map(|&i| q.levels[i as usize]).collect();
+            let idx_t = transpose_idx(&idx, cin, cout);
+            let mut lut = vec![0.0f32; rows * cout];
+            let mut refr = vec![0.0f32; rows * cout];
+            lut_matmul(&x, &idx_t, &q.levels, rows, cin, cout, &mut lut);
+            matmul_f32(&x, &wq, rows, cin, cout, &mut refr);
+            assert_eq!(
+                lut, refr,
+                "identical accumulation order => bit equality \
+                 ({rows}x{cin}x{cout})"
+            );
+        }
+    }
+
+    #[test]
+    fn transpose_idx_roundtrip() {
+        let raw: Vec<u8> = (0..12).collect();
+        let t = transpose_idx(&raw, 3, 4);
+        assert_eq!(t, vec![0, 4, 8, 1, 5, 9, 2, 6, 10, 3, 7, 11]);
+        assert_eq!(transpose_idx(&t, 4, 3), raw);
+    }
+
+    #[test]
+    fn depthwise_matches_grouped_direct() {
+        // depthwise == dense conv with block-diagonal weights; check
+        // against per-channel direct conv instead
+        let (batch, h, w, c, k) = (2usize, 5, 5, 3, 3);
+        let x = randvec(batch * h * w * c, 7);
+        let wflat = randvec(k * k * c, 8);
+        for stride in [1usize, 2] {
+            let (got, oh, ow) =
+                depthwise_f32(&x, &wflat, batch, h, w, c, k, stride);
+            // single-channel direct conv per channel
+            for ch in 0..c {
+                let xc: Vec<f32> = x.iter().skip(ch).step_by(c).copied().collect();
+                let wc: Vec<f32> =
+                    wflat.iter().skip(ch).step_by(c).copied().collect();
+                let (want, _, _) =
+                    conv_direct(&xc, &wc, batch, h, w, 1, 1, k, stride);
+                for p in 0..batch * oh * ow {
+                    let a = got[p * c + ch];
+                    let b = want[p];
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "stride {stride} ch {ch}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_depthwise_matches_f32() {
+        let (batch, h, w, c, k) = (1usize, 8, 8, 4, 3);
+        let x = randvec(batch * h * w * c, 9);
+        let wraw = randvec(k * k * c, 10);
+        let q = KQuantileGauss.fit(&wraw, 8);
+        let idx: Vec<u8> = wraw.iter().map(|&v| q.bin(v) as u8).collect();
+        let wq: Vec<f32> =
+            idx.iter().map(|&i| q.levels[i as usize]).collect();
+        let (a, _, _) = lut_depthwise(&x, &idx, &q.levels, batch, h, w, c, k, 2);
+        let (b, _, _) = depthwise_f32(&x, &wq, batch, h, w, c, k, 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_bias_bn_relu_basics() {
+        // global_avg_pool over a constant image
+        let x = vec![2.0f32; 4 * 4 * 3];
+        let p = global_avg_pool(&x, 1, 4, 4, 3);
+        assert_eq!(p, vec![2.0, 2.0, 2.0]);
+
+        let mut y = vec![1.0f32, -1.0, 0.5, 2.0];
+        bias_add(&mut y, &[1.0, 2.0], 2, 2);
+        assert_eq!(y, vec![2.0, 1.0, 1.5, 4.0]);
+
+        relu(&mut y[..]);
+        assert_eq!(y, vec![2.0, 1.0, 1.5, 4.0]);
+        let mut z = vec![-3.0f32, 0.0, 3.0];
+        relu(&mut z);
+        assert_eq!(z, vec![0.0, 0.0, 3.0]);
+
+        // identity batchnorm: gamma 1, beta 0, mean 0, var 1
+        let mut v = vec![0.5f32, -0.5];
+        batchnorm(&mut v, &[1.0, 1.0], &[0.0, 0.0], &[0.0, 0.0], &[1.0, 1.0], 2);
+        assert!((v[0] - 0.5 / (1.0f32 + 1e-5).sqrt()).abs() < 1e-6);
+
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[f32::NAN, 0.9, 0.3]), 1);
+    }
+}

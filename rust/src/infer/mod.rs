@@ -1,0 +1,27 @@
+//! Native LUT-based quantized inference engine.
+//!
+//! Training argues in BOPs "assuming a look-up table availability for the
+//! non-uniform case" (paper §4.2); this module is that assumption made
+//! executable. The coordinator's freeze path exports a [`FrozenModel`]
+//! (per-layer k-entry codebook + bit-packed bin indices), a [`Graph`]
+//! reconstructed from the AOT manifest runs it with codebook-indexed
+//! kernels — no PJRT, no dequantized weight tensor on the request path —
+//! and [`serve`] wraps it in a batched worker pool for deployment.
+//!
+//! Layer map: `codebook` (export + disk format) → `packed` (bit streams)
+//! → `kernels` (LUT-GEMM / convs + f32 reference) → `graph` (per-variant
+//! forward pass) → `serve` (dynamic batching, latency accounting).
+//! `synthetic` provides manifest-faithful random models so everything
+//! here runs without AOT artifacts.
+
+pub mod codebook;
+pub mod graph;
+pub mod kernels;
+pub mod packed;
+pub mod serve;
+pub mod synthetic;
+
+pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
+pub use graph::{Graph, KernelMode, PreparedWeights};
+pub use packed::PackedBits;
+pub use serve::{Reply, ServeConfig, ServeModel, ServeStats, Server};

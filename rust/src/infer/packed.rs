@@ -1,0 +1,154 @@
+//! Bit-packed codebook indices.
+//!
+//! Frozen layers store one codebook index per weight at 1–8 bits each
+//! (2/3/4/8 in practice: k = 4, 8, 16, 256 levels). Indices are packed
+//! little-endian *within the bit stream*: index `i` occupies bits
+//! `[i·b, (i+1)·b)` counted LSB-first from byte 0 — the same layout a
+//! `u64` shift register would produce, so values that straddle a byte
+//! boundary (3/5/6/7-bit) need no special casing on either end.
+
+/// A bit-packed vector of small unsigned integers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBits {
+    /// bits per index, 1..=8
+    pub bits: u8,
+    /// number of packed indices
+    pub len: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedBits {
+    /// Smallest supported width that can hold indices `0..k`.
+    pub fn bits_for_k(k: usize) -> u8 {
+        assert!((1..=256).contains(&k), "codebook size {k} out of range");
+        let mut b = 1u8;
+        while (1usize << b) < k {
+            b += 1;
+        }
+        b
+    }
+
+    /// Pack `vals` at `bits` per value. Values must fit in `bits`.
+    pub fn pack(vals: &[u8], bits: u8) -> PackedBits {
+        assert!((1..=8).contains(&bits), "bits {bits} out of range");
+        let nbytes = (vals.len() * bits as usize).div_ceil(8);
+        let mut data = vec![0u8; nbytes];
+        for (i, &v) in vals.iter().enumerate() {
+            debug_assert!(
+                (v as u16) < (1u16 << bits),
+                "value {v} does not fit in {bits} bits"
+            );
+            let bitpos = i * bits as usize;
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let w = (v as u16) << off;
+            data[byte] |= (w & 0xff) as u8;
+            if off + bits as usize > 8 {
+                data[byte + 1] |= (w >> 8) as u8;
+            }
+        }
+        PackedBits { bits, len: vals.len(), data }
+    }
+
+    /// Read index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let lo = self.data[byte] as u16;
+        let hi = if off + bits > 8 { self.data[byte + 1] as u16 } else { 0 };
+        let mask = (1u16 << bits) - 1;
+        (((lo | (hi << 8)) >> off) & mask) as u8
+    }
+
+    /// Decode the whole vector (the kernels' working-set form).
+    pub fn unpack(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Packed payload size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rebuild from a serialized payload (validates the byte count).
+    pub fn from_bytes(bits: u8, len: usize, data: Vec<u8>) -> Result<PackedBits, String> {
+        if !(1..=8).contains(&bits) {
+            return Err(format!("bits {bits} out of range"));
+        }
+        let want = (len * bits as usize).div_ceil(8);
+        if data.len() != want {
+            return Err(format!(
+                "packed payload is {} bytes, {len} x {bits}-bit needs {want}",
+                data.len()
+            ));
+        }
+        Ok(PackedBits { bits, len, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_for_k_levels() {
+        for (k, want) in [(2usize, 1u8), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4), (16, 4), (17, 5), (256, 8)] {
+            assert_eq!(PackedBits::bits_for_k(k), want, "k = {k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(11);
+        for bits in 1..=8u8 {
+            for len in [0usize, 1, 7, 8, 9, 64, 1000] {
+                let vals: Vec<u8> = (0..len)
+                    .map(|_| (rng.next_u32() & ((1u32 << bits) - 1)) as u8)
+                    .collect();
+                let p = PackedBits::pack(&vals, bits);
+                assert_eq!(p.unpack(), vals, "bits {bits} len {len}");
+                assert_eq!(p.byte_len(), (len * bits as usize).div_ceil(8));
+            }
+        }
+    }
+
+    #[test]
+    fn straddling_3bit_layout_hand_checked() {
+        // values 0b001, 0b011, 0b111 at 3 bits:
+        // bitstream LSB-first: 001 011 111 -> byte0 = 0b11011001, byte1 = 0b1
+        let p = PackedBits::pack(&[0b001, 0b011, 0b111], 3);
+        assert_eq!(p.data, vec![0b1101_1001, 0b0000_0001]);
+        assert_eq!(p.get(0), 1);
+        assert_eq!(p.get(1), 3);
+        assert_eq!(p.get(2), 7);
+    }
+
+    #[test]
+    fn eight_bit_is_identity() {
+        let vals: Vec<u8> = (0..=255u8).collect();
+        let p = PackedBits::pack(&vals, 8);
+        assert_eq!(p.data, vals);
+        assert_eq!(p.unpack(), vals);
+    }
+
+    #[test]
+    fn from_bytes_validates() {
+        let p = PackedBits::pack(&[1, 2, 3], 4);
+        let q = PackedBits::from_bytes(4, 3, p.data.clone()).unwrap();
+        assert_eq!(q, p);
+        assert!(PackedBits::from_bytes(4, 5, p.data.clone()).is_err());
+        assert!(PackedBits::from_bytes(0, 3, p.data).is_err());
+    }
+
+    #[test]
+    fn compression_ratio() {
+        // 4-bit indices: half the bytes of u8, an eighth of f32
+        let p = PackedBits::pack(&vec![5u8; 1024], 4);
+        assert_eq!(p.byte_len(), 512);
+    }
+}

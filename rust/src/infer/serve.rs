@@ -1,0 +1,478 @@
+//! Batched native serving: request queue → batch collector → worker pool.
+//!
+//! Requests carry one image each; a collector thread coalesces them into
+//! batches (up to `max_batch`, waiting at most `max_wait` for stragglers —
+//! the standard dynamic-batching tradeoff), and a pool of worker threads
+//! runs the LUT graph. No async runtime: a bounded hand-off over std
+//! channels is all the backpressure this pipeline needs, mirroring
+//! `data::Batcher`'s prefetcher design.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::codebook::FrozenModel;
+use super::graph::{Graph, KernelMode, PreparedWeights};
+use crate::util::bench::fmt_ns;
+use crate::util::json::{num, obj, s, Json};
+
+/// Model + graph + decoded weights, shared read-only across workers.
+pub struct ServeModel {
+    pub model: FrozenModel,
+    pub graph: Graph,
+    pub weights: PreparedWeights,
+}
+
+impl ServeModel {
+    /// Full working set: LUT indices *and* dequantized f32 copies (for
+    /// parity checks and `KernelMode::DequantF32` baselines).
+    pub fn new(model: FrozenModel) -> Result<ServeModel> {
+        let graph = Graph::from_model(&model)?;
+        let weights = PreparedWeights::new(&model, &graph);
+        Ok(ServeModel { model, graph, weights })
+    }
+
+    /// Deployment working set: packed-index weights only, no f32 weight
+    /// copies resident (~8x smaller at 4 bits). `DequantF32` forwards
+    /// error on this model.
+    pub fn lut_only(model: FrozenModel) -> Result<ServeModel> {
+        let graph = Graph::from_model(&model)?;
+        let weights = PreparedWeights::lut_only(&model, &graph);
+        Ok(ServeModel { model, graph, weights })
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.model.image.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    /// how long the collector waits for a batch to fill
+    pub max_wait: Duration,
+    pub mode: KernelMode,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(1, 8);
+        ServeConfig {
+            workers,
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            mode: KernelMode::Lut,
+        }
+    }
+}
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    /// enqueue-to-reply latency
+    pub latency: Duration,
+    /// size of the batch this request rode in
+    pub batch: usize,
+}
+
+struct Request {
+    image: Vec<f32>,
+    t0: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+#[derive(Default)]
+struct StatsAcc {
+    latencies_ns: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    images: usize,
+    first: Option<Instant>,
+    last: Option<Instant>,
+}
+
+/// A running inference server. Submit images, then `shutdown()` for the
+/// aggregate latency/throughput accounting.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    collector: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    acc: Arc<Mutex<StatsAcc>>,
+    img_len: usize,
+}
+
+impl Server {
+    pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> Server {
+        let img_len = model.image_len();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let acc = Arc::new(Mutex::new(StatsAcc::default()));
+
+        let max_batch = cfg.max_batch.max(1);
+        let max_wait = cfg.max_wait;
+        let collector = thread::spawn(move || {
+            loop {
+                let Ok(first) = req_rx.recv() else { return };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + max_wait;
+                let mut open = true;
+                while batch.len() < max_batch {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    match req_rx.recv_timeout(left) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                if batch_tx.send(batch).is_err() || !open {
+                    return;
+                }
+            }
+        });
+
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for _ in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&batch_rx);
+            let sm = Arc::clone(&model);
+            let acc = Arc::clone(&acc);
+            let mode = cfg.mode;
+            workers.push(thread::spawn(move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                let Ok(batch) = msg else { return };
+                serve_batch(&sm, &batch, mode, &acc);
+            }));
+        }
+
+        Server {
+            tx: Some(req_tx),
+            collector: Some(collector),
+            workers,
+            acc,
+            img_len,
+        }
+    }
+
+    /// Enqueue one image; the returned channel yields the [`Reply`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Reply>> {
+        if image.len() != self.img_len {
+            return Err(anyhow!(
+                "request has {} floats, model expects {}",
+                image.len(),
+                self.img_len
+            ));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shutting down"))?;
+        tx.send(Request { image, t0: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow!("server request queue closed"))?;
+        Ok(reply_rx)
+    }
+
+    /// Drain the queue, stop all threads and return aggregate statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.tx.take(); // close the request queue
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut acc = self.acc.lock().unwrap();
+        ServeStats::from_acc(&mut acc)
+    }
+}
+
+fn serve_batch(
+    sm: &ServeModel,
+    batch: &[Request],
+    mode: KernelMode,
+    acc: &Arc<Mutex<StatsAcc>>,
+) {
+    let img_len = sm.image_len();
+    // submit() validates sizes; this is defence against direct enqueue.
+    // A bad request gets NO reply — its sender drops with the batch and
+    // the client observes RecvError instead of a fabricated prediction.
+    let kept: Vec<&Request> = batch
+        .iter()
+        .filter(|r| {
+            if r.image.len() == img_len {
+                true
+            } else {
+                eprintln!(
+                    "serve: dropping request with {} floats (expected \
+                     {img_len})",
+                    r.image.len()
+                );
+                false
+            }
+        })
+        .collect();
+    if kept.is_empty() {
+        return;
+    }
+    let n = kept.len();
+    let mut x = Vec::with_capacity(n * img_len);
+    for r in &kept {
+        x.extend_from_slice(&r.image);
+    }
+    let logits =
+        match sm.graph.forward(&sm.model, &sm.weights, &x, n, mode) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("serve: batch of {n} failed: {e:#}");
+                return; // reply senders drop; clients observe RecvError
+            }
+        };
+    let classes = sm.model.classes;
+    let now = Instant::now();
+    let mut a = acc.lock().unwrap();
+    // busy window: earliest enqueue in this batch -> completion, so a
+    // single-batch run still reports a positive throughput
+    if let Some(earliest) = kept.iter().map(|r| r.t0).min() {
+        a.first = Some(a.first.map_or(earliest, |f| f.min(earliest)));
+    }
+    a.last = Some(now);
+    a.batch_sizes.push(n);
+    a.images += n;
+    for (i, r) in kept.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let latency = r.t0.elapsed();
+        a.latencies_ns.push(latency.as_nanos() as f64);
+        let _ = r.reply.send(Reply {
+            pred: super::kernels::argmax(row),
+            logits: row.to_vec(),
+            latency,
+            batch: n,
+        });
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// images/sec over the busy window (first to last batch completion)
+    pub throughput_rps: f64,
+}
+
+impl ServeStats {
+    fn from_acc(acc: &mut StatsAcc) -> ServeStats {
+        let mut lat = std::mem::take(&mut acc.latencies_ns);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            lat[((lat.len() - 1) as f64 * p) as usize] / 1e6
+        };
+        let busy_s = match (acc.first, acc.last) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let batches = acc.batch_sizes.len();
+        ServeStats {
+            requests: acc.images,
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                acc.images as f64 / batches as f64
+            },
+            p50_ms: q(0.5),
+            p90_ms: q(0.9),
+            p99_ms: q(0.99),
+            max_ms: lat.last().copied().unwrap_or(0.0) / 1e6,
+            throughput_rps: if busy_s > 0.0 {
+                acc.images as f64 / busy_s
+            } else {
+                0.0
+            },
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "served {} requests in {} batches (mean batch {:.1})",
+            self.requests, self.batches, self.mean_batch
+        );
+        println!(
+            "  latency p50 {}  p90 {}  p99 {}  max {}",
+            fmt_ns(self.p50_ms * 1e6),
+            fmt_ns(self.p90_ms * 1e6),
+            fmt_ns(self.p99_ms * 1e6),
+            fmt_ns(self.max_ms * 1e6),
+        );
+        println!("  throughput {:.0} img/s", self.throughput_rps);
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("batches", num(self.batches as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p90_ms", num(self.p90_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("unit", s("latency in milliseconds")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FreezeQuant;
+    use crate::infer::synthetic;
+    use crate::util::rng::Rng;
+
+    fn tiny_server(mode: KernelMode) -> (Arc<ServeModel>, Server) {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen = FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+        let sm = Arc::new(ServeModel::new(frozen).unwrap());
+        let srv = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mode,
+            },
+        );
+        (sm, srv)
+    }
+
+    #[test]
+    fn serves_and_matches_direct_forward() {
+        let (sm, srv) = tiny_server(KernelMode::Lut);
+        let mut rng = Rng::new(3);
+        let img_len = sm.image_len();
+        let images: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+            .collect();
+        let handles: Vec<_> = images
+            .iter()
+            .map(|img| srv.submit(img.clone()).unwrap())
+            .collect();
+        for (img, h) in images.iter().zip(handles) {
+            let reply = h.recv().expect("reply");
+            let want = sm
+                .graph
+                .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+                .unwrap();
+            assert_eq!(reply.logits, want, "served logits drifted");
+            assert_eq!(reply.pred, super::super::kernels::argmax(&want));
+            assert!(reply.batch >= 1);
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 20);
+        assert!(stats.batches >= 3, "max_batch 8 => at least 3 batches");
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.p50_ms <= stats.p99_ms);
+    }
+
+    #[test]
+    fn shutdown_with_no_traffic() {
+        let (_sm, srv) = tiny_server(KernelMode::DequantF32);
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn wrong_size_request_rejected_at_submit() {
+        let (sm, srv) = tiny_server(KernelMode::Lut);
+        let err = srv.submit(vec![0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("7 floats"));
+        // valid traffic still flows afterwards
+        let rx = srv.submit(vec![0.0; sm.image_len()]).unwrap();
+        assert!(rx.recv().is_ok());
+        assert_eq!(srv.shutdown().requests, 1);
+    }
+
+    #[test]
+    fn single_batch_run_reports_positive_throughput() {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen =
+            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let sm = Arc::new(ServeModel::new(frozen).unwrap());
+        // generous wait so all 4 requests coalesce into exactly one batch
+        let srv = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                max_wait: Duration::from_millis(250),
+                mode: KernelMode::Lut,
+            },
+        );
+        let handles: Vec<_> = (0..4)
+            .map(|_| srv.submit(vec![0.1; sm.image_len()]).unwrap())
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.batches, 1);
+        assert!(
+            stats.throughput_rps > 0.0,
+            "single-batch run must still report throughput"
+        );
+    }
+
+    #[test]
+    fn lut_only_working_set_serves_but_blocks_f32_mode() {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen =
+            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let sm = Arc::new(ServeModel::lut_only(frozen).unwrap());
+        let x = vec![0.5; sm.image_len()];
+        let ok = sm
+            .graph
+            .forward(&sm.model, &sm.weights, &x, 1, KernelMode::Lut);
+        assert!(ok.is_ok());
+        let err = sm
+            .graph
+            .forward(&sm.model, &sm.weights, &x, 1, KernelMode::DequantF32)
+            .unwrap_err();
+        assert!(err.to_string().contains("LUT-only"));
+        // no f32 copies resident
+        assert!(sm.weights.deq.is_empty());
+    }
+
+    #[test]
+    fn submit_after_shutdown_not_possible() {
+        // shutdown consumes the server, so this is a compile-time
+        // guarantee; check the queue-closed path via a dropped collector
+        let (sm, srv) = tiny_server(KernelMode::Lut);
+        let rx = srv.submit(vec![0.0; sm.image_len()]).unwrap();
+        let stats = srv.shutdown();
+        // the in-flight request was drained before shutdown returned
+        assert!(rx.recv().is_ok());
+        assert_eq!(stats.requests, 1);
+    }
+}

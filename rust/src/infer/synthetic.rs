@@ -1,0 +1,268 @@
+//! Synthetic (randomly initialised) manifests + states mirroring the
+//! python/compile builders, parameter-for-parameter.
+//!
+//! They let the native inference engine run everywhere — tests, benches
+//! and the deployment example work without AOT artifacts, and the export
+//! path (`FrozenModel::export`) is exercised against manifests with the
+//! exact naming/ordering contract of `python/compile/aot.py`. He-normal
+//! weight init matches `aot.init_array`.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::{Manifest, ParamMeta};
+use crate::runtime::ModelState;
+use crate::util::rng::Rng;
+
+struct Builder {
+    params: Vec<ParamMeta>,
+    pvals: Vec<Vec<f32>>,
+    state: Vec<ParamMeta>,
+    svals: Vec<Vec<f32>>,
+    qlayers: Vec<String>,
+    rng: Rng,
+    offset: usize,
+}
+
+impl Builder {
+    fn new(seed: u64) -> Builder {
+        Builder {
+            params: Vec::new(),
+            pvals: Vec::new(),
+            state: Vec::new(),
+            svals: Vec::new(),
+            qlayers: Vec::new(),
+            rng: Rng::new(seed),
+            offset: 0,
+        }
+    }
+
+    fn meta(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        qlayer: Option<usize>,
+        wd: bool,
+    ) -> ParamMeta {
+        let size = shape.iter().product::<usize>().max(1);
+        let m = ParamMeta {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            qlayer,
+            wd,
+            offset: self.offset,
+            size,
+        };
+        self.offset += size;
+        m
+    }
+
+    fn add_param(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        qlayer: Option<usize>,
+        data: Vec<f32>,
+    ) {
+        let m = self.meta(name, shape, qlayer, qlayer.is_some());
+        debug_assert_eq!(m.size, data.len());
+        self.params.push(m);
+        self.pvals.push(data);
+    }
+
+    fn add_state(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        let m = self.meta(name, shape, None, false);
+        self.state.push(m);
+        self.svals.push(data);
+    }
+
+    fn he_normal(&mut self, n: usize, fan_in: usize) -> Vec<f32> {
+        let scale = (2.0 / fan_in as f32).sqrt();
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    fn qlayer(&mut self, name: &str) -> usize {
+        self.qlayers.push(name.to_string());
+        self.qlayers.len() - 1
+    }
+
+    fn conv(&mut self, name: &str, cin: usize, cout: usize, k: usize) {
+        let q = self.qlayer(name);
+        let n = k * k * cin * cout;
+        let w = self.he_normal(n, k * k * cin);
+        self.add_param(&format!("{name}/w"), &[k, k, cin, cout], Some(q), w);
+    }
+
+    fn depthwise(&mut self, name: &str, c: usize) {
+        let q = self.qlayer(name);
+        let w = self.he_normal(9 * c, 9);
+        self.add_param(&format!("{name}/w"), &[3, 3, 1, c], Some(q), w);
+    }
+
+    fn batchnorm(&mut self, name: &str, c: usize) {
+        self.add_param(&format!("{name}/gamma"), &[c], None, vec![1.0; c]);
+        self.add_param(&format!("{name}/beta"), &[c], None, vec![0.0; c]);
+        self.add_state(&format!("{name}/mean"), &[c], vec![0.0; c]);
+        self.add_state(&format!("{name}/var"), &[c], vec![1.0; c]);
+    }
+
+    fn dense(&mut self, name: &str, cin: usize, cout: usize) {
+        let q = self.qlayer(name);
+        let w = self.he_normal(cin * cout, cin);
+        self.add_param(&format!("{name}/w"), &[cin, cout], Some(q), w);
+        self.add_param(&format!("{name}/b"), &[cout], None, vec![0.0; cout]);
+    }
+
+    fn finish(self, name: &str, classes: usize) -> (Manifest, ModelState) {
+        let momenta = self.pvals.iter().map(|p| vec![0.0; p.len()]).collect();
+        let manifest = Manifest {
+            name: name.to_string(),
+            batch: 32,
+            image: vec![32, 32, 3],
+            classes,
+            noise_cfg: "quantile".to_string(),
+            kmax: 32,
+            qlayers: self.qlayers,
+            params: self.params,
+            state: self.state,
+            train_inputs: vec![],
+            train_outputs: vec![],
+            eval_inputs: vec![],
+            eval_outputs: vec![],
+        };
+        let state = ModelState {
+            params: self.pvals,
+            momenta,
+            state: self.svals,
+            step: 0,
+        };
+        (manifest, state)
+    }
+}
+
+/// MLP (python/compile/mlp.py): three quantizable dense layers.
+pub fn mlp(hidden: usize, classes: usize, seed: u64) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed);
+    let d_in = 32 * 32 * 3;
+    b.dense("fc1", d_in, hidden);
+    b.dense("fc2", hidden, hidden);
+    b.dense("fc3", hidden, classes);
+    b.finish("mlp", classes)
+}
+
+/// ResNet-8 (python/compile/resnet.py `resnet8`): 3 groups × 1 block.
+pub fn resnet8(width: usize, classes: usize, seed: u64) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed);
+    let widths = [width, width * 2, width * 4];
+    b.conv("conv1", 3, widths[0], 3);
+    b.batchnorm("bn1", widths[0]);
+    let mut cin = widths[0];
+    for (gi, &cout) in widths.iter().enumerate() {
+        let p = format!("g{gi}b0");
+        let stride = if gi > 0 { 2 } else { 1 };
+        b.conv(&format!("{p}/conv1"), cin, cout, 3);
+        b.batchnorm(&format!("{p}/bn1"), cout);
+        b.conv(&format!("{p}/conv2"), cout, cout, 3);
+        b.batchnorm(&format!("{p}/bn2"), cout);
+        if stride != 1 || cin != cout {
+            b.conv(&format!("{p}/down"), cin, cout, 1);
+            b.batchnorm(&format!("{p}/bn_down"), cout);
+        }
+        cin = cout;
+    }
+    b.dense("fc", cin, classes);
+    b.finish("resnet8", classes)
+}
+
+/// MobileNet-mini (python/compile/mobilenet.py): conv + 6 depthwise-
+/// separable blocks + fc — 14 quantizable layers at the default width.
+pub fn mobilenet_mini(
+    width: usize,
+    classes: usize,
+    seed: u64,
+) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed);
+    b.conv("conv1", 3, width, 3);
+    b.batchnorm("bn1", width);
+    let cfg = [
+        (width, width * 2),
+        (width * 2, width * 2),
+        (width * 2, width * 4),
+        (width * 4, width * 4),
+        (width * 4, width * 8),
+        (width * 8, width * 8),
+    ];
+    for (i, &(cin, cout)) in cfg.iter().enumerate() {
+        b.depthwise(&format!("ds{i}/dw"), cin);
+        b.batchnorm(&format!("ds{i}/bn_dw"), cin);
+        b.conv(&format!("ds{i}/pw"), cin, cout, 1);
+        b.batchnorm(&format!("ds{i}/bn_pw"), cout);
+    }
+    b.dense("fc", width * 8, classes);
+    b.finish("mobilenet_mini", classes)
+}
+
+/// Synthetic variant by artifact name.
+pub fn model(
+    name: &str,
+    width: usize,
+    classes: usize,
+    seed: u64,
+) -> Result<(Manifest, ModelState)> {
+    match name {
+        "mlp" => Ok(mlp(if width > 0 { width * 16 } else { 256 }, classes, seed)),
+        "resnet8" => Ok(resnet8(width.max(1), classes, seed)),
+        "mobilenet_mini" => Ok(mobilenet_mini(width.max(1), classes, seed)),
+        other => Err(anyhow!(
+            "no synthetic builder for '{other}' \
+             (available: mlp, resnet8, mobilenet_mini)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_matches_python_builder_inventory() {
+        let (m, s) = mobilenet_mini(16, 10, 1);
+        // 14 quantizable layers: conv1 + 6 x (dw + pw) + fc
+        assert_eq!(m.qlayers.len(), 14);
+        assert_eq!(m.qlayers[0], "conv1");
+        assert_eq!(m.qlayers[1], "ds0/dw");
+        assert_eq!(m.qlayers[2], "ds0/pw");
+        assert_eq!(*m.qlayers.last().unwrap(), "fc");
+        // params: 14 weights + 13 BN pairs + fc bias
+        assert_eq!(m.params.len(), 14 + 13 * 2 + 1);
+        assert_eq!(m.state.len(), 13 * 2);
+        assert_eq!(m.params.len(), s.params.len());
+        assert_eq!(m.state.len(), s.state.len());
+        for (p, v) in m.params.iter().zip(&s.params) {
+            assert_eq!(p.size, v.len(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn resnet8_has_downsamples_on_strided_groups() {
+        let (m, _) = resnet8(8, 10, 2);
+        assert!(m.qlayers.contains(&"g1b0/down".to_string()));
+        assert!(m.qlayers.contains(&"g2b0/down".to_string()));
+        assert!(!m.qlayers.contains(&"g0b0/down".to_string()));
+        // 3x3 conv1 + 3 blocks x (2 convs) + 2 downsamples + fc
+        assert_eq!(m.qlayers.len(), 1 + 6 + 2 + 1);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let (m, s) = mlp(256, 10, 3);
+        let i = m.params.iter().position(|p| p.name == "fc1/w").unwrap();
+        let w = &s.params[i];
+        let var: f32 =
+            w.iter().map(|v| v * v).sum::<f32>() / w.len() as f32;
+        let want = 2.0 / 3072.0;
+        assert!(
+            (var - want).abs() < want * 0.2,
+            "fan-in variance {var} vs {want}"
+        );
+    }
+}

@@ -7,6 +7,9 @@
 //! * L2/L1 (python/compile, build-time only): JAX model fwd/bwd with the
 //!   UNIQ transform, Pallas kernels; AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed here through the PJRT C API (`runtime`).
+//! * `infer`: native LUT inference engine — frozen codebook models
+//!   (bit-packed indices + k-entry codebooks) executed and served
+//!   host-side with batched workers; no PJRT on the request path.
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 
@@ -15,6 +18,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod infer;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

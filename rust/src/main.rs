@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -13,9 +14,12 @@ use uniq::coordinator::{
 };
 use uniq::data::cifar;
 use uniq::data::synth::{SynthConfig, SynthDataset};
-use uniq::data::Dataset;
+use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
+use uniq::infer::{
+    self, FrozenModel, KernelMode, ServeConfig, ServeModel, Server,
+};
 use uniq::runtime::{Engine, ModelState};
 
 fn main() {
@@ -78,6 +82,8 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "eval" => cmd_eval(cli),
         "quantize" => cmd_quantize(cli),
         "bops" => cmd_bops(cli),
+        "infer" => cmd_infer(cli),
+        "serve" => cmd_serve(cli),
         "experiment" => cmd_experiment(cli),
         other => Err(anyhow!("unknown command '{other}'; try `uniq help`")),
     }
@@ -237,6 +243,190 @@ fn cmd_bops(cli: &Cli) -> Result<()> {
             l.macs(),
             l.bops(bw, ba) / 1e9
         );
+    }
+    Ok(())
+}
+
+/// Resolve a frozen model: `--frozen DIR` (saved export) > artifact
+/// manifest + checkpoint/init > synthetic random-weight fallback.
+fn frozen_model(cli: &Cli) -> Result<FrozenModel> {
+    if let Some(dir) = cli.get("frozen") {
+        return FrozenModel::load(Path::new(dir));
+    }
+    let model = cli.get("model").unwrap_or("mobilenet_mini");
+    let bits = cli.get_u32("bits-w", 4);
+    let fq = parse_quantizer(cli.get("quantizer").unwrap_or("gauss"))?;
+    let dir = artifacts_dir(cli).join(model);
+    if !cli.has("synth") && dir.join("manifest.json").exists() {
+        let m = uniq::runtime::Manifest::load(&dir)?;
+        let state = match cli.get("ckpt") {
+            Some(c) => ModelState::load(Path::new(c))?,
+            None => ModelState::load_init(&m, &dir)?,
+        };
+        return FrozenModel::export(&m, &state, fq, bits);
+    }
+    if !cli.has("synth") {
+        println!(
+            "note: {} not found; using a synthetic (random-weight) {model}",
+            dir.join("manifest.json").display()
+        );
+    }
+    let default_width = if model == "resnet8" { 8 } else { 16 };
+    let (m, state) = infer::synthetic::model(
+        model,
+        cli.get_usize("width", default_width),
+        cli.get_usize("classes", 10),
+        cli.get_usize("seed", 7) as u64,
+    )?;
+    FrozenModel::export(&m, &state, fq, bits)
+}
+
+fn cmd_infer(cli: &Cli) -> Result<()> {
+    let model = frozen_model(cli)?;
+    let bits_w = model.bits_w as u32;
+    println!(
+        "{}: {} quantized layers, {} weights at {bits_w} bits \
+         ({} KiB packed + codebooks)",
+        model.name,
+        model.layers.len(),
+        model.n_quantized_weights(),
+        model.quantized_bytes() / 1024
+    );
+    if let Some(dir) = cli.get("export") {
+        model.save(Path::new(dir))?;
+        println!("frozen model -> {dir}");
+    }
+    let sm = ServeModel::new(model)?;
+    let batch = cli.get_usize("batch", 64);
+    let val = SynthDataset::generate(SynthConfig {
+        classes: sm.model.classes,
+        n: cli.get_usize("val-size", 256).max(batch),
+        ..Default::default()
+    });
+    let batches = Batcher::eval_batches(&val, batch);
+
+    // parity + accuracy + wall-clock, LUT vs dequantized-f32 reference
+    let mut results = Vec::new();
+    let mut max_diff = 0.0f32;
+    for mode in [KernelMode::Lut, KernelMode::DequantF32] {
+        let t0 = std::time::Instant::now();
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut logits_all = Vec::new();
+        for b in &batches {
+            let logits = sm
+                .graph
+                .forward(&sm.model, &sm.weights, &b.x, b.n, mode)?;
+            for (i, &y) in b.y.iter().enumerate() {
+                let row = &logits
+                    [i * sm.model.classes..(i + 1) * sm.model.classes];
+                if uniq::infer::kernels::argmax(row) == y as usize {
+                    correct += 1;
+                }
+            }
+            seen += b.n;
+            logits_all.push(logits);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        results.push((mode, seen as f64 / dt, correct, seen, logits_all));
+    }
+    let (_, lut_rps, lut_correct, n, lut_logits) = &results[0];
+    let (_, f32_rps, _, _, ref_logits) = &results[1];
+    for (a, b) in lut_logits.iter().flatten().zip(ref_logits.iter().flatten())
+    {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    println!(
+        "parity: max |LUT - dequant-f32| = {max_diff:.2e} over {n} images"
+    );
+    println!(
+        "accuracy: {:.2}% ({lut_correct}/{n})",
+        100.0 * *lut_correct as f64 / *n as f64
+    );
+    println!(
+        "throughput (batch {batch}): LUT {lut_rps:.0} img/s, \
+         dequant-f32 {f32_rps:.0} img/s ({:.2}x)",
+        lut_rps / f32_rps
+    );
+
+    // measured vs analytic BOPs, side by side (paper §4.2 regime)
+    let arch = sm.graph.to_arch(&sm.model);
+    let fp = arch.complexity(BitConfig::baseline());
+    let q = arch.complexity(BitConfig::uniq(bits_w, 32));
+    println!("\nanalytic complexity ({}):", arch.name);
+    println!(
+        "  fp32 baseline : {:>10.4} GBOPs/img  {:>8.2} Mbit",
+        fp.gbops(),
+        fp.mbit()
+    );
+    println!(
+        "  LUT ({bits_w} bit w) : {:>10.4} GBOPs/img  {:>8.2} Mbit  \
+         ({:.1}x cheaper)",
+        q.gbops(),
+        q.mbit(),
+        fp.bops / q.bops
+    );
+    println!(
+        "measured: LUT sustains {:.2} analytic GBOPs/s vs {:.2} for the \
+         f32 path at equal wall-clock budget",
+        q.gbops() * lut_rps,
+        fp.gbops() * f32_rps
+    );
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let model = frozen_model(cli)?;
+    println!(
+        "serving {} ({} layers, {} bit weights)",
+        model.name,
+        model.layers.len(),
+        model.bits_w
+    );
+    // deployment working set: packed indices only, no f32 weight copies
+    let sm = Arc::new(ServeModel::lut_only(model)?);
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        workers: cli.get_usize("workers", defaults.workers),
+        max_batch: cli.get_usize("max-batch", 64),
+        max_wait: std::time::Duration::from_micros(
+            (cli.get_f32("max-wait-ms", 2.0) * 1e3) as u64,
+        ),
+        mode: KernelMode::Lut,
+    };
+    let n = cli.get_usize("requests", 2048);
+    println!(
+        "{n} requests -> {} workers, max batch {}, max wait {:?}",
+        cfg.workers, cfg.max_batch, cfg.max_wait
+    );
+    let data = SynthDataset::generate(SynthConfig {
+        classes: sm.model.classes,
+        n: n.min(512),
+        ..Default::default()
+    });
+    let server = Server::start(Arc::clone(&sm), cfg);
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        pending.push(server.submit(data.image(i % data.n).to_vec())?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let stats = server.shutdown();
+    stats.print();
+    if ok != n {
+        return Err(anyhow!("only {ok}/{n} requests got replies"));
+    }
+    if let Some(path) = cli.get("stats") {
+        let j = uniq::util::json::obj(vec![
+            ("model", uniq::util::json::s(&sm.model.name)),
+            ("stats", stats.to_json()),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        println!("stats -> {path}");
     }
     Ok(())
 }

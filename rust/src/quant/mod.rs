@@ -36,7 +36,16 @@ impl Quantizer {
     }
 
     /// Bin index of `x` (levels[bin] is its representation).
+    ///
+    /// Total on all f32 inputs: ±∞ land in the outermost bins, and NaN —
+    /// for which every threshold comparison is false, so the binary
+    /// search would silently drift to bin 0 — is pinned to the central
+    /// bin. The LUT export path (`infer::codebook`) relies on `bin`
+    /// returning a valid index for anything a checkpoint may contain.
     pub fn bin(&self, x: f32) -> usize {
+        if x.is_nan() {
+            return self.levels.len() / 2;
+        }
         // binary search over interior thresholds; ties go right like
         // numpy searchsorted(side="right")
         let mut lo = 0usize;
@@ -142,6 +151,34 @@ mod tests {
     fn mse_zero_on_levels() {
         let q = q2();
         assert_eq!(q.mse(&[-1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn non_finite_inputs_get_valid_bins() {
+        let q = Quantizer {
+            thresholds: vec![-1.0, 0.0, 2.0],
+            levels: vec![-2.0, -0.5, 1.0, 3.0],
+        };
+        assert_eq!(q.bin(f32::NEG_INFINITY), 0);
+        assert_eq!(q.bin(f32::INFINITY), 3);
+        // NaN pins to the central bin instead of index-walking to 0
+        assert_eq!(q.bin(f32::NAN), 2);
+        for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            assert!(q.bin(x) < q.k(), "bin({x}) out of range");
+            assert!(q.quantize_one(x).is_finite());
+        }
+        // k = 1 (no thresholds) is total too
+        let q1 = Quantizer { thresholds: vec![], levels: vec![0.5] };
+        assert_eq!(q1.bin(f32::NAN), 0);
+        assert_eq!(q1.bin(7.0), 0);
+    }
+
+    #[test]
+    fn quantize_slice_with_nans_stays_on_levels() {
+        let q = q2();
+        let mut xs = vec![f32::NAN, -0.1, f32::INFINITY, f32::NEG_INFINITY];
+        q.quantize(&mut xs);
+        assert_eq!(xs, vec![1.0, -1.0, 1.0, -1.0]);
     }
 
     #[test]

@@ -12,3 +12,35 @@ pub mod state;
 pub use engine::{Engine, Executable};
 pub use manifest::{IoSpec, Manifest, ParamMeta};
 pub use state::ModelState;
+
+use std::path::Path;
+
+use crate::util::bench::{Bench, Stats};
+
+/// Benchmark one PJRT eval-step execution of the artifact in `dir` at
+/// its native batch size (AOT executables are fixed-batch). Returns
+/// `None` when the artifact, the backend, or the requested batch is
+/// unavailable — callers record the column as absent. Shared by
+/// `benches/inference.rs` and `examples/mobilenet_deploy.rs`.
+pub fn bench_eval_step(
+    b: &mut Bench,
+    dir: &Path,
+    batch: usize,
+    x: &[f32],
+) -> Option<Stats> {
+    let m = Manifest::load(dir).ok()?;
+    if batch != m.batch {
+        return None;
+    }
+    let engine = Engine::cpu().ok()?;
+    let exe = engine.compile_file(&dir.join("eval_step.hlo.txt")).ok()?;
+    let state = ModelState::load_init(&m, dir).ok()?;
+    let y = vec![0i32; batch];
+    // smoke one execution first so a broken backend skips cleanly
+    let inputs = state.eval_inputs(&m, x, &y, 256.0, 1.0).ok()?;
+    exe.run(&inputs).ok()?;
+    Some(b.run_throughput(&format!("{}/pjrt/b{batch}", m.name), batch, || {
+        let inputs = state.eval_inputs(&m, x, &y, 256.0, 1.0).unwrap();
+        exe.run(&inputs).unwrap()
+    }))
+}

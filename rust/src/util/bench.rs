@@ -11,6 +11,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{num, obj, Json};
+
 pub struct Bench {
     pub group: String,
     pub min_time: Duration,
@@ -97,12 +99,41 @@ impl Bench {
         stats
     }
 
+    /// All recorded results, in run order.
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
+    /// Machine-readable report: `{group, benchmarks: {name: stats...}}`.
+    pub fn report_json(&self) -> Json {
+        let benchmarks = self
+            .results
+            .iter()
+            .map(|(name, s)| (name.as_str(), s.to_json()))
+            .collect();
+        obj(vec![
+            ("group", crate::util::json::s(&self.group)),
+            ("benchmarks", obj(benchmarks)),
+        ])
+    }
+
     pub fn finish(self) {
         println!(
             "{}: {} benchmarks complete",
             self.group,
             self.results.len()
         );
+    }
+}
+
+impl Stats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("median_ns", num(self.median_ns)),
+            ("p10_ns", num(self.p10_ns)),
+            ("p90_ns", num(self.p90_ns)),
+            ("iters", num(self.iters as f64)),
+        ])
     }
 }
 
@@ -136,6 +167,23 @@ mod tests {
         assert!(stats.p10_ns <= stats.median_ns);
         assert!(stats.median_ns <= stats.p90_ns);
         b.finish();
+    }
+
+    #[test]
+    fn report_json_carries_all_results() {
+        let mut b = Bench::quick("grp");
+        b.run("a", || 1 + 1);
+        b.run("b", || 2 + 2);
+        let j = b.report_json();
+        assert_eq!(j.req("group").unwrap().as_str(), Some("grp"));
+        let benches = j.req("benchmarks").unwrap();
+        for name in ["a", "b"] {
+            let s = benches.req(name).unwrap();
+            assert!(s.req("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        // serialized form parses back
+        let text = j.to_string();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Golden parity: manifest → codebook export → LUT execution must match
+//! the exact host quantizer (`Quantizer::quantize`) + f32 reference math
+//! within 1e-5, end to end. Runs without AOT artifacts (synthetic
+//! manifest-faithful models); when artifacts exist, the real
+//! manifest/init.bin export is round-tripped too.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniq::coordinator::FreezeQuant;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::infer::{
+    kernels, synthetic, FrozenModel, Graph, KernelMode, PreparedWeights,
+    ServeConfig, ServeModel, Server,
+};
+use uniq::quant::{KQuantileGauss, QuantizerFit};
+use uniq::runtime::{Manifest, ModelState};
+use uniq::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.2).collect()
+}
+
+/// The satellite golden test: codebook-exported LUT matmul vs
+/// `Quantizer::quantize` + f32 reference matmul, ≤ 1e-5.
+#[test]
+fn lut_gemm_matches_exact_quantizer_reference() {
+    let (rows, cin, cout) = (48usize, 96usize, 32usize);
+    let x = randvec(rows * cin, 1);
+    let w = randvec(cin * cout, 2);
+    for k in [4usize, 8, 16, 256] {
+        let q = KQuantileGauss.fit(&w, k);
+
+        // reference: exact host freeze + plain f32 matmul
+        let mut wq = w.clone();
+        q.quantize(&mut wq);
+        let mut want = vec![0.0f32; rows * cout];
+        kernels::matmul_f32(&x, &wq, rows, cin, cout, &mut want);
+
+        // LUT path: export through the codebook (bit-packed indices)
+        let layer = uniq::infer::LayerCodebook::from_weights(
+            "fc", &[cin, cout], &w, &q,
+        );
+        assert_eq!(layer.dequantize(), wq, "codebook expand != exact freeze");
+        let idx_t = kernels::transpose_idx(&layer.indices.unpack(), cin, cout);
+        let mut got = vec![0.0f32; rows * cout];
+        kernels::lut_matmul(
+            &x, &idx_t, &layer.codebook, rows, cin, cout, &mut got,
+        );
+
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5, "k={k}: {a} vs {b}");
+        }
+    }
+}
+
+/// Whole-graph parity on every synthetic architecture.
+#[test]
+fn graph_forward_lut_matches_f32_all_archs() {
+    let data = SynthDataset::generate(SynthConfig {
+        n: 8,
+        ..Default::default()
+    });
+    let batch = Batcher::eval_batches(&data, 4).remove(0);
+    for (name, width) in [("mlp", 16usize), ("resnet8", 8), ("mobilenet_mini", 16)] {
+        let (m, state) = synthetic::model(name, width, 10, 11).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let graph = Graph::from_model(&frozen).unwrap();
+        let weights = PreparedWeights::new(&frozen, &graph);
+        let lut = graph
+            .forward(&frozen, &weights, &batch.x, batch.n, KernelMode::Lut)
+            .unwrap();
+        let refr = graph
+            .forward(
+                &frozen,
+                &weights,
+                &batch.x,
+                batch.n,
+                KernelMode::DequantF32,
+            )
+            .unwrap();
+        assert_eq!(lut.len(), batch.n * 10, "{name}: logits shape");
+        let max_diff = lut
+            .iter()
+            .zip(&refr)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff <= 1e-5, "{name}: LUT vs f32 diff {max_diff}");
+        assert!(
+            lut.iter().all(|v| v.is_finite()),
+            "{name}: non-finite logits"
+        );
+    }
+}
+
+/// Results must not depend on how requests were batched.
+#[test]
+fn batch_composition_invariance() {
+    let (m, state) = synthetic::model("mobilenet_mini", 8, 10, 3).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let graph = Graph::from_model(&frozen).unwrap();
+    let weights = PreparedWeights::new(&frozen, &graph);
+    let img_len: usize = frozen.image.iter().product();
+    let x = randvec(2 * img_len, 5);
+    let both = graph
+        .forward(&frozen, &weights, &x, 2, KernelMode::Lut)
+        .unwrap();
+    for i in 0..2 {
+        let one = graph
+            .forward(
+                &frozen,
+                &weights,
+                &x[i * img_len..(i + 1) * img_len],
+                1,
+                KernelMode::Lut,
+            )
+            .unwrap();
+        assert_eq!(one, both[i * 10..(i + 1) * 10].to_vec(), "image {i}");
+    }
+}
+
+/// Manifest → export → save → load → identical model and identical
+/// logits.
+#[test]
+fn frozen_export_disk_roundtrip() {
+    let (m, state) = synthetic::model("resnet8", 8, 10, 21).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let dir = std::env::temp_dir().join("uniq_infer_parity_roundtrip");
+    frozen.save(&dir).unwrap();
+    let loaded = FrozenModel::load(&dir).unwrap();
+    assert_eq!(loaded, frozen);
+
+    let graph = Graph::from_model(&loaded).unwrap();
+    let weights = PreparedWeights::new(&loaded, &graph);
+    let img_len: usize = loaded.image.iter().product();
+    let x = randvec(img_len, 8);
+    let a = graph
+        .forward(&loaded, &weights, &x, 1, KernelMode::Lut)
+        .unwrap();
+    let g2 = Graph::from_model(&frozen).unwrap();
+    let w2 = PreparedWeights::new(&frozen, &g2);
+    let b = g2.forward(&frozen, &w2, &x, 1, KernelMode::Lut).unwrap();
+    assert_eq!(a, b);
+}
+
+/// Frozen weights snap to at most 2^bits distinct values per layer, and
+/// the packed form really is `bits` per weight.
+#[test]
+fn export_respects_bit_budget() {
+    let (m, state) = synthetic::model("mlp", 16, 10, 2).unwrap();
+    for bits in [2u32, 3, 4, 8] {
+        let f =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, bits)
+                .unwrap();
+        for l in &f.layers {
+            assert_eq!(l.k(), 1 << bits, "{} k at {bits} bits", l.name);
+            assert_eq!(l.indices.bits as u32, bits, "{} width", l.name);
+            assert_eq!(
+                l.indices.byte_len(),
+                (l.n_weights() * bits as usize).div_ceil(8),
+                "{} packing density",
+                l.name
+            );
+            let mut distinct: Vec<f32> = l.dequantize();
+            distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            distinct.dedup();
+            assert!(
+                distinct.len() <= 1 << bits,
+                "{}: {} distinct values at {bits} bits",
+                l.name,
+                distinct.len()
+            );
+        }
+    }
+}
+
+/// End-to-end through the batched server: replies match direct forward.
+#[test]
+fn serve_end_to_end_parity() {
+    let (m, state) = synthetic::model("mobilenet_mini", 8, 10, 13).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let sm = Arc::new(ServeModel::new(frozen).unwrap());
+    let server = Server::start(
+        Arc::clone(&sm),
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            mode: KernelMode::Lut,
+        },
+    );
+    let img_len = sm.image_len();
+    let images: Vec<Vec<f32>> = (0..33)
+        .map(|i| randvec(img_len, 100 + i as u64))
+        .collect();
+    let handles: Vec<_> = images
+        .iter()
+        .map(|img| server.submit(img.clone()).unwrap())
+        .collect();
+    for (img, h) in images.iter().zip(handles) {
+        let reply = h.recv().expect("reply");
+        let want = sm
+            .graph
+            .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(reply.logits, want);
+        assert_eq!(reply.pred, kernels::argmax(&want));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 33);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+/// With AOT artifacts present, the real manifest + init.bin export
+/// round-trips and stays parity-clean too.
+#[test]
+fn artifact_manifest_export_roundtrip() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("mlp/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    for variant in ["mlp", "resnet8", "mobilenet_mini"] {
+        let dir = root.join(variant);
+        if !dir.join("manifest.json").exists() {
+            continue;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let state = ModelState::load_init(&m, &dir).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        assert_eq!(frozen.layers.len(), m.n_qlayers(), "{variant}");
+        let graph = Graph::from_model(&frozen).unwrap();
+        let weights = PreparedWeights::new(&frozen, &graph);
+        let img_len: usize = frozen.image.iter().product();
+        let x = randvec(img_len * 2, 31);
+        let lut = graph
+            .forward(&frozen, &weights, &x, 2, KernelMode::Lut)
+            .unwrap();
+        let refr = graph
+            .forward(&frozen, &weights, &x, 2, KernelMode::DequantF32)
+            .unwrap();
+        let max_diff = lut
+            .iter()
+            .zip(&refr)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff <= 1e-5, "{variant}: diff {max_diff}");
+
+        let tmp = std::env::temp_dir().join(format!("uniq_rt_{variant}"));
+        frozen.save(&tmp).unwrap();
+        assert_eq!(FrozenModel::load(&tmp).unwrap(), frozen, "{variant}");
+    }
+}
+
+/// The analytic complexity view of a reconstructed graph is consistent
+/// with the frozen tensors it came from.
+#[test]
+fn graph_to_arch_inventory_consistent() {
+    let (m, state) = synthetic::model("mobilenet_mini", 16, 10, 17).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let graph = Graph::from_model(&frozen).unwrap();
+    let arch = graph.to_arch(&frozen);
+    // one analytic layer per quantizable layer
+    assert_eq!(arch.layers.len(), frozen.layers.len());
+    let params: u64 = arch.layers.iter().map(|l| l.params()).sum();
+    assert_eq!(params, frozen.n_quantized_weights() as u64);
+    // quantized complexity strictly below fp32
+    let fp = arch.complexity(uniq::bops::BitConfig::baseline());
+    let q4 = arch.complexity(uniq::bops::BitConfig::uniq(4, 8));
+    assert!(q4.bops < fp.bops);
+    assert!(q4.model_bits < fp.model_bits);
+}

@@ -1,0 +1,188 @@
+//! Minimal API-compatible subset of the `anyhow` crate for the offline
+//! vendor set: an erased error type carrying a context chain, the
+//! `Context` extension trait and the `anyhow!`/`bail!` macros. Only what
+//! this repository uses is implemented.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the usual default-parameter alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Erased error: a chain of messages, outermost context first.
+///
+/// Deliberately does NOT implement `std::error::Error`, exactly like the
+/// real `anyhow::Error` — that is what keeps the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    /// chain[0] is the most recent context, chain[last] the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (`map_err(Error::msg)`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, `outer: ...: root`
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, c) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {c}")?;
+                    }
+                }
+                Ok(())
+            }
+            None => write!(f, "(empty error)"),
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // keep the source chain visible in the message stack
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    /// Sealed adapter: both `anyhow::Error` and std errors fold into
+    /// `Error`. Coherent because `Error` itself is not `std::error::Error`.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> crate::Error;
+    }
+
+    impl IntoAnyhow for crate::Error {
+        fn into_anyhow(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...{}...", args)` — format a new `Error`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!(...)` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "opening file")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "gone");
+    }
+}

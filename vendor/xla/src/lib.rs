@@ -1,0 +1,276 @@
+//! Host-side stand-in for the `xla` PJRT bindings.
+//!
+//! The offline vendor set has no PJRT C library, so this crate keeps the
+//! *data* half of the API fully functional — `Literal` is a real host
+//! container (dtype + shape + bytes) used by `uniq::runtime::state` for
+//! marshalling — while the *compute* half (`compile`/`execute`) returns a
+//! clear "backend unavailable" error. The coordinator's training path
+//! therefore degrades with an actionable message, and the native LUT
+//! inference engine (`uniq::infer`), which never touches PJRT, runs
+//! everywhere.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the native PJRT backend, which is not part of \
+         this offline build; use the native LUT inference path \
+         (`uniq infer` / `uniq serve`) or rebuild against real xla bindings"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Sealed set of host element types the literal container supports.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// Host tensor literal: dtype + shape + little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != elems * ty.byte_size() {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {shape:?} needs {}",
+                data.len(),
+                elems * ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { ty: T::TY, shape: vec![], data: v.to_le().to_vec() }
+    }
+
+    pub fn vec1<T: NativeType>(vs: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(vs.len() * 4);
+        for v in vs {
+            data.extend_from_slice(&v.to_le());
+        }
+        Literal { ty: T::TY, shape: vec![vs.len()], data }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let shape: Vec<usize> = dims.iter().map(|&d| d.max(0) as usize).collect();
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        if elems * self.ty.byte_size() != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len() / self.ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty: self.ty, shape, data: self.data.clone() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "to_vec type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| T::from_le([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Unpack a tuple literal. Only execution produces tuples, and
+    /// execution is unavailable in this build.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals (produced by execution)"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("tuple literals (produced by execution)"))
+    }
+}
+
+/// Parsed HLO module (text retained verbatim; nothing interprets it here).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// Stand-in PJRT client: construction succeeds (so purely analytic code
+/// paths that only *hold* a client keep working); compilation fails with
+/// an actionable message.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling HLO"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a compiled module"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let l = Literal::vec1(&v);
+        assert_eq!(l.shape(), &[3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), v);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn untyped_create_checks_len() {
+        let bytes = [0u8; 12];
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes
+        )
+        .is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[4],
+            &bytes
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reshape_checks_elems() {
+        let l = Literal::vec1(&[0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+        assert_eq!(l.shape().len(), 0);
+    }
+
+    #[test]
+    fn compile_reports_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let e = c.compile(&XlaComputation::from_proto(&proto)).unwrap_err();
+        assert!(e.to_string().contains("PJRT"));
+    }
+}
