@@ -1,0 +1,381 @@
+"""Python mirror of the Rust train/ native backend, validated against jax.
+
+Mirrors (1:1 port of the Rust algorithm in rust/src/train/):
+  * dense forward/backward, softmax-CE loss + top-1 accuracy
+  * the UNIQ uniformize -> uniform-noise -> de-uniformize weight transform
+    (quantile and generic-threshold configs) with the generalized-STE
+    backward (identity inside the representable range, zero where the
+    uniformized value clipped — Liu et al. 2021, "Nonuniform-to-Uniform
+    Quantization", applied to the uniformized domain per LCQ)
+  * fake-quant activation path for frozen layers (STE, matches the
+    compile kernel's custom_vjp exactly)
+  * SGD + momentum + weight decay with frozen-layer masking
+
+Ground truth: jax.value_and_grad through python/compile/model.make_steps
+on the real mlp builder.  Full-precision and frozen modes must agree to
+f32 tolerance (jax differentiates the same math); noise mode must agree
+in the forward pass exactly and in the backward pass directionally (the
+jax path differentiates the true transform whose Jacobian phi(z)/phi(z^)
+-> 1 as k grows; STE replaces it with 1 — we assert high cosine
+similarity and report the clip fraction).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from compile.common import SIGMA_EPS, UNIF_EPS
+from compile.kernels.ref import uniq_noise_ref
+from compile.layers import generic_noise
+from compile.mlp import mlp
+from compile.model import MOMENTUM, WEIGHT_DECAY, make_steps
+
+FAIL = []
+
+
+def check(name, cond, msg=""):
+    print(("PASS " if cond else "FAIL ") + name + (" " + msg if msg else ""))
+    if not cond:
+        FAIL.append(name)
+
+
+# ---------------------------------------------------------------------------
+# Normal CDF / ICDF — mirror of rust stats::normal (f64 polynomials, the
+# same A&S 7.1.26 / Giles 2010 coefficients as compile.common).
+# ---------------------------------------------------------------------------
+
+def erf64(x):
+    a1, a2, a3 = 0.254829592, -0.284496736, 1.421413741
+    a4, a5, p = -1.453152027, 1.061405429, 0.3275911
+    s = np.sign(x)
+    ax = np.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    y = 1.0 - ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t * np.exp(
+        -ax * ax)
+    return s * y
+
+
+def erf_inv64(y):
+    y = np.clip(y, -1.0 + 1e-7, 1.0 - 1e-7)
+    w = -np.log((1.0 - y) * (1.0 + y))
+    wc = w - 2.5
+    pc = 2.81022636e-08
+    for c in (3.43273939e-07, -3.5233877e-06, -4.39150654e-06, 0.00021858087,
+              -0.00125372503, -0.00417768164, 0.246640727, 1.50140941):
+        pc = c + pc * wc
+    wt = np.sqrt(np.maximum(w, 5.0)) - 3.0
+    pt = -0.000200214257
+    for c in (0.000100950558, 0.00134934322, -0.00367342844, 0.00573950773,
+              -0.0076224613, 0.00943887047, 1.00167406, 2.83297682):
+        pt = c + pt * wt
+    return np.where(w < 5.0, pc, pt) * y
+
+
+SQRT2 = np.sqrt(2.0)
+norm_cdf = lambda z: 0.5 * (1.0 + erf64(z / SQRT2))
+norm_icdf = lambda u: SQRT2 * erf_inv64(2.0 * u - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Mirror of rust train/ops.rs
+# ---------------------------------------------------------------------------
+
+def tensor_stats(w):
+    """mirror of stats::mean_std as the trainer consumes it (f64 pass)."""
+    w = w.astype(np.float64)
+    return np.float32(w.mean()), np.float32(w.std() + SIGMA_EPS)
+
+
+def uniq_noise_mirror(w, noise_u, mu, sigma, k):
+    """Forward of the quantile-config noise transform + the STE clip mask."""
+    u = norm_cdf((w.astype(np.float64) - mu) / sigma)
+    shifted = u + (noise_u.astype(np.float64) - 0.5) / k
+    clipped = (shifted < UNIF_EPS) | (shifted > 1.0 - UNIF_EPS)
+    u_hat = np.clip(shifted, UNIF_EPS, 1.0 - UNIF_EPS)
+    return (mu + sigma * norm_icdf(u_hat)).astype(np.float32), ~clipped
+
+
+def generic_noise_mirror(w, noise_u, mu, sigma, uthresh, kmax):
+    """Forward of the generic-threshold noise transform (Table 3 path)."""
+    u = norm_cdf((w.astype(np.float64) - mu) / sigma)
+    # count interior thresholds <= u -> bin index in [0, kmax-1]
+    idx = np.sum(u[..., None] >= uthresh[1:kmax], axis=-1)
+    lo, hi = uthresh[idx], uthresh[idx + 1]
+    shifted = u + (noise_u.astype(np.float64) - 0.5) * (hi - lo)
+    clipped = (shifted < UNIF_EPS) | (shifted > 1.0 - UNIF_EPS)
+    u_hat = np.clip(shifted, UNIF_EPS, 1.0 - UNIF_EPS)
+    return (mu + sigma * norm_icdf(u_hat)).astype(np.float32), ~clipped
+
+
+def fake_quant_mirror(x, mu, sigma, k):
+    u = norm_cdf((x.astype(np.float64) - mu) / sigma)
+    idx = np.clip(np.floor(u * k), 0.0, k - 1.0)
+    u_hat = np.clip((idx + 0.5) / k, UNIF_EPS, 1.0 - UNIF_EPS)
+    return (mu + sigma * norm_icdf(u_hat)).astype(np.float32)
+
+
+def softmax_ce(logits, y):
+    m = logits.max(axis=-1, keepdims=True)
+    lse = m + np.log(np.exp(logits - m).sum(axis=-1, keepdims=True))
+    logp = logits - lse
+    b = logits.shape[0]
+    loss = -logp[np.arange(b), y].mean()
+    acc = (logits.argmax(axis=-1) == y).mean()
+    dlogits = (np.exp(logp) - np.eye(logits.shape[1])[y]) / b
+    return np.float32(loss), np.float32(acc), dlogits.astype(np.float32)
+
+
+def native_train_step(params, moms, metas, qnames, x, y, *, lr, k_w, k_a, aq,
+                      mode_vec, noises, noise_cfg="quantile", qthresh=None):
+    """Mirror of rust train/native.rs::train_step (single shard).
+
+    params/moms: list of np arrays in manifest order (w, b per layer).
+    metas: list of dicts with name/qlayer/wd.  noises: per-qlayer U[0,1)
+    arrays (supplied so jax and the mirror share the same draw).
+    Returns (new_params, new_moms, loss, acc).
+    """
+    L = len(qnames)
+    a = x.reshape(x.shape[0], -1).astype(np.float32)
+    acts = [a]           # input to each layer
+    zs = []              # pre-activation
+    w_effs, ste_masks = [], []
+    kmax = None if qthresh is None else len(qthresh) - 1
+    for i in range(L):
+        w = params[2 * i]
+        mode = mode_vec[i]
+        if 0.5 < mode < 1.5:
+            mu, sigma = tensor_stats(w)
+            if noise_cfg == "quantile":
+                w_eff, keep = uniq_noise_mirror(w, noises[i], mu, sigma, k_w)
+            else:
+                w_eff, keep = generic_noise_mirror(w, noises[i], mu, sigma,
+                                                   qthresh, kmax)
+        else:
+            w_eff, keep = w, np.ones_like(w, dtype=bool)
+        w_effs.append(w_eff)
+        ste_masks.append(keep)
+        z = a @ w_eff + params[2 * i + 1]
+        zs.append(z)
+        if i < L - 1:
+            r = np.maximum(z, 0.0)
+            if mode > 1.5 or aq > 0.5:
+                mu, sigma = tensor_stats(r)
+                a = fake_quant_mirror(r, mu, sigma, k_a)  # STE backward
+            else:
+                a = r
+            acts.append(a)
+    loss, acc, dz = softmax_ce(zs[-1], y)
+
+    grads = [None] * len(params)
+    for i in reversed(range(L)):
+        grads[2 * i] = (acts[i].T @ dz) * ste_masks[i]
+        grads[2 * i + 1] = dz.sum(axis=0)
+        if i > 0:
+            da = dz @ w_effs[i].T        # act_quant STE: identity
+            dz = da * (zs[i - 1] > 0.0)  # relu gate
+
+    new_params, new_moms = [], []
+    for p, v, g, meta in zip(params, moms, grads, metas):
+        if meta["wd"]:
+            g = g + WEIGHT_DECAY * p
+        v_new = MOMENTUM * v + g
+        if meta["qlayer"] is not None and mode_vec[meta["qlayer"]] > 1.5:
+            v_new = np.zeros_like(v_new)
+            p_new = p
+        else:
+            p_new = p - lr * v_new
+        new_params.append(p_new.astype(np.float32))
+        new_moms.append(v_new.astype(np.float32))
+    return new_params, new_moms, loss, acc
+
+
+def native_eval_step(params, qnames, x, y, k_a, aq):
+    """Mirror of rust train/native.rs::eval_step."""
+    L = len(qnames)
+    a = x.reshape(x.shape[0], -1).astype(np.float32)
+    for i in range(L):
+        z = a @ params[2 * i] + params[2 * i + 1]
+        if i < L - 1:
+            r = np.maximum(z, 0.0)
+            if aq > 0.5:
+                mu, sigma = tensor_stats(r)
+                a = fake_quant_mirror(r, mu, sigma, k_a)
+            else:
+                a = r
+        else:
+            logits = z
+    loss, acc, _ = softmax_ce(logits, y)
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Ground truth setup: real builder + make_steps
+# ---------------------------------------------------------------------------
+
+rng = np.random.default_rng(0)
+HIDDEN, CLASSES, IMAGE, BATCH = 32, 10, (8, 8, 3), 8
+builder, apply_fn = mlp(hidden=HIDDEN, classes=CLASSES, image=IMAGE)
+train_step, eval_step = make_steps(builder, apply_fn)
+METAS = builder.params
+QNAMES = builder.qlayers
+L = len(QNAMES)
+
+params = []
+for m in METAS:
+    kind = m["init"][0]
+    if kind == "he_normal":
+        params.append(rng.normal(0, np.sqrt(2.0 / m["init"][1]),
+                                 m["shape"]).astype(np.float32))
+    else:
+        params.append(np.zeros(m["shape"], np.float32))
+moms = [rng.normal(0, 0.01, p.shape).astype(np.float32) for p in params]
+x = rng.normal(size=(BATCH,) + IMAGE).astype(np.float32)
+y = rng.integers(0, CLASSES, size=BATCH).astype(np.int32)
+
+LR, K_W, K_A, SEED = np.float32(0.05), np.float32(16.0), np.float32(256.0), 3
+key = jax.random.PRNGKey(SEED)
+noises = [np.asarray(jax.random.uniform(jax.random.fold_in(key, i),
+                                        METAS[2 * i]["shape"]))
+          for i in range(L)]
+
+
+def jax_step(mode_vec, aq=0.0):
+    args = ([jnp.asarray(p) for p in params] + [jnp.asarray(v) for v in moms]
+            + [jnp.asarray(x), jnp.asarray(y), LR, K_W, K_A,
+               jnp.float32(aq), jnp.int32(SEED), jnp.asarray(mode_vec)])
+    out = train_step(*args)
+    n = len(params)
+    return ([np.asarray(o) for o in out[:n]],
+            [np.asarray(o) for o in out[n:2 * n]],
+            float(out[-2]), float(out[-1]))
+
+
+def max_rel(a, b):
+    return max(np.abs(np.asarray(ai) - np.asarray(bi)).max()
+               / max(np.abs(np.asarray(bi)).max(), 1e-6)
+               for ai, bi in zip(a, b))
+
+
+# ---- 1. full-precision mode: exact step parity --------------------------
+jp, jm, jl, ja = jax_step([0.0] * L)
+mode = [0.0] * L
+mp, mm, ml, ma = native_train_step(params, moms, METAS, QNAMES, x, y, lr=LR,
+                                   k_w=K_W, k_a=K_A, aq=0.0, mode_vec=mode,
+                                   noises=noises)
+check("fp-mode loss/acc", abs(ml - jl) < 2e-4 and abs(ma - ja) < 1e-6,
+      f"loss {ml:.6f} vs {jl:.6f}")
+check("fp-mode params'", max_rel(mp, jp) < 2e-3, f"relmax={max_rel(mp, jp):.2e}")
+check("fp-mode momenta'", max_rel(mm, jm) < 2e-3, f"relmax={max_rel(mm, jm):.2e}")
+
+# ---- 2. frozen mode: masking + fake-quant act path ----------------------
+mode = [2.0, 1.0, 0.0]  # fc1 frozen, fc2 noised, fc3 full precision
+jp, jm, jl, ja = jax_step(mode)
+mp, mm, ml, ma = native_train_step(params, moms, METAS, QNAMES, x, y, lr=LR,
+                                   k_w=K_W, k_a=K_A, aq=0.0, mode_vec=mode,
+                                   noises=noises)
+check("frozen-mode loss (forward incl. noise+fake-quant)",
+      abs(ml - jl) < 2e-4, f"loss {ml:.6f} vs {jl:.6f}")
+check("frozen layer untouched, momentum flushed",
+      np.array_equal(mp[0], params[0]) and not mm[0].any()
+      and np.array_equal(jp[0], params[0]) and not jm[0].any())
+check("fp tail layer matches jax under frozen upstream",
+      np.abs(mp[4] - jp[4]).max() / np.abs(jp[4]).max() < 2e-3,
+      f"relmax={np.abs(mp[4]-jp[4]).max()/np.abs(jp[4]).max():.2e}")
+
+# ---- 3. noise-mode forward transform parity -----------------------------
+w = params[2]
+mu, sigma = tensor_stats(w)
+got, keep = uniq_noise_mirror(w, noises[1], mu, sigma, float(K_W))
+want = np.asarray(uniq_noise_ref(jnp.asarray(w), jnp.asarray(noises[1]),
+                                 jnp.float32(mu), jnp.float32(sigma), K_W))
+check("uniq_noise forward mirror", np.abs(got - want).max() < 1e-5,
+      f"maxdiff={np.abs(got-want).max():.2e} clip={100*(1-keep.mean()):.3f}%")
+
+uth = np.concatenate([[0.0], np.linspace(0.1, 0.9, 15), [1.0]]).astype(
+    np.float32)  # k=16 generic thresholds, kmax=16
+gotg, _ = generic_noise_mirror(w, noises[1], mu, sigma, uth.astype(np.float64),
+                               16)
+wantg = np.asarray(generic_noise(jnp.asarray(w), jnp.asarray(noises[1]),
+                                 jnp.float32(mu), jnp.float32(sigma),
+                                 jnp.asarray(uth), 16))
+# f32 (jax graph) vs f64 (rust) CDF evaluation can flip the bin of a
+# weight sitting exactly on a threshold; exclude those knife-edge
+# elements and bound how many there are.
+flip = np.abs(gotg - wantg) > 1e-5
+check("generic_noise forward mirror",
+      np.abs(np.where(flip, 0.0, gotg - wantg)).max() < 1e-5
+      and flip.mean() < 0.01,
+      f"maxdiff(stable)={np.abs(np.where(flip, 0, gotg - wantg)).max():.2e} "
+      f"bin-flips={100 * flip.mean():.3f}%")
+
+# ---- 4. noise mode ------------------------------------------------------
+# (a) forward parity through the whole step; (b) the mirror's backward is
+# the EXACT gradient of the network evaluated at the injected weights
+# (that is what straight-through means: d loss / d w_eff, routed to w);
+# (c) vs the true jax gradient of the full transform the STE stays
+# sign-aligned — the true per-element Jacobian phi(z)/phi(z^) is a
+# positive factor with heavy variance (it only vanishes where the
+# uniformized value clips), so cosine is the wrong metric and sign
+# agreement is the meaningful one (Liu et al. 2021's argument for
+# (generalized) STE over the exploding exact factor).
+mode = [1.0] * L
+jp, jm, jl, ja = jax_step(mode)
+mp, mm, ml, ma = native_train_step(params, moms, METAS, QNAMES, x, y, lr=LR,
+                                   k_w=K_W, k_a=K_A, aq=0.0, mode_vec=mode,
+                                   noises=noises)
+check("noise-mode loss (forward parity)", abs(ml - jl) < 2e-4,
+      f"loss {ml:.6f} vs {jl:.6f}")
+
+# exact-gradient-at-w_eff ground truth: same net with w_eff as leaves
+w_effs, keeps = [], []
+for i in range(L):
+    wi = params[2 * i]
+    mu_i, sg_i = tensor_stats(wi)
+    w_eff, keep = uniq_noise_mirror(wi, noises[i], mu_i, sg_i, float(K_W))
+    w_effs.append(w_eff)
+    keeps.append(keep)
+
+
+def loss_at_weff(weffs):
+    a = jnp.asarray(x).reshape(BATCH, -1)
+    for i in range(L):
+        z = a @ weffs[i] + jnp.asarray(params[2 * i + 1])
+        a = jnp.maximum(z, 0.0) if i < L - 1 else z
+    logits = a - jax.scipy.special.logsumexp(a, axis=-1, keepdims=True)
+    picked = jnp.take_along_axis(logits, jnp.asarray(y)[:, None], axis=-1)
+    return -jnp.mean(picked)
+
+
+g_eff = jax.grad(loss_at_weff)([jnp.asarray(we) for we in w_effs])
+for i in range(L):
+    g_ste = mm[i * 2] - MOMENTUM * moms[i * 2] - WEIGHT_DECAY * params[i * 2]
+    # clip-gated elements carry zero gradient by construction; the
+    # comparison is over the un-gated (representable-range) elements
+    diff = np.abs(np.where(keeps[i], g_ste - np.asarray(g_eff[i]), 0.0)).max()
+    scale = max(np.abs(np.asarray(g_eff[i])).max(), 1e-8)
+    check(f"noise-mode STE == exact grad at w_eff ({QNAMES[i]})",
+          diff / scale < 2e-3,
+          f"relmax={diff / scale:.2e} gated={100 * (1 - keeps[i].mean()):.2f}%")
+    g_jax = (jm[i * 2] - MOMENTUM * moms[i * 2]).ravel()
+    s = g_ste.ravel()
+    big = np.abs(g_jax) > np.abs(g_jax).std() * 0.1
+    agree = np.mean(np.sign(s[big]) == np.sign(g_jax[big]))
+    check(f"noise-mode STE sign-aligned with true grad ({QNAMES[i]})",
+          agree > 0.9, f"agree={100 * agree:.1f}%")
+
+# ---- 5. eval step -------------------------------------------------------
+eo = eval_step(*([jnp.asarray(p) for p in params]
+                 + [jnp.asarray(x), jnp.asarray(y), K_A, jnp.float32(1.0)]))
+ml, ma = native_eval_step(params, QNAMES, x, y, float(K_A), 1.0)
+check("eval step (aq=1) loss/acc",
+      abs(ml - float(eo[0])) < 2e-4 and abs(ma - float(eo[1])) < 1e-6,
+      f"loss {ml:.6f} vs {float(eo[0]):.6f}")
+
+print("\n%d failures" % len(FAIL))
+sys.exit(1 if FAIL else 0)

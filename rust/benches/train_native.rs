@@ -1,0 +1,123 @@
+//! Native train-step benchmarks → `BENCH_train.json`.
+//!
+//! Runs everywhere (synthetic manifest, no artifacts, no PJRT): one SGD
+//! step of the mlp family per schedule mode (full precision / UNIQ noise
+//! injection / frozen), across worker-thread counts, plus the eval step
+//! and the host freeze. The JSON report records median/p10/p90 per cell
+//! and the measured thread-scaling ratio of the noise-mode step.
+
+use uniq::coordinator::FreezeQuant;
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::data::Batcher;
+use uniq::infer::synthetic;
+use uniq::runtime::state::StepConfig;
+use uniq::runtime::Backend;
+use uniq::train::NativeBackend;
+use uniq::util::bench::Bench;
+use uniq::util::json::{num, obj, s, Json};
+
+fn main() {
+    let mut b = Bench::quick("train_native");
+    b.min_time = std::time::Duration::from_millis(400);
+
+    let (m, state) = synthetic::mlp(256, 10, 7);
+    let data = SynthDataset::generate(SynthConfig {
+        n: 64,
+        ..Default::default()
+    });
+    let batch = Batcher::eval_batches(&data, m.batch).remove(0);
+    let n_layers = m.n_qlayers();
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 8);
+
+    let cfg_for = |mode: f32| StepConfig {
+        lr: 1e-3,
+        k_w: 16.0,
+        k_a: 256.0,
+        aq: 0.0,
+        seed: 1,
+        mode_vec: vec![mode; n_layers],
+        qthresh: None,
+    };
+
+    let mut jcells = Vec::new();
+    let mut noise_medians = Vec::new();
+    // single-core hosts would otherwise bench threads=1 twice
+    let thread_counts: Vec<usize> =
+        if max_threads > 1 { vec![1, max_threads] } else { vec![1] };
+    for threads in thread_counts {
+        let backend = NativeBackend::new(&m).unwrap().with_threads(threads);
+        for (label, mode) in
+            [("fp", 0.0f32), ("noise", 1.0), ("frozen", 2.0)]
+        {
+            let cfg = cfg_for(mode);
+            let mut st = state.clone();
+            let stats = b.run(
+                &format!("mlp/train/{label}/t{threads}"),
+                || {
+                    backend
+                        .train_step(&m, &mut st, &batch.x, &batch.y, &cfg)
+                        .expect("train step")
+                },
+            );
+            if label == "noise" {
+                noise_medians.push((threads, stats.median_ns));
+            }
+            jcells.push(obj(vec![
+                ("mode", s(label)),
+                ("threads", num(threads as f64)),
+                ("stats", stats.to_json()),
+            ]));
+        }
+        let st = state.clone();
+        b.run(&format!("mlp/eval/t{threads}"), || {
+            backend
+                .eval_step(&m, &st, &batch.x, &batch.y, 256.0, 1.0)
+                .expect("eval step")
+        });
+        if threads == 1 {
+            // host freeze of the biggest layer (backend-independent path)
+            let w = state.params[0].clone();
+            b.run("mlp/freeze_biggest_layer", || {
+                let q = FreezeQuant::KQuantileGauss.fit(&w, 16);
+                let mut wq = w.clone();
+                q.quantize(&mut wq);
+                wq
+            });
+        }
+    }
+
+    let speedup = match (noise_medians.first(), noise_medians.last()) {
+        (Some((1, t1)), Some((tn, tns))) if *tn > 1 => {
+            Some((*tn, t1 / tns))
+        }
+        _ => None,
+    };
+    if let Some((tn, sp)) = speedup {
+        println!("noise-step thread scaling: {sp:.2}x at {tn} threads");
+    }
+
+    let report = obj(vec![
+        ("bench", s("train_native")),
+        ("model", s("mlp")),
+        ("batch", num(batch.n as f64)),
+        ("bits_w", num(4.0)),
+        ("cells", Json::Arr(jcells)),
+        (
+            "noise_step_thread_speedup",
+            speedup.map(|(_, sp)| num(sp)).unwrap_or(Json::Null),
+        ),
+        ("all_runs", b.report_json()),
+        (
+            "note",
+            s("median_ns per native train/eval step; modes are the \
+               schedule's LayerMode codes"),
+        ),
+    ]);
+    std::fs::write("BENCH_train.json", report.to_string())
+        .expect("writing BENCH_train.json");
+    println!("[written] BENCH_train.json");
+    b.finish();
+}

@@ -52,11 +52,7 @@ fn main() {
             t.step(&batch.x, &batch.y, &cfg).expect("step")
         });
         b.run(&format!("{variant}/eval_step_batch"), || {
-            let inputs = t
-                .state
-                .eval_inputs(&t.manifest, &batch.x, &batch.y, 256.0, 1.0)
-                .unwrap();
-            t.eval_exe.run(&inputs).expect("eval")
+            t.eval_batch(&batch.x, &batch.y, 256.0, 1.0).expect("eval")
         });
         // coordinator-side marshalling only (no XLA execution)
         b.run(&format!("{variant}/literal_marshalling"), || {

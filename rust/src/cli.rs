@@ -76,7 +76,13 @@ COMMANDS:
              [--steps N --stages S --iters I --bits-w B --bits-a B
               --lr F --policy gradual|simultaneous|fp --quantizer
               gauss|empirical|kmeans|uniform --train-size N --val-size N
-              --save ckpt.bin --metrics out.csv --data synth|DIR]
+              --save ckpt.bin --metrics out.csv --data synth|DIR
+              --export DIR]    backend auto-selects: PJRT when the AOT
+                               artifacts compile, the pure-Rust native
+                               engine otherwise (mlp family; synthetic
+                               manifest when no artifacts exist);
+                               --export freezes into a LUT model that
+                               `uniq infer --frozen DIR` serves
   eval       --model M --ckpt C [--bits-a B]   evaluate a checkpoint
   quantize   --model M --ckpt C --out O --bits-w B [--quantizer Q]
                                host-side exact quantization of weights

@@ -238,6 +238,58 @@ mod tests {
     }
 
     #[test]
+    fn stages_exceeding_layers_clamp_to_one_layer_per_stage() {
+        // 3 layers, 10 requested stages: clamped to 3; every phase noises
+        // exactly one layer and freezes it at phase end, both iterations
+        let s = Schedule::new(3, 10, 2, SchedulePolicy::Gradual);
+        assert_eq!(s.stages, 3);
+        assert_eq!(s.n_phases(), 6);
+        for phase in 0..s.n_phases() {
+            let modes = s.modes(phase);
+            assert_eq!(modes.len(), 3);
+            let stage = phase % 3;
+            assert_eq!(modes[stage], LayerMode::Noise);
+            assert_eq!(s.freeze_after(phase), vec![stage]);
+        }
+    }
+
+    #[test]
+    fn single_layer_schedule_is_total() {
+        let s = Schedule::new(1, 5, 3, SchedulePolicy::Gradual);
+        assert_eq!(s.stages, 1);
+        assert_eq!(s.n_phases(), 3);
+        for phase in 0..3 {
+            assert_eq!(s.modes(phase), vec![LayerMode::Noise]);
+            assert_eq!(s.freeze_after(phase), vec![0]);
+        }
+    }
+
+    #[test]
+    fn later_iterations_freeze_every_block_but_the_noised_one() {
+        // from iteration 2 on, downstream blocks were quantized at the
+        // end of the previous iteration: no full-precision layer remains
+        let s = Schedule::new(8, 4, 3, SchedulePolicy::Gradual);
+        for iter in 1..3 {
+            for stage in 0..4 {
+                let modes = s.modes(iter * 4 + stage);
+                for (l, &m) in modes.iter().enumerate() {
+                    let want = if s.block(stage).contains(&l) {
+                        LayerMode::Noise
+                    } else {
+                        LayerMode::Frozen
+                    };
+                    assert_eq!(m, want, "iter {iter} stage {stage} layer {l}");
+                }
+            }
+        }
+        // iteration 1 still leaves downstream blocks at full precision
+        let m = s.modes(1); // iter 0, stage 1
+        assert_eq!(m[0], LayerMode::Frozen);
+        assert_eq!(m[2], LayerMode::Noise);
+        assert_eq!(m[7], LayerMode::FullPrecision);
+    }
+
+    #[test]
     fn full_precision_policy_never_freezes() {
         let s = Schedule::new(5, 5, 2, SchedulePolicy::FullPrecision);
         assert_eq!(s.n_phases(), 1);

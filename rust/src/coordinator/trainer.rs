@@ -1,22 +1,26 @@
-//! Trainer: binds engine + artifacts + data + schedule into the paper's
-//! training procedure, with host-side exact quantization on freeze.
+//! Trainer: binds a [`Backend`] + artifacts + data + schedule into the
+//! paper's training procedure, with host-side exact quantization on
+//! freeze. The backend boundary (`runtime::Backend`) keeps the event
+//! loop engine-agnostic: PJRT when the AOT executables compile, the
+//! pure-Rust `train::NativeBackend` otherwise.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::metrics::{Metrics, StepMetric};
 use super::schedule::{Schedule, SchedulePolicy};
+use crate::data::batcher::Prefetcher;
 use crate::data::{Batcher, Dataset};
 use crate::quant::{
     KMeans, KQuantileEmpirical, KQuantileGauss, Quantizer, QuantizerFit,
     Uniform,
 };
-use crate::runtime::engine::scalar_f32;
 use crate::runtime::state::StepConfig;
-use crate::runtime::{Engine, Executable, Manifest, ModelState};
+use crate::runtime::{Backend, Engine, Manifest, ModelState, PjrtBackend};
 use crate::stats::mean_std;
+use crate::train::NativeBackend;
 
 /// Which exact quantizer freezes layers (and supplies generic-noise
 /// thresholds for the Table 3 ablation).
@@ -133,35 +137,67 @@ impl Default for TrainConfig {
 
 pub struct Trainer {
     pub manifest: Manifest,
-    pub train_exe: Executable,
-    pub eval_exe: Executable,
+    pub backend: Box<dyn Backend>,
     pub state: ModelState,
+    /// pristine copy for `reset_state` (experiment cells reuse one
+    /// trainer — backend construction/compiles are the expensive part)
+    init_state: ModelState,
     pub metrics: Metrics,
-    pub dir: PathBuf,
 }
 
 impl Trainer {
-    /// Load + compile an artifact directory.
+    /// Load + compile an artifact directory on the PJRT backend.
     pub fn new(engine: &Engine, dir: &Path) -> Result<Trainer> {
         let manifest = Manifest::load(dir)
             .with_context(|| format!("loading manifest in {dir:?}"))?;
-        let train_exe = engine.compile_file(&dir.join("train_step.hlo.txt"))?;
-        let eval_exe = engine.compile_file(&dir.join("eval_step.hlo.txt"))?;
+        let backend = PjrtBackend::new(engine, dir)?;
         let state = ModelState::load_init(&manifest, dir)?;
-        Ok(Trainer {
-            manifest,
-            train_exe,
-            eval_exe,
-            state,
-            metrics: Metrics::default(),
-            dir: dir.to_path_buf(),
-        })
+        Ok(Trainer::with_backend(manifest, state, Box::new(backend)))
     }
 
-    /// Reset to the artifact's initial state (reuse the compiled
-    /// executables across experiment cells — XLA compiles are expensive).
+    /// Load an artifact directory on the native (pure-Rust) backend —
+    /// no PJRT anywhere.
+    pub fn native(dir: &Path) -> Result<Trainer> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest in {dir:?}"))?;
+        let backend = NativeBackend::new(&manifest)?;
+        let state = ModelState::load_init(&manifest, dir)?;
+        Ok(Trainer::with_backend(manifest, state, Box::new(backend)))
+    }
+
+    /// Native backend over a synthetic (randomly initialised) manifest —
+    /// training without AOT artifacts, mirroring `infer::synthetic`.
+    pub fn native_synthetic(
+        model: &str,
+        width: usize,
+        classes: usize,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let (manifest, state) =
+            crate::infer::synthetic::model(model, width, classes, seed)?;
+        let backend = NativeBackend::new(&manifest)?;
+        Ok(Trainer::with_backend(manifest, state, Box::new(backend)))
+    }
+
+    /// Assemble from parts (tests, custom backends).
+    pub fn with_backend(
+        manifest: Manifest,
+        state: ModelState,
+        backend: Box<dyn Backend>,
+    ) -> Trainer {
+        Trainer {
+            manifest,
+            backend,
+            init_state: state.clone(),
+            state,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Reset to the initial state (reuse the constructed backend across
+    /// experiment cells — XLA compiles are expensive).
     pub fn reset_state(&mut self) -> Result<()> {
-        self.state = ModelState::load_init(&self.manifest, &self.dir)?;
+        self.state = self.init_state.clone();
         self.metrics = Metrics::default();
         Ok(())
     }
@@ -173,9 +209,19 @@ impl Trainer {
         y: &[i32],
         cfg: &StepConfig,
     ) -> Result<(f32, f32)> {
-        let inputs = self.state.train_inputs(&self.manifest, x, y, cfg)?;
-        let outputs = self.train_exe.run(&inputs)?;
-        self.state.absorb_train_outputs(&self.manifest, outputs)
+        self.backend
+            .train_step(&self.manifest, &mut self.state, x, y, cfg)
+    }
+
+    /// One eval batch; returns (loss, acc).
+    pub fn eval_batch(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        k_a: f32,
+        aq: f32,
+    ) -> Result<(f32, f32)> {
+        self.backend.eval_step(&self.manifest, &self.state, x, y, k_a, aq)
     }
 
     /// Evaluate over a dataset; returns (mean loss, accuracy).
@@ -192,11 +238,9 @@ impl Trainer {
         let mut loss = 0.0;
         let mut acc = 0.0;
         for b in &batches {
-            let inputs =
-                self.state.eval_inputs(&self.manifest, &b.x, &b.y, k_a, aq)?;
-            let out = self.eval_exe.run(&inputs)?;
-            loss += scalar_f32(&out[0])?;
-            acc += scalar_f32(&out[1])?;
+            let (l, a) = self.eval_batch(&b.x, &b.y, k_a, aq)?;
+            loss += l;
+            acc += a;
         }
         let n = batches.len() as f32;
         Ok((loss / n, acc / n))
@@ -239,17 +283,20 @@ impl Trainer {
                 .uniformized_thresholds(k_w as usize, self.manifest.kmax)
         });
 
-        let mut batcher = Batcher::new(
+        // double-buffered prefetch: augmentation for batch t+1 runs on a
+        // background thread while the backend executes batch t
+        let batcher = Batcher::new(
             train.clone(),
             self.manifest.batch,
             true,
             cfg.seed,
         );
+        let prefetch = Prefetcher::new(batcher, 2);
 
         for phase in 0..schedule.n_phases() {
             let mode_vec = schedule.mode_vec(phase);
             for s in 0..cfg.steps_per_phase {
-                let b = batcher.next_batch();
+                let b = prefetch.next_batch();
                 let step_cfg = StepConfig {
                     lr: cfg.lr,
                     k_w,

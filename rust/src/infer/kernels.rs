@@ -329,14 +329,26 @@ pub fn global_avg_pool(
     out
 }
 
+/// Index of the largest finite-comparable logit, first-max on ties.
+///
+/// NaN entries are skipped: with the naive `v > row[best]` scan a
+/// NaN-poisoned row silently predicted class 0 (every comparison against
+/// NaN is false), turning a numerical fault into a confident-looking
+/// label. Mirrors the `Quantizer::bin` totality hardening: an all-NaN
+/// (or empty) row is DEFINED to return 0 — the caller sees the same
+/// class it used to, but rows with any real logit now ignore the NaNs.
 pub fn argmax(row: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if v <= row[b] => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -534,5 +546,20 @@ mod tests {
 
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[f32::NAN, 0.9, 0.3]), 1);
+    }
+
+    #[test]
+    fn argmax_skips_nans_and_defines_the_all_nan_row() {
+        assert_eq!(argmax(&[0.5, 0.5, 0.2]), 0, "first max on ties");
+        // a poisoned entry no longer hijacks the prediction
+        assert_eq!(argmax(&[f32::NAN, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.3]), 2);
+        assert_eq!(argmax(&[0.1, f32::NAN, -0.3]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NEG_INFINITY, 1.0]), 2);
+        // -inf is a real (comparable) logit, NaN is not
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]), 0);
+        // defined results for degenerate rows: class 0
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
     }
 }

@@ -28,20 +28,23 @@ impl PackedBits {
         b
     }
 
-    /// Pack `vals` at `bits` per value. Values must fit in `bits`.
+    /// Pack `vals` at `bits` per value. Out-of-range values are masked
+    /// to their low `bits` — previously they were only `debug_assert`ed,
+    /// so in release builds the high bits of the shifted value OR-ed
+    /// into the *neighbouring index's* bits, corrupting a different
+    /// weight than the bad one. Masking keeps the neighbours intact in
+    /// every build (the codebook export guarantees in-range indices;
+    /// this is defence for direct callers).
     pub fn pack(vals: &[u8], bits: u8) -> PackedBits {
         assert!((1..=8).contains(&bits), "bits {bits} out of range");
+        let mask = ((1u16 << bits) - 1) as u8;
         let nbytes = (vals.len() * bits as usize).div_ceil(8);
         let mut data = vec![0u8; nbytes];
         for (i, &v) in vals.iter().enumerate() {
-            debug_assert!(
-                (v as u16) < (1u16 << bits),
-                "value {v} does not fit in {bits} bits"
-            );
             let bitpos = i * bits as usize;
             let byte = bitpos / 8;
             let off = bitpos % 8;
-            let w = (v as u16) << off;
+            let w = ((v & mask) as u16) << off;
             data[byte] |= (w & 0xff) as u8;
             if off + bits as usize > 8 {
                 data[byte + 1] |= (w >> 8) as u8;
@@ -126,6 +129,24 @@ mod tests {
         assert_eq!(p.get(0), 1);
         assert_eq!(p.get(1), 3);
         assert_eq!(p.get(2), 7);
+    }
+
+    #[test]
+    fn out_of_range_values_cannot_corrupt_neighbours() {
+        // k-boundary probes at the byte-straddling widths: k = 2^bits is
+        // the first out-of-range value; before the masking fix its high
+        // bit OR-ed into the next index's byte in release builds
+        for bits in [3u8, 5] {
+            let k = 1u8 << bits;
+            let good = k - 1;
+            let p = PackedBits::pack(&[good, 0, good, good], bits);
+            assert_eq!(p.unpack(), vec![good, 0, good, good], "bits {bits}");
+            let p = PackedBits::pack(&[good, k, good, 0xff], bits);
+            assert_eq!(p.get(0), good, "bits {bits}: left neighbour");
+            assert_eq!(p.get(1), 0, "bits {bits}: k masks to 0");
+            assert_eq!(p.get(2), good, "bits {bits}: right neighbour");
+            assert_eq!(p.get(3), good, "bits {bits}: 0xff masks to max");
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{anyhow, Result};
 
 use super::codebook::FrozenModel;
 use super::graph::{Graph, KernelMode, PreparedWeights};
-use crate::util::bench::fmt_ns;
+use crate::util::bench::{fmt_ns, percentile};
 use crate::util::json::{num, obj, s, Json};
 
 /// Model + graph + decoded weights, shared read-only across workers.
@@ -279,12 +279,10 @@ impl ServeStats {
     fn from_acc(acc: &mut StatsAcc) -> ServeStats {
         let mut lat = std::mem::take(&mut acc.latencies_ns);
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let q = |p: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
-            }
-            lat[((lat.len() - 1) as f64 * p) as usize] / 1e6
-        };
+        // interpolated rank: the old floored rank understated p90/p99 —
+        // at 10 samples the old p99 was sample 8 of 9, a whole sample
+        // below the max
+        let q = |p: f64| percentile(&lat, p) / 1e6;
         let busy_s = match (acc.first, acc.last) {
             (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
             _ => 0.0,
@@ -391,6 +389,37 @@ mod tests {
         assert!(stats.batches >= 3, "max_batch 8 => at least 3 batches");
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.p50_ms <= stats.p99_ms);
+    }
+
+    #[test]
+    fn percentiles_interpolate_between_ranks() {
+        // 10 known latencies, 1..10 ms: numpy-convention percentiles.
+        // The old floored rank reported p90 = 9.0 and p99 = 9.0,
+        // understating the tail by up to a whole sample.
+        let mut acc = StatsAcc {
+            latencies_ns: (1..=10).map(|i| i as f64 * 1e6).collect(),
+            batch_sizes: vec![10],
+            images: 10,
+            first: None,
+            last: None,
+        };
+        let s = ServeStats::from_acc(&mut acc);
+        assert!((s.p50_ms - 5.5).abs() < 1e-9, "p50 {}", s.p50_ms);
+        assert!((s.p90_ms - 9.1).abs() < 1e-9, "p90 {}", s.p90_ms);
+        assert!((s.p99_ms - 9.91).abs() < 1e-9, "p99 {}", s.p99_ms);
+        assert_eq!(s.max_ms, 10.0);
+        assert_eq!(s.requests, 10);
+
+        // a single sample is every percentile
+        let mut one = StatsAcc {
+            latencies_ns: vec![2e6],
+            batch_sizes: vec![1],
+            images: 1,
+            first: None,
+            last: None,
+        };
+        let s = ServeStats::from_acc(&mut one);
+        assert_eq!((s.p50_ms, s.p90_ms, s.p99_ms), (2.0, 2.0, 2.0));
     }
 
     #[test]

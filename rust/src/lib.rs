@@ -10,6 +10,9 @@
 //! * `infer`: native LUT inference engine — frozen codebook models
 //!   (bit-packed indices + k-entry codebooks) executed and served
 //!   host-side with batched workers; no PJRT on the request path.
+//! * `train`: native training backend — pure-Rust forward/backward with
+//!   the UNIQ noise transform behind the `runtime::Backend` trait, used
+//!   automatically when the PJRT backend is unavailable.
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 
@@ -22,4 +25,5 @@ pub mod infer;
 pub mod quant;
 pub mod runtime;
 pub mod stats;
+pub mod train;
 pub mod util;

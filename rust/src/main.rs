@@ -117,11 +117,82 @@ fn cmd_info(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Build a trainer for `model`: PJRT when the artifacts compile, the
+/// native backend otherwise (artifact init.bin, or a synthetic manifest
+/// when no artifacts exist at all) — `uniq train` works on hosts where
+/// the vendored xla backend reports itself unavailable.
+fn make_trainer(cli: &Cli, requested: Option<&str>) -> Result<Trainer> {
+    let model = requested.unwrap_or("resnet8");
+    let dir = artifacts_dir(cli).join(model);
+    if dir.join("manifest.json").exists() {
+        match Engine::cpu().and_then(|engine| Trainer::new(&engine, &dir)) {
+            Ok(t) => {
+                println!("backend: pjrt ({})", dir.display());
+                return Ok(t);
+            }
+            Err(e) => println!(
+                "pjrt backend unavailable ({e:#}); falling back to native"
+            ),
+        }
+        let t = Trainer::native(&dir)?;
+        println!("backend: native ({})", dir.display());
+        return Ok(t);
+    }
+    // no artifacts anywhere: only the mlp family has a native backward,
+    // so an unspecified model defaults to it instead of dying on the
+    // conv-family rejection
+    let model = if requested.is_none() { "mlp" } else { model };
+    println!(
+        "note: {} not found; using a synthetic {model} manifest",
+        dir.join("manifest.json").display()
+    );
+    let default_width = if model == "resnet8" { 8 } else { 16 };
+    let t = Trainer::native_synthetic(
+        model,
+        cli.get_usize("width", default_width),
+        cli.get_usize("classes", 10),
+        cli.get_usize("seed", 7) as u64,
+    )?;
+    println!("backend: native (synthetic init)");
+    Ok(t)
+}
+
+/// Post-training frozen export: coordinator state → `infer::codebook`
+/// LUT model on disk, with an inline LUT vs dequant-f32 parity probe —
+/// `uniq train --export DIR` then `uniq infer --frozen DIR` closes the
+/// train → freeze → serve loop in one process chain.
+fn export_frozen(cli: &Cli, t: &Trainer, dir: &str) -> Result<()> {
+    let fq = parse_quantizer(cli.get("quantizer").unwrap_or("gauss"))?;
+    let bits = cli.get_u32("bits-w", 4);
+    let frozen = FrozenModel::export(&t.manifest, &t.state, fq, bits)?;
+    frozen.save(Path::new(dir))?;
+    let sm = ServeModel::new(frozen)?;
+    let probe = SynthDataset::generate(SynthConfig {
+        classes: sm.model.classes,
+        n: 8,
+        ..Default::default()
+    });
+    let b = Batcher::eval_batches(&probe, 8).remove(0);
+    let lut = sm
+        .graph
+        .forward(&sm.model, &sm.weights, &b.x, b.n, KernelMode::Lut)?;
+    let refr = sm
+        .graph
+        .forward(&sm.model, &sm.weights, &b.x, b.n, KernelMode::DequantF32)?;
+    let maxd = lut
+        .iter()
+        .zip(&refr)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "frozen model -> {dir} ({bits}-bit codebooks, LUT vs dequant-f32 \
+         max |Δ| = {maxd:.2e}); serve it with `uniq infer --frozen {dir}`"
+    );
+    Ok(())
+}
+
 fn cmd_train(cli: &Cli) -> Result<()> {
-    let model = cli.get("model").unwrap_or("resnet8");
-    let engine = Engine::cpu()?;
-    println!("compiling {model}...");
-    let mut t = Trainer::new(&engine, &artifacts_dir(cli).join(model))?;
+    let mut t = make_trainer(cli, cli.get("model"))?;
     if let Some(ckpt) = cli.get("ckpt") {
         t.state = ModelState::load(Path::new(ckpt))?;
         println!("resumed from {ckpt} (step {})", t.state.step);
@@ -176,13 +247,25 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         t.metrics.save_csv(Path::new(path))?;
         println!("metrics -> {path}");
     }
+    if let Some(dir) = cli.get("export") {
+        export_frozen(cli, &t, dir)?;
+    }
     Ok(())
 }
 
 fn cmd_eval(cli: &Cli) -> Result<()> {
+    // the synthetic-manifest fallback is for training from scratch; an
+    // eval of random init would print plausible-looking nonsense
     let model = cli.get("model").unwrap_or("resnet8");
-    let engine = Engine::cpu()?;
-    let mut t = Trainer::new(&engine, &artifacts_dir(cli).join(model))?;
+    let dir = artifacts_dir(cli).join(model);
+    if !dir.join("manifest.json").exists() && cli.get("ckpt").is_none() {
+        return Err(anyhow!(
+            "eval needs {} or --ckpt (a synthetic random init has \
+             nothing meaningful to evaluate)",
+            dir.join("manifest.json").display()
+        ));
+    }
+    let mut t = make_trainer(cli, cli.get("model"))?;
     if let Some(ckpt) = cli.get("ckpt") {
         t.state = ModelState::load(Path::new(ckpt))?;
     }

@@ -1,0 +1,104 @@
+//! The backend boundary: one trait, two engines.
+//!
+//! The coordinator's event loop (schedule, freeze, metrics, checkpoints)
+//! is backend-agnostic: a [`Backend`] consumes the host-resident
+//! [`ModelState`] plus one batch and returns `(loss, acc)`, mutating the
+//! state in place. Two implementations exist:
+//!
+//! * [`PjrtBackend`] — the original AOT path: compiled
+//!   `train_step`/`eval_step` HLO executables run through the PJRT C API,
+//!   with the literal marshalling defined by the manifest ordering.
+//! * [`crate::train::NativeBackend`] — a pure-Rust forward/backward
+//!   engine for the manifest architectures; no PJRT anywhere, so the
+//!   train → freeze → serve loop closes on hosts where the vendored xla
+//!   backend reports itself unavailable.
+//!
+//! `uniq train` prefers PJRT and falls back to native automatically; the
+//! host-side freeze path (`Trainer::freeze_layer`) operates on
+//! `ModelState` directly and is therefore byte-identical across backends
+//! (asserted by `rust/tests/train_native.rs`).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::engine::{scalar_f32, Engine, Executable};
+use super::manifest::Manifest;
+use super::state::{ModelState, StepConfig};
+
+/// A training/eval engine the coordinator can drive.
+pub trait Backend {
+    /// Short backend id for logs ("pjrt" | "native").
+    fn name(&self) -> &'static str;
+
+    /// One SGD step over `(x, y)`; updates `state` (params, momenta, BN
+    /// state, step counter) in place and returns `(loss, acc)`.
+    fn train_step(
+        &self,
+        m: &Manifest,
+        state: &mut ModelState,
+        x: &[f32],
+        y: &[i32],
+        cfg: &StepConfig,
+    ) -> Result<(f32, f32)>;
+
+    /// One eval batch; returns `(loss, acc)` without touching `state`.
+    fn eval_step(
+        &self,
+        m: &Manifest,
+        state: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        k_a: f32,
+        aq: f32,
+    ) -> Result<(f32, f32)>;
+}
+
+/// The AOT/PJRT path: compiled step executables + manifest marshalling.
+pub struct PjrtBackend {
+    pub train_exe: Executable,
+    pub eval_exe: Executable,
+}
+
+impl PjrtBackend {
+    /// Compile the artifact directory's step functions.
+    pub fn new(engine: &Engine, dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            train_exe: engine.compile_file(&dir.join("train_step.hlo.txt"))?,
+            eval_exe: engine.compile_file(&dir.join("eval_step.hlo.txt"))?,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_step(
+        &self,
+        m: &Manifest,
+        state: &mut ModelState,
+        x: &[f32],
+        y: &[i32],
+        cfg: &StepConfig,
+    ) -> Result<(f32, f32)> {
+        let inputs = state.train_inputs(m, x, y, cfg)?;
+        let outputs = self.train_exe.run(&inputs)?;
+        state.absorb_train_outputs(m, outputs)
+    }
+
+    fn eval_step(
+        &self,
+        m: &Manifest,
+        state: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        k_a: f32,
+        aq: f32,
+    ) -> Result<(f32, f32)> {
+        let inputs = state.eval_inputs(m, x, y, k_a, aq)?;
+        let out = self.eval_exe.run(&inputs)?;
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+}

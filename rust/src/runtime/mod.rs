@@ -5,10 +5,12 @@
 //! describing flat input/output orderings) is produced by
 //! `python/compile/aot.py` — python never runs at coordinator time.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod state;
 
+pub use backend::{Backend, PjrtBackend};
 pub use engine::{Engine, Executable};
 pub use manifest::{IoSpec, Manifest, ParamMeta};
 pub use state::ModelState;

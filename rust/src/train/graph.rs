@@ -1,0 +1,134 @@
+//! Trainable forward graph reconstructed from the AOT manifest.
+//!
+//! Same naming contract as `infer::graph` (the python `Builder`'s
+//! construction order IS the manifest order): `fc*` qlayers form the MLP
+//! family. Only the MLP family has a native backward today — conv nets
+//! (`conv*`/`ds*`/`g*b*`) still train through PJRT; their backward via
+//! the existing im2col kernels is tracked in ROADMAP "Open items".
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Manifest;
+
+/// One trainable dense layer: `z = a · w + b`.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    /// quantizable-layer index (== position in `manifest.qlayers`)
+    pub qidx: usize,
+    /// index of the weight tensor in `manifest.params` / `state.params`
+    pub w: usize,
+    /// index of the bias tensor, when the layer has one
+    pub b: Option<usize>,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// A trainable network: flatten, then dense layers with ReLU (+ the
+/// frozen-layer activation fake-quant) between them, logits out of the
+/// last — the shape of `python/compile/mlp.py`.
+#[derive(Debug, Clone)]
+pub struct TrainGraph {
+    pub layers: Vec<DenseLayer>,
+    /// flattened input features (product of the manifest image shape)
+    pub d_in: usize,
+    pub classes: usize,
+}
+
+impl TrainGraph {
+    /// Rebuild the trainable graph from qlayer/param names.
+    pub fn from_manifest(m: &Manifest) -> Result<TrainGraph> {
+        if m.qlayers.is_empty()
+            || !m.qlayers.iter().all(|n| n.starts_with("fc"))
+        {
+            return Err(anyhow!(
+                "native training supports the mlp family only (qlayers \
+                 {:?}); conv backward is deferred to the PJRT backend — \
+                 see ROADMAP.md open items",
+                m.qlayers
+            ));
+        }
+        let d_in = m.image.iter().product::<usize>().max(1);
+        let mut layers = Vec::with_capacity(m.qlayers.len());
+        let mut prev_out = d_in;
+        for (qidx, name) in m.qlayers.iter().enumerate() {
+            let w = m
+                .params
+                .iter()
+                .position(|p| p.qlayer == Some(qidx))
+                .ok_or_else(|| anyhow!("no weight param for qlayer {name}"))?;
+            let shape = &m.params[w].shape;
+            if shape.len() != 2 {
+                return Err(anyhow!(
+                    "{name}: weight shape {shape:?} is not [cin, cout]"
+                ));
+            }
+            let (cin, cout) = (shape[0], shape[1]);
+            if cin != prev_out {
+                return Err(anyhow!(
+                    "{name}: expects {cin} inputs but upstream provides \
+                     {prev_out}"
+                ));
+            }
+            let b = m
+                .params
+                .iter()
+                .position(|p| p.name == format!("{name}/b"));
+            layers.push(DenseLayer { qidx, w, b, cin, cout });
+            prev_out = cout;
+        }
+        if prev_out != m.classes {
+            return Err(anyhow!(
+                "last layer emits {prev_out} logits, manifest declares {} \
+                 classes",
+                m.classes
+            ));
+        }
+        Ok(TrainGraph { layers, d_in, classes: m.classes })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Trainable parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.cin * l.cout + if l.b.is_some() { l.cout } else { 0 })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::synthetic;
+
+    #[test]
+    fn mlp_manifest_builds_a_chain() {
+        let (m, _) = synthetic::mlp(64, 10, 1);
+        let g = TrainGraph::from_manifest(&m).unwrap();
+        assert_eq!(g.n_layers(), 3);
+        assert_eq!(g.d_in, 32 * 32 * 3);
+        assert_eq!(g.classes, 10);
+        assert_eq!(g.layers[0].cin, 3072);
+        assert_eq!(g.layers[0].cout, 64);
+        assert_eq!(g.layers[2].cout, 10);
+        for l in &g.layers {
+            assert!(l.b.is_some(), "dense layers carry biases");
+        }
+        assert_eq!(g.n_params(), 3072 * 64 + 64 + 64 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn conv_families_are_rejected_with_guidance() {
+        for name in ["resnet8", "mobilenet_mini"] {
+            let (m, _) = synthetic::model(name, 8, 10, 2).unwrap();
+            let err = TrainGraph::from_manifest(&m).unwrap_err();
+            assert!(
+                err.to_string().contains("mlp family"),
+                "{name}: {err}"
+            );
+        }
+    }
+}

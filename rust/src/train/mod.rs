@@ -1,0 +1,33 @@
+//! Native training backend — the paper's training procedure without PJRT.
+//!
+//! The AOT path (python/compile → HLO → `runtime::PjrtBackend`) is the
+//! reference engine, but the vendored xla backend reports itself
+//! unavailable on hosts without real PJRT bindings, which used to kill
+//! `uniq train` before the first step. This module closes the
+//! train → freeze → serve loop natively:
+//!
+//! * `ops` — the numeric core: dense forward/backward, softmax-CE, the
+//!   UNIQ uniformize → uniform-noise → de-uniformize transform
+//!   (quantile + generic-threshold configs) with a generalized-STE
+//!   backward (Liu et al. 2021), the k-quantile activation fake-quant
+//!   (straight-through, like the compile kernel's `custom_vjp`), and the
+//!   SGD/momentum/weight-decay update of `compile/model.py`.
+//! * `graph` — rebuilds the trainable network from the manifest's
+//!   qlayer/param names (`fc*` → MLP; conv backward is deferred, see
+//!   ROADMAP).
+//! * `native` — [`NativeBackend`]: implements `runtime::Backend`, shards
+//!   the batch across worker threads, and plugs into the unchanged
+//!   coordinator (schedule, host freeze, metrics). Frozen states flow
+//!   straight into `infer::codebook::FrozenModel::export`, so
+//!   `uniq train → uniq infer/serve` works in one process.
+//!
+//! Validation: `python/tools/validate_train_mirror.py` pins every piece
+//! to jax autodiff through the real compile models, the same way
+//! `validate_infer_mirror.py` pins the inference engine.
+
+pub mod graph;
+pub mod native;
+pub mod ops;
+
+pub use graph::TrainGraph;
+pub use native::NativeBackend;

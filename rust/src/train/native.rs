@@ -1,0 +1,547 @@
+//! `NativeBackend` — the pure-Rust training engine.
+//!
+//! One train step = noise-inject (per the schedule's `mode_vec`) →
+//! forward → softmax-CE → backward (generalized STE through the noise
+//! transform, straight-through through the activation fake-quant) → SGD
+//! with momentum/weight-decay/frozen masking. The math is the same
+//! program `python/compile/model.py` lowers for PJRT, minus autodiff:
+//! the backward is hand-derived and pinned to jax by
+//! `python/tools/validate_train_mirror.py`.
+//!
+//! Threading: the batch dimension shards across worker threads for the
+//! forward/backward GEMMs (plain `std::thread::scope`, the same
+//! no-runtime philosophy as `data::Batcher`'s prefetcher). Per-row
+//! results are thread-count invariant; the weight-gradient reduction
+//! sums shard partials in shard order, so an f32 step is deterministic
+//! for a fixed thread count.
+
+use anyhow::{anyhow, Result};
+
+use super::graph::TrainGraph;
+use super::ops;
+use crate::infer::kernels;
+use crate::runtime::backend::Backend;
+use crate::runtime::state::StepConfig;
+use crate::runtime::{Manifest, ModelState};
+use crate::util::rng::Rng;
+
+/// Pure-Rust forward/backward engine for the manifest architectures.
+pub struct NativeBackend {
+    graph: TrainGraph,
+    /// "quantile" (paper default) or "generic" (Table 3 ablation)
+    noise_cfg: String,
+    /// worker threads for the batch-sharded GEMMs
+    pub threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(m: &Manifest) -> Result<NativeBackend> {
+        let graph = TrainGraph::from_manifest(m)?;
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 8);
+        Ok(NativeBackend { graph, noise_cfg: m.noise_cfg.clone(), threads })
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn graph(&self) -> &TrainGraph {
+        &self.graph
+    }
+
+    /// Guard against checkpoint/manifest mismatches: the kernels index
+    /// raw slices, so a wrong-width state must surface as an error, not
+    /// as silently-wrong math or a slice-bounds abort (the PJRT path
+    /// gets this for free from the literal shape checks).
+    fn check_state(
+        &self,
+        state: &ModelState,
+        momenta: bool,
+    ) -> Result<()> {
+        for l in &self.graph.layers {
+            let want = l.cin * l.cout;
+            if state.params.get(l.w).map(Vec::len) != Some(want) {
+                return Err(anyhow!(
+                    "qlayer {} weights: state has {:?} floats, graph \
+                     expects {want} — checkpoint/manifest mismatch?",
+                    l.qidx,
+                    state.params.get(l.w).map(Vec::len)
+                ));
+            }
+            if momenta
+                && state.momenta.get(l.w).map(Vec::len) != Some(want)
+            {
+                return Err(anyhow!(
+                    "qlayer {} momenta: wrong length for {want} weights",
+                    l.qidx
+                ));
+            }
+            if let Some(bi) = l.b {
+                if state.params.get(bi).map(Vec::len) != Some(l.cout) {
+                    return Err(anyhow!(
+                        "qlayer {} bias: state has {:?} floats, graph \
+                         expects {}",
+                        l.qidx,
+                        state.params.get(bi).map(Vec::len),
+                        l.cout
+                    ));
+                }
+                if momenta
+                    && state.momenta.get(bi).map(Vec::len) != Some(l.cout)
+                {
+                    return Err(anyhow!(
+                        "qlayer {} bias momenta: wrong length for {} \
+                         biases",
+                        l.qidx,
+                        l.cout
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Labels index `softmax_ce`'s logit rows directly; a corrupt dataset
+/// (e.g. CIFAR-100 bins against a 10-class manifest) must surface as an
+/// error, not a slice-bounds abort mid-training.
+fn check_labels(y: &[i32], classes: usize) -> Result<()> {
+    if let Some(&bad) = y.iter().find(|&&v| v < 0 || v as usize >= classes)
+    {
+        return Err(anyhow!("label {bad} outside [0, {classes})"));
+    }
+    Ok(())
+}
+
+/// Per-(seed, layer) uniform noise — the `fold_in(key, qidx)` analogue
+/// of the compile path (statistically equivalent stream, not bit-equal).
+fn layer_noise(seed: i32, qidx: usize, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed as i64 as u64).fold_in(qidx as u64);
+    (0..n).map(|_| rng.next_f32()).collect()
+}
+
+/// Below this many MACs a GEMM runs inline: spawn/join costs tens of
+/// microseconds per shard, which dominates the few microseconds of math
+/// in the tiny test networks (the default mlp layers sit well above).
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Shard `rows` across worker threads: each shard sees its slice of
+/// `input` (`in_row` floats per row) and its disjoint slice of `out`
+/// (`out_row` floats per row). Rows are computed independently, so the
+/// result is identical for any thread count.
+fn par_rows<F>(
+    threads: usize,
+    rows: usize,
+    in_row: usize,
+    out_row: usize,
+    input: &[f32],
+    out: &mut [f32],
+    f: F,
+) where
+    F: Fn(&[f32], &mut [f32], usize) + Sync,
+{
+    let shards = if rows * in_row * out_row < PAR_MIN_MACS {
+        1
+    } else {
+        threads.clamp(1, rows.max(1))
+    };
+    if shards == 1 {
+        f(input, out, rows);
+        return;
+    }
+    let chunk = rows.div_ceil(shards);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut out_rest = out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            let (o_head, o_tail) = std::mem::take(&mut out_rest)
+                .split_at_mut((r1 - r0) * out_row);
+            out_rest = o_tail;
+            let in_shard = &input[r0 * in_row..r1 * in_row];
+            s.spawn(move || f(in_shard, o_head, r1 - r0));
+            r0 = r1;
+        }
+    });
+}
+
+/// Batch-sharded weight gradient `aᵀ·g`: each thread reduces its rows
+/// into a private `[cin, cout]` buffer; partials sum in shard order.
+fn par_weight_grad(
+    threads: usize,
+    a: &[f32],
+    g: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+) -> Vec<f32> {
+    let shards = if rows * cin * cout < PAR_MIN_MACS {
+        1
+    } else {
+        threads.clamp(1, rows.max(1))
+    };
+    if shards == 1 {
+        let mut dw = vec![0.0f32; cin * cout];
+        ops::matmul_at_b(a, g, rows, cin, cout, &mut dw);
+        return dw;
+    }
+    let chunk = rows.div_ceil(shards);
+    let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            let a_sh = &a[r0 * cin..r1 * cin];
+            let g_sh = &g[r0 * cout..r1 * cout];
+            handles.push(s.spawn(move || {
+                let mut dw = vec![0.0f32; cin * cout];
+                ops::matmul_at_b(a_sh, g_sh, r1 - r0, cin, cout, &mut dw);
+                dw
+            }));
+            r0 = r1;
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut it = partials.into_iter();
+    let mut dw = it.next().unwrap_or_else(|| vec![0.0f32; cin * cout]);
+    for p in it {
+        for (d, v) in dw.iter_mut().zip(p) {
+            *d += v;
+        }
+    }
+    dw
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_step(
+        &self,
+        m: &Manifest,
+        state: &mut ModelState,
+        x: &[f32],
+        y: &[i32],
+        cfg: &StepConfig,
+    ) -> Result<(f32, f32)> {
+        let g = &self.graph;
+        let batch = y.len();
+        let nl = g.n_layers();
+        if x.len() != batch * g.d_in {
+            return Err(anyhow!(
+                "input is {} floats, batch {batch} needs {}",
+                x.len(),
+                batch * g.d_in
+            ));
+        }
+        if cfg.mode_vec.len() != nl {
+            return Err(anyhow!(
+                "mode_vec has {} entries for {nl} quantizable layers",
+                cfg.mode_vec.len()
+            ));
+        }
+        check_labels(y, g.classes)?;
+        self.check_state(state, true)?;
+
+        // 1. effective weights: noise-injected for mode-1 layers, raw
+        //    otherwise; `keep` records the generalized-STE clip gates
+        let mut effs: Vec<Option<(Vec<f32>, Vec<bool>)>> =
+            Vec::with_capacity(nl);
+        for l in &g.layers {
+            let mode = cfg.mode_vec[l.qidx];
+            if mode > 0.5 && mode < 1.5 {
+                let w = &state.params[l.w];
+                let (mu, sigma) = ops::tensor_stats(w);
+                let noise = layer_noise(cfg.seed, l.qidx, w.len());
+                let pair = if self.noise_cfg == "generic" {
+                    let t = cfg.qthresh.as_ref().ok_or_else(|| {
+                        anyhow!("variant needs qthresh but none configured")
+                    })?;
+                    ops::generic_noise(w, &noise, mu, sigma, t)
+                } else {
+                    ops::uniq_noise(w, &noise, mu, sigma, cfg.k_w)
+                };
+                effs.push(Some(pair));
+            } else {
+                effs.push(None);
+            }
+        }
+
+        // 2. forward, caching each layer's input and pre-activation
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        acts.push(x.to_vec());
+        for (i, l) in g.layers.iter().enumerate() {
+            let w_eff: &[f32] = match &effs[i] {
+                Some((w, _)) => w,
+                None => &state.params[l.w],
+            };
+            let mut z = vec![0.0f32; batch * l.cout];
+            par_rows(
+                self.threads,
+                batch,
+                l.cin,
+                l.cout,
+                &acts[i],
+                &mut z,
+                |xs, os, r| {
+                    kernels::matmul_f32(xs, w_eff, r, l.cin, l.cout, os);
+                },
+            );
+            if let Some(bi) = l.b {
+                kernels::bias_add(&mut z, &state.params[bi], batch, l.cout);
+            }
+            if i + 1 < nl {
+                let mut a = z.clone();
+                kernels::relu(&mut a);
+                // frozen producers (and (w,a)-eval) quantize activations
+                if cfg.mode_vec[l.qidx] > 1.5 || cfg.aq > 0.5 {
+                    let (mu, sigma) = ops::tensor_stats(&a);
+                    a = ops::fake_quant(&a, mu, sigma, cfg.k_a);
+                }
+                acts.push(a);
+            }
+            zs.push(z);
+        }
+
+        // 3. loss + hand-derived backward
+        let (loss, acc, mut dz) = ops::softmax_ce(&zs[nl - 1], y, g.classes);
+        let mut grads_w: Vec<Vec<f32>> = vec![Vec::new(); nl];
+        let mut grads_b: Vec<Option<Vec<f32>>> = vec![None; nl];
+        for i in (0..nl).rev() {
+            let l = &g.layers[i];
+            // frozen layers discard their weight gradient in the update;
+            // skip the aᵀ·g GEMM outright (late gradual phases freeze
+            // most of the net). Bias and input gradients still flow.
+            let frozen = cfg.mode_vec[l.qidx] > 1.5;
+            let mut dw = if frozen {
+                Vec::new()
+            } else {
+                par_weight_grad(
+                    self.threads,
+                    &acts[i],
+                    &dz,
+                    batch,
+                    l.cin,
+                    l.cout,
+                )
+            };
+            if let Some((_, keep)) = &effs[i] {
+                // generalized STE: identity inside the representable
+                // range, zero where the uniformized value clipped
+                for (d, &kp) in dw.iter_mut().zip(keep) {
+                    if !kp {
+                        *d = 0.0;
+                    }
+                }
+            }
+            if l.b.is_some() {
+                let mut db = vec![0.0f32; l.cout];
+                for r in 0..batch {
+                    for (o, d) in db.iter_mut().enumerate() {
+                        *d += dz[r * l.cout + o];
+                    }
+                }
+                grads_b[i] = Some(db);
+            }
+            grads_w[i] = dw;
+            if i > 0 {
+                let w_eff: &[f32] = match &effs[i] {
+                    Some((w, _)) => w,
+                    None => &state.params[l.w],
+                };
+                let mut da = vec![0.0f32; batch * l.cin];
+                par_rows(
+                    self.threads,
+                    batch,
+                    l.cout,
+                    l.cin,
+                    &dz,
+                    &mut da,
+                    |gs, os, r| {
+                        ops::matmul_a_bt(gs, w_eff, r, l.cin, l.cout, os);
+                    },
+                );
+                // act-quant is straight-through; relu gates on the
+                // cached pre-activation
+                for (d, &zv) in da.iter_mut().zip(&zs[i - 1]) {
+                    if zv <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                dz = da;
+            }
+        }
+
+        // 4. SGD + momentum + weight decay with frozen masking
+        for (i, l) in g.layers.iter().enumerate() {
+            let frozen = cfg.mode_vec[l.qidx] > 1.5;
+            ops::sgd_update(
+                &mut state.params[l.w],
+                &mut state.momenta[l.w],
+                &grads_w[i],
+                cfg.lr,
+                m.params[l.w].wd,
+                frozen,
+            );
+            if let (Some(bi), Some(db)) = (l.b, &grads_b[i]) {
+                // biases carry no qlayer flag: updated even when the
+                // layer's weights are frozen (model.py semantics)
+                ops::sgd_update(
+                    &mut state.params[bi],
+                    &mut state.momenta[bi],
+                    db,
+                    cfg.lr,
+                    m.params[bi].wd,
+                    false,
+                );
+            }
+        }
+        state.step += 1;
+        Ok((loss, acc))
+    }
+
+    fn eval_step(
+        &self,
+        _m: &Manifest,
+        state: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        k_a: f32,
+        aq: f32,
+    ) -> Result<(f32, f32)> {
+        let g = &self.graph;
+        let batch = y.len();
+        if x.len() != batch * g.d_in {
+            return Err(anyhow!(
+                "input is {} floats, batch {batch} needs {}",
+                x.len(),
+                batch * g.d_in
+            ));
+        }
+        check_labels(y, g.classes)?;
+        self.check_state(state, false)?;
+        let nl = g.n_layers();
+        let mut a: Vec<f32> = x.to_vec();
+        for (i, l) in g.layers.iter().enumerate() {
+            let w = &state.params[l.w];
+            let mut z = vec![0.0f32; batch * l.cout];
+            par_rows(
+                self.threads,
+                batch,
+                l.cin,
+                l.cout,
+                &a,
+                &mut z,
+                |xs, os, r| {
+                    kernels::matmul_f32(xs, w, r, l.cin, l.cout, os);
+                },
+            );
+            if let Some(bi) = l.b {
+                kernels::bias_add(&mut z, &state.params[bi], batch, l.cout);
+            }
+            if i + 1 < nl {
+                kernels::relu(&mut z);
+                if aq > 0.5 {
+                    let (mu, sigma) = ops::tensor_stats(&z);
+                    z = ops::fake_quant(&z, mu, sigma, k_a);
+                }
+            }
+            a = z;
+        }
+        let (loss, acc, _) = ops::softmax_ce(&a, y, g.classes);
+        Ok((loss, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::synthetic;
+    use crate::util::rng::Rng;
+
+    fn batch(d_in: usize, n: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x = (0..n * d_in).map(|_| rng.normal()).collect();
+        let y = (0..n).map(|_| rng.below(classes) as i32).collect();
+        (x, y)
+    }
+
+    fn cfg(modes: Vec<f32>) -> StepConfig {
+        StepConfig {
+            lr: 0.01,
+            k_w: 16.0,
+            k_a: 256.0,
+            aq: 0.0,
+            seed: 5,
+            mode_vec: modes,
+            qthresh: None,
+        }
+    }
+
+    #[test]
+    fn step_is_thread_count_invariant_in_forward() {
+        let (m, st) = synthetic::mlp(32, 10, 1);
+        let (x, y) = batch(3072, 8, 10, 2);
+        let mut losses = Vec::new();
+        for threads in [1usize, 3] {
+            let b = NativeBackend::new(&m).unwrap().with_threads(threads);
+            let mut s = st.clone();
+            let (loss, _) =
+                b.train_step(&m, &mut s, &x, &y, &cfg(vec![1.0; 3])).unwrap();
+            losses.push(loss);
+        }
+        // forward is per-row independent => bit-identical loss
+        assert_eq!(losses[0], losses[1]);
+    }
+
+    #[test]
+    fn frozen_layers_keep_weights_and_flush_momentum() {
+        let (m, st) = synthetic::mlp(16, 10, 3);
+        let (x, y) = batch(3072, 4, 10, 4);
+        let b = NativeBackend::new(&m).unwrap().with_threads(1);
+        let mut s = st.clone();
+        s.momenta[0] = vec![0.5; s.momenta[0].len()];
+        let (loss, acc) = b
+            .train_step(&m, &mut s, &x, &y, &cfg(vec![2.0, 0.0, 0.0]))
+            .unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        assert_eq!(s.params[0], st.params[0], "frozen weights moved");
+        assert!(s.momenta[0].iter().all(|&v| v == 0.0), "momentum kept");
+        assert_ne!(s.params[2], st.params[2], "fp layer must update");
+        assert_eq!(s.step, 1);
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let (m, st) = synthetic::mlp(16, 10, 3);
+        let b = NativeBackend::new(&m).unwrap();
+        let mut s = st.clone();
+        let (x, y) = batch(3072, 2, 10, 5);
+        let err = b
+            .train_step(&m, &mut s, &x[..100], &y, &cfg(vec![0.0; 3]))
+            .unwrap_err();
+        assert!(err.to_string().contains("floats"));
+        let err = b
+            .train_step(&m, &mut s, &x, &y, &cfg(vec![0.0; 2]))
+            .unwrap_err();
+        assert!(err.to_string().contains("mode_vec"));
+    }
+
+    #[test]
+    fn eval_act_quant_changes_logits_but_not_state() {
+        let (m, st) = synthetic::mlp(16, 10, 7);
+        let b = NativeBackend::new(&m).unwrap();
+        let (x, y) = batch(3072, 4, 10, 8);
+        let (l0, _) = b.eval_step(&m, &st, &x, &y, 256.0, 0.0).unwrap();
+        let (l1, _) = b.eval_step(&m, &st, &x, &y, 4.0, 1.0).unwrap();
+        assert!(l0.is_finite() && l1.is_finite());
+        assert_ne!(l0, l1, "4-level activation quant must perturb the loss");
+    }
+}

@@ -1,0 +1,457 @@
+//! Numeric core of the native training backend.
+//!
+//! Every function here is mirrored 1:1 by
+//! `python/tools/validate_train_mirror.py`, which checks it against jax
+//! autodiff through the real `python/compile` models: full-precision and
+//! frozen-mode steps agree to f32 tolerance, the noise transform agrees
+//! with `uniq_noise_ref` to ≤ 1e-5, and the STE backward equals the exact
+//! gradient of the network evaluated at the injected weights.
+//!
+//! The CDF/ICDF polynomials are `stats::normal` (the same A&S 7.1.26 /
+//! Giles 2010 coefficients as `python/compile/common.py`), evaluated in
+//! f64 like the host quantizers — so freeze and noise emulation share one
+//! uniformization.
+
+use crate::stats::{mean_std, norm_cdf, norm_icdf};
+
+/// Clamp for the uniformized variable (compile.common.UNIF_EPS = 2^-20).
+pub const UNIF_EPS: f64 = 1.0 / (1u64 << 20) as f64;
+
+/// Guard for degenerate (constant) tensors (compile.common.SIGMA_EPS).
+pub const SIGMA_EPS: f64 = 1e-8;
+
+/// SGD momentum (compile.model.MOMENTUM, paper §4).
+pub const MOMENTUM: f32 = 0.9;
+
+/// Weight decay on quantizable weights (compile.model.WEIGHT_DECAY).
+pub const WEIGHT_DECAY: f32 = 1e-4;
+
+/// Per-tensor `(μ, σ)` as the compile path's `tensor_stats` computes it
+/// (population std + SIGMA_EPS).
+pub fn tensor_stats(w: &[f32]) -> (f32, f32) {
+    let s = mean_std(w);
+    (s.mean as f32, (s.std + SIGMA_EPS) as f32)
+}
+
+/// The UNIQ training-time weight transform (paper §3.2, quantile config):
+/// uniformize, inject `U[-1/2k, 1/2k]` noise, de-uniformize.
+///
+/// Returns `(w_eff, keep)` where `keep[i] == false` marks elements whose
+/// uniformized value hit the `UNIF_EPS` clamp — the generalized-STE
+/// backward (identity inside the representable range, zero where clipped;
+/// Liu et al. 2021) gates those gradients off.
+pub fn uniq_noise(
+    w: &[f32],
+    noise_u: &[f32],
+    mu: f32,
+    sigma: f32,
+    k: f32,
+) -> (Vec<f32>, Vec<bool>) {
+    debug_assert_eq!(w.len(), noise_u.len());
+    let (mu, sigma, k) = (mu as f64, sigma as f64, k as f64);
+    let mut out = Vec::with_capacity(w.len());
+    let mut keep = Vec::with_capacity(w.len());
+    for (&wv, &nv) in w.iter().zip(noise_u) {
+        let u = norm_cdf((wv as f64 - mu) / sigma);
+        let shifted = u + (nv as f64 - 0.5) / k;
+        let clipped = !(UNIF_EPS..=1.0 - UNIF_EPS).contains(&shifted);
+        let u_hat = shifted.clamp(UNIF_EPS, 1.0 - UNIF_EPS);
+        out.push((mu + sigma * norm_icdf(u_hat)) as f32);
+        keep.push(!clipped);
+    }
+    (out, keep)
+}
+
+/// Noise injection for a generic (non-equiprobable) quantizer — the
+/// Table 3 ablation path. `uthresh` is the `kmax+1`-entry threshold
+/// vector in the uniformized domain (`0 = t_0 ≤ … ≤ 1`, padded with 1.0
+/// past the active k), exactly what
+/// `FreezeQuant::uniformized_thresholds` produces. Each weight pays a
+/// bin search — the overhead the paper blames for the ~2.4× slower
+/// generic-noise training.
+pub fn generic_noise(
+    w: &[f32],
+    noise_u: &[f32],
+    mu: f32,
+    sigma: f32,
+    uthresh: &[f32],
+) -> (Vec<f32>, Vec<bool>) {
+    debug_assert_eq!(w.len(), noise_u.len());
+    debug_assert!(uthresh.len() >= 2);
+    let kmax = uthresh.len() - 1;
+    let (mu, sigma) = (mu as f64, sigma as f64);
+    let mut out = Vec::with_capacity(w.len());
+    let mut keep = Vec::with_capacity(w.len());
+    for (&wv, &nv) in w.iter().zip(noise_u) {
+        let u = norm_cdf((wv as f64 - mu) / sigma);
+        // count interior thresholds <= u -> bin index in [0, kmax-1]
+        let idx = uthresh[1..kmax]
+            .iter()
+            .filter(|&&t| u >= t as f64)
+            .count();
+        let (lo, hi) = (uthresh[idx] as f64, uthresh[idx + 1] as f64);
+        let shifted = u + (nv as f64 - 0.5) * (hi - lo);
+        let clipped = !(UNIF_EPS..=1.0 - UNIF_EPS).contains(&shifted);
+        let u_hat = shifted.clamp(UNIF_EPS, 1.0 - UNIF_EPS);
+        out.push((mu + sigma * norm_icdf(u_hat)) as f32);
+        keep.push(!clipped);
+    }
+    (out, keep)
+}
+
+/// Deterministic Gaussian k-quantile fake-quantization (paper §3.1) —
+/// the activation path of frozen layers and of (w,a)-config eval. The
+/// backward is a straight-through identity, matching the compile
+/// kernel's `custom_vjp`.
+pub fn fake_quant(x: &[f32], mu: f32, sigma: f32, k: f32) -> Vec<f32> {
+    let (mu, sigma, k) = (mu as f64, sigma as f64, k as f64);
+    x.iter()
+        .map(|&xv| {
+            let u = norm_cdf((xv as f64 - mu) / sigma);
+            let idx = (u * k).floor().clamp(0.0, k - 1.0);
+            let u_hat = ((idx + 0.5) / k).clamp(UNIF_EPS, 1.0 - UNIF_EPS);
+            (mu + sigma * norm_icdf(u_hat)) as f32
+        })
+        .collect()
+}
+
+/// Mean softmax cross-entropy + top-1 accuracy + `d loss / d logits`.
+///
+/// `logits`: `[batch, classes]` row-major; `y`: i32 labels. The loss
+/// accumulates in f64 (batch-order independent to f32 print precision);
+/// `dlogits = (softmax − onehot) / batch`.
+pub fn softmax_ce(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+) -> (f32, f32, Vec<f32>) {
+    let batch = y.len();
+    debug_assert_eq!(logits.len(), batch * classes);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut dl = vec![0.0f32; logits.len()];
+    for r in 0..batch {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let sum: f64 = row.iter().map(|&v| ((v - m) as f64).exp()).sum();
+        let lse = m as f64 + sum.ln();
+        let yi = y[r] as usize;
+        loss += lse - row[yi] as f64;
+        // first-max tie-breaking; NaN-poisoned rows handled by the
+        // hardened serving argmax rather than a silent class-0 pick
+        if crate::infer::kernels::argmax(row) == yi {
+            correct += 1;
+        }
+        let drow = &mut dl[r * classes..(r + 1) * classes];
+        for (o, d) in drow.iter_mut().enumerate() {
+            let p = (((row[o] - m) as f64).exp() / sum) as f32;
+            *d = (p - f32::from(o == yi)) / batch as f32;
+        }
+    }
+    (
+        (loss / batch as f64) as f32,
+        correct as f32 / batch as f32,
+        dl,
+    )
+}
+
+/// Weight gradient: `out[j, o] += Σ_r a[r, j] · g[r, o]` (aᵀ·g).
+///
+/// `a`: `[rows, cin]` layer input, `g`: `[rows, cout]` output gradient,
+/// `out`: `[cin, cout]` accumulated in place (callers zero-init; the
+/// threaded path sums per-shard partials in shard order).
+pub fn matmul_at_b(
+    a: &[f32],
+    g: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), rows * cin);
+    debug_assert_eq!(g.len(), rows * cout);
+    debug_assert_eq!(out.len(), cin * cout);
+    for r in 0..rows {
+        let arow = &a[r * cin..(r + 1) * cin];
+        let grow = &g[r * cout..(r + 1) * cout];
+        for (j, &av) in arow.iter().enumerate() {
+            let orow = &mut out[j * cout..(j + 1) * cout];
+            for (o, &gv) in grow.iter().enumerate() {
+                orow[o] += av * gv;
+            }
+        }
+    }
+}
+
+/// Input gradient: `out[r, j] += Σ_o g[r, o] · w[j, o]` (g·wᵀ).
+///
+/// `g`: `[rows, cout]`, `w`: `[cin, cout]`, `out`: `[rows, cin]`.
+pub fn matmul_a_bt(
+    g: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), rows * cout);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(out.len(), rows * cin);
+    for r in 0..rows {
+        let grow = &g[r * cout..(r + 1) * cout];
+        let orow = &mut out[r * cin..(r + 1) * cin];
+        for (j, ov) in orow.iter_mut().enumerate() {
+            let wrow = &w[j * cout..(j + 1) * cout];
+            let mut acc = 0.0f32;
+            for (o, &wv) in wrow.iter().enumerate() {
+                acc += grow[o] * wv;
+            }
+            *ov += acc;
+        }
+    }
+}
+
+/// SGD + momentum + weight decay for one tensor, mirroring
+/// `compile/model.py`: `g += wd·p` (wd-flagged params), `v = 0.9v + g`,
+/// `p -= lr·v`; frozen quantizable layers take no update and flush their
+/// momentum (their `g` may be empty — the backward skips it entirely).
+pub fn sgd_update(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    wd: bool,
+    frozen: bool,
+) {
+    debug_assert_eq!(p.len(), v.len());
+    if frozen {
+        for vi in v.iter_mut() {
+            *vi = 0.0;
+        }
+        return;
+    }
+    debug_assert_eq!(p.len(), g.len());
+    for ((pi, vi), &gi) in p.iter_mut().zip(v.iter_mut()).zip(g) {
+        let mut gv = gi;
+        if wd {
+            gv += WEIGHT_DECAY * *pi;
+        }
+        *vi = MOMENTUM * *vi + gv;
+        *pi -= lr * *vi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::kernels::matmul_f32;
+    use crate::quant::{KQuantileGauss, QuantizerFit};
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.3).collect()
+    }
+
+    #[test]
+    fn noise_stays_within_one_bin_in_uniform_domain() {
+        let w = randvec(4000, 1);
+        let noise: Vec<f32> = {
+            let mut r = Rng::new(2);
+            (0..w.len()).map(|_| r.next_f32()).collect()
+        };
+        let (mu, sigma) = tensor_stats(&w);
+        for k in [4.0f32, 16.0] {
+            let (out, keep) = uniq_noise(&w, &noise, mu, sigma, k);
+            let half = 0.5 / k as f64;
+            for ((&wv, &ov), &kept) in w.iter().zip(&out).zip(&keep) {
+                let u = norm_cdf((wv as f64 - mu as f64) / sigma as f64);
+                let u_hat =
+                    norm_cdf((ov as f64 - mu as f64) / sigma as f64);
+                // polynomial cdf/icdf roundtrip costs ~5e-4 in u
+                assert!(
+                    (u_hat - u).abs() <= half + 1e-3,
+                    "k={k}: |Δu| = {} > 1/2k",
+                    (u_hat - u).abs()
+                );
+                if !kept {
+                    // clip only fires in the far tails
+                    assert!(u < 2.0 * half || u > 1.0 - 2.0 * half);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noise_statistics_match_uniform_model() {
+        // Δu over many draws ~ U[-1/2k, 1/2k]: mean ~ 0, var ~ (1/2k)²/3
+        let w = randvec(20_000, 3);
+        let noise: Vec<f32> = {
+            let mut r = Rng::new(4);
+            (0..w.len()).map(|_| r.next_f32()).collect()
+        };
+        let (mu, sigma) = tensor_stats(&w);
+        let k = 8.0f32;
+        let (out, keep) = uniq_noise(&w, &noise, mu, sigma, k);
+        let mut du = Vec::new();
+        for ((&wv, &ov), &kept) in w.iter().zip(&out).zip(&keep) {
+            if kept {
+                let u = norm_cdf((wv as f64 - mu as f64) / sigma as f64);
+                let u_hat =
+                    norm_cdf((ov as f64 - mu as f64) / sigma as f64);
+                du.push(u_hat - u);
+            }
+        }
+        let n = du.len() as f64;
+        assert!(n > 19_000.0, "clip should be rare (kept {n})");
+        let mean = du.iter().sum::<f64>() / n;
+        let var = du.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / n;
+        let half = 0.5 / k as f64;
+        // 3σ/√n sampling band + polynomial cdf/icdf roundtrip slack
+        assert!(mean.abs() < 3.0 * half / (3.0 * n).sqrt() + 3e-4,
+            "mean {mean}");
+        let want_var = half * half / 3.0;
+        assert!(
+            (var - want_var).abs() < 0.12 * want_var,
+            "var {var} vs {want_var}"
+        );
+    }
+
+    #[test]
+    fn generic_noise_with_equal_bins_matches_quantile_path() {
+        // k-quantile in the uniform domain == equal bins, so the generic
+        // path fed equal thresholds must reproduce uniq_noise
+        let w = randvec(500, 5);
+        let noise: Vec<f32> = {
+            let mut r = Rng::new(6);
+            (0..w.len()).map(|_| r.next_f32()).collect()
+        };
+        let (mu, sigma) = tensor_stats(&w);
+        let k = 8usize;
+        let uthresh: Vec<f32> =
+            (0..=k).map(|i| i as f32 / k as f32).collect();
+        let (a, ka) = uniq_noise(&w, &noise, mu, sigma, k as f32);
+        let (b, kb) = generic_noise(&w, &noise, mu, sigma, &uthresh);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn fake_quant_matches_host_freeze() {
+        // the in-graph activation quantizer and the host k-quantile
+        // freeze are the same function (levels = bin medians)
+        let x = randvec(2000, 7);
+        let (mu, sigma) = tensor_stats(&x);
+        for k in [4usize, 16] {
+            let got = fake_quant(&x, mu, sigma, k as f32);
+            let q = KQuantileGauss.fit(&x, k);
+            let mut want = x.clone();
+            q.quantize(&mut want);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 2e-5, "k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_ce_known_values() {
+        // uniform logits: loss = ln(C), dlogits rows sum to 0
+        let (loss, acc, dl) = softmax_ce(&[0.0; 8], &[1, 3], 4);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+        assert_eq!(acc, 0.0); // ties break to class 0, both labels differ
+        for r in 0..2 {
+            let s: f32 = dl[r * 4..(r + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // peaked logits: near-zero loss, gradient pushes the winner up
+        let (loss, acc, dl) =
+            softmax_ce(&[10.0, 0.0, 0.0, 0.0], &[0], 4);
+        assert!(loss < 1e-3);
+        assert_eq!(acc, 1.0);
+        assert!(dl[0] < 0.0 && dl[1] > 0.0);
+    }
+
+    #[test]
+    fn ce_gradient_matches_finite_difference() {
+        let mut logits = randvec(3 * 5, 9);
+        let y = [4i32, 0, 2];
+        let (_, _, dl) = softmax_ce(&logits, &y, 5);
+        let h = 1e-2f32;
+        for i in 0..logits.len() {
+            let orig = logits[i];
+            logits[i] = orig + h;
+            let (lp, _, _) = softmax_ce(&logits, &y, 5);
+            logits[i] = orig - h;
+            let (lm, _, _) = softmax_ce(&logits, &y, 5);
+            logits[i] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - dl[i]).abs() < 1e-3,
+                "coord {i}: fd {fd} vs analytic {}",
+                dl[i]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_matmuls_agree_with_forward_transposes() {
+        let (rows, cin, cout) = (7usize, 5usize, 3usize);
+        let a = randvec(rows * cin, 11);
+        let g = randvec(rows * cout, 12);
+        let w = randvec(cin * cout, 13);
+
+        // matmul_at_b == f32 GEMM of a-transposed against g
+        let mut at = vec![0.0f32; cin * rows];
+        for r in 0..rows {
+            for j in 0..cin {
+                at[j * rows + r] = a[r * cin + j];
+            }
+        }
+        let mut want = vec![0.0f32; cin * cout];
+        matmul_f32(&at, &g, cin, rows, cout, &mut want);
+        let mut got = vec![0.0f32; cin * cout];
+        matmul_at_b(&a, &g, rows, cin, cout, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+
+        // matmul_a_bt == f32 GEMM of g against w-transposed
+        let mut wt = vec![0.0f32; cout * cin];
+        for j in 0..cin {
+            for o in 0..cout {
+                wt[o * cin + j] = w[j * cout + o];
+            }
+        }
+        let mut want = vec![0.0f32; rows * cin];
+        matmul_f32(&g, &wt, rows, cout, cin, &mut want);
+        let mut got = vec![0.0f32; rows * cin];
+        matmul_a_bt(&g, &w, rows, cin, cout, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sgd_update_rule() {
+        let mut p = vec![1.0f32, -2.0];
+        let mut v = vec![0.5f32, 0.0];
+        sgd_update(&mut p, &mut v, &[0.1, 0.2], 0.1, false, false);
+        assert!((v[0] - (0.9 * 0.5 + 0.1)).abs() < 1e-6);
+        assert!((p[0] - (1.0 - 0.1 * v[0])).abs() < 1e-6);
+
+        // weight decay folds into the gradient
+        let mut p = vec![1.0f32];
+        let mut v = vec![0.0f32];
+        sgd_update(&mut p, &mut v, &[0.0], 1.0, true, false);
+        assert!((v[0] - WEIGHT_DECAY).abs() < 1e-9);
+
+        // frozen: momentum flushed, param untouched
+        let mut p = vec![3.0f32];
+        let mut v = vec![0.7f32];
+        sgd_update(&mut p, &mut v, &[9.0], 0.1, true, true);
+        assert_eq!(p, vec![3.0]);
+        assert_eq!(v, vec![0.0]);
+    }
+}

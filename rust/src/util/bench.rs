@@ -66,7 +66,7 @@ impl Bench {
             }
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let q = |p: f64| percentile(&samples, p);
         let stats = Stats {
             median_ns: q(0.5),
             p10_ns: q(0.1),
@@ -137,6 +137,19 @@ impl Stats {
     }
 }
 
+/// Linearly interpolated percentile over a *sorted* sample (numpy's
+/// default convention). Flooring the rank — the old behavior here and
+/// in `ServeStats` — systematically understated the upper percentiles.
+/// `p` in [0, 1]; an empty sample reports 0.0.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (sorted.len() - 1) as f64 * p;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -184,6 +197,17 @@ mod tests {
         // serialized form parses back
         let text = j.to_string();
         assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let s: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 1.0), 10.0);
+        assert!((percentile(&s, 0.5) - 5.5).abs() < 1e-9);
+        assert!((percentile(&s, 0.99) - 9.91).abs() < 1e-9);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.9), 3.0);
     }
 
     #[test]

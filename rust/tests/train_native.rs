@@ -1,0 +1,316 @@
+//! Native-backend correctness: finite-difference gradients, the full
+//! gradual schedule end-to-end (train → freeze → LUT serve parity), and
+//! backend-independence of the freeze path. The jax ground truth for the
+//! same math lives in `python/tools/validate_train_mirror.py` (the
+//! train-side sibling of `validate_infer_mirror.py`).
+
+use uniq::coordinator::{FreezeQuant, SchedulePolicy, TrainConfig, Trainer};
+use uniq::data::synth::{SynthConfig, SynthDataset};
+use uniq::infer::{synthetic, FrozenModel, Graph, KernelMode, PreparedWeights};
+use uniq::runtime::manifest::ParamMeta;
+use uniq::runtime::state::StepConfig;
+use uniq::runtime::{Backend, Manifest, ModelState};
+use uniq::train::NativeBackend;
+use uniq::util::rng::Rng;
+
+/// Hand-built tiny MLP manifest (image 2x2x3 -> 8 -> 4 classes): small
+/// enough to finite-difference every coordinate.
+fn tiny_mlp(seed: u64) -> (Manifest, ModelState) {
+    let dims = [(12usize, 8usize), (8, 4)];
+    let mut params = Vec::new();
+    let mut pvals = Vec::new();
+    let mut rng = Rng::new(seed);
+    let mut offset = 0usize;
+    for (i, &(cin, cout)) in dims.iter().enumerate() {
+        let name = format!("fc{}", i + 1);
+        let scale = (2.0 / cin as f32).sqrt();
+        let w: Vec<f32> =
+            (0..cin * cout).map(|_| rng.normal() * scale).collect();
+        params.push(ParamMeta {
+            name: format!("{name}/w"),
+            shape: vec![cin, cout],
+            qlayer: Some(i),
+            wd: true,
+            offset,
+            size: cin * cout,
+        });
+        offset += cin * cout;
+        pvals.push(w);
+        params.push(ParamMeta {
+            name: format!("{name}/b"),
+            shape: vec![cout],
+            qlayer: None,
+            wd: false,
+            offset,
+            size: cout,
+        });
+        offset += cout;
+        pvals.push(vec![0.0; cout]);
+    }
+    let momenta = pvals.iter().map(|p| vec![0.0; p.len()]).collect();
+    let manifest = Manifest {
+        name: "tiny_mlp".into(),
+        batch: 4,
+        image: vec![2, 2, 3],
+        classes: 4,
+        noise_cfg: "quantile".into(),
+        kmax: 32,
+        qlayers: vec!["fc1".into(), "fc2".into()],
+        params,
+        state: vec![],
+        train_inputs: vec![],
+        train_outputs: vec![],
+        eval_inputs: vec![],
+        eval_outputs: vec![],
+    };
+    let state = ModelState { params: pvals, momenta, state: vec![], step: 0 };
+    (manifest, state)
+}
+
+fn rand_batch(
+    d_in: usize,
+    n: usize,
+    classes: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let x = (0..n * d_in).map(|_| rng.normal()).collect();
+    let y = (0..n).map(|_| rng.below(classes) as i32).collect();
+    (x, y)
+}
+
+/// Full-precision gradients vs central finite differences, every
+/// coordinate. Gradients are recovered from the update equation with
+/// zero initial momentum: g = (p - p') / lr - wd * p.
+#[test]
+fn fp_gradients_match_finite_differences() {
+    let (m, state) = tiny_mlp(3);
+    let backend = NativeBackend::new(&m).unwrap().with_threads(1);
+    // reject batches with a first-layer pre-activation near the relu
+    // kink: a central difference straddling z = 0 disagrees with the
+    // (one-sided) analytic gradient there by construction
+    let mut seed = 4u64;
+    let (x, y) = loop {
+        let (x, y) = rand_batch(12, 6, 4, seed);
+        let (w1, b1) = (&state.params[0], &state.params[1]);
+        let mut min_abs = f32::INFINITY;
+        for r in 0..6 {
+            for j in 0..8 {
+                let mut z = b1[j];
+                for c in 0..12 {
+                    z += x[r * 12 + c] * w1[c * 8 + j];
+                }
+                min_abs = min_abs.min(z.abs());
+            }
+        }
+        if min_abs > 0.08 {
+            break (x, y);
+        }
+        seed += 1;
+        assert!(seed < 200, "no kink-free batch found");
+    };
+    let lr = 0.5f32; // large lr so (p - p') resolves g in f32
+    let cfg = StepConfig {
+        lr,
+        k_w: 16.0,
+        k_a: 256.0,
+        aq: 0.0,
+        seed: 1,
+        mode_vec: vec![0.0, 0.0],
+        qthresh: None,
+    };
+    let mut stepped = state.clone();
+    backend.train_step(&m, &mut stepped, &x, &y, &cfg).unwrap();
+
+    let loss_at = |st: &ModelState| -> f32 {
+        backend.eval_step(&m, st, &x, &y, 256.0, 0.0).unwrap().0
+    };
+    let h = 1e-2f32;
+    for pi in 0..state.params.len() {
+        let wd = if m.params[pi].wd {
+            uniq::train::ops::WEIGHT_DECAY
+        } else {
+            0.0
+        };
+        for ci in 0..state.params[pi].len() {
+            let g = (state.params[pi][ci] - stepped.params[pi][ci]) / lr
+                - wd * state.params[pi][ci];
+            let mut probe = state.clone();
+            probe.params[pi][ci] += h;
+            let lp = loss_at(&probe);
+            probe.params[pi][ci] -= 2.0 * h;
+            let lm = loss_at(&probe);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - g).abs() < 0.01 * g.abs().max(0.5) + 2e-3,
+                "{} [{ci}]: finite-diff {fd} vs analytic {g}",
+                m.params[pi].name
+            );
+        }
+    }
+}
+
+/// The whole paper procedure on the native backend: gradual schedule,
+/// per-phase freeze, frozen checkpoint → LUT export → serve parity.
+#[test]
+fn gradual_schedule_trains_freezes_and_serves() {
+    let mut t = Trainer::native_synthetic("mlp", 2, 10, 11).unwrap();
+    assert_eq!(t.backend.name(), "native");
+    let train = SynthDataset::generate(SynthConfig {
+        n: 256,
+        noise: 0.6,
+        ..Default::default()
+    });
+    let val = SynthDataset::generate(SynthConfig {
+        n: 64,
+        noise: 0.6,
+        sample_seed: 4321,
+        ..Default::default()
+    });
+    let (l0, _) = t.evaluate(&val, 256.0, 0.0).unwrap();
+    let cfg = TrainConfig {
+        steps_per_phase: 25,
+        stages: 0, // one stage per layer
+        iterations: 2,
+        policy: SchedulePolicy::Gradual,
+        lr: 0.05,
+        bits_w: 4,
+        bits_a: 8,
+        eval_act_quant: false,
+        freeze_quant: FreezeQuant::KQuantileGauss,
+        seed: 7,
+        log_every: 0,
+        eval_every: 0,
+        verbose: false,
+    };
+    let (l1, a1) = t.run(&train, &val, &cfg).unwrap();
+    assert!(l1.is_finite() && (0.0..=1.0).contains(&a1));
+    assert!(l1 < l0, "training must reduce val loss: {l0} -> {l1}");
+    assert_eq!(t.state.step, (3 * 2 * 25) as u64);
+
+    // every quantizable layer froze onto <= 2^4 distinct levels
+    for qidx in 0..t.manifest.n_qlayers() {
+        let w = t.state.qlayer_weights(&t.manifest, qidx).unwrap();
+        let mut distinct: Vec<f32> = w.to_vec();
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert!(
+            distinct.len() <= 16,
+            "qlayer {qidx}: {} distinct values after freeze",
+            distinct.len()
+        );
+    }
+
+    // frozen checkpoint flows straight into the LUT serving engine
+    let frozen = FrozenModel::export(
+        &t.manifest,
+        &t.state,
+        FreezeQuant::KQuantileGauss,
+        4,
+    )
+    .unwrap();
+    let graph = Graph::from_model(&frozen).unwrap();
+    let weights = PreparedWeights::new(&frozen, &graph);
+    let b = &val;
+    let x = &b.images[..4 * b.image_len()];
+    let lut = graph
+        .forward(&frozen, &weights, x, 4, KernelMode::Lut)
+        .unwrap();
+    let refr = graph
+        .forward(&frozen, &weights, x, 4, KernelMode::DequantF32)
+        .unwrap();
+    let maxd = lut
+        .iter()
+        .zip(&refr)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxd <= 1e-5, "LUT vs dequant-f32 diff {maxd}");
+    // the frozen weights ARE the codebook expansion (freeze idempotent)
+    for (qidx, layer) in frozen.layers.iter().enumerate() {
+        let w = t.state.qlayer_weights(&t.manifest, qidx).unwrap();
+        assert_eq!(layer.dequantize(), w, "layer {} drifted", layer.name);
+    }
+}
+
+/// Satellite: the native backend's freeze path must produce codebooks
+/// bit-identical to the PJRT path's host-side freeze — both run the same
+/// `Trainer::freeze_layer` over `ModelState`, so the exported
+/// `FrozenModel`s must be equal byte for byte.
+#[test]
+fn freeze_path_bit_identical_across_backends() {
+    let (m, state) = synthetic::mlp(32, 10, 5);
+    // native-trainer freeze (what `uniq train` does at phase end)
+    let backend = NativeBackend::new(&m).unwrap().with_threads(2);
+    let mut t = Trainer::with_backend(m.clone(), state.clone(), Box::new(backend));
+    let (x, y) = rand_batch(3072, 8, 10, 6);
+    let cfg = StepConfig {
+        lr: 0.01,
+        k_w: 16.0,
+        k_a: 256.0,
+        aq: 0.0,
+        seed: 2,
+        mode_vec: vec![1.0; 3],
+        qthresh: None,
+    };
+    t.step(&x, &y, &cfg).unwrap();
+    let mut pjrt_style = t.state.clone(); // same weights, frozen manually
+    for qidx in 0..m.n_qlayers() {
+        t.freeze_layer(qidx, FreezeQuant::KQuantileGauss, 16).unwrap();
+    }
+    let native_frozen =
+        FrozenModel::export(&m, &t.state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+
+    // the PJRT path's host-side freeze: identical quantizer over the
+    // same ModelState, no trainer involved
+    for qidx in 0..m.n_qlayers() {
+        let w = pjrt_style.qlayer_weights_mut(&m, qidx).unwrap();
+        let q = FreezeQuant::KQuantileGauss.fit(w, 16);
+        q.quantize(w);
+    }
+    let pjrt_frozen =
+        FrozenModel::export(&m, &pjrt_style, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+
+    assert_eq!(
+        native_frozen, pjrt_frozen,
+        "freeze must be backend-independent"
+    );
+    for (a, b) in native_frozen.layers.iter().zip(&pjrt_frozen.layers) {
+        assert_eq!(a.indices.data, b.indices.data, "{}: packed bits", a.name);
+        assert_eq!(a.codebook, b.codebook, "{}: codebook", a.name);
+    }
+}
+
+/// Noise-mode steps must leave no NaN/inf anywhere and keep improving
+/// (smoke for longer simultaneous-noise runs).
+#[test]
+fn simultaneous_noise_training_stays_finite() {
+    let (m, state) = synthetic::mlp(16, 10, 9);
+    let backend = NativeBackend::new(&m).unwrap();
+    let mut st = state;
+    let (x, y) = rand_batch(3072, 8, 10, 10);
+    let cfg = StepConfig {
+        lr: 0.02,
+        k_w: 4.0, // 2-bit weights: widest noise
+        k_a: 16.0,
+        aq: 1.0, // activation quant on as well
+        seed: 3,
+        mode_vec: vec![1.0; 3],
+        qthresh: None,
+    };
+    let mut last = f32::INFINITY;
+    for step in 0..10i32 {
+        let mut c = cfg.clone();
+        c.seed = step;
+        let (loss, _) = backend.train_step(&m, &mut st, &x, &y, &c).unwrap();
+        assert!(loss.is_finite(), "step {step}: loss {loss}");
+        last = loss;
+    }
+    assert!(last.is_finite());
+    for group in [&st.params, &st.momenta] {
+        for t in group {
+            assert!(t.iter().all(|v| v.is_finite()), "non-finite state");
+        }
+    }
+}
