@@ -129,28 +129,48 @@ fn main() -> Result<()> {
         "LUT outputs diverged from the f32 reference: {max_diff}"
     );
 
-    // ---- serving loop: batched requests through infer::serve
+    // ---- serving loop: identical traffic through the PR-1 engine
+    //      (KernelMode::LutV1) and the v2 engine, at equal worker count,
+    //      so BENCH_inference.json records the measured serving speedup
     let n_requests = if fast { 256 } else { 2048 };
-    let server = Server::start(
-        Arc::clone(&sm),
-        ServeConfig {
-            max_batch: 64,
-            max_wait: Duration::from_millis(2),
-            ..Default::default()
-        },
+    let mut serve_stats = Vec::new();
+    for (label, mode) in [("v1", KernelMode::LutV1), ("v2", KernelMode::Lut)]
+    {
+        let server = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                mode,
+                ..Default::default()
+            },
+        );
+        let mut pending = Vec::with_capacity(n_requests);
+        for i in 0..n_requests {
+            pending.push(server.submit(val.image(i % val.n).to_vec())?);
+        }
+        let mut served = 0usize;
+        for rx in pending {
+            rx.recv()?;
+            served += 1;
+        }
+        let stats = server.shutdown();
+        assert_eq!(served, n_requests);
+        println!("serving engine {label}:");
+        stats.print();
+        serve_stats.push(stats);
+    }
+    let (serve_v1, serve_v2) = (&serve_stats[0], &serve_stats[1]);
+    let serve_speedup = if serve_v1.throughput_rps > 0.0 {
+        serve_v2.throughput_rps / serve_v1.throughput_rps
+    } else {
+        0.0
+    };
+    println!(
+        "serving: v2 engine {:.0} img/s vs v1 {:.0} img/s \
+         ({serve_speedup:.2}x at equal workers)\n",
+        serve_v2.throughput_rps, serve_v1.throughput_rps
     );
-    let mut pending = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        pending.push(server.submit(val.image(i % val.n).to_vec())?);
-    }
-    let mut served = 0usize;
-    for rx in pending {
-        rx.recv()?;
-        served += 1;
-    }
-    let stats = server.shutdown();
-    assert_eq!(served, n_requests);
-    stats.print();
 
     // ---- LUT vs dequantized-f32 vs PJRT at batch 1 / 8 / 32 / 64
     // (32 is the AOT variants' native batch — the only size the
@@ -159,14 +179,39 @@ fn main() -> Result<()> {
     let mut jbatches = Vec::new();
     let mut lut64 = None;
     let mut f3264 = None;
+    let mut v164 = None;
     for batch in [1usize, 8, 32, 64] {
         let x = &probe.x[..batch * val.image_len()];
+        // v2 engine in its serving form: persistent per-caller arena
+        let mut bufs = uniq::infer::ExecBuffers::new();
         let lut_stats = b.run_throughput(
             &format!("mobilenet_mini/lut/b{batch}"),
             batch,
             || {
                 sm.graph
-                    .forward(&sm.model, &sm.weights, x, batch, KernelMode::Lut)
+                    .forward_into(
+                        &sm.model,
+                        &sm.weights,
+                        x,
+                        batch,
+                        KernelMode::Lut,
+                        &mut bufs,
+                    )
+                    .unwrap();
+            },
+        );
+        let v1_stats = b.run_throughput(
+            &format!("mobilenet_mini/lut_v1/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward(
+                        &sm.model,
+                        &sm.weights,
+                        x,
+                        batch,
+                        KernelMode::LutV1,
+                    )
                     .unwrap()
             },
         );
@@ -195,10 +240,12 @@ fn main() -> Result<()> {
         if batch == 64 {
             lut64 = Some(lut_stats);
             f3264 = Some(f32_stats);
+            v164 = Some(v1_stats);
         }
         jbatches.push(obj(vec![
             ("batch", num(batch as f64)),
             ("lut", lut_stats.to_json()),
+            ("lut_v1", v1_stats.to_json()),
             ("dequant_f32", f32_stats.to_json()),
             (
                 "pjrt",
@@ -208,16 +255,25 @@ fn main() -> Result<()> {
                 "lut_vs_f32_speedup",
                 num(f32_stats.median_ns / lut_stats.median_ns),
             ),
+            (
+                "v2_vs_v1_speedup",
+                num(v1_stats.median_ns / lut_stats.median_ns),
+            ),
         ]));
     }
     b.finish();
 
-    let (lut64, f3264) = (lut64.unwrap(), f3264.unwrap());
+    let (lut64, f3264, v164) = (lut64.unwrap(), f3264.unwrap(), v164.unwrap());
     let speedup64 = f3264.median_ns / lut64.median_ns;
+    let v2_speedup64 = v164.median_ns / lut64.median_ns;
     println!(
         "batch 64: LUT {:.1} img/s vs dequant-f32 {:.1} img/s ({speedup64:.2}x)",
         64.0 / lut64.median_ns * 1e9,
         64.0 / f3264.median_ns * 1e9,
+    );
+    println!(
+        "batch 64: v2 engine is {v2_speedup64:.2}x the PR-1 engine \
+         (single worker, single thread)"
     );
 
     let report = obj(vec![
@@ -227,7 +283,10 @@ fn main() -> Result<()> {
         ("parity_max_abs_diff", num(max_diff as f64)),
         ("batches", Json::Arr(jbatches)),
         ("lut_ge_f32_batch64", Json::Bool(speedup64 >= 1.0)),
-        ("serve", stats.to_json()),
+        ("v2_vs_v1_batch64", num(v2_speedup64)),
+        ("serve_v1", serve_v1.to_json()),
+        ("serve", serve_v2.to_json()),
+        ("serve_v2_vs_v1_throughput", num(serve_speedup)),
     ]);
     std::fs::write("BENCH_inference.json", report.to_string())?;
     println!("[written] BENCH_inference.json");

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Warn-only benchmark comparison: current BENCH json vs committed baseline.
+
+Usage:
+    python python/tools/bench_compare.py BENCH_inference.json \
+        rust/benches/baseline/BENCH_inference.json
+
+Walks both reports for ``{"benchmarks": {name: {"median_ns": ...}}}``
+tables (the ``util::bench`` report shape, nested anywhere) and prints a
+per-benchmark ratio. A benchmark >15% slower than baseline is flagged
+with WARN — but the exit code is always 0: this is a visibility tool for
+PR logs, not a gate (micro-benchmarks on shared CI runners are too noisy
+to block on; the committed baseline exists so regressions are *seen*,
+with the human deciding).
+
+To (re)record the baseline on a quiet machine:
+    cargo bench --bench inference
+    mkdir -p rust/benches/baseline
+    cp BENCH_inference.json rust/benches/baseline/
+"""
+
+import json
+import sys
+from pathlib import Path
+
+SLOWDOWN_WARN = 1.15
+
+
+def collect_medians(node, prefix=""):
+    """Recursively harvest {bench_name: median_ns} from a report tree."""
+    found = {}
+    if isinstance(node, dict):
+        bench_table = node.get("benchmarks")
+        if isinstance(bench_table, dict):
+            for name, stats in bench_table.items():
+                if isinstance(stats, dict) and "median_ns" in stats:
+                    found[name] = float(stats["median_ns"])
+        for key, val in node.items():
+            if key != "benchmarks":
+                found.update(collect_medians(val, f"{prefix}{key}/"))
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            found.update(collect_medians(val, f"{prefix}{i}/"))
+    return found
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 0
+    current_path, baseline_path = Path(argv[1]), Path(argv[2])
+    if not current_path.exists():
+        print(f"bench-compare: {current_path} missing (bench not run?) "
+              "— nothing to compare")
+        return 0
+    if not baseline_path.exists():
+        print(f"bench-compare: no committed baseline at {baseline_path}")
+        print("bench-compare: record one with:")
+        print("    cargo bench --bench inference")
+        print(f"    mkdir -p {baseline_path.parent}")
+        print(f"    cp {current_path} {baseline_path}")
+        return 0
+
+    current = collect_medians(json.loads(current_path.read_text()))
+    baseline = collect_medians(json.loads(baseline_path.read_text()))
+    shared = sorted(set(current) & set(baseline))
+    if not shared:
+        print("bench-compare: no overlapping benchmark names "
+              f"({len(current)} current vs {len(baseline)} baseline)")
+        return 0
+
+    print(f"bench-compare: {len(shared)} benchmarks vs baseline "
+          f"({baseline_path})")
+    print(f"{'benchmark':<52} {'base ms':>10} {'now ms':>10} {'ratio':>7}")
+    warned = 0
+    for name in shared:
+        base, now = baseline[name], current[name]
+        ratio = now / base if base > 0 else float("inf")
+        flag = ""
+        if ratio > SLOWDOWN_WARN:
+            flag = "  WARN: slower than baseline"
+            warned += 1
+        print(f"{name:<52} {base / 1e6:>10.3f} {now / 1e6:>10.3f} "
+              f"{ratio:>6.2f}x{flag}")
+    gone = sorted(set(baseline) - set(current))
+    if gone:
+        print(f"bench-compare: {len(gone)} baseline benchmarks no longer "
+              f"run: {', '.join(gone[:8])}{'...' if len(gone) > 8 else ''}")
+    if warned:
+        print(f"bench-compare: {warned} benchmark(s) >{SLOWDOWN_WARN:.2f}x "
+              "baseline (warn-only, not failing the build)")
+    else:
+        print("bench-compare: no regressions beyond the warn threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

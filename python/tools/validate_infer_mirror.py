@@ -154,6 +154,113 @@ got = lut_matmul_blocked(x, idx.T, levels, rows, cin, cout)
 check("blocked lut matmul", np.abs(got - want).max() < 2e-4,
       f"maxdiff={np.abs(got-want).max():.2e}")
 
+# ---- v2 tiled LUT matmul mirror (kernels::lut_matmul_tiled) ----
+# O_TILE output channels per pass, weight tile dequantized once per
+# (row-block, o-tile), optional fused bias/bn/relu epilogue, row range
+# split at fixed rows.div_ceil(shards) points. Must match the v1
+# blocked mirror / plain matmul for every tail shape and shard count.
+O_TILE = 4
+
+def ep_apply(ep, v, o):
+    if ep is None:
+        return v
+    bias, bn, relu_ = ep
+    if bias is not None:
+        v = v + bias[o]
+    if bn is not None:
+        inv, beta, mean = bn
+        v = (v - mean[o]) * inv[o] + beta[o]
+    if relu_ and v < 0.0:
+        v = np.float32(0.0)
+    return v
+
+def lut_matmul_tiled(x, idx_t, cb, rows, cin, cout, ep=None, shards=1,
+                     block=128):
+    out = np.zeros((rows, cout), np.float32)
+    chunk = -(-rows // shards)
+    r0s = 0
+    while r0s < rows:
+        r1s = min(r0s + chunk, rows)
+        xs, outs = x[r0s:r1s], out[r0s:r1s]
+        srows = r1s - r0s
+        r0 = 0
+        while r0 < srows:
+            rb = min(block, srows - r0)
+            xt = xs[r0:r0+rb].T.copy()           # [cin, rb]
+            o0 = 0
+            while o0 < cout:
+                ot = min(O_TILE, cout - o0)
+                wtile = cb[idx_t[o0:o0+ot]]      # [ot, cin] dequant once
+                acc = np.zeros((ot, rb), np.float32)
+                for j in range(cin):
+                    for oo in range(ot):
+                        acc[oo] += wtile[oo, j] * xt[j]
+                for oo in range(ot):
+                    for rr in range(rb):
+                        outs[r0+rr, o0+oo] = ep_apply(ep, acc[oo, rr], o0+oo)
+                o0 += ot
+            r0 += rb
+        r0s = r1s
+    return out
+
+ok = True
+for (rows2, cin2, cout2) in [(1, 5, 3), (130, 9, 5), (257, 33, 17)]:
+    x2 = rng.normal(size=(rows2, cin2)).astype(np.float32)
+    idx2 = rng.integers(0, kq, size=(cin2, cout2))
+    wq2 = levels[idx2]
+    bias = rng.normal(size=cout2).astype(np.float32)
+    gamma = rng.normal(1, 0.2, size=cout2).astype(np.float32)
+    beta = rng.normal(size=cout2).astype(np.float32)
+    mean = rng.normal(size=cout2).astype(np.float32)
+    var = np.abs(rng.normal(1, 0.3, size=cout2)).astype(np.float32)
+    inv = (gamma / np.sqrt(var + np.float32(1e-5))).astype(np.float32)
+    raw = (x2 @ wq2).astype(np.float32)
+    for ep, want in [
+        (None, raw),
+        ((bias, (inv, beta, mean), True),
+         np.maximum((raw + bias - mean) * inv + beta, 0.0)),
+    ]:
+        for shards in [1, 2, 3]:
+            got2 = lut_matmul_tiled(x2, idx2.T, levels, rows2, cin2, cout2,
+                                    ep=ep, shards=shards)
+            if np.abs(got2 - want).max() >= 2e-4:
+                ok = False
+# v1 and v2 mirrors agree on the original shape too
+ok = ok and np.array_equal(
+    lut_matmul_blocked(x, idx.T, levels, rows, cin, cout),
+    lut_matmul_tiled(x, idx.T, levels, rows, cin, cout, shards=3))
+check("v2 tiled lut matmul (tails, shards, fused epilogue)", ok)
+
+# ---- unpack_into fast paths (packed.rs 1/2/4/8-bit) vs generic get ----
+def unpack_fast(data, bits, n):
+    out = []
+    if bits == 8:
+        out = list(data[:n])
+    elif bits == 4:
+        for b in data:
+            out += [b & 0x0F, b >> 4]
+        out = out[:n]
+    elif bits == 2:
+        for b in data:
+            out += [b & 3, (b >> 2) & 3, (b >> 4) & 3, b >> 6]
+        out = out[:n]
+    elif bits == 1:
+        for b in data:
+            out += [(b >> k) & 1 for k in range(8)]
+        out = out[:n]
+    else:
+        out = [get(data, bits, i) for i in range(n)]
+    return out
+
+ok = True
+for bits in range(1, 9):
+    for n in [0, 1, 7, 8, 9, 255, 1000]:
+        vals = [int(v) for v in rng.integers(0, 1 << bits, size=n)]
+        p = pack(vals, bits)
+        if unpack_fast(p, bits, n) != vals:
+            ok = False
+check("unpack_into fast paths all widths", ok)
+
 # ---- full-graph check: python/compile models in eval mode vs mirror ----
 from compile.layers import Ctx
 from compile.mlp import mlp

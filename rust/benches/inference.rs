@@ -1,27 +1,153 @@
-//! Native inference benchmarks: LUT kernels vs dequantized-f32 vs the
-//! PJRT eval step, at serving batch sizes 1 / 8 / 64. Emits
-//! `BENCH_inference.json` (machine-readable, `util::bench` stats).
+//! Native inference benchmarks: v2 LUT engine (tiled + fused + arena)
+//! vs the PR-1 v1 engine vs dequantized-f32 vs the PJRT eval step, at
+//! serving batch sizes 1 / 8 / 32 / 64, plus a kernel-level LUT-GEMM
+//! micro-benchmark and a serve-tier v1-vs-v2 A/B at equal worker count.
+//! Emits `BENCH_inference.json` (machine-readable, `util::bench` stats).
 //!
 //! Runs everywhere: models are synthetic UNIQ-frozen replicas of the AOT
 //! variants; the PJRT column appears only when artifacts and a real xla
 //! backend are present (recorded as null otherwise, with the reason).
+//!
+//! CI uploads the JSON as an artifact and runs a warn-only comparison
+//! against the committed baseline (`python/tools/bench_compare.py`).
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use uniq::coordinator::FreezeQuant;
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
-use uniq::infer::{synthetic, FrozenModel, KernelMode, ServeModel};
+use uniq::infer::{
+    kernels, synthetic, ExecBuffers, FrozenModel, KernelMode, ServeConfig,
+    ServeModel, Server,
+};
+use uniq::quant::{KQuantileGauss, QuantizerFit};
 use uniq::util::bench::Bench;
 use uniq::util::json::{num, obj, s, Json};
+use uniq::util::rng::Rng;
 
 // 32 is the AOT variants' native batch — the only size the fixed-batch
 // PJRT executables can be compared at.
 const BATCHES: [usize; 4] = [1, 8, 32, 64];
 
+fn threads_avail() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 8)
+}
+
+/// Kernel-level v1-vs-v2 micro-benchmark on a conv-shaped GEMM
+/// (batch-8 mobilenet pointwise layer scale).
+fn kernel_micro(b: &mut Bench, threads: usize) -> Json {
+    let (rows, cin, cout) = (2048usize, 144usize, 32usize);
+    let mut rng = Rng::new(97);
+    let x: Vec<f32> = (0..rows * cin).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..cin * cout).map(|_| rng.normal()).collect();
+    let q = KQuantileGauss.fit(&w, 16);
+    let idx: Vec<u8> = w.iter().map(|&v| q.bin(v) as u8).collect();
+    let idx_t = kernels::transpose_idx(&idx, cin, cout);
+    let mut out = vec![0.0f32; rows * cout];
+    let name = format!("lut_gemm/{rows}x{cin}x{cout}");
+
+    let v1 = b.run(&format!("{name}/v1"), || {
+        kernels::lut_matmul(&x, &idx_t, &q.levels, rows, cin, cout, &mut out);
+    });
+    let mut pool = kernels::GemmScratchPool::new();
+    let v2 = b.run(&format!("{name}/v2_t1"), || {
+        kernels::lut_matmul_tiled(
+            &x,
+            &idx_t,
+            &q.levels,
+            rows,
+            cin,
+            cout,
+            &mut out,
+            kernels::Epilogue::default(),
+            1,
+            &mut pool,
+        );
+    });
+    let v2_mt = b.run(&format!("{name}/v2_t{threads}"), || {
+        kernels::lut_matmul_tiled(
+            &x,
+            &idx_t,
+            &q.levels,
+            rows,
+            cin,
+            cout,
+            &mut out,
+            kernels::Epilogue::default(),
+            threads,
+            &mut pool,
+        );
+    });
+    obj(vec![
+        ("shape", s(&format!("{rows}x{cin}x{cout}"))),
+        ("threads_mt", num(threads as f64)),
+        ("v1", v1.to_json()),
+        ("v2_t1", v2.to_json()),
+        ("v2_mt", v2_mt.to_json()),
+        ("v2_vs_v1_speedup", num(v1.median_ns / v2.median_ns)),
+        ("v2_mt_vs_v1_speedup", num(v1.median_ns / v2_mt.median_ns)),
+    ])
+}
+
+/// Serve-tier A/B: identical traffic through the v1 and v2 engines at
+/// equal worker count; records throughput for both.
+fn serve_ab(sm: &Arc<ServeModel>, img_len: usize, n_requests: usize) -> Json {
+    let workers = threads_avail().min(4);
+    let mut results = Vec::new();
+    for (label, mode) in
+        [("v1", KernelMode::LutV1), ("v2", KernelMode::Lut)]
+    {
+        let srv = Server::start(
+            Arc::clone(sm),
+            ServeConfig {
+                workers,
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                mode,
+                kernel_threads: 1,
+            },
+        );
+        let mut rng = Rng::new(5);
+        let pending: Vec<_> = (0..n_requests)
+            .map(|_| {
+                let img: Vec<f32> =
+                    (0..img_len).map(|_| rng.normal()).collect();
+                srv.submit(img).unwrap()
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().expect("serve reply");
+        }
+        let stats = srv.shutdown();
+        println!(
+            "serve[{label}] x{workers} workers: {:.0} img/s (p50 {:.2} ms)",
+            stats.throughput_rps, stats.p50_ms
+        );
+        results.push((label, stats));
+    }
+    let v1_rps = results[0].1.throughput_rps;
+    let v2_rps = results[1].1.throughput_rps;
+    obj(vec![
+        ("workers", num(workers as f64)),
+        ("requests", num(n_requests as f64)),
+        ("v1", results[0].1.to_json()),
+        ("v2", results[1].1.to_json()),
+        (
+            "v2_vs_v1_throughput",
+            num(if v1_rps > 0.0 { v2_rps / v1_rps } else { 0.0 }),
+        ),
+    ])
+}
+
 fn main() {
     let mut b = Bench::quick("inference");
     b.min_time = std::time::Duration::from_millis(400);
+    let threads = threads_avail();
     let data = SynthDataset::generate(SynthConfig {
         n: 64,
         ..Default::default()
@@ -29,17 +155,55 @@ fn main() {
     let probe = Batcher::eval_batches(&data, 64).remove(0);
 
     let mut jmodels = Vec::new();
+    let mut serve_json = Json::Null;
     for (name, width) in [("mobilenet_mini", 16usize), ("mlp", 16)] {
         let (m, state) = synthetic::model(name, width, 10, 7).unwrap();
         let frozen =
             FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
                 .unwrap();
-        let sm = ServeModel::new(frozen).unwrap();
+        let sm = Arc::new(ServeModel::new(frozen).unwrap());
         let mut jbatches = Vec::new();
         for batch in BATCHES {
             let x = &probe.x[..batch * data.image_len()];
+            // v2 engine through a persistent arena (the serving form)
+            let mut bufs = ExecBuffers::new();
             let lut = b.run_throughput(
-                &format!("{name}/lut/b{batch}"),
+                &format!("{name}/lut_v2/b{batch}"),
+                batch,
+                || {
+                    sm.graph
+                        .forward_into(
+                            &sm.model,
+                            &sm.weights,
+                            x,
+                            batch,
+                            KernelMode::Lut,
+                            &mut bufs,
+                        )
+                        .unwrap();
+                },
+            );
+            // v2 engine, row-sharded GEMMs
+            let mut bufs_mt = ExecBuffers::with_threads(threads);
+            let lut_mt = b.run_throughput(
+                &format!("{name}/lut_v2_t{threads}/b{batch}"),
+                batch,
+                || {
+                    sm.graph
+                        .forward_into(
+                            &sm.model,
+                            &sm.weights,
+                            x,
+                            batch,
+                            KernelMode::Lut,
+                            &mut bufs_mt,
+                        )
+                        .unwrap();
+                },
+            );
+            // the PR-1 engine (recorded baseline)
+            let lut_v1 = b.run_throughput(
+                &format!("{name}/lut_v1/b{batch}"),
                 batch,
                 || {
                     sm.graph
@@ -48,7 +212,7 @@ fn main() {
                             &sm.weights,
                             x,
                             batch,
-                            KernelMode::Lut,
+                            KernelMode::LutV1,
                         )
                         .unwrap()
                 },
@@ -77,10 +241,23 @@ fn main() {
             jbatches.push(obj(vec![
                 ("batch", num(batch as f64)),
                 ("lut", lut.to_json()),
+                ("lut_mt", lut_mt.to_json()),
+                ("lut_v1", lut_v1.to_json()),
                 ("dequant_f32", deq.to_json()),
                 ("pjrt", pjrt.map(|p| p.to_json()).unwrap_or(Json::Null)),
                 ("lut_vs_f32_speedup", num(deq.median_ns / lut.median_ns)),
+                (
+                    "v2_vs_v1_speedup",
+                    num(lut_v1.median_ns / lut.median_ns),
+                ),
+                (
+                    "v2_mt_vs_v1_speedup",
+                    num(lut_v1.median_ns / lut_mt.median_ns),
+                ),
             ]));
+        }
+        if name == "mobilenet_mini" {
+            serve_json = serve_ab(&sm, data.image_len(), 512);
         }
         jmodels.push(obj(vec![
             ("model", s(name)),
@@ -89,13 +266,18 @@ fn main() {
         ]));
     }
 
+    let jkernel = kernel_micro(&mut b, threads);
+
     let report = obj(vec![
         ("bench", s("inference")),
         ("models", Json::Arr(jmodels)),
+        ("kernel_micro", jkernel),
+        ("serve_ab", serve_json),
         ("all_runs", b.report_json()),
         (
             "note",
-            s("median_ns per forward call; throughput = batch / median"),
+            s("median_ns per forward call; throughput = batch / median; \
+               v1 = PR-1 engine, v2 = tiled/fused/arena engine"),
         ),
     ]);
     std::fs::write("BENCH_inference.json", report.to_string())

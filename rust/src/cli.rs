@@ -94,8 +94,11 @@ COMMANDS:
                                parity vs dequantized f32, throughput, and
                                measured vs analytic BOPs (no PJRT)
   serve      --model M [--requests N --workers W --max-batch B
-              --max-wait-ms T --synth --width W --stats out.json]
+              --max-wait-ms T --kernel-threads K --engine v1|v2
+              --synth --width W --stats out.json]
                                batched native serving with latency stats
+                               (v2: tiled/fused arena engine, default;
+                               v1: the PR-1 baseline engine)
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

@@ -6,6 +6,24 @@
 //! executor is a tiny stack machine (push/pop for residual branches) over
 //! the LUT kernels, with a dequantized-f32 mode that runs the identical
 //! graph for parity checks and baseline benchmarks.
+//!
+//! Two executors share the op list:
+//!
+//! * the **v2 arena executor** ([`Graph::forward_into`]) walks a
+//!   compiled plan in which every GEMM has its following batchnorm/relu
+//!   (and bias) fused into the kernel epilogue, activations ping-pong
+//!   between two buffers of a caller-owned [`ExecBuffers`], im2col
+//!   patches and GEMM tiles live in the same arena, and residual
+//!   branches draw from a buffer free-list — steady-state serving does
+//!   **zero heap allocation** on the LUT path;
+//! * the **v1 executor** ([`Graph::forward_v1`], `KernelMode::LutV1`)
+//!   is the PR-1 engine — per-op allocating, naive kernels — kept so
+//!   the v1-vs-v2 speedup is *measured* by every benchmark run instead
+//!   of asserted once.
+//!
+//! Both produce bit-identical logits: the plan fuses only elementwise
+//! epilogues (same expressions, same order) and the v2 kernels keep the
+//! v1 accumulation order (see `infer/kernels.rs`).
 
 use anyhow::{anyhow, Result};
 
@@ -16,8 +34,12 @@ use crate::bops;
 /// Which weight representation the executor reads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelMode {
-    /// codebook-indexed products (the paper's LUT regime)
+    /// codebook-indexed products (the paper's LUT regime), v2 engine:
+    /// tiled kernels, fused epilogues, arena execution
     Lut,
+    /// the PR-1 LUT engine (naive kernel, per-op allocation) — the
+    /// recorded baseline for the v2 speedup
+    LutV1,
     /// dequantized f32 weights, same graph and accumulation order
     DequantF32,
 }
@@ -52,9 +74,115 @@ pub enum Op {
     AddResidual,
 }
 
-/// Decoded working set: per-layer unpacked indices (LUT path) and
-/// dequantized f32 weights (reference path). Build once, share across
-/// worker threads.
+/// Epilogue spec of a compiled GEMM step: tensor *indices* into the
+/// model (resolved to slices at execution time).
+#[derive(Debug, Clone, Default)]
+struct EpSpec {
+    bias: Option<usize>,
+    /// (gamma, beta) index params; (mean, var) index state
+    bn: Option<(usize, usize, usize, usize)>,
+    relu: bool,
+}
+
+/// Compiled execution plan: the op list with every GEMM's following
+/// batchnorm/relu absorbed into its epilogue.
+#[derive(Debug, Clone)]
+enum Step {
+    Flatten,
+    Dense { q: usize, ep: EpSpec },
+    Conv { q: usize, stride: usize, ep: EpSpec },
+    Depthwise { q: usize, stride: usize, ep: EpSpec },
+    /// a batchnorm not preceded by a GEMM (none in the current archs,
+    /// but the compiler keeps the general case correct)
+    BatchNorm { gamma: usize, beta: usize, mean: usize, var: usize },
+    /// a relu that could not fuse (e.g. after a residual add)
+    Relu,
+    GlobalAvgPool,
+    PushResidual,
+    /// conv+bn of the *saved* activation; bn always rides the epilogue
+    Downsample { q: usize, stride: usize, ep: EpSpec },
+    AddResidual,
+}
+
+/// Absorb a directly-following BatchNorm and/or Relu into a GEMM
+/// epilogue, advancing the op cursor past what was fused.
+fn fuse_epilogue(ops: &[Op], i: &mut usize, bias: Option<usize>) -> EpSpec {
+    let mut ep = EpSpec { bias, ..Default::default() };
+    if let Some(&Op::BatchNorm { gamma, beta, mean, var }) = ops.get(*i) {
+        ep.bn = Some((gamma, beta, mean, var));
+        *i += 1;
+    }
+    if let Some(Op::Relu) = ops.get(*i) {
+        ep.relu = true;
+        *i += 1;
+    }
+    ep
+}
+
+fn compile(ops: &[Op]) -> Vec<Step> {
+    let mut plan = Vec::with_capacity(ops.len());
+    let mut i = 0usize;
+    while i < ops.len() {
+        match ops[i] {
+            Op::Flatten => {
+                plan.push(Step::Flatten);
+                i += 1;
+            }
+            Op::Conv { q, stride } => {
+                i += 1;
+                let ep = fuse_epilogue(ops, &mut i, None);
+                plan.push(Step::Conv { q, stride, ep });
+            }
+            Op::Depthwise { q, stride } => {
+                i += 1;
+                let ep = fuse_epilogue(ops, &mut i, None);
+                plan.push(Step::Depthwise { q, stride, ep });
+            }
+            Op::Dense { q, bias } => {
+                i += 1;
+                let ep = fuse_epilogue(ops, &mut i, bias);
+                plan.push(Step::Dense { q, ep });
+            }
+            Op::BatchNorm { gamma, beta, mean, var } => {
+                plan.push(Step::BatchNorm { gamma, beta, mean, var });
+                i += 1;
+            }
+            Op::Relu => {
+                plan.push(Step::Relu);
+                i += 1;
+            }
+            Op::GlobalAvgPool => {
+                plan.push(Step::GlobalAvgPool);
+                i += 1;
+            }
+            Op::PushResidual => {
+                plan.push(Step::PushResidual);
+                i += 1;
+            }
+            Op::DownsampleResidual { q, stride, gamma, beta, mean, var } => {
+                plan.push(Step::Downsample {
+                    q,
+                    stride,
+                    ep: EpSpec {
+                        bias: None,
+                        bn: Some((gamma, beta, mean, var)),
+                        relu: false,
+                    },
+                });
+                i += 1;
+            }
+            Op::AddResidual => {
+                plan.push(Step::AddResidual);
+                i += 1;
+            }
+        }
+    }
+    plan
+}
+
+/// Decoded working set: per-layer unpacked indices (LUT path),
+/// dequantized f32 weights (reference path) and per-layer precomputed
+/// batchnorm scales. Build once, share across worker threads.
 ///
 /// GEMM-backed layers (dense/pointwise/full convs) keep their indices
 /// *transposed* to `[cout, K]` — the layout [`kn::lut_matmul`] wants;
@@ -64,6 +192,10 @@ pub enum Op {
 pub struct PreparedWeights {
     pub idx: Vec<Vec<u8>>,
     pub deq: Vec<Vec<f32>>,
+    /// `gamma / sqrt(var + 1e-5)` per batchnorm, indexed by the gamma
+    /// param position (empty vec elsewhere) — hoisted out of the hot
+    /// path so the fused epilogue does no divides/sqrts per batch
+    pub bn_inv: Vec<Vec<f32>>,
 }
 
 impl PreparedWeights {
@@ -102,7 +234,26 @@ impl PreparedWeights {
                 }
             })
             .collect();
-        PreparedWeights { idx, deq: Vec::new() }
+        let mut bn_inv: Vec<Vec<f32>> = vec![Vec::new(); m.params.len()];
+        for st in &graph.plan {
+            let bn = match st {
+                Step::Dense { ep, .. }
+                | Step::Conv { ep, .. }
+                | Step::Depthwise { ep, .. }
+                | Step::Downsample { ep, .. } => ep.bn,
+                Step::BatchNorm { gamma, beta, mean, var } => {
+                    Some((*gamma, *beta, *mean, *var))
+                }
+                _ => None,
+            };
+            if let Some((g, _, _, v)) = bn {
+                if bn_inv[g].is_empty() {
+                    bn_inv[g] =
+                        kn::bn_inv(&m.params[g].data, &m.state[v].data);
+                }
+            }
+        }
+        PreparedWeights { idx, deq: Vec::new(), bn_inv }
     }
 
     /// True when the f32 reference copies are resident.
@@ -112,7 +263,7 @@ impl PreparedWeights {
 }
 
 /// An activation tensor: `[batch, h, w, c]`, or `[batch, c]` when
-/// `h == w == 1` (post-flatten / post-pool).
+/// `h == w == 1` (post-flatten / post-pool). Used by the v1 executor.
 #[derive(Debug, Clone)]
 struct Act {
     data: Vec<f32>,
@@ -121,11 +272,90 @@ struct Act {
     c: usize,
 }
 
+/// A residual-stack entry of the arena executor: the buffer is on loan
+/// from [`ExecBuffers::free`] and returns there when popped.
+#[derive(Debug)]
+struct Saved {
+    data: Vec<f32>,
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+/// Per-worker scratch arena for [`Graph::forward_into`]: ping-pong
+/// activation buffers, im2col patch buffer, LUT-GEMM tile scratch, and
+/// the residual free-list. Every buffer grows to its steady-state size
+/// during the first batch and is reused verbatim afterwards — the
+/// serving hot path performs no per-batch heap allocation.
+///
+/// Ownership contract: the arena belongs to exactly one executing
+/// thread (a serving worker). `forward_into` may clobber every buffer;
+/// the returned logits slice is valid until the next call. Nothing in
+/// the arena aliases the shared read-only `PreparedWeights`.
+#[derive(Debug)]
+pub struct ExecBuffers {
+    cur: Vec<f32>,
+    spare: Vec<f32>,
+    patches: Vec<f32>,
+    gemm: kn::GemmScratchPool,
+    saved: Vec<Saved>,
+    free: Vec<Vec<f32>>,
+    /// row-shard threads for the LUT-GEMM (1 = fully serial; serving
+    /// workers usually keep 1 and scale via the worker pool instead)
+    pub threads: usize,
+}
+
+impl ExecBuffers {
+    pub fn new() -> Self {
+        Self::with_threads(1)
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        ExecBuffers {
+            cur: Vec::new(),
+            spare: Vec::new(),
+            patches: Vec::new(),
+            gemm: kn::GemmScratchPool::new(),
+            saved: Vec::new(),
+            free: Vec::new(),
+            threads: threads.max(1),
+        }
+    }
+
+    /// `(ptr, capacity)` of every arena buffer, sorted — two calls with
+    /// only reused (never reallocated) buffers in between return the
+    /// same fingerprint. The zero-allocation regression test keys on
+    /// this; sorting makes it insensitive to ping-pong swaps.
+    pub fn arena_fingerprint(&self) -> Vec<(usize, usize)> {
+        let mut fp = vec![
+            (self.cur.as_ptr() as usize, self.cur.capacity()),
+            (self.spare.as_ptr() as usize, self.spare.capacity()),
+            (self.patches.as_ptr() as usize, self.patches.capacity()),
+        ];
+        self.gemm.fingerprint(&mut fp);
+        for b in &self.free {
+            fp.push((b.as_ptr() as usize, b.capacity()));
+        }
+        for s in &self.saved {
+            fp.push((s.data.as_ptr() as usize, s.data.capacity()));
+        }
+        fp.sort_unstable();
+        fp
+    }
+}
+
+impl Default for ExecBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Graph {
     pub ops: Vec<Op>,
     /// recognised family: "mlp" | "resnet" | "mobilenet"
     pub arch: String,
+    plan: Vec<Step>,
 }
 
 fn pidx(m: &FrozenModel, name: &str) -> Result<usize> {
@@ -180,6 +410,12 @@ fn parse_block(prefix: &str) -> Result<(usize, usize)> {
 }
 
 impl Graph {
+    /// Build a graph from an op list, compiling the fused execution plan.
+    pub fn new(ops: Vec<Op>, arch: &str) -> Graph {
+        let plan = compile(&ops);
+        Graph { ops, arch: arch.to_string(), plan }
+    }
+
     /// Rebuild the forward graph from qlayer/param names.
     pub fn from_model(m: &FrozenModel) -> Result<Graph> {
         let names: Vec<&str> =
@@ -209,7 +445,7 @@ impl Graph {
                 ops.push(Op::Relu);
             }
         }
-        Ok(Graph { ops, arch: "mlp".into() })
+        Ok(Graph::new(ops, "mlp"))
     }
 
     fn build_mobilenet(m: &FrozenModel) -> Result<Graph> {
@@ -232,7 +468,7 @@ impl Graph {
         }
         ops.push(Op::GlobalAvgPool);
         ops.push(Op::Dense { q: qidx(m, "fc")?, bias: pidx(m, "fc/b").ok() });
-        Ok(Graph { ops, arch: "mobilenet".into() })
+        Ok(Graph::new(ops, "mobilenet"))
     }
 
     fn build_resnet(m: &FrozenModel) -> Result<Graph> {
@@ -276,19 +512,15 @@ impl Graph {
         }
         ops.push(Op::GlobalAvgPool);
         ops.push(Op::Dense { q: qidx(m, "fc")?, bias: pidx(m, "fc/b").ok() });
-        Ok(Graph { ops, arch: "resnet".into() })
+        Ok(Graph::new(ops, "resnet"))
     }
 
-    /// Run a batch: `x` is NHWC `[batch, image]`, returns logits
-    /// `[batch, classes]`.
-    pub fn forward(
+    fn check_input(
         &self,
         m: &FrozenModel,
-        weights: &PreparedWeights,
         x: &[f32],
         batch: usize,
-        mode: KernelMode,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<(usize, usize, usize)> {
         if m.image.len() != 3 {
             return Err(anyhow!("model image shape {:?} not HWC", m.image));
         }
@@ -301,6 +533,282 @@ impl Graph {
                 batch * ih * iw * ic
             ));
         }
+        Ok((ih, iw, ic))
+    }
+
+    /// Run a batch: `x` is NHWC `[batch, image]`, returns logits
+    /// `[batch, classes]`.
+    ///
+    /// Convenience wrapper that builds a throwaway [`ExecBuffers`];
+    /// steady-state callers (the serving tier) hold a per-worker arena
+    /// and call [`Graph::forward_into`] instead.
+    pub fn forward(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+    ) -> Result<Vec<f32>> {
+        if mode == KernelMode::LutV1 {
+            return self.forward_v1(m, weights, x, batch, KernelMode::LutV1);
+        }
+        let mut bufs = ExecBuffers::new();
+        let logits = self.forward_into(m, weights, x, batch, mode, &mut bufs)?;
+        Ok(logits.to_vec())
+    }
+
+    /// The v2 executor: run a batch through the compiled plan entirely
+    /// inside `bufs`. After the first (warm-up) call with a given batch
+    /// shape, subsequent calls perform no heap allocation on the LUT
+    /// path. Returns the logits slice `[batch, classes]` borrowed from
+    /// the arena — valid until the next call.
+    pub fn forward_into<'a>(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+        bufs: &'a mut ExecBuffers,
+    ) -> Result<&'a [f32]> {
+        let (ih, iw, ic) = self.check_input(m, x, batch)?;
+        if mode == KernelMode::LutV1 {
+            // route the baseline engine through the same entry point so
+            // the serving tier can A/B the two engines per config
+            let v = self.forward_v1(m, weights, x, batch, mode)?;
+            bufs.cur.clear();
+            bufs.cur.extend_from_slice(&v);
+            return Ok(&bufs.cur[..]);
+        }
+        if mode == KernelMode::DequantF32 && !weights.has_dequantized(m) {
+            return Err(anyhow!(
+                "dequantized f32 weights not prepared (LUT-only working \
+                 set); build with PreparedWeights::new"
+            ));
+        }
+        let ExecBuffers { cur, spare, patches, gemm, saved, free, threads } =
+            bufs;
+        let threads = *threads;
+        cur.clear();
+        cur.extend_from_slice(x);
+        let (mut h, mut w, mut c) = (ih, iw, ic);
+        for st in &self.plan {
+            match st {
+                Step::Flatten => {
+                    c = h * w * c;
+                    h = 1;
+                    w = 1;
+                }
+                Step::Dense { q, ep } => {
+                    let l = &m.layers[*q];
+                    let (cin, cout) = (l.shape[0], l.shape[1]);
+                    let d = h * w * c;
+                    if d != cin {
+                        return Err(anyhow!(
+                            "{}: expected {cin} features, got {d}",
+                            l.name
+                        ));
+                    }
+                    run_gemm(
+                        m,
+                        weights,
+                        *q,
+                        cur,
+                        batch,
+                        cin,
+                        cout,
+                        spare,
+                        resolve_ep(m, weights, ep),
+                        mode,
+                        threads,
+                        gemm,
+                    );
+                    std::mem::swap(cur, spare);
+                    h = 1;
+                    w = 1;
+                    c = cout;
+                }
+                Step::Conv { q, stride, ep } => {
+                    let l = &m.layers[*q];
+                    if l.shape.len() != 4 {
+                        return Err(anyhow!(
+                            "{}: weight shape {:?} not HWIO",
+                            l.name,
+                            l.shape
+                        ));
+                    }
+                    let (ksize, cin, cout) =
+                        (l.shape[0], l.shape[2], l.shape[3]);
+                    if c != cin {
+                        return Err(anyhow!(
+                            "{}: expected {cin} channels, got {c}",
+                            l.name
+                        ));
+                    }
+                    let (oh, ow) = kn::im2col_into(
+                        cur, batch, h, w, cin, ksize, *stride, patches,
+                    );
+                    run_gemm(
+                        m,
+                        weights,
+                        *q,
+                        patches,
+                        batch * oh * ow,
+                        ksize * ksize * cin,
+                        cout,
+                        spare,
+                        resolve_ep(m, weights, ep),
+                        mode,
+                        threads,
+                        gemm,
+                    );
+                    std::mem::swap(cur, spare);
+                    h = oh;
+                    w = ow;
+                    c = cout;
+                }
+                Step::Depthwise { q, stride, ep } => {
+                    let l = &m.layers[*q];
+                    let (ksize, cc) = (l.shape[0], l.shape[3]);
+                    if c != cc {
+                        return Err(anyhow!(
+                            "{}: expected {cc} channels, got {c}",
+                            l.name
+                        ));
+                    }
+                    let ep = resolve_ep(m, weights, ep);
+                    let (oh, ow) = match mode {
+                        KernelMode::Lut => kn::lut_depthwise_into(
+                            cur,
+                            &weights.idx[*q],
+                            &l.codebook,
+                            batch,
+                            h,
+                            w,
+                            cc,
+                            ksize,
+                            *stride,
+                            ep,
+                            spare,
+                        ),
+                        KernelMode::DequantF32 => kn::depthwise_f32_into(
+                            cur,
+                            &weights.deq[*q],
+                            batch,
+                            h,
+                            w,
+                            cc,
+                            ksize,
+                            *stride,
+                            ep,
+                            spare,
+                        ),
+                        KernelMode::LutV1 => unreachable!(),
+                    };
+                    std::mem::swap(cur, spare);
+                    h = oh;
+                    w = ow;
+                }
+                Step::BatchNorm { gamma, beta, mean, var: _ } => {
+                    kn::batchnorm_pre(
+                        cur,
+                        &weights.bn_inv[*gamma],
+                        &m.params[*beta].data,
+                        &m.state[*mean].data,
+                        c,
+                    );
+                }
+                Step::Relu => kn::relu(cur),
+                Step::GlobalAvgPool => {
+                    kn::global_avg_pool_into(cur, batch, h, w, c, spare);
+                    std::mem::swap(cur, spare);
+                    h = 1;
+                    w = 1;
+                }
+                Step::PushResidual => {
+                    let mut buf = free.pop().unwrap_or_default();
+                    buf.clear();
+                    buf.extend_from_slice(cur);
+                    saved.push(Saved { data: buf, h, w, c });
+                }
+                Step::Downsample { q, stride, ep } => {
+                    let sv = saved.pop().ok_or_else(|| {
+                        anyhow!("downsample with empty stack")
+                    })?;
+                    let l = &m.layers[*q];
+                    let (ksize, cin, cout) =
+                        (l.shape[0], l.shape[2], l.shape[3]);
+                    if sv.c != cin {
+                        return Err(anyhow!(
+                            "{}: expected {cin} channels, got {}",
+                            l.name,
+                            sv.c
+                        ));
+                    }
+                    let (oh, ow) = kn::im2col_into(
+                        &sv.data, batch, sv.h, sv.w, cin, ksize, *stride,
+                        patches,
+                    );
+                    let mut buf = free.pop().unwrap_or_default();
+                    run_gemm(
+                        m,
+                        weights,
+                        *q,
+                        patches,
+                        batch * oh * ow,
+                        ksize * ksize * cin,
+                        cout,
+                        &mut buf,
+                        resolve_ep(m, weights, ep),
+                        mode,
+                        threads,
+                        gemm,
+                    );
+                    free.push(sv.data);
+                    saved.push(Saved { data: buf, h: oh, w: ow, c: cout });
+                }
+                Step::AddResidual => {
+                    let sv = saved.pop().ok_or_else(|| {
+                        anyhow!("residual add with empty stack")
+                    })?;
+                    if (sv.h, sv.w, sv.c) != (h, w, c) {
+                        let got = (sv.h, sv.w, sv.c);
+                        free.push(sv.data);
+                        return Err(anyhow!(
+                            "residual shape mismatch: {:?} vs {:?}",
+                            got,
+                            (h, w, c)
+                        ));
+                    }
+                    kn::add_inplace(cur, &sv.data);
+                    free.push(sv.data);
+                }
+            }
+        }
+        if !saved.is_empty() {
+            for s in saved.drain(..) {
+                free.push(s.data);
+            }
+            return Err(anyhow!("unbalanced residual stack"));
+        }
+        Ok(&cur[..batch * m.classes])
+    }
+
+    /// The PR-1 engine: per-op allocating executor over the naive v1
+    /// kernels (`KernelMode::LutV1`, or the f32 reference). Kept as the
+    /// measured baseline so `benches/inference.rs` and
+    /// `examples/mobilenet_deploy.rs` record the v1→v2 speedup on every
+    /// run.
+    pub fn forward_v1(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+    ) -> Result<Vec<f32>> {
+        let (ih, iw, ic) = self.check_input(m, x, batch)?;
         if mode == KernelMode::DequantF32 && !weights.has_dequantized(m) {
             return Err(anyhow!(
                 "dequantized f32 weights not prepared (LUT-only working \
@@ -310,7 +818,7 @@ impl Graph {
         let mut cur = Act { data: x.to_vec(), h: ih, w: iw, c: ic };
         let mut stack: Vec<Act> = Vec::new();
         for op in &self.ops {
-            cur = self.apply(op, m, weights, cur, batch, mode, &mut stack)?;
+            cur = self.apply_v1(op, m, weights, cur, batch, mode, &mut stack)?;
         }
         if !stack.is_empty() {
             return Err(anyhow!("unbalanced residual stack"));
@@ -319,7 +827,7 @@ impl Graph {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn apply(
+    fn apply_v1(
         &self,
         op: &Op,
         m: &FrozenModel,
@@ -337,7 +845,7 @@ impl Graph {
                 data: cur.data,
             }),
             Op::Conv { q, stride } => {
-                conv_apply(m, weights, q, stride, cur, batch, mode)
+                conv_apply_v1(m, weights, q, stride, cur, batch, mode)
             }
             Op::Depthwise { q, stride } => {
                 let l = &m.layers[q];
@@ -350,7 +858,7 @@ impl Graph {
                     ));
                 }
                 let (data, oh, ow) = match mode {
-                    KernelMode::Lut => kn::lut_depthwise(
+                    KernelMode::Lut | KernelMode::LutV1 => kn::lut_depthwise(
                         &cur.data,
                         &weights.idx[q],
                         &l.codebook,
@@ -386,7 +894,7 @@ impl Graph {
                 }
                 let mut out = vec![0.0f32; batch * cout];
                 match mode {
-                    KernelMode::Lut => kn::lut_matmul(
+                    KernelMode::Lut | KernelMode::LutV1 => kn::lut_matmul(
                         &cur.data,
                         &weights.idx[q],
                         &l.codebook,
@@ -441,7 +949,7 @@ impl Graph {
                     .pop()
                     .ok_or_else(|| anyhow!("downsample with empty stack"))?;
                 let mut short =
-                    conv_apply(m, weights, q, stride, saved, batch, mode)?;
+                    conv_apply_v1(m, weights, q, stride, saved, batch, mode)?;
                 kn::batchnorm(
                     &mut short.data,
                     &m.params[gamma].data,
@@ -550,7 +1058,70 @@ impl Graph {
     }
 }
 
-fn conv_apply(
+/// Resolve an [`EpSpec`]'s tensor indices to borrowed slices.
+fn resolve_ep<'a>(
+    m: &'a FrozenModel,
+    weights: &'a PreparedWeights,
+    ep: &EpSpec,
+) -> kn::Epilogue<'a> {
+    kn::Epilogue {
+        bias: ep.bias.map(|b| m.params[b].data.as_slice()),
+        bn: ep.bn.map(|(g, b, mm, _v)| kn::BnEp {
+            inv: weights.bn_inv[g].as_slice(),
+            beta: m.params[b].data.as_slice(),
+            mean: m.state[mm].data.as_slice(),
+        }),
+        relu: ep.relu,
+    }
+}
+
+/// One GEMM of the arena executor: sizes `out`, dispatches to the v2
+/// LUT kernel (epilogue fused) or the f32 reference (epilogue as a
+/// separate pass — identical values either way).
+#[allow(clippy::too_many_arguments)]
+fn run_gemm(
+    m: &FrozenModel,
+    weights: &PreparedWeights,
+    q: usize,
+    input: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut Vec<f32>,
+    ep: kn::Epilogue<'_>,
+    mode: KernelMode,
+    threads: usize,
+    gemm: &mut kn::GemmScratchPool,
+) {
+    let n = rows * cout;
+    if out.len() != n {
+        out.clear();
+        out.resize(n, 0.0);
+    }
+    match mode {
+        KernelMode::Lut => kn::lut_matmul_tiled(
+            input,
+            &weights.idx[q],
+            &m.layers[q].codebook,
+            rows,
+            cin,
+            cout,
+            out,
+            ep,
+            threads,
+            gemm,
+        ),
+        KernelMode::DequantF32 => {
+            out.fill(0.0);
+            kn::matmul_f32(input, &weights.deq[q], rows, cin, cout, out);
+            kn::epilogue_rows(out, cout, ep);
+        }
+        KernelMode::LutV1 => unreachable!("v1 mode routed to forward_v1"),
+    }
+}
+
+/// v1 conv lowering (im2col + naive GEMM), used by the legacy executor.
+fn conv_apply_v1(
     m: &FrozenModel,
     weights: &PreparedWeights,
     q: usize,
@@ -577,7 +1148,7 @@ fn conv_apply(
     let klen = ksize * ksize * cin;
     let mut out = vec![0.0f32; rows * cout];
     match mode {
-        KernelMode::Lut => kn::lut_matmul(
+        KernelMode::Lut | KernelMode::LutV1 => kn::lut_matmul(
             &patches,
             &weights.idx[q],
             &l.codebook,

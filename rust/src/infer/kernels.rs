@@ -14,10 +14,28 @@
 //! outputs agree bit-for-bit; parity tests assert ≤ 1e-5 to stay robust
 //! if either path is ever reordered (e.g. SIMD blocking).
 //!
+//! Two generations of the LUT-GEMM live here:
+//!
+//! * [`lut_matmul`] — the v1 kernel (PR 1): row-blocked, one output
+//!   channel at a time, allocates its transpose/accumulator scratch per
+//!   call. Kept as the measured baseline (`KernelMode::LutV1`).
+//! * [`lut_matmul_tiled`] — the v2 kernel: same row blocking, but
+//!   [`O_TILE`] output channels advance together so each transposed
+//!   activation load feeds 4 accumulator rows, the weight tile is
+//!   dequantized through the codebook once per (row-block, o-tile) into
+//!   a reused scratch tile, scratch lives in a caller-owned
+//!   [`GemmScratchPool`] (zero allocation in steady state), the
+//!   bias/batchnorm/relu epilogue is fused into the write-back
+//!   ([`Epilogue`]), and row blocks shard across `std::thread::scope`
+//!   workers above a work-size threshold (the `train/native.rs`
+//!   pattern). Per-(r, o) accumulation stays j-ascending, so v1, v2,
+//!   single- and multi-threaded runs are all bit-identical.
+//!
 //! Convs lower to im2col + GEMM: HWIO weights flattened over (kh, kw, cin)
 //! line up with patch rows extracted in the same order. Depthwise convs
 //! (one filter per channel, 9 taps) skip im2col and dequantize through the
-//! codebook in place.
+//! codebook in place; the fused epilogue is applied per output pixel right
+//! after its taps accumulate, while the row is cache-hot.
 
 /// TensorFlow/XLA "SAME" padding: output size and leading pad.
 pub fn same_pads(input: usize, ksize: usize, stride: usize) -> (usize, usize) {
@@ -27,7 +45,8 @@ pub fn same_pads(input: usize, ksize: usize, stride: usize) -> (usize, usize) {
     (out, pad_total / 2)
 }
 
-/// Extract SAME-padded conv patches.
+/// Extract SAME-padded conv patches (allocating wrapper over
+/// [`im2col_into`]).
 ///
 /// `x`: NHWC `[batch, h, w, c]`. Returns `(patches, oh, ow)` where
 /// `patches` is `[batch*oh*ow, ksize*ksize*c]` with the inner dimension
@@ -41,10 +60,29 @@ pub fn im2col(
     ksize: usize,
     stride: usize,
 ) -> (Vec<f32>, usize, usize) {
+    let mut patches = Vec::new();
+    let (oh, ow) = im2col_into(x, batch, h, w, c, ksize, stride, &mut patches);
+    (patches, oh, ow)
+}
+
+/// [`im2col`] into a caller-owned buffer: `patches` is resized (capacity
+/// reused in steady state) and zero-filled, so padding positions stay 0.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    patches: &mut Vec<f32>,
+) -> (usize, usize) {
     let (oh, pad_h) = same_pads(h, ksize, stride);
     let (ow, pad_w) = same_pads(w, ksize, stride);
     let row_len = ksize * ksize * c;
-    let mut patches = vec![0.0f32; batch * oh * ow * row_len];
+    patches.clear();
+    patches.resize(batch * oh * ow * row_len, 0.0);
     for b in 0..batch {
         let img = &x[b * h * w * c..(b + 1) * h * w * c];
         for oy in 0..oh {
@@ -69,13 +107,24 @@ pub fn im2col(
             }
         }
     }
-    (patches, oh, ow)
+    (oh, ow)
 }
 
 /// Row-block size of the LUT-GEMM: one weight fetch (1-byte index +
 /// codebook lookup) is amortised over this many activations. 128 rows of
 /// f32 stay comfortably inside L1 per operand.
 const ROW_BLOCK: usize = 128;
+
+/// Output-channel tile width of the v2 kernel: each transposed
+/// activation load feeds this many accumulator rows, and the weight tile
+/// dequantized per row block covers this many index rows.
+pub const O_TILE: usize = 4;
+
+/// Below this many MACs a GEMM runs single-shard: spawn/join costs tens
+/// of microseconds per shard, which dominates the few microseconds of
+/// math in small layers (same threshold philosophy as
+/// `train::native::PAR_MIN_MACS`).
+pub const GEMM_PAR_MIN_MACS: usize = 1 << 18;
 
 /// Transpose a row-major `[rows, cols]` index matrix to `[cols, rows]`
 /// (the LUT-GEMM weight layout: per-output index rows become contiguous).
@@ -90,7 +139,128 @@ pub fn transpose_idx(raw: &[u8], rows: usize, cols: usize) -> Vec<u8> {
     t
 }
 
-/// LUT-GEMM: `out[r, o] = Σ_j x[r, j] · codebook[idx_t[o, j]]`.
+/// Per-output-channel epilogue fused into the GEMM write-back: optional
+/// bias add, optional inference-mode batchnorm (with the `1/sqrt(var+ε)`
+/// factor precomputed once per layer, see [`bn_inv`]), optional relu —
+/// applied in exactly that order, which is the op order the unfused
+/// graph ran, so fused and unfused results are bit-identical.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    pub bias: Option<&'a [f32]>,
+    pub bn: Option<BnEp<'a>>,
+    pub relu: bool,
+}
+
+/// Batchnorm factors for [`Epilogue`]: `y = (x - mean) * inv + beta`.
+#[derive(Debug, Clone, Copy)]
+pub struct BnEp<'a> {
+    /// `gamma / sqrt(var + 1e-5)`, precomputed by [`bn_inv`]
+    pub inv: &'a [f32],
+    pub beta: &'a [f32],
+    pub mean: &'a [f32],
+}
+
+impl Epilogue<'_> {
+    /// Transform one accumulator value for output channel `o`.
+    #[inline]
+    pub fn apply(&self, mut v: f32, o: usize) -> f32 {
+        if let Some(b) = self.bias {
+            v += b[o];
+        }
+        if let Some(bn) = self.bn {
+            v = (v - bn.mean[o]) * bn.inv[o] + bn.beta[o];
+        }
+        if self.relu && v < 0.0 {
+            v = 0.0;
+        }
+        v
+    }
+
+    /// True when applying this epilogue is the identity.
+    pub fn is_noop(&self) -> bool {
+        self.bias.is_none() && self.bn.is_none() && !self.relu
+    }
+}
+
+/// Precompute the batchnorm scale `gamma / sqrt(var + 1e-5)` — the same
+/// expression [`batchnorm`] evaluates per call, hoisted to once per
+/// layer so the fused epilogue does no divides or sqrts per batch.
+pub fn bn_inv(gamma: &[f32], var: &[f32]) -> Vec<f32> {
+    var.iter()
+        .zip(gamma)
+        .map(|(&v, &g)| g / (v + 1e-5).sqrt())
+        .collect()
+}
+
+/// Apply an [`Epilogue`] as a standalone pass over `[rows, cout]` data
+/// (the reference path's unfused equivalent of the v2 write-back).
+pub fn epilogue_rows(x: &mut [f32], cout: usize, ep: Epilogue<'_>) {
+    if ep.is_noop() {
+        return;
+    }
+    debug_assert_eq!(x.len() % cout, 0);
+    for row in x.chunks_exact_mut(cout) {
+        for (o, v) in row.iter_mut().enumerate() {
+            *v = ep.apply(*v, o);
+        }
+    }
+}
+
+/// Per-shard scratch of the v2 LUT-GEMM: the transposed activation
+/// block, the o-tile accumulator block, and the dequantized weight tile.
+/// Grown on demand, never shrunk — steady-state calls allocate nothing.
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    xt: Vec<f32>,
+    acc: Vec<f32>,
+    wtile: Vec<f32>,
+}
+
+impl GemmScratch {
+    fn ensure(&mut self, block: usize, cin: usize) {
+        if self.xt.len() < block * cin {
+            self.xt.resize(block * cin, 0.0);
+        }
+        if self.acc.len() < O_TILE * block {
+            self.acc.resize(O_TILE * block, 0.0);
+        }
+        if self.wtile.len() < O_TILE * cin {
+            self.wtile.resize(O_TILE * cin, 0.0);
+        }
+    }
+}
+
+/// One [`GemmScratch`] per potential GEMM shard, owned by the caller
+/// (per serving worker) so threaded kernels stay allocation-free after
+/// warmup.
+#[derive(Debug, Default)]
+pub struct GemmScratchPool {
+    per_worker: Vec<GemmScratch>,
+}
+
+impl GemmScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure_workers(&mut self, n: usize) {
+        while self.per_worker.len() < n {
+            self.per_worker.push(GemmScratch::default());
+        }
+    }
+
+    /// Append `(ptr, capacity)` of every owned buffer — the arena
+    /// stability probe used by the zero-allocation tests.
+    pub fn fingerprint(&self, out: &mut Vec<(usize, usize)>) {
+        for s in &self.per_worker {
+            out.push((s.xt.as_ptr() as usize, s.xt.capacity()));
+            out.push((s.acc.as_ptr() as usize, s.acc.capacity()));
+            out.push((s.wtile.as_ptr() as usize, s.wtile.capacity()));
+        }
+    }
+}
+
+/// v1 LUT-GEMM: `out[r, o] = Σ_j x[r, j] · codebook[idx_t[o, j]]`.
 ///
 /// `idx_t` is the *transposed* weight index matrix, `[cout, cin]`
 /// (see [`transpose_idx`]); `out` (`[rows, cout]`) is fully overwritten.
@@ -103,6 +273,9 @@ pub fn transpose_idx(raw: &[u8], rows: usize, cols: usize) -> Vec<u8> {
 /// the inner loop stays a plain saxpy that vectorises. Per-(r, o)
 /// accumulation order is j-ascending, identical to [`matmul_f32`], so
 /// the two paths agree bit-for-bit.
+///
+/// This is the PR-1 kernel, kept as the measured baseline for
+/// [`lut_matmul_tiled`] (`benches/inference.rs` records the ratio).
 pub fn lut_matmul(
     x: &[f32],
     idx_t: &[u8],
@@ -149,7 +322,180 @@ pub fn lut_matmul(
     }
 }
 
-/// f32 reference GEMM with the same accumulation order as [`lut_matmul`].
+/// v2 LUT-GEMM: register-tiled, epilogue-fused, scratch-pooled, and row
+/// sharded across `threads` scoped workers when the work is big enough.
+///
+/// Same contract as [`lut_matmul`] (`idx_t` transposed `[cout, cin]`,
+/// `out` fully overwritten) plus:
+///
+/// * `ep` is applied per output value at write-back — bias/batchnorm/
+///   relu cost no extra pass over the activation tensor;
+/// * `pool` owns all scratch; after warmup no call allocates;
+/// * rows shard at fixed `rows.div_ceil(shards)` split points, and each
+///   (r, o) accumulates j-ascending regardless of sharding, so output
+///   is bit-identical to v1, to `matmul_f32` (+ unfused epilogue), and
+///   across thread counts.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul_tiled(
+    x: &[f32],
+    idx_t: &[u8],
+    codebook: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    threads: usize,
+    pool: &mut GemmScratchPool,
+) {
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(idx_t.len(), cin * cout);
+    debug_assert_eq!(out.len(), rows * cout);
+    debug_assert!(codebook.len() <= 256);
+    if rows == 0 {
+        return;
+    }
+    let shards = if rows * cin * cout < GEMM_PAR_MIN_MACS {
+        1
+    } else {
+        threads.clamp(1, rows)
+    };
+    pool.ensure_workers(shards);
+    if shards == 1 {
+        lut_matmul_shard(
+            x,
+            idx_t,
+            codebook,
+            rows,
+            cin,
+            cout,
+            out,
+            ep,
+            &mut pool.per_worker[0],
+        );
+        return;
+    }
+    let chunk = rows.div_ceil(shards);
+    std::thread::scope(|s| {
+        let mut out_rest = out;
+        let mut r0 = 0usize;
+        for sc in pool.per_worker[..shards].iter_mut() {
+            if r0 >= rows {
+                break;
+            }
+            let r1 = (r0 + chunk).min(rows);
+            let (o_head, o_tail) =
+                std::mem::take(&mut out_rest).split_at_mut((r1 - r0) * cout);
+            out_rest = o_tail;
+            let x_sh = &x[r0 * cin..r1 * cin];
+            s.spawn(move || {
+                lut_matmul_shard(
+                    x_sh,
+                    idx_t,
+                    codebook,
+                    r1 - r0,
+                    cin,
+                    cout,
+                    o_head,
+                    ep,
+                    sc,
+                );
+            });
+            r0 = r1;
+        }
+    });
+}
+
+/// One shard of the v2 kernel (the whole GEMM when single-threaded).
+#[allow(clippy::too_many_arguments)]
+fn lut_matmul_shard(
+    x: &[f32],
+    idx_t: &[u8],
+    codebook: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    scratch: &mut GemmScratch,
+) {
+    if rows == 0 {
+        return;
+    }
+    let block = ROW_BLOCK.min(rows);
+    scratch.ensure(block, cin);
+    let GemmScratch { xt, acc, wtile } = scratch;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = block.min(rows - r0);
+        // transpose the activation block to [cin, rb]
+        for rr in 0..rb {
+            let xrow = &x[(r0 + rr) * cin..(r0 + rr + 1) * cin];
+            for (j, &v) in xrow.iter().enumerate() {
+                xt[j * rb + rr] = v;
+            }
+        }
+        let mut o0 = 0usize;
+        while o0 < cout {
+            let ot = O_TILE.min(cout - o0);
+            // dequantize the weight tile once per (row-block, o-tile):
+            // the codebook is never re-indexed in the accumulation loop
+            for oo in 0..ot {
+                let irow = &idx_t[(o0 + oo) * cin..(o0 + oo + 1) * cin];
+                let wrow = &mut wtile[oo * cin..(oo + 1) * cin];
+                for (w, &ix) in wrow.iter_mut().zip(irow) {
+                    *w = codebook[ix as usize];
+                }
+            }
+            acc[..ot * rb].fill(0.0);
+            if ot == O_TILE {
+                // full tile: one activation load feeds 4 accumulators
+                let (a0, rest) = acc.split_at_mut(rb);
+                let (a1, rest) = rest.split_at_mut(rb);
+                let (a2, rest) = rest.split_at_mut(rb);
+                let a3 = &mut rest[..rb];
+                for j in 0..cin {
+                    let w0 = wtile[j];
+                    let w1 = wtile[cin + j];
+                    let w2 = wtile[2 * cin + j];
+                    let w3 = wtile[3 * cin + j];
+                    let xr = &xt[j * rb..(j + 1) * rb];
+                    for (rr, &xv) in xr.iter().enumerate() {
+                        a0[rr] += w0 * xv;
+                        a1[rr] += w1 * xv;
+                        a2[rr] += w2 * xv;
+                        a3[rr] += w3 * xv;
+                    }
+                }
+            } else {
+                // cout tail: v1-shaped accumulation, still j-ascending
+                for oo in 0..ot {
+                    let arow = &mut acc[oo * rb..(oo + 1) * rb];
+                    let wrow = &wtile[oo * cin..(oo + 1) * cin];
+                    for (j, &w) in wrow.iter().enumerate() {
+                        let xr = &xt[j * rb..(j + 1) * rb];
+                        for (a, &xv) in arow.iter_mut().zip(xr) {
+                            *a += w * xv;
+                        }
+                    }
+                }
+            }
+            // transposed write-back with the fused epilogue
+            for oo in 0..ot {
+                let o = o0 + oo;
+                let arow = &acc[oo * rb..(oo + 1) * rb];
+                for (rr, &v) in arow.iter().enumerate() {
+                    out[(r0 + rr) * cout + o] = ep.apply(v, o);
+                }
+            }
+            o0 += ot;
+        }
+        r0 += rb;
+    }
+}
+
+/// f32 reference GEMM with the same accumulation order as the LUT
+/// kernels. `out` must be zeroed by the caller (it accumulates).
 pub fn matmul_f32(
     x: &[f32],
     w: &[f32],
@@ -173,7 +519,8 @@ pub fn matmul_f32(
     }
 }
 
-/// Depthwise 2D conv (one `ksize×ksize` filter per channel), LUT weights.
+/// Depthwise 2D conv (one `ksize×ksize` filter per channel), LUT weights
+/// (allocating wrapper over [`lut_depthwise_into`], no epilogue).
 ///
 /// `idx` is the HWIO `(ksize, ksize, 1, c)` weight tensor flattened, i.e.
 /// tap (kh, kw) of channel `ch` lives at `(kh*ksize + kw) * c + ch`.
@@ -190,12 +537,47 @@ pub fn lut_depthwise(
     ksize: usize,
     stride: usize,
 ) -> (Vec<f32>, usize, usize) {
-    depthwise_impl(x, batch, h, w, c, ksize, stride, |tap, ch| {
+    let mut out = Vec::new();
+    let (oh, ow) = lut_depthwise_into(
+        x,
+        idx,
+        codebook,
+        batch,
+        h,
+        w,
+        c,
+        ksize,
+        stride,
+        Epilogue::default(),
+        &mut out,
+    );
+    (out, oh, ow)
+}
+
+/// Depthwise LUT conv into a caller-owned buffer, with the epilogue
+/// fused per output pixel (applied right after that pixel's taps
+/// accumulate, while the row is cache-hot).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_depthwise_into(
+    x: &[f32],
+    idx: &[u8],
+    codebook: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    ep: Epilogue<'_>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    depthwise_into_impl(x, batch, h, w, c, ksize, stride, ep, out, |tap, ch| {
         codebook[idx[tap * c + ch] as usize]
     })
 }
 
-/// f32 reference depthwise conv; `wflat` is the flattened HWIO tensor.
+/// f32 reference depthwise conv; `wflat` is the flattened HWIO tensor
+/// (allocating wrapper, no epilogue).
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_f32(
     x: &[f32],
@@ -207,13 +589,43 @@ pub fn depthwise_f32(
     ksize: usize,
     stride: usize,
 ) -> (Vec<f32>, usize, usize) {
-    depthwise_impl(x, batch, h, w, c, ksize, stride, |tap, ch| {
+    let mut out = Vec::new();
+    let (oh, ow) = depthwise_f32_into(
+        x,
+        wflat,
+        batch,
+        h,
+        w,
+        c,
+        ksize,
+        stride,
+        Epilogue::default(),
+        &mut out,
+    );
+    (out, oh, ow)
+}
+
+/// f32 depthwise conv into a caller-owned buffer with a fused epilogue.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_f32_into(
+    x: &[f32],
+    wflat: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    ep: Epilogue<'_>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    depthwise_into_impl(x, batch, h, w, c, ksize, stride, ep, out, |tap, ch| {
         wflat[tap * c + ch]
     })
 }
 
 #[allow(clippy::too_many_arguments)]
-fn depthwise_impl<F: Fn(usize, usize) -> f32>(
+fn depthwise_into_impl<F: Fn(usize, usize) -> f32>(
     x: &[f32],
     batch: usize,
     h: usize,
@@ -221,16 +633,20 @@ fn depthwise_impl<F: Fn(usize, usize) -> f32>(
     c: usize,
     ksize: usize,
     stride: usize,
+    ep: Epilogue<'_>,
+    out: &mut Vec<f32>,
     weight: F,
-) -> (Vec<f32>, usize, usize) {
+) -> (usize, usize) {
     let (oh, pad_h) = same_pads(h, ksize, stride);
     let (ow, pad_w) = same_pads(w, ksize, stride);
-    let mut out = vec![0.0f32; batch * oh * ow * c];
+    out.clear();
+    out.resize(batch * oh * ow * c, 0.0);
     for b in 0..batch {
         let img = &x[b * h * w * c..(b + 1) * h * w * c];
         for oy in 0..oh {
             for ox in 0..ow {
                 let o0 = ((b * oh + oy) * ow + ox) * c;
+                let orow = &mut out[o0..o0 + c];
                 for kh in 0..ksize {
                     let iy = (oy * stride + kh) as isize - pad_h as isize;
                     if iy < 0 || iy >= h as isize {
@@ -244,15 +660,22 @@ fn depthwise_impl<F: Fn(usize, usize) -> f32>(
                         }
                         let src = ((iy as usize) * w + ix as usize) * c;
                         let tap = kh * ksize + kw;
-                        for ch in 0..c {
-                            out[o0 + ch] += img[src + ch] * weight(tap, ch);
+                        for (ch, v) in orow.iter_mut().enumerate() {
+                            *v += img[src + ch] * weight(tap, ch);
                         }
+                    }
+                }
+                // epilogue after the full tap accumulation — identical
+                // values to a separate pass, but the row is still in L1
+                if !ep.is_noop() {
+                    for (ch, v) in orow.iter_mut().enumerate() {
+                        *v = ep.apply(*v, ch);
                     }
                 }
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
 /// Add a per-output bias row-wise: `x[r, o] += bias[o]`.
@@ -274,13 +697,21 @@ pub fn batchnorm(
     var: &[f32],
     c: usize,
 ) {
-    debug_assert_eq!(x.len() % c, 0);
     // same epsilon as the python layer framework (layers.py batchnorm)
-    let inv: Vec<f32> = var
-        .iter()
-        .zip(gamma)
-        .map(|(&v, &g)| g / (v + 1e-5).sqrt())
-        .collect();
+    let inv = bn_inv(gamma, var);
+    batchnorm_pre(x, &inv, beta, mean, c);
+}
+
+/// Batchnorm with the scale already precomputed by [`bn_inv`] — the
+/// allocation-free standalone form the arena executor uses.
+pub fn batchnorm_pre(
+    x: &mut [f32],
+    inv: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    c: usize,
+) {
+    debug_assert_eq!(x.len() % c, 0);
     for row in x.chunks_exact_mut(c) {
         for ch in 0..c {
             row[ch] = (row[ch] - mean[ch]) * inv[ch] + beta[ch];
@@ -304,7 +735,8 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
     }
 }
 
-/// NHWC global average pool: `[batch, h, w, c]` → `[batch, c]`.
+/// NHWC global average pool: `[batch, h, w, c]` → `[batch, c]`
+/// (allocating wrapper over [`global_avg_pool_into`]).
 pub fn global_avg_pool(
     x: &[f32],
     batch: usize,
@@ -312,7 +744,22 @@ pub fn global_avg_pool(
     w: usize,
     c: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; batch * c];
+    let mut out = Vec::new();
+    global_avg_pool_into(x, batch, h, w, c, &mut out);
+    out
+}
+
+/// Global average pool into a caller-owned buffer.
+pub fn global_avg_pool_into(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(batch * c, 0.0);
     let hw = (h * w) as f32;
     for b in 0..batch {
         let acc = &mut out[b * c..(b + 1) * c];
@@ -326,7 +773,6 @@ pub fn global_avg_pool(
             *v /= hw;
         }
     }
-    out
 }
 
 /// Index of the largest finite-comparable logit, first-max on ties.
@@ -416,6 +862,21 @@ mod tests {
         (out, oh, ow)
     }
 
+    /// (idx_t, codebook, dequantized w) for a random `[cin, cout]` layer.
+    fn quantized_layer(
+        cin: usize,
+        cout: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+        let wraw = randvec(cin * cout, seed);
+        let q = KQuantileGauss.fit(&wraw, k);
+        let idx: Vec<u8> = wraw.iter().map(|&v| q.bin(v) as u8).collect();
+        let wq: Vec<f32> =
+            idx.iter().map(|&i| q.levels[i as usize]).collect();
+        (transpose_idx(&idx, cin, cout), q.levels.clone(), wq)
+    }
+
     #[test]
     fn same_pads_match_tf() {
         // stride 1: full padding, output = input
@@ -448,20 +909,34 @@ mod tests {
     }
 
     #[test]
+    fn im2col_into_reuses_and_matches() {
+        let (batch, h, w, cin, k) = (2usize, 6, 5, 3, 3);
+        let x = randvec(batch * h * w * cin, 21);
+        let mut buf = Vec::new();
+        for stride in [1usize, 2, 1] {
+            let (want, oh, ow) = im2col(&x, batch, h, w, cin, k, stride);
+            let (oh2, ow2) =
+                im2col_into(&x, batch, h, w, cin, k, stride, &mut buf);
+            assert_eq!((oh, ow), (oh2, ow2));
+            assert_eq!(buf, want, "stride {stride}");
+        }
+        // steady state: same shape again must not reallocate
+        let ptr = buf.as_ptr();
+        let cap = buf.capacity();
+        im2col_into(&x, batch, h, w, cin, k, 1, &mut buf);
+        assert_eq!((buf.as_ptr(), buf.capacity()), (ptr, cap));
+    }
+
+    #[test]
     fn lut_matmul_matches_f32_exactly() {
         // rows > ROW_BLOCK to cover the blocked path and the tail block
         for (rows, cin, cout) in [(4usize, 32usize, 16usize), (300, 17, 5)] {
             let x = randvec(rows * cin, 3 + rows as u64);
-            let wraw = randvec(cin * cout, 4 + rows as u64);
-            let q = KQuantileGauss.fit(&wraw, 16);
-            let idx: Vec<u8> =
-                wraw.iter().map(|&v| q.bin(v) as u8).collect();
-            let wq: Vec<f32> =
-                idx.iter().map(|&i| q.levels[i as usize]).collect();
-            let idx_t = transpose_idx(&idx, cin, cout);
+            let (idx_t, levels, wq) =
+                quantized_layer(cin, cout, 16, 4 + rows as u64);
             let mut lut = vec![0.0f32; rows * cout];
             let mut refr = vec![0.0f32; rows * cout];
-            lut_matmul(&x, &idx_t, &q.levels, rows, cin, cout, &mut lut);
+            lut_matmul(&x, &idx_t, &levels, rows, cin, cout, &mut lut);
             matmul_f32(&x, &wq, rows, cin, cout, &mut refr);
             assert_eq!(
                 lut, refr,
@@ -469,6 +944,95 @@ mod tests {
                  ({rows}x{cin}x{cout})"
             );
         }
+    }
+
+    #[test]
+    fn tiled_lut_matmul_bit_identical_to_v1_and_threads() {
+        // shapes cover: single row, o-tile tail (cout % 4 != 0), row-block
+        // tail, and one shape big enough to clear GEMM_PAR_MIN_MACS so
+        // the scoped-thread path actually engages
+        for (rows, cin, cout) in
+            [(1usize, 27usize, 16usize), (300, 17, 5), (257, 64, 33)]
+        {
+            let x = randvec(rows * cin, 40 + rows as u64);
+            let (idx_t, levels, _) =
+                quantized_layer(cin, cout, 16, 41 + rows as u64);
+            let mut v1 = vec![0.0f32; rows * cout];
+            lut_matmul(&x, &idx_t, &levels, rows, cin, cout, &mut v1);
+            for threads in [1usize, 2, 3, 8] {
+                let mut pool = GemmScratchPool::new();
+                let mut v2 = vec![0.0f32; rows * cout];
+                lut_matmul_tiled(
+                    &x,
+                    &idx_t,
+                    &levels,
+                    rows,
+                    cin,
+                    cout,
+                    &mut v2,
+                    Epilogue::default(),
+                    threads,
+                    &mut pool,
+                );
+                assert_eq!(
+                    v2, v1,
+                    "{rows}x{cin}x{cout} t={threads}: v2 drifted from v1"
+                );
+                // repeated run through the warmed pool: same bits
+                let mut again = vec![0.0f32; rows * cout];
+                lut_matmul_tiled(
+                    &x,
+                    &idx_t,
+                    &levels,
+                    rows,
+                    cin,
+                    cout,
+                    &mut again,
+                    Epilogue::default(),
+                    threads,
+                    &mut pool,
+                );
+                assert_eq!(again, v2, "non-deterministic across runs");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_passes_bitwise() {
+        let (rows, cin, cout) = (70usize, 19usize, 11usize);
+        let x = randvec(rows * cin, 50);
+        let (idx_t, levels, _) = quantized_layer(cin, cout, 8, 51);
+        let bias = randvec(cout, 52);
+        let gamma = randvec(cout, 53);
+        let beta = randvec(cout, 54);
+        let mean = randvec(cout, 55);
+        let var: Vec<f32> = randvec(cout, 56).iter().map(|v| v * v).collect();
+
+        // reference: v1 GEMM then the three standalone passes
+        let mut want = vec![0.0f32; rows * cout];
+        lut_matmul(&x, &idx_t, &levels, rows, cin, cout, &mut want);
+        bias_add(&mut want, &bias, rows, cout);
+        batchnorm(&mut want, &gamma, &beta, &mean, &var, cout);
+        relu(&mut want);
+
+        let inv = bn_inv(&gamma, &var);
+        let ep = Epilogue {
+            bias: Some(&bias),
+            bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
+            relu: true,
+        };
+        let mut pool = GemmScratchPool::new();
+        let mut got = vec![0.0f32; rows * cout];
+        lut_matmul_tiled(
+            &x, &idx_t, &levels, rows, cin, cout, &mut got, ep, 1, &mut pool,
+        );
+        assert_eq!(got, want, "fused epilogue drifted from separate passes");
+
+        // and the standalone epilogue_rows pass agrees too
+        let mut raw = vec![0.0f32; rows * cout];
+        lut_matmul(&x, &idx_t, &levels, rows, cin, cout, &mut raw);
+        epilogue_rows(&mut raw, cout, ep);
+        assert_eq!(raw, want);
     }
 
     #[test]
@@ -520,6 +1084,37 @@ mod tests {
         let (a, _, _) = lut_depthwise(&x, &idx, &q.levels, batch, h, w, c, k, 2);
         let (b, _, _) = depthwise_f32(&x, &wq, batch, h, w, c, k, 2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_depthwise_epilogue_matches_separate_passes() {
+        let (batch, h, w, c, k) = (2usize, 6, 6, 5, 3);
+        let x = randvec(batch * h * w * c, 60);
+        let wraw = randvec(k * k * c, 61);
+        let q = KQuantileGauss.fit(&wraw, 8);
+        let idx: Vec<u8> = wraw.iter().map(|&v| q.bin(v) as u8).collect();
+        let gamma = randvec(c, 62);
+        let beta = randvec(c, 63);
+        let mean = randvec(c, 64);
+        let var: Vec<f32> = randvec(c, 65).iter().map(|v| v * v).collect();
+
+        let (mut want, oh, ow) =
+            lut_depthwise(&x, &idx, &q.levels, batch, h, w, c, k, 2);
+        batchnorm(&mut want, &gamma, &beta, &mean, &var, c);
+        relu(&mut want);
+
+        let inv = bn_inv(&gamma, &var);
+        let ep = Epilogue {
+            bias: None,
+            bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
+            relu: true,
+        };
+        let mut got = Vec::new();
+        let (oh2, ow2) = lut_depthwise_into(
+            &x, &idx, &q.levels, batch, h, w, c, k, 2, ep, &mut got,
+        );
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(got, want, "fused depthwise epilogue drifted");
     }
 
     #[test]

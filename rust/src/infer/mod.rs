@@ -13,6 +13,13 @@
 //! forward pass) → `serve` (dynamic batching, latency accounting).
 //! `synthetic` provides manifest-faithful random models so everything
 //! here runs without AOT artifacts.
+//!
+//! The hot path is the v2 engine (`KernelMode::Lut`): register-tiled,
+//! epilogue-fused LUT-GEMM over a per-worker [`ExecBuffers`] arena —
+//! zero heap allocation per batch in steady state. The PR-1 engine
+//! survives as `KernelMode::LutV1` so every benchmark run records the
+//! v1→v2 speedup instead of trusting a number written down once
+//! (DESIGN §9).
 
 pub mod codebook;
 pub mod graph;
@@ -22,6 +29,6 @@ pub mod serve;
 pub mod synthetic;
 
 pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
-pub use graph::{Graph, KernelMode, PreparedWeights};
+pub use graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
 pub use packed::PackedBits;
 pub use serve::{Reply, ServeConfig, ServeModel, ServeStats, Server};

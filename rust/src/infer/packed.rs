@@ -69,7 +69,53 @@ impl PackedBits {
 
     /// Decode the whole vector (the kernels' working-set form).
     pub fn unpack(&self) -> Vec<u8> {
-        (0..self.len).map(|i| self.get(i)).collect()
+        let mut out = Vec::with_capacity(self.len);
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-owned buffer — allocation-free once `out`
+    /// has capacity (`out` is cleared first, capacity reused).
+    ///
+    /// Byte-aligned widths take branch-free fast paths instead of the
+    /// generic per-index shift register: 8-bit is a straight copy,
+    /// 4-bit emits two indices per byte, 2-bit four, 1-bit eight (all
+    /// LSB-first, matching [`PackedBits::get`]). The straddling widths
+    /// (3/5/6/7-bit) fall back to the generic path; roundtrip tests pin
+    /// every width 1–8 against it.
+    pub fn unpack_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        // the fast paths emit whole bytes' worth of indices before the
+        // final truncate, so reserve the decoded-byte bound, not `len`
+        out.reserve((self.data.len() * 8) / self.bits.max(1) as usize);
+        match self.bits {
+            8 => out.extend_from_slice(&self.data[..self.len]),
+            4 => {
+                for &b in &self.data {
+                    out.push(b & 0x0f);
+                    out.push(b >> 4);
+                }
+                out.truncate(self.len);
+            }
+            2 => {
+                for &b in &self.data {
+                    out.push(b & 3);
+                    out.push((b >> 2) & 3);
+                    out.push((b >> 4) & 3);
+                    out.push(b >> 6);
+                }
+                out.truncate(self.len);
+            }
+            1 => {
+                for &b in &self.data {
+                    for k in 0..8 {
+                        out.push((b >> k) & 1);
+                    }
+                }
+                out.truncate(self.len);
+            }
+            _ => out.extend((0..self.len).map(|i| self.get(i))),
+        }
     }
 
     /// Packed payload size in bytes.
@@ -146,6 +192,55 @@ mod tests {
             assert_eq!(p.get(1), 0, "bits {bits}: k masks to 0");
             assert_eq!(p.get(2), good, "bits {bits}: right neighbour");
             assert_eq!(p.get(3), good, "bits {bits}: 0xff masks to max");
+        }
+    }
+
+    /// The satellite roundtrip: for every width 1–8, `unpack_into`
+    /// (fast paths included) must agree index-for-index with the
+    /// generic bit-by-bit `get` path, across lengths that land on and
+    /// off byte boundaries.
+    #[test]
+    fn unpack_into_matches_generic_get_all_widths() {
+        let mut rng = Rng::new(23);
+        let mut out = Vec::new();
+        for bits in 1..=8u8 {
+            for len in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 255, 1000] {
+                let vals: Vec<u8> = (0..len)
+                    .map(|_| (rng.next_u32() & ((1u32 << bits) - 1)) as u8)
+                    .collect();
+                let p = PackedBits::pack(&vals, bits);
+                let generic: Vec<u8> = (0..p.len).map(|i| p.get(i)).collect();
+                p.unpack_into(&mut out);
+                assert_eq!(out, generic, "bits {bits} len {len}");
+                assert_eq!(out, vals, "bits {bits} len {len}: roundtrip");
+                assert_eq!(p.unpack(), vals, "bits {bits} len {len}");
+            }
+        }
+    }
+
+    /// `unpack_into` reuses the buffer: after warmup, repeated decodes
+    /// of the same layer never reallocate (the serving working-set
+    /// rebuild path relies on this).
+    #[test]
+    fn unpack_into_reuses_capacity() {
+        let mut rng = Rng::new(29);
+        for bits in [1u8, 2, 3, 4, 8] {
+            let vals: Vec<u8> = (0..777)
+                .map(|_| (rng.next_u32() & ((1u32 << bits) - 1)) as u8)
+                .collect();
+            let p = PackedBits::pack(&vals, bits);
+            let mut out = Vec::new();
+            p.unpack_into(&mut out);
+            let (ptr, cap) = (out.as_ptr(), out.capacity());
+            for _ in 0..3 {
+                p.unpack_into(&mut out);
+                assert_eq!(out, vals, "bits {bits}");
+            }
+            assert_eq!(
+                (out.as_ptr(), out.capacity()),
+                (ptr, cap),
+                "bits {bits}: buffer reallocated on reuse"
+            );
         }
     }
 

@@ -6,6 +6,18 @@
 //! runs the LUT graph. No async runtime: a bounded hand-off over std
 //! channels is all the backpressure this pipeline needs, mirroring
 //! `data::Batcher`'s prefetcher design.
+//!
+//! Hot-path discipline (the v2 serving tier):
+//!
+//! * each worker owns an [`ExecBuffers`] arena and a reusable input
+//!   buffer, so a steady-state batch allocates only the `Reply` payloads
+//!   it hands to clients — nothing inside the forward pass;
+//! * replies are sent **before** the stats mutex is even acquired, so a
+//!   held or contended stats lock can never delay reply delivery or let
+//!   one worker's bookkeeping serialize another's clients;
+//! * a batch larger than [`MIN_SHARD`]·workers-worth of images is split
+//!   into independent chunks on the shared queue, so idle workers steal
+//!   their share instead of watching one worker grind a 64-image batch.
 
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -14,7 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::codebook::FrozenModel;
-use super::graph::{Graph, KernelMode, PreparedWeights};
+use super::graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
 use crate::util::bench::{fmt_ns, percentile};
 use crate::util::json::{num, obj, s, Json};
 
@@ -48,6 +60,11 @@ impl ServeModel {
     }
 }
 
+/// Don't split a coalesced batch into shards smaller than this many
+/// images: a shard must amortise its per-batch fixed costs (im2col
+/// setup, reply wiring) or the split costs more than it steals back.
+const MIN_SHARD: usize = 8;
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub workers: usize,
@@ -55,6 +72,10 @@ pub struct ServeConfig {
     /// how long the collector waits for a batch to fill
     pub max_wait: Duration,
     pub mode: KernelMode,
+    /// row-shard threads inside each worker's LUT-GEMM (1 = serial;
+    /// under load the worker pool is the better parallelism knob, so
+    /// this matters mostly for low-concurrency latency)
+    pub kernel_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -68,6 +89,7 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             mode: KernelMode::Lut,
+            kernel_threads: 1,
         }
     }
 }
@@ -79,7 +101,7 @@ pub struct Reply {
     pub logits: Vec<f32>,
     /// enqueue-to-reply latency
     pub latency: Duration,
-    /// size of the batch this request rode in
+    /// size of the batch (after any split) this request rode in
     pub batch: usize,
 }
 
@@ -118,6 +140,7 @@ impl Server {
 
         let max_batch = cfg.max_batch.max(1);
         let max_wait = cfg.max_wait;
+        let n_workers = cfg.workers.max(1);
         let collector = thread::spawn(move || {
             loop {
                 let Ok(first) = req_rx.recv() else { return };
@@ -135,22 +158,43 @@ impl Server {
                         }
                     }
                 }
-                if batch_tx.send(batch).is_err() || !open {
+                // split a large batch into independent near-equal chunks
+                // on the shared queue, so idle workers pick up their
+                // share (work-stealing-friendly hand-off)
+                let shards =
+                    n_workers.min(batch.len() / MIN_SHARD).max(1);
+                let chunk = batch.len().div_ceil(shards);
+                let mut rest = batch;
+                while rest.len() > chunk {
+                    let tail = rest.split_off(chunk);
+                    if batch_tx.send(rest).is_err() {
+                        return;
+                    }
+                    rest = tail;
+                }
+                if batch_tx.send(rest).is_err() || !open {
                     return;
                 }
             }
         });
 
-        let mut workers = Vec::with_capacity(cfg.workers.max(1));
-        for _ in 0..cfg.workers.max(1) {
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
             let rx = Arc::clone(&batch_rx);
             let sm = Arc::clone(&model);
             let acc = Arc::clone(&acc);
             let mode = cfg.mode;
-            workers.push(thread::spawn(move || loop {
-                let msg = { rx.lock().unwrap().recv() };
-                let Ok(batch) = msg else { return };
-                serve_batch(&sm, &batch, mode, &acc);
+            let kernel_threads = cfg.kernel_threads.max(1);
+            workers.push(thread::spawn(move || {
+                // per-worker arena: after the first batch the forward
+                // pass allocates nothing (DESIGN §9)
+                let mut bufs = ExecBuffers::with_threads(kernel_threads);
+                let mut xbuf: Vec<f32> = Vec::new();
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    let Ok(batch) = msg else { return };
+                    serve_batch(&sm, &batch, mode, &acc, &mut bufs, &mut xbuf);
+                }
             }));
         }
 
@@ -201,6 +245,8 @@ fn serve_batch(
     batch: &[Request],
     mode: KernelMode,
     acc: &Arc<Mutex<StatsAcc>>,
+    bufs: &mut ExecBuffers,
+    xbuf: &mut Vec<f32>,
 ) {
     let img_len = sm.image_len();
     // submit() validates sizes; this is defence against direct enqueue.
@@ -225,19 +271,36 @@ fn serve_batch(
         return;
     }
     let n = kept.len();
-    let mut x = Vec::with_capacity(n * img_len);
+    xbuf.clear();
     for r in &kept {
-        x.extend_from_slice(&r.image);
+        xbuf.extend_from_slice(&r.image);
     }
-    let logits =
-        match sm.graph.forward(&sm.model, &sm.weights, &x, n, mode) {
-            Ok(l) => l,
-            Err(e) => {
-                eprintln!("serve: batch of {n} failed: {e:#}");
-                return; // reply senders drop; clients observe RecvError
-            }
-        };
+    let logits = match sm
+        .graph
+        .forward_into(&sm.model, &sm.weights, xbuf, n, mode, bufs)
+    {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: batch of {n} failed: {e:#}");
+            return; // reply senders drop; clients observe RecvError
+        }
+    };
     let classes = sm.model.classes;
+    // replies leave BEFORE the stats mutex is touched: the client-facing
+    // path never waits on bookkeeping. (Regression-tested: replies must
+    // arrive even while the stats lock is held by someone else.)
+    let mut lat_ns = Vec::with_capacity(n);
+    for (i, r) in kept.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let latency = r.t0.elapsed();
+        lat_ns.push(latency.as_nanos() as f64);
+        let _ = r.reply.send(Reply {
+            pred: super::kernels::argmax(row),
+            logits: row.to_vec(),
+            latency,
+            batch: n,
+        });
+    }
     let now = Instant::now();
     let mut a = acc.lock().unwrap();
     // busy window: earliest enqueue in this batch -> completion, so a
@@ -248,17 +311,7 @@ fn serve_batch(
     a.last = Some(now);
     a.batch_sizes.push(n);
     a.images += n;
-    for (i, r) in kept.iter().enumerate() {
-        let row = &logits[i * classes..(i + 1) * classes];
-        let latency = r.t0.elapsed();
-        a.latencies_ns.push(latency.as_nanos() as f64);
-        let _ = r.reply.send(Reply {
-            pred: super::kernels::argmax(row),
-            logits: row.to_vec(),
-            latency,
-            batch: n,
-        });
-    }
+    a.latencies_ns.extend_from_slice(&lat_ns);
 }
 
 /// Aggregate serving statistics.
@@ -345,21 +398,23 @@ mod tests {
     use crate::infer::synthetic;
     use crate::util::rng::Rng;
 
-    fn tiny_server(mode: KernelMode) -> (Arc<ServeModel>, Server) {
+    fn tiny_server_cfg(cfg: ServeConfig) -> (Arc<ServeModel>, Server) {
         let (m, st) = synthetic::mlp(32, 10, 7);
         let frozen = FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
             .unwrap();
         let sm = Arc::new(ServeModel::new(frozen).unwrap());
-        let srv = Server::start(
-            Arc::clone(&sm),
-            ServeConfig {
-                workers: 2,
-                max_batch: 8,
-                max_wait: Duration::from_millis(1),
-                mode,
-            },
-        );
+        let srv = Server::start(Arc::clone(&sm), cfg);
         (sm, srv)
+    }
+
+    fn tiny_server(mode: KernelMode) -> (Arc<ServeModel>, Server) {
+        tiny_server_cfg(ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            mode,
+            kernel_threads: 1,
+        })
     }
 
     #[test]
@@ -389,6 +444,23 @@ mod tests {
         assert!(stats.batches >= 3, "max_batch 8 => at least 3 batches");
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.p50_ms <= stats.p99_ms);
+    }
+
+    /// The v1 engine serves through the same tier (the benchmark
+    /// baseline path) and produces the same logits as v2.
+    #[test]
+    fn v1_engine_serves_and_matches_v2() {
+        let (sm, srv) = tiny_server(KernelMode::LutV1);
+        let mut rng = Rng::new(5);
+        let img_len = sm.image_len();
+        let img: Vec<f32> = (0..img_len).map(|_| rng.normal()).collect();
+        let reply = srv.submit(img.clone()).unwrap().recv().unwrap();
+        let v2 = sm
+            .graph
+            .forward(&sm.model, &sm.weights, &img, 1, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(reply.logits, v2, "v1 and v2 engines disagree");
+        assert_eq!(srv.shutdown().requests, 1);
     }
 
     #[test]
@@ -443,21 +515,15 @@ mod tests {
 
     #[test]
     fn single_batch_run_reports_positive_throughput() {
-        let (m, st) = synthetic::mlp(32, 10, 7);
-        let frozen =
-            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
-                .unwrap();
-        let sm = Arc::new(ServeModel::new(frozen).unwrap());
-        // generous wait so all 4 requests coalesce into exactly one batch
-        let srv = Server::start(
-            Arc::clone(&sm),
-            ServeConfig {
-                workers: 1,
-                max_batch: 8,
-                max_wait: Duration::from_millis(250),
-                mode: KernelMode::Lut,
-            },
-        );
+        // generous wait so all 4 requests coalesce into exactly one
+        // batch; 4 < MIN_SHARD so the splitter leaves it whole too
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(250),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
         let handles: Vec<_> = (0..4)
             .map(|_| srv.submit(vec![0.1; sm.image_len()]).unwrap())
             .collect();
@@ -470,6 +536,69 @@ mod tests {
             stats.throughput_rps > 0.0,
             "single-batch run must still report throughput"
         );
+    }
+
+    /// The satellite regression test: reply delivery must not depend on
+    /// the stats mutex. The test thread holds the `StatsAcc` lock (a
+    /// stand-in for any slow stats consumer or contended bookkeeping)
+    /// while requests are serving; with replies sent outside the lock
+    /// every reply still arrives. Under the old send-under-the-mutex
+    /// code each worker sat on the lock while replying, so the recvs
+    /// below timed out. max_batch 1 with workers == requests makes the
+    /// schedule deterministic: each worker serves exactly one batch and
+    /// then blocks on the (held) lock, after its reply is out.
+    #[test]
+    fn replies_flow_while_stats_lock_is_held() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 4,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
+        let guard = srv.acc.lock().unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| srv.submit(vec![0.2; sm.image_len()]).unwrap())
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            h.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| {
+                panic!(
+                    "request {i}: reply blocked behind the stats mutex"
+                )
+            });
+        }
+        // stats were NOT recorded yet — the lock is still ours
+        assert_eq!(guard.images, 0, "stats recorded before lock released");
+        drop(guard);
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 4, "stats must catch up after release");
+        assert_eq!(stats.batches, 4);
+    }
+
+    /// A large coalesced batch splits into chunks that idle workers pick
+    /// up independently.
+    #[test]
+    fn large_batch_splits_across_idle_workers() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 4,
+            max_batch: 64,
+            max_wait: Duration::from_secs(2),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
+        let handles: Vec<_> = (0..64)
+            .map(|_| srv.submit(vec![0.3; sm.image_len()]).unwrap())
+            .collect();
+        for h in handles {
+            let reply = h.recv().unwrap();
+            assert_eq!(
+                reply.batch, 16,
+                "64-image batch should split into 4 chunks of 16"
+            );
+        }
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 64);
+        assert_eq!(stats.batches, 4, "one chunk per worker");
     }
 
     #[test]

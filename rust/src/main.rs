@@ -475,7 +475,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         max_wait: std::time::Duration::from_micros(
             (cli.get_f32("max-wait-ms", 2.0) * 1e3) as u64,
         ),
-        mode: KernelMode::Lut,
+        // --engine v1 serves through the PR-1 engine (A/B baseline);
+        // reject unknown values so a typo can't silently record v2
+        // numbers as the v1 baseline
+        mode: match cli.get("engine").unwrap_or("v2") {
+            "v1" => KernelMode::LutV1,
+            "v2" => KernelMode::Lut,
+            other => {
+                return Err(anyhow!(
+                    "unknown --engine '{other}' (expected v1 or v2)"
+                ))
+            }
+        },
+        kernel_threads: cli.get_usize("kernel-threads", 1),
     };
     let n = cli.get_usize("requests", 2048);
     println!(

@@ -12,8 +12,8 @@ use uniq::coordinator::FreezeQuant;
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
 use uniq::infer::{
-    kernels, synthetic, FrozenModel, Graph, KernelMode, PreparedWeights,
-    ServeConfig, ServeModel, Server,
+    kernels, synthetic, ExecBuffers, FrozenModel, Graph, KernelMode,
+    PreparedWeights, ServeConfig, ServeModel, Server,
 };
 use uniq::quant::{KQuantileGauss, QuantizerFit};
 use uniq::runtime::{Manifest, ModelState};
@@ -94,6 +94,151 @@ fn graph_forward_lut_matches_f32_all_archs() {
         assert!(
             lut.iter().all(|v| v.is_finite()),
             "{name}: non-finite logits"
+        );
+    }
+}
+
+/// The v2 tiled/threaded LUT-GEMM is bit-identical to the v1 kernel,
+/// to a single-threaded v2 run, and across repeated runs (the split
+/// points are a pure function of (rows, threads), so a fixed config can
+/// never produce two different outputs).
+#[test]
+fn threaded_lut_gemm_is_deterministic_and_matches_v1() {
+    // big enough to clear the parallel work-size threshold
+    let (rows, cin, cout) = (320usize, 72usize, 40usize);
+    assert!(rows * cin * cout >= uniq::infer::kernels::GEMM_PAR_MIN_MACS);
+    let x = randvec(rows * cin, 71);
+    let w = randvec(cin * cout, 72);
+    let q = KQuantileGauss.fit(&w, 16);
+    let idx: Vec<u8> = w.iter().map(|&v| q.bin(v) as u8).collect();
+    let idx_t = kernels::transpose_idx(&idx, cin, cout);
+
+    let mut v1 = vec![0.0f32; rows * cout];
+    kernels::lut_matmul(&x, &idx_t, &q.levels, rows, cin, cout, &mut v1);
+
+    let mut single = vec![0.0f32; rows * cout];
+    let mut pool = kernels::GemmScratchPool::new();
+    kernels::lut_matmul_tiled(
+        &x,
+        &idx_t,
+        &q.levels,
+        rows,
+        cin,
+        cout,
+        &mut single,
+        kernels::Epilogue::default(),
+        1,
+        &mut pool,
+    );
+    assert_eq!(single, v1, "v2 single-thread drifted from v1");
+
+    for threads in [2usize, 4, 7] {
+        for run in 0..3 {
+            let mut got = vec![0.0f32; rows * cout];
+            let mut pool = kernels::GemmScratchPool::new();
+            kernels::lut_matmul_tiled(
+                &x,
+                &idx_t,
+                &q.levels,
+                rows,
+                cin,
+                cout,
+                &mut got,
+                kernels::Epilogue::default(),
+                threads,
+                &mut pool,
+            );
+            assert_eq!(
+                got, single,
+                "threads={threads} run={run}: threaded output drifted"
+            );
+        }
+    }
+}
+
+/// Whole-graph bit-identity between the engines: the v2 arena executor
+/// (fused epilogues, tiled kernels, any thread count) reproduces the
+/// PR-1 engine's logits exactly, on every architecture.
+#[test]
+fn graph_v2_engine_bit_identical_to_v1_engine() {
+    let data = SynthDataset::generate(SynthConfig {
+        n: 8,
+        ..Default::default()
+    });
+    let batch = Batcher::eval_batches(&data, 8).remove(0);
+    for (name, width) in
+        [("mlp", 16usize), ("resnet8", 8), ("mobilenet_mini", 16)]
+    {
+        let (m, state) = synthetic::model(name, width, 10, 31).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let graph = Graph::from_model(&frozen).unwrap();
+        let weights = PreparedWeights::new(&frozen, &graph);
+        let v1 = graph
+            .forward(&frozen, &weights, &batch.x, batch.n, KernelMode::LutV1)
+            .unwrap();
+        let v2 = graph
+            .forward(&frozen, &weights, &batch.x, batch.n, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(v2, v1, "{name}: v2 engine drifted from v1");
+        // multi-threaded arena run: same bits again
+        let mut bufs = ExecBuffers::with_threads(4);
+        let mt = graph
+            .forward_into(
+                &frozen,
+                &weights,
+                &batch.x,
+                batch.n,
+                KernelMode::Lut,
+                &mut bufs,
+            )
+            .unwrap();
+        assert_eq!(mt, &v1[..], "{name}: threaded arena run drifted");
+    }
+}
+
+/// The acceptance-criterion test: after warmup, `forward_into` on the
+/// LUT path reuses every arena buffer verbatim — no per-batch heap
+/// allocation in steady-state serving. Asserted via the (ptr, capacity)
+/// fingerprint of the whole arena.
+#[test]
+fn steady_state_lut_serving_reuses_the_arena() {
+    for (name, width) in
+        [("mlp", 16usize), ("resnet8", 8), ("mobilenet_mini", 16)]
+    {
+        let (m, state) = synthetic::model(name, width, 10, 37).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let graph = Graph::from_model(&frozen).unwrap();
+        // deployment working set: LUT-only, like a serving worker
+        let weights = PreparedWeights::lut_only(&frozen, &graph);
+        let img_len: usize = frozen.image.iter().product();
+        let batch = 8usize;
+        let x = randvec(batch * img_len, 41);
+        let mut bufs = ExecBuffers::new();
+        // warmup: grow every buffer to its steady-state size
+        for _ in 0..2 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::Lut, &mut bufs,
+                )
+                .unwrap();
+        }
+        let fp = bufs.arena_fingerprint();
+        assert!(!fp.is_empty());
+        for _ in 0..6 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::Lut, &mut bufs,
+                )
+                .unwrap();
+        }
+        assert_eq!(
+            bufs.arena_fingerprint(),
+            fp,
+            "{name}: arena reallocated in steady state"
         );
     }
 }
@@ -198,6 +343,7 @@ fn serve_end_to_end_parity() {
             max_batch: 16,
             max_wait: Duration::from_millis(1),
             mode: KernelMode::Lut,
+            kernel_threads: 1,
         },
     );
     let img_len = sm.image_len();
