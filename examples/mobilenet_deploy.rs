@@ -4,7 +4,10 @@
 //! inference engine* (`uniq::infer`) — codebook-indexed kernels behind a
 //! batched request queue, no PJRT on the request path — and compare the
 //! measured throughput against the dequantized-f32 reference and the
-//! analytic deployment cost in BOPs. Emits `BENCH_inference.json`.
+//! analytic deployment cost in BOPs. Also drives the replica-set router
+//! (1 vs 3 replicas at equal total workers, one replica killed and
+//! health-restarted mid-run: zero dropped requests, bit-identical
+//! outputs). Emits `BENCH_inference.json`.
 //!
 //!     cargo run --release --offline --example mobilenet_deploy [-- fast]
 //!
@@ -15,13 +18,14 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use uniq::bops::{mobilenet224, BitConfig};
 use uniq::coordinator::{FreezeQuant, SchedulePolicy, TrainConfig, Trainer};
 use uniq::data::synth::{SynthConfig, SynthDataset};
-use uniq::data::Batcher;
+use uniq::data::{Batcher, Dataset};
 use uniq::infer::{
-    synthetic, FrozenModel, KernelMode, ServeConfig, ServeModel, Server,
+    synthetic, FleetStats, FrozenModel, KernelMode, Reply, Router,
+    RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
 };
 use uniq::runtime::Engine;
 use uniq::util::bench::Bench;
@@ -172,6 +176,13 @@ fn main() -> Result<()> {
         serve_v2.throughput_rps, serve_v1.throughput_rps
     );
 
+    // ---- replica-set router: the same batch-1 traffic through one
+    //      replica and through a 3-replica fleet at equal TOTAL worker
+    //      count, with one fleet replica killed mid-run. Zero dropped
+    //      requests and bit-identical outputs are asserted, not hoped
+    //      for; the throughput ratio is recorded into the bench JSON.
+    let fleet_json = fleet_ab(&sm, &val, if fast { 300 } else { 1200 })?;
+
     // ---- LUT vs dequantized-f32 vs PJRT at batch 1 / 8 / 32 / 64
     // (32 is the AOT variants' native batch — the only size the
     // fixed-batch PJRT executable can join the comparison at)
@@ -287,6 +298,7 @@ fn main() -> Result<()> {
         ("serve_v1", serve_v1.to_json()),
         ("serve", serve_v2.to_json()),
         ("serve_v2_vs_v1_throughput", num(serve_speedup)),
+        ("fleet", fleet_json),
     ]);
     std::fs::write("BENCH_inference.json", report.to_string())?;
     println!("[written] BENCH_inference.json");
@@ -312,4 +324,103 @@ fn main() -> Result<()> {
          the paper reports 66.0% vs 68.2% top-1 (Table 1)."
     );
     Ok(())
+}
+
+/// 1-vs-3-replica router A/B at equal total worker count, with replica 1
+/// killed (and health-restarted) halfway through the fleet run. Asserts
+/// zero dropped requests and bit-identical outputs vs single-replica
+/// serving; returns the JSON block recorded under `fleet` in
+/// `BENCH_inference.json`.
+fn fleet_ab(sm: &Arc<ServeModel>, val: &Dataset, n: usize) -> Result<Json> {
+    let total_workers = 3usize;
+    let mut runs: Vec<(usize, FleetStats, Vec<Reply>)> = Vec::new();
+    for replicas in [1usize, 3] {
+        let router = Router::start(
+            Arc::clone(sm),
+            RouterConfig {
+                replicas,
+                policy: RoutingPolicy::PowerOfTwo,
+                queue_cap: 8192,
+                health_every: Duration::from_millis(5),
+                max_retries: 6,
+                seed: 41,
+                serve: ServeConfig {
+                    workers: (total_workers / replicas).max(1),
+                    max_batch: 1, // batch-1 traffic: front-door bound
+                    max_wait: Duration::ZERO,
+                    mode: KernelMode::Lut,
+                    kernel_threads: 1,
+                },
+            },
+        );
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            if replicas == 3 && i == n / 2 {
+                // chaos drill: replica 1 dies with requests in flight;
+                // heal_now makes the restart deterministic (the monitor
+                // thread would catch it within health_every anyway)
+                router.kill_replica(1);
+                router.heal_now();
+            }
+            pending.push(router.submit(val.image(i % val.n))?);
+        }
+        let mut replies = Vec::with_capacity(n);
+        for (i, p) in pending.into_iter().enumerate() {
+            replies.push(
+                p.recv()
+                    .map_err(|e| anyhow!("request {i} dropped: {e}"))?,
+            );
+        }
+        let stats = router.shutdown();
+        println!("router x{replicas} ({total_workers} workers total):");
+        stats.print();
+        runs.push((replicas, stats, replies));
+    }
+    let (_, single_stats, single_replies) = &runs[0];
+    let (_, fleet_stats, fleet_replies) = &runs[1];
+    // zero dropped requests was enforced request-by-request by the `?`
+    // above; now the outputs themselves: any replica must serve the
+    // exact bits the single replica serves (shared read-only model +
+    // thread-count-invariant kernels)
+    let identical = single_replies
+        .iter()
+        .zip(fleet_replies)
+        .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+    assert!(
+        identical,
+        "fleet outputs diverged from single-replica serving"
+    );
+    assert!(
+        fleet_stats.restarts >= 1,
+        "killed replica was never restarted"
+    );
+    let ratio = if single_stats.fleet.throughput_rps > 0.0 {
+        fleet_stats.fleet.throughput_rps / single_stats.fleet.throughput_rps
+    } else {
+        0.0
+    };
+    println!(
+        "fleet: 3 replicas {:.0} img/s vs 1 replica {:.0} img/s \
+         ({ratio:.2}x at equal total workers; {} restart(s), {} \
+         resubmit(s), zero drops)\n",
+        fleet_stats.fleet.throughput_rps,
+        single_stats.fleet.throughput_rps,
+        fleet_stats.restarts,
+        fleet_stats.resubmits
+    );
+    Ok(obj(vec![
+        ("total_workers", num(total_workers as f64)),
+        ("requests", num(n as f64)),
+        ("traffic", s("batch-1")),
+        ("policy", s("power-of-two")),
+        ("kill_mid_run", s("replica 1 killed at n/2 on the fleet run")),
+        ("single", single_stats.fleet.to_json()),
+        ("fleet3", fleet_stats.fleet.to_json()),
+        ("fleet_3x_vs_1x_throughput", num(ratio)),
+        ("restarts", num(fleet_stats.restarts as f64)),
+        ("resubmits", num(fleet_stats.resubmits as f64)),
+        ("lost_in_flight", num(fleet_stats.lost_in_flight as f64)),
+        ("zero_dropped", Json::Bool(true)),
+        ("bit_identical_vs_single", Json::Bool(identical)),
+    ]))
 }

@@ -1,0 +1,155 @@
+"""Tests for the perf-regression gate (python/tools/bench_compare.py).
+
+The gate math runs on synthetic fixture reports, so these tests are
+deterministic and need no Rust toolchain: fail on a hard throughput
+regression, warn inside the soft band, refuse to "pass" when the
+comparison cannot run at all.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(
+    0,
+    os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "tools")
+    ),
+)
+
+import bench_compare  # noqa: E402
+
+
+def report(medians, nested=False):
+    """A util::bench-shaped report: {..., all_runs: {benchmarks: {...}}}."""
+    table = {
+        name: {"median_ns": ns, "p10_ns": ns, "p90_ns": ns, "iters": 10}
+        for name, ns in medians.items()
+    }
+    body = {"group": "inference", "benchmarks": table}
+    if nested:
+        # bench tables can sit anywhere in the tree (models[..] etc.)
+        return {"bench": "inference", "models": [{"all_runs": body}]}
+    return {"bench": "inference", "all_runs": body}
+
+
+def write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return p
+
+
+def run(cur, base, *flags):
+    return bench_compare.main(
+        ["bench_compare", str(cur), str(base), *flags]
+    )
+
+
+BASE = {"m/lut/b1": 1_000_000.0, "m/lut/b64": 8_000_000.0}
+
+
+def test_parity_passes_with_and_without_gate(tmp_path):
+    cur = write(tmp_path, "cur.json", report(BASE))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base) == 0
+    assert run(cur, base, "--fail-below", "0.7") == 0
+
+
+def test_hard_regression_fails_only_when_gating(tmp_path):
+    # 2x slower on one key: relative throughput 0.5 < 0.7
+    slow = dict(BASE, **{"m/lut/b1": 2_000_000.0})
+    cur = write(tmp_path, "cur.json", report(slow))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base) == 0, "legacy mode stays warn-only"
+    assert run(cur, base, "--fail-below", "0.7") == 1
+
+
+def test_soft_band_warns_but_passes(tmp_path, capsys):
+    # 15% slower: relative throughput ~0.87 — inside (0.7, 0.9)
+    mild = dict(BASE, **{"m/lut/b64": 8_000_000.0 * 1.15})
+    cur = write(tmp_path, "cur.json", report(mild))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7", "--warn-below", "0.9") == 0
+    out = capsys.readouterr().out
+    assert "WARN" in out
+    assert "FAIL" not in out
+
+
+def test_faster_than_baseline_never_flags(tmp_path, capsys):
+    fast = {k: v / 3 for k, v in BASE.items()}
+    cur = write(tmp_path, "cur.json", report(fast))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "WARN" not in out and "FAIL" not in out
+
+
+def test_missing_baseline_fails_the_gate_but_not_legacy(tmp_path, capsys):
+    cur = write(tmp_path, "cur.json", report(BASE))
+    missing = tmp_path / "nope.json"
+    assert run(cur, missing) == 0
+    assert run(cur, missing, "--fail-below", "0.7") == 1
+    assert "record a baseline" in capsys.readouterr().out
+
+
+def test_missing_current_fails_the_gate_but_not_legacy(tmp_path):
+    base = write(tmp_path, "base.json", report(BASE))
+    missing = tmp_path / "nope.json"
+    assert run(missing, base) == 0
+    assert run(missing, base, "--fail-below", "0.7") == 1
+
+
+def test_zero_overlap_fails_the_gate(tmp_path):
+    cur = write(tmp_path, "cur.json", report({"renamed/key": 1e6}))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base) == 0
+    assert run(cur, base, "--fail-below", "0.7") == 1
+
+
+def test_nested_tables_are_harvested(tmp_path):
+    cur = write(tmp_path, "cur.json", report(BASE, nested=True))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+
+
+def test_collect_medians_walks_any_nesting():
+    tree = {
+        "a": [{"benchmarks": {"x": {"median_ns": 5.0}}}],
+        "b": {"c": {"benchmarks": {"y": {"median_ns": 7.0}}}},
+        "benchmarks": {"z": {"median_ns": 9.0}},
+    }
+    assert bench_compare.collect_medians(tree) == {
+        "x": 5.0,
+        "y": 7.0,
+        "z": 9.0,
+    }
+
+
+def test_inverted_thresholds_are_rejected(tmp_path):
+    cur = write(tmp_path, "cur.json", report(BASE))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert (
+        run(cur, base, "--fail-below", "0.9", "--warn-below", "0.5") == 2
+    )
+
+
+@pytest.mark.parametrize(
+    "slowdown,code",
+    [(1.5, 1), (1.45, 1), (1.35, 0), (1.0, 0)],
+    ids=["rel0.67-fail", "rel0.69-fail", "rel0.74-warn", "parity"],
+)
+def test_30pct_throughput_regression_boundary(tmp_path, slowdown, code):
+    """The CI contract: a >30% *throughput* regression (current
+    throughput < 0.7x baseline, i.e. median more than ~1.43x slower)
+    fails with --fail-below 0.7; milder slowdowns warn or pass."""
+    cur = write(
+        tmp_path,
+        "cur.json",
+        report({k: v * slowdown for k, v in BASE.items()}),
+    )
+    base = write(tmp_path, "base.json", report(BASE))
+    want = 1 if 1.0 / slowdown < 0.7 else 0
+    assert want == code  # fixture self-check
+    assert run(cur, base, "--fail-below", "0.7") == code

@@ -1,17 +1,28 @@
 #!/usr/bin/env python3
-"""Warn-only benchmark comparison: current BENCH json vs committed baseline.
+"""Benchmark comparison and perf-regression gate vs the committed baseline.
 
 Usage:
-    python python/tools/bench_compare.py BENCH_inference.json \
-        rust/benches/baseline/BENCH_inference.json
+    python python/tools/bench_compare.py BENCH_inference.json \\
+        rust/benches/baseline/BENCH_inference.json \\
+        [--fail-below R] [--warn-below S]
 
 Walks both reports for ``{"benchmarks": {name: {"median_ns": ...}}}``
-tables (the ``util::bench`` report shape, nested anywhere) and prints a
-per-benchmark ratio. A benchmark >15% slower than baseline is flagged
-with WARN — but the exit code is always 0: this is a visibility tool for
-PR logs, not a gate (micro-benchmarks on shared CI runners are too noisy
-to block on; the committed baseline exists so regressions are *seen*,
-with the human deciding).
+tables (the ``util::bench`` report shape, nested anywhere) and prints,
+per shared benchmark, the *relative throughput*
+``baseline_median_ns / current_median_ns`` — 1.0 is parity, below 1.0 is
+slower than baseline.
+
+Modes:
+
+* default (no ``--fail-below``): the historical warn-only visibility
+  tool — always exits 0; regressions are printed for the PR log.
+* gate (``--fail-below R``): exits 1 when any compared key's relative
+  throughput drops below ``R`` (0.7 = a >30% throughput regression), and
+  ALSO when the gate cannot run at all — missing current report, missing
+  baseline, or zero overlapping benchmark names. A gate that silently
+  compares nothing is the failure mode this flag exists to kill.
+* ``--warn-below S`` (default 0.9): soft threshold — keys below ``S``
+  but at/above the hard threshold print WARN without failing the build.
 
 To (re)record the baseline on a quiet machine:
     cargo bench --bench inference
@@ -19,11 +30,10 @@ To (re)record the baseline on a quiet machine:
     cp BENCH_inference.json rust/benches/baseline/
 """
 
+import argparse
 import json
 import sys
 from pathlib import Path
-
-SLOWDOWN_WARN = 1.15
 
 
 def collect_medians(node, prefix=""):
@@ -44,52 +54,128 @@ def collect_medians(node, prefix=""):
     return found
 
 
+def record_recipe(current_path, baseline_path):
+    print("bench-compare: record a baseline with:")
+    print("    cargo bench --bench inference")
+    print(f"    mkdir -p {baseline_path.parent}")
+    print(f"    cp {current_path} {baseline_path}")
+
+
 def main(argv):
-    if len(argv) != 3:
-        print(__doc__)
-        return 0
-    current_path, baseline_path = Path(argv[1]), Path(argv[2])
-    if not current_path.exists():
-        print(f"bench-compare: {current_path} missing (bench not run?) "
-              "— nothing to compare")
-        return 0
-    if not baseline_path.exists():
-        print(f"bench-compare: no committed baseline at {baseline_path}")
-        print("bench-compare: record one with:")
-        print("    cargo bench --bench inference")
-        print(f"    mkdir -p {baseline_path.parent}")
-        print(f"    cp {current_path} {baseline_path}")
+    ap = argparse.ArgumentParser(
+        prog="bench_compare",
+        description=(
+            "compare a BENCH json against the committed baseline; "
+            "warn-only unless --fail-below is given"
+        ),
+    )
+    ap.add_argument("current", type=Path)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument(
+        "--fail-below",
+        type=float,
+        default=None,
+        metavar="R",
+        help="gate: exit 1 when any key's relative throughput "
+        "(baseline/current) is below R, e.g. 0.7 fails a >30%% "
+        "throughput regression",
+    )
+    ap.add_argument(
+        "--warn-below",
+        type=float,
+        default=0.9,
+        metavar="S",
+        help="soft threshold: flag WARN below S (default 0.9)",
+    )
+    args = ap.parse_args(argv[1:])
+    gating = args.fail_below is not None
+    hard = args.fail_below if gating else 0.0
+    if gating and args.warn_below < hard:
+        print(
+            f"bench-compare: --warn-below {args.warn_below} is below "
+            f"--fail-below {hard}; a warn threshold inside the fail "
+            "region can never fire"
+        )
+        return 2
+
+    def gate_skip(msg):
+        """A comparison that cannot run: fatal when gating, noise-free
+        otherwise."""
+        print(f"bench-compare: {msg}")
+        if gating:
+            print(
+                "bench-compare: FAIL — the perf gate (--fail-below "
+                f"{hard}) compared nothing"
+            )
+            return 1
         return 0
 
-    current = collect_medians(json.loads(current_path.read_text()))
-    baseline = collect_medians(json.loads(baseline_path.read_text()))
+    if not args.current.exists():
+        record_recipe(args.current, args.baseline)
+        return gate_skip(
+            f"{args.current} missing (bench not run?) — nothing to compare"
+        )
+    if not args.baseline.exists():
+        record_recipe(args.current, args.baseline)
+        return gate_skip(f"no committed baseline at {args.baseline}")
+
+    current = collect_medians(json.loads(args.current.read_text()))
+    baseline = collect_medians(json.loads(args.baseline.read_text()))
     shared = sorted(set(current) & set(baseline))
     if not shared:
-        print("bench-compare: no overlapping benchmark names "
-              f"({len(current)} current vs {len(baseline)} baseline)")
-        return 0
+        return gate_skip(
+            "no overlapping benchmark names "
+            f"({len(current)} current vs {len(baseline)} baseline)"
+        )
 
-    print(f"bench-compare: {len(shared)} benchmarks vs baseline "
-          f"({baseline_path})")
-    print(f"{'benchmark':<52} {'base ms':>10} {'now ms':>10} {'ratio':>7}")
-    warned = 0
+    mode = (
+        f"gate: fail below {hard:.2f}x, warn below {args.warn_below:.2f}x"
+        if gating
+        else f"warn-only below {args.warn_below:.2f}x"
+    )
+    print(
+        f"bench-compare: {len(shared)} benchmarks vs baseline "
+        f"({args.baseline}; {mode})"
+    )
+    print(
+        f"{'benchmark':<52} {'base ms':>10} {'now ms':>10} {'rel tput':>8}"
+    )
+    failed, warned = [], []
     for name in shared:
         base, now = baseline[name], current[name]
-        ratio = now / base if base > 0 else float("inf")
+        # relative throughput: >1 faster than baseline, <1 slower
+        rel = base / now if now > 0 else float("inf")
         flag = ""
-        if ratio > SLOWDOWN_WARN:
+        if gating and rel < hard:
+            flag = "  FAIL: regression beyond the hard threshold"
+            failed.append(name)
+        elif rel < args.warn_below:
             flag = "  WARN: slower than baseline"
-            warned += 1
-        print(f"{name:<52} {base / 1e6:>10.3f} {now / 1e6:>10.3f} "
-              f"{ratio:>6.2f}x{flag}")
+            warned.append(name)
+        print(
+            f"{name:<52} {base / 1e6:>10.3f} {now / 1e6:>10.3f} "
+            f"{rel:>7.2f}x{flag}"
+        )
     gone = sorted(set(baseline) - set(current))
     if gone:
-        print(f"bench-compare: {len(gone)} baseline benchmarks no longer "
-              f"run: {', '.join(gone[:8])}{'...' if len(gone) > 8 else ''}")
+        print(
+            f"bench-compare: {len(gone)} baseline benchmarks no longer "
+            f"run: {', '.join(gone[:8])}{'...' if len(gone) > 8 else ''}"
+        )
     if warned:
-        print(f"bench-compare: {warned} benchmark(s) >{SLOWDOWN_WARN:.2f}x "
-              "baseline (warn-only, not failing the build)")
-    else:
+        print(
+            f"bench-compare: {len(warned)} benchmark(s) below "
+            f"{args.warn_below:.2f}x relative throughput (warn-only)"
+        )
+    if failed:
+        print(
+            f"bench-compare: FAIL — {len(failed)} benchmark(s) below the "
+            f"{hard:.2f}x hard threshold: {', '.join(failed[:8])}"
+            f"{'...' if len(failed) > 8 else ''}"
+        )
+        record_recipe(args.current, args.baseline)
+        return 1
+    if not warned:
         print("bench-compare: no regressions beyond the warn threshold")
     return 0
 

@@ -1,15 +1,18 @@
 //! Native inference benchmarks: v2 LUT engine (tiled + fused + arena)
 //! vs the PR-1 v1 engine vs dequantized-f32 vs the PJRT eval step, at
 //! serving batch sizes 1 / 8 / 32 / 64, plus a kernel-level LUT-GEMM
-//! micro-benchmark and a serve-tier v1-vs-v2 A/B at equal worker count.
+//! micro-benchmark, a serve-tier v1-vs-v2 A/B at equal worker count and
+//! a router-tier 1-vs-3-replica A/B at equal TOTAL worker count.
 //! Emits `BENCH_inference.json` (machine-readable, `util::bench` stats).
 //!
 //! Runs everywhere: models are synthetic UNIQ-frozen replicas of the AOT
 //! variants; the PJRT column appears only when artifacts and a real xla
 //! backend are present (recorded as null otherwise, with the reason).
 //!
-//! CI uploads the JSON as an artifact and runs a warn-only comparison
-//! against the committed baseline (`python/tools/bench_compare.py`).
+//! CI uploads the JSON as an artifact and gates on
+//! `python/tools/bench_compare.py` against the committed baseline
+//! (`rust/benches/baseline/BENCH_inference.json`): fail below the hard
+//! throughput threshold, warn below the soft one.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -19,8 +22,8 @@ use uniq::coordinator::FreezeQuant;
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
 use uniq::infer::{
-    kernels, synthetic, ExecBuffers, FrozenModel, KernelMode, ServeConfig,
-    ServeModel, Server,
+    kernels, synthetic, ExecBuffers, FrozenModel, KernelMode, Router,
+    RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
 };
 use uniq::quant::{KQuantileGauss, QuantizerFit};
 use uniq::util::bench::Bench;
@@ -144,6 +147,72 @@ fn serve_ab(sm: &Arc<ServeModel>, img_len: usize, n_requests: usize) -> Json {
     ])
 }
 
+/// Router-tier A/B: identical batch-1 traffic through one replica with
+/// the whole worker budget vs a 3-replica fleet splitting the same
+/// budget — equal total worker count, so the recorded delta is the
+/// replicated front door (per-replica collectors/queues), not extra
+/// cores.
+fn router_fleet_ab(
+    sm: &Arc<ServeModel>,
+    img_len: usize,
+    n_requests: usize,
+) -> Json {
+    // worker budget divisible by the fleet size so the split is exact
+    let total_workers = if threads_avail() >= 6 { 6 } else { 3 };
+    let mut results = Vec::new();
+    for replicas in [1usize, 3] {
+        let router = Router::start(
+            Arc::clone(sm),
+            RouterConfig {
+                replicas,
+                policy: RoutingPolicy::PowerOfTwo,
+                queue_cap: 8192,
+                health_every: Duration::from_millis(5),
+                max_retries: 4,
+                seed: 23,
+                serve: ServeConfig {
+                    workers: (total_workers / replicas).max(1),
+                    max_batch: 1, // batch-1 traffic: front-door bound
+                    max_wait: Duration::ZERO,
+                    mode: KernelMode::Lut,
+                    kernel_threads: 1,
+                },
+            },
+        );
+        let mut rng = Rng::new(7);
+        let images: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+            .collect();
+        let pending: Vec<_> = (0..n_requests)
+            .map(|i| router.submit(&images[i % images.len()]).unwrap())
+            .collect();
+        for p in pending {
+            p.recv().expect("fleet reply");
+        }
+        let fleet = router.shutdown();
+        println!(
+            "router[x{replicas}] {total_workers} workers total: {:.0} \
+             img/s (p50 {:.2} ms)",
+            fleet.fleet.throughput_rps, fleet.fleet.p50_ms
+        );
+        results.push(fleet);
+    }
+    let one_rps = results[0].fleet.throughput_rps;
+    let three_rps = results[1].fleet.throughput_rps;
+    obj(vec![
+        ("total_workers", num(total_workers as f64)),
+        ("requests", num(n_requests as f64)),
+        ("policy", s("power-of-two")),
+        ("traffic", s("batch-1")),
+        ("replicas1", results[0].fleet.to_json()),
+        ("replicas3", results[1].fleet.to_json()),
+        (
+            "fleet_3x_vs_1x_throughput",
+            num(if one_rps > 0.0 { three_rps / one_rps } else { 0.0 }),
+        ),
+    ])
+}
+
 fn main() {
     let mut b = Bench::quick("inference");
     b.min_time = std::time::Duration::from_millis(400);
@@ -156,6 +225,7 @@ fn main() {
 
     let mut jmodels = Vec::new();
     let mut serve_json = Json::Null;
+    let mut fleet_json = Json::Null;
     for (name, width) in [("mobilenet_mini", 16usize), ("mlp", 16)] {
         let (m, state) = synthetic::model(name, width, 10, 7).unwrap();
         let frozen =
@@ -258,6 +328,7 @@ fn main() {
         }
         if name == "mobilenet_mini" {
             serve_json = serve_ab(&sm, data.image_len(), 512);
+            fleet_json = router_fleet_ab(&sm, data.image_len(), 512);
         }
         jmodels.push(obj(vec![
             ("model", s(name)),
@@ -273,6 +344,7 @@ fn main() {
         ("models", Json::Arr(jmodels)),
         ("kernel_micro", jkernel),
         ("serve_ab", serve_json),
+        ("router_fleet", fleet_json),
         ("all_runs", b.report_json()),
         (
             "note",

@@ -95,10 +95,17 @@ COMMANDS:
                                measured vs analytic BOPs (no PJRT)
   serve      --model M [--requests N --workers W --max-batch B
               --max-wait-ms T --kernel-threads K --engine v1|v2
+              --replicas R --routing rr|least|p2c --queue-cap Q
               --synth --width W --stats out.json]
                                batched native serving with latency stats
                                (v2: tiled/fused arena engine, default;
-                               v1: the PR-1 baseline engine)
+                               v1: the PR-1 baseline engine);
+                               --replicas R>1 serves through the
+                               replica-set router: health-checked
+                               replicas with automatic restart, typed
+                               backpressure at Q outstanding per replica,
+                               fleet-merged percentiles (--workers is the
+                               TOTAL worker count, split across replicas)
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

@@ -10,9 +10,11 @@
 //!
 //! Layer map: `codebook` (export + disk format) → `packed` (bit streams)
 //! → `kernels` (LUT-GEMM / convs + f32 reference) → `graph` (per-variant
-//! forward pass) → `serve` (dynamic batching, latency accounting).
-//! `synthetic` provides manifest-faithful random models so everything
-//! here runs without AOT artifacts.
+//! forward pass) → `serve` (dynamic batching, latency accounting) →
+//! `router` (replica set: routing policies, health-checked restarts,
+//! typed backpressure, fleet-merged stats). `synthetic` provides
+//! manifest-faithful random models so everything here runs without AOT
+//! artifacts.
 //!
 //! The hot path is the v2 engine (`KernelMode::Lut`): register-tiled,
 //! epilogue-fused LUT-GEMM over a per-worker [`ExecBuffers`] arena —
@@ -25,10 +27,16 @@ pub mod codebook;
 pub mod graph;
 pub mod kernels;
 pub mod packed;
+pub mod router;
 pub mod serve;
 pub mod synthetic;
 
 pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
 pub use graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
 pub use packed::PackedBits;
-pub use serve::{Reply, ServeConfig, ServeModel, ServeStats, Server};
+pub use router::{
+    FleetStats, Pending, Router, RouterConfig, RoutingPolicy, SubmitError,
+};
+pub use serve::{
+    RawServeStats, Reply, ServeConfig, ServeModel, ServeStats, Server,
+};

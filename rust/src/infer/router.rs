@@ -1,0 +1,875 @@
+//! Replica-set serving router: N [`Server`] replicas behind one front
+//! door.
+//!
+//! PR 3 scaled serving across one process's worker pool; this module is
+//! the next rung — "many replicas, one front door" — and the replica
+//! abstraction multi-host serving will later slot into (the `Replica`
+//! slot is exactly the surface a remote stub has to implement: submit,
+//! outstanding, alive, drain). Each replica is a full `Server` with its
+//! own collector, worker pool, arenas and `KernelMode`; all replicas
+//! share one read-only [`ServeModel`], so any replica serves any request
+//! bit-identically (the PR-3 thread-count invariance extends to replica
+//! count).
+//!
+//! Responsibilities, in the order a request meets them:
+//!
+//! * **Routing** ([`RoutingPolicy`]): round-robin, least-outstanding, or
+//!   queue-depth-aware power-of-two-choices over the replicas' lock-free
+//!   outstanding counters.
+//! * **Backpressure**: a bounded per-replica outstanding cap
+//!   (`queue_cap`); when every live replica is saturated the submit is
+//!   rejected with the *typed* [`SubmitError::Overloaded`] — callers can
+//!   tell "shed load" apart from "you sent garbage"
+//!   ([`SubmitError::BadRequest`]) and "the fleet is down"
+//!   ([`SubmitError::NoReplica`]).
+//! * **Health**: a monitor thread probes [`Server::alive`] every
+//!   `health_every` and restarts dead replicas in place
+//!   (drain-then-stop the corpse, bank its stats, swap in a fresh
+//!   generation). [`Router::heal_now`] runs one sweep synchronously for
+//!   deterministic tests.
+//! * **Recovery**: a crashed replica drops its queued replies; the
+//!   [`Pending`] handle observes the dropped channel and resubmits
+//!   through the router (bounded by `max_retries`), so clients see zero
+//!   dropped requests across a mid-run replica kill — the soak test's
+//!   contract.
+//! * **Fleet stats**: per-generation [`RawServeStats`] are merged —
+//!   sample union, not percentile averaging — so fleet p50/p90/p99 come
+//!   from the same interpolated-rank logic as a single server
+//!   (`util::bench::percentile`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::serve::{
+    RawServeStats, Reply, ServeConfig, ServeModel, ServeStats, Server,
+};
+use crate::util::json::{num, obj, s, Json};
+
+/// How the router picks a replica for each request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// strict rotation over live replicas
+    RoundRobin,
+    /// scan all live replicas, pick the smallest outstanding count
+    LeastOutstanding,
+    /// power-of-two-choices: sample two live replicas, route to the one
+    /// with the shorter queue — near-least-loaded balance at O(1) cost
+    PowerOfTwo,
+}
+
+impl RoutingPolicy {
+    /// Parse a CLI spelling (`--routing rr|least|p2c`).
+    pub fn parse(name: &str) -> Result<RoutingPolicy> {
+        Ok(match name {
+            "rr" | "round-robin" => RoutingPolicy::RoundRobin,
+            "least" | "least-outstanding" => RoutingPolicy::LeastOutstanding,
+            "p2c" | "power-of-two" => RoutingPolicy::PowerOfTwo,
+            other => {
+                return Err(anyhow!(
+                    "unknown routing policy '{other}' (expected rr, least \
+                     or p2c)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastOutstanding => "least-outstanding",
+            RoutingPolicy::PowerOfTwo => "power-of-two",
+        }
+    }
+}
+
+/// Typed submit rejection — the router's backpressure contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// request shape doesn't match the model (never routed)
+    BadRequest { got: usize, want: usize },
+    /// every live replica is at its outstanding-request cap; shed load
+    /// (`outstanding` is the least-loaded live replica's queue depth)
+    Overloaded { outstanding: usize, cap: usize },
+    /// no live replica (all crashed; restart pending)
+    NoReplica,
+    /// the request was resubmitted `resubmits` times and every serving
+    /// replica dropped it — give up rather than loop forever
+    Lost { resubmits: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::BadRequest { got, want } => write!(
+                f,
+                "bad request: {got} floats, model expects {want}"
+            ),
+            SubmitError::Overloaded { outstanding, cap } => write!(
+                f,
+                "fleet overloaded: least-loaded live replica has \
+                 {outstanding} outstanding requests (cap {cap})"
+            ),
+            SubmitError::NoReplica => {
+                write!(f, "no live replica (restart pending)")
+            }
+            SubmitError::Lost { resubmits } => write!(
+                f,
+                "request lost after {resubmits} resubmissions"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// number of replicas (each a full `Server` with `serve.workers`
+    /// workers)
+    pub replicas: usize,
+    pub policy: RoutingPolicy,
+    /// per-replica bound on outstanding requests; a submit that finds
+    /// every live replica at the cap is rejected with
+    /// [`SubmitError::Overloaded`]
+    pub queue_cap: usize,
+    /// health-monitor sweep interval; `Duration::ZERO` disables the
+    /// background monitor (tests drive [`Router::heal_now`] instead)
+    pub health_every: Duration,
+    /// how many times a [`Pending`] resubmits after a replica crash
+    /// before reporting [`SubmitError::Lost`]
+    pub max_retries: usize,
+    /// seed for the power-of-two sampler (deterministic tests)
+    pub seed: u64,
+    /// per-replica server configuration (worker count, batching, engine)
+    pub serve: ServeConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 2,
+            policy: RoutingPolicy::PowerOfTwo,
+            queue_cap: 1024,
+            health_every: Duration::from_millis(5),
+            max_retries: 4,
+            seed: 0x7031,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// One replica slot. The `Server` sits behind a mutex so the health
+/// monitor can swap generations in place; the policies never touch that
+/// lock — they read the shared `outstanding` counter, which each
+/// generation's server increments/decrements itself.
+struct Replica {
+    /// current generation; `None` only while a restart is in flight
+    server: Mutex<Option<Server>>,
+    /// lock-free queue-depth mirror (shared with the live server)
+    outstanding: Arc<AtomicUsize>,
+    /// routing eligibility: cleared the moment anyone observes the
+    /// replica dead, set again once a fresh generation is installed
+    up: AtomicBool,
+    /// restart count (generation 0 = the original server)
+    generation: AtomicUsize,
+    /// requests routed here over all generations (incl. resubmissions)
+    routed: AtomicUsize,
+}
+
+struct Inner {
+    model: Arc<ServeModel>,
+    cfg: RouterConfig,
+    replicas: Vec<Replica>,
+    img_len: usize,
+    rr_next: AtomicUsize,
+    rng: AtomicU64,
+    rejected: AtomicUsize,
+    resubmits: AtomicUsize,
+    restarts: AtomicUsize,
+    lost: AtomicUsize,
+    /// merged raw stats of every retired (dead, drained) generation
+    retired: Mutex<RawServeStats>,
+    stopping: AtomicBool,
+}
+
+impl Inner {
+    /// Deterministic lock-free uniform sample in `0..n` (splitmix64
+    /// finalizer over an atomic Weyl sequence).
+    fn rand_below(&self, n: usize) -> usize {
+        let x = self
+            .rng
+            .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::SeqCst)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % n.max(1) as u64) as usize
+    }
+
+    /// The `j`-th currently-live replica (scan; no allocation).
+    fn nth_live(&self, j: usize) -> Option<usize> {
+        (0..self.replicas.len())
+            .filter(|&i| self.replicas[i].up.load(Ordering::SeqCst))
+            .nth(j)
+    }
+
+    /// Pick a replica index per the policy, over live replicas under the
+    /// outstanding cap. Typed errors for "none live" / "all saturated".
+    /// Allocation-free: every policy scans the fixed replica array
+    /// directly — this runs once per routed request.
+    fn pick(&self) -> std::result::Result<usize, SubmitError> {
+        let n = self.replicas.len();
+        let cap = self.cfg.queue_cap.max(1);
+        let up = |i: usize| self.replicas[i].up.load(Ordering::SeqCst);
+        let load =
+            |i: usize| self.replicas[i].outstanding.load(Ordering::SeqCst);
+        let under = |i: usize| load(i) < cap;
+        let live = (0..n).filter(|&i| up(i)).count();
+        if live == 0 {
+            return Err(SubmitError::NoReplica);
+        }
+        let choice = match self.cfg.policy {
+            RoutingPolicy::RoundRobin => {
+                // first under-cap live replica at or after the cursor
+                // (cursor counts in live-replica positions; `fallback`
+                // wraps the rotation without a second pass)
+                let start =
+                    self.rr_next.fetch_add(1, Ordering::SeqCst) % live;
+                let mut fallback = None;
+                let mut chosen = None;
+                let mut j = 0usize;
+                for i in 0..n {
+                    if !up(i) {
+                        continue;
+                    }
+                    if under(i) {
+                        if j >= start {
+                            chosen = Some(i);
+                            break;
+                        }
+                        if fallback.is_none() {
+                            fallback = Some(i);
+                        }
+                    }
+                    j += 1;
+                }
+                chosen.or(fallback)
+            }
+            RoutingPolicy::LeastOutstanding => {
+                // strict `<` keeps first-min tie-breaking
+                let mut best: Option<usize> = None;
+                for i in 0..n {
+                    if !(up(i) && under(i)) {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => load(i) < load(b),
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                best
+            }
+            RoutingPolicy::PowerOfTwo => {
+                // two uniform samples over live replicas; a sample can
+                // race a replica going down (nth_live None) — fall
+                // through to the scan in that case
+                let a = self.nth_live(self.rand_below(live));
+                let b = self.nth_live(self.rand_below(live));
+                let best = match (a, b) {
+                    (Some(a), Some(b)) => {
+                        Some(if load(a) <= load(b) { a } else { b })
+                    }
+                    (x, y) => x.or(y),
+                };
+                match best {
+                    Some(i) if under(i) => Some(i),
+                    // samples saturated or raced away: scan before
+                    // rejecting, so backpressure reflects the fleet,
+                    // not bad luck
+                    _ => (0..n).find(|&i| up(i) && under(i)),
+                }
+            }
+        };
+        choice.ok_or_else(|| SubmitError::Overloaded {
+            outstanding: (0..n)
+                .filter(|&i| up(i))
+                .map(load)
+                .min()
+                .unwrap_or(0),
+            cap,
+        })
+    }
+
+    /// Route one request: pick, submit, and on a replica that died
+    /// between the policy read and the submit, mark it down and walk on.
+    /// Bounded: each failed attempt downs a replica, so after one lap
+    /// every broken replica is excluded and `pick` either lands on a
+    /// live one or reports the fleet state truthfully.
+    fn route(
+        &self,
+        mut image: Vec<f32>,
+    ) -> std::result::Result<(usize, mpsc::Receiver<Reply>), SubmitError>
+    {
+        for _ in 0..=self.replicas.len() {
+            let idx = self.pick()?;
+            let r = &self.replicas[idx];
+            {
+                // down-marking happens UNDER the slot lock: heal() also
+                // installs-and-revives under it, so a stale `up=false`
+                // can never land after a fresh generation's `up=true`
+                // and strand a healthy replica
+                let slot = r.server.lock().unwrap();
+                match slot.as_ref() {
+                    Some(srv) if srv.alive() => {
+                        match srv.try_submit(image) {
+                            Ok(rx) => {
+                                r.routed.fetch_add(1, Ordering::SeqCst);
+                                return Ok((idx, rx));
+                            }
+                            Err(img) => {
+                                // an alive server only rejects when a
+                                // kill raced in — it is dead now
+                                image = img;
+                                r.up.store(false, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                    _ => r.up.store(false, Ordering::SeqCst),
+                }
+            }
+        }
+        Err(SubmitError::NoReplica)
+    }
+
+    /// Mark a replica down if it is actually dead (a dropped reply from
+    /// a *live* replica — e.g. a failed forward — is not a crash). The
+    /// store happens under the slot lock for the same stale-flag reason
+    /// as in `route`.
+    fn note_dead(&self, idx: usize) {
+        let r = &self.replicas[idx];
+        let slot = r.server.lock().unwrap();
+        if !slot.as_ref().is_some_and(|srv| srv.alive()) {
+            r.up.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// One health sweep: for every dead replica, drain the corpse (its
+    /// threads join; stragglers finish touching the shared counter),
+    /// bank its stats and lost-request count, and install a fresh
+    /// generation.
+    fn heal(&self) {
+        if self.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        for r in &self.replicas {
+            let dead = {
+                let mut slot = r.server.lock().unwrap();
+                if slot.as_ref().is_some_and(|srv| !srv.alive()) {
+                    r.up.store(false, Ordering::SeqCst);
+                    slot.take()
+                } else {
+                    None
+                }
+            };
+            let Some(dead) = dead else { continue };
+            // join first: a worker mid-batch still decrements the shared
+            // outstanding counter until the join completes, after which
+            // the residue is exactly the lost in-flight work
+            let raw = dead.drain_then_stop();
+            self.retired.lock().unwrap().merge(&raw);
+            let lost = r.outstanding.swap(0, Ordering::SeqCst);
+            self.lost.fetch_add(lost, Ordering::SeqCst);
+            if self.stopping.load(Ordering::SeqCst) {
+                return; // shutting down: leave the slot empty
+            }
+            let fresh = Server::start_with(
+                Arc::clone(&self.model),
+                self.cfg.serve.clone(),
+                Arc::clone(&r.outstanding),
+            );
+            {
+                // install and revive under one lock hold: route() and
+                // note_dead() mark replicas down under this same lock,
+                // so their observations and our `up=true` serialize —
+                // no stale down-mark can outlive the fresh generation
+                let mut slot = r.server.lock().unwrap();
+                *slot = Some(fresh);
+                r.up.store(true, Ordering::SeqCst);
+            }
+            r.generation.fetch_add(1, Ordering::SeqCst);
+            self.restarts.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// The replica-set front door. Submit with [`Router::submit`]; shut down
+/// with [`Router::shutdown`] for merged fleet statistics.
+pub struct Router {
+    inner: Arc<Inner>,
+    monitor: Option<thread::JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(model: Arc<ServeModel>, cfg: RouterConfig) -> Router {
+        let n = cfg.replicas.max(1);
+        let replicas: Vec<Replica> = (0..n)
+            .map(|_| {
+                let outstanding = Arc::new(AtomicUsize::new(0));
+                let server = Server::start_with(
+                    Arc::clone(&model),
+                    cfg.serve.clone(),
+                    Arc::clone(&outstanding),
+                );
+                Replica {
+                    server: Mutex::new(Some(server)),
+                    outstanding,
+                    up: AtomicBool::new(true),
+                    generation: AtomicUsize::new(0),
+                    routed: AtomicUsize::new(0),
+                }
+            })
+            .collect();
+        let img_len = model.image_len();
+        let seed = cfg.seed;
+        let health_every = cfg.health_every;
+        let inner = Arc::new(Inner {
+            model,
+            cfg,
+            replicas,
+            img_len,
+            rr_next: AtomicUsize::new(0),
+            rng: AtomicU64::new(seed),
+            rejected: AtomicUsize::new(0),
+            resubmits: AtomicUsize::new(0),
+            restarts: AtomicUsize::new(0),
+            lost: AtomicUsize::new(0),
+            retired: Mutex::new(RawServeStats::default()),
+            stopping: AtomicBool::new(false),
+        });
+        let monitor = if health_every > Duration::ZERO {
+            let m = Arc::clone(&inner);
+            // sleep in small slices so shutdown never waits a full
+            // health interval for the monitor to notice
+            Some(thread::spawn(move || {
+                let tick = Duration::from_millis(2);
+                loop {
+                    let mut waited = Duration::ZERO;
+                    while waited < m.cfg.health_every {
+                        if m.stopping.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let step = tick.min(m.cfg.health_every - waited);
+                        thread::sleep(step);
+                        waited += step;
+                    }
+                    if m.stopping.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    m.heal();
+                }
+            }))
+        } else {
+            None
+        };
+        Router { inner, monitor }
+    }
+
+    /// Route one request. The returned [`Pending`] borrows `image` so it
+    /// can transparently resubmit if the serving replica crashes before
+    /// replying — the caller keeps the payload alive until `recv`.
+    pub fn submit<'a>(
+        &'a self,
+        image: &'a [f32],
+    ) -> std::result::Result<Pending<'a>, SubmitError> {
+        if image.len() != self.inner.img_len {
+            return Err(SubmitError::BadRequest {
+                got: image.len(),
+                want: self.inner.img_len,
+            });
+        }
+        match self.inner.route(image.to_vec()) {
+            Ok((replica, rx)) => Ok(Pending {
+                router: self,
+                image,
+                rx,
+                replica,
+                resubmits: 0,
+            }),
+            Err(e) => {
+                if matches!(e, SubmitError::Overloaded { .. }) {
+                    self.inner.rejected.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Chaos hook for soak tests and drills: crash replica `idx`'s
+    /// current generation (see [`Server::kill`]). The health monitor (or
+    /// [`Router::heal_now`]) restarts it.
+    pub fn kill_replica(&self, idx: usize) {
+        if let Some(r) = self.inner.replicas.get(idx) {
+            if let Some(srv) = r.server.lock().unwrap().as_ref() {
+                srv.kill();
+            }
+        }
+    }
+
+    /// Run one synchronous health sweep (what the monitor thread does
+    /// every `health_every`) — deterministic restarts in tests.
+    pub fn heal_now(&self) {
+        self.inner.heal();
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.inner.replicas.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.inner
+            .replicas
+            .iter()
+            .filter(|r| {
+                r.server
+                    .lock()
+                    .unwrap()
+                    .as_ref()
+                    .is_some_and(|srv| srv.alive())
+            })
+            .count()
+    }
+
+    /// Total outstanding requests across the fleet.
+    pub fn outstanding(&self) -> usize {
+        self.inner
+            .replicas
+            .iter()
+            .map(|r| r.outstanding.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Restart generations installed so far (0 = no replica ever died).
+    pub fn restarts(&self) -> usize {
+        self.inner.restarts.load(Ordering::SeqCst)
+    }
+
+    /// Drain every replica, stop the monitor, and merge per-generation
+    /// raw stats into fleet-level statistics.
+    pub fn shutdown(mut self) -> FleetStats {
+        self.inner.stopping.store(true, Ordering::SeqCst);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        let inner = &self.inner;
+        let mut fleet = inner.retired.lock().unwrap().clone();
+        let mut replicas = Vec::with_capacity(inner.replicas.len());
+        for (i, r) in inner.replicas.iter().enumerate() {
+            let taken = r.server.lock().unwrap().take();
+            let raw = match taken {
+                Some(srv) => srv.drain_then_stop(),
+                None => RawServeStats::default(),
+            };
+            // a replica that died right at shutdown still owes its
+            // lost-in-flight count
+            let lost = r.outstanding.swap(0, Ordering::SeqCst);
+            if lost > 0 {
+                inner.lost.fetch_add(lost, Ordering::SeqCst);
+            }
+            fleet.merge(&raw);
+            replicas.push(ReplicaStats {
+                replica: i,
+                generation: r.generation.load(Ordering::SeqCst),
+                routed: r.routed.load(Ordering::SeqCst),
+                stats: raw.to_stats(),
+            });
+        }
+        FleetStats {
+            fleet: fleet.to_stats(),
+            replicas,
+            restarts: inner.restarts.load(Ordering::SeqCst),
+            resubmits: inner.resubmits.load(Ordering::SeqCst),
+            rejected: inner.rejected.load(Ordering::SeqCst),
+            lost_in_flight: inner.lost.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A routed in-flight request. `recv` blocks for the reply; if the
+/// serving replica crashed first (its reply channel dropped), the
+/// request is resubmitted through the router — bounded by
+/// `RouterConfig::max_retries` — so a mid-run replica kill costs
+/// latency, not replies.
+pub struct Pending<'a> {
+    router: &'a Router,
+    image: &'a [f32],
+    rx: mpsc::Receiver<Reply>,
+    replica: usize,
+    resubmits: usize,
+}
+
+impl fmt::Debug for Pending<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Pending")
+            .field("replica", &self.replica)
+            .field("resubmits", &self.resubmits)
+            .finish()
+    }
+}
+
+impl Pending<'_> {
+    /// Replica index currently serving this request.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Wait for the reply, resubmitting across replica crashes. The
+    /// zero-drop contract says a kill costs latency, not replies: a
+    /// resubmission that hits a *transient* fleet state (every replica
+    /// saturated, or none live while a restart is in flight) is waited
+    /// out with bounded backoff instead of failing the request; only a
+    /// fleet that stays broken past the budget surfaces the typed error.
+    pub fn recv(mut self) -> std::result::Result<Reply, SubmitError> {
+        loop {
+            match self.rx.recv() {
+                Ok(reply) => return Ok(reply),
+                Err(mpsc::RecvError) => {
+                    self.router.inner.note_dead(self.replica);
+                    if self.resubmits >= self.router.inner.cfg.max_retries {
+                        return Err(SubmitError::Lost {
+                            resubmits: self.resubmits,
+                        });
+                    }
+                    self.resubmits += 1;
+                    self.router
+                        .inner
+                        .resubmits
+                        .fetch_add(1, Ordering::SeqCst);
+                    let (replica, rx) = self.reroute()?;
+                    self.replica = replica;
+                    self.rx = rx;
+                }
+            }
+        }
+    }
+
+    /// One resubmission: route again, backing off through transient
+    /// Overloaded/NoReplica states for up to ~2s.
+    fn reroute(
+        &self,
+    ) -> std::result::Result<(usize, mpsc::Receiver<Reply>), SubmitError>
+    {
+        let inner = &self.router.inner;
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut wait = Duration::from_micros(200);
+        loop {
+            match inner.route(self.image.to_vec()) {
+                Ok(ok) => return Ok(ok),
+                Err(
+                    e @ (SubmitError::Overloaded { .. }
+                    | SubmitError::NoReplica),
+                ) => {
+                    if Instant::now() >= deadline {
+                        if matches!(e, SubmitError::Overloaded { .. }) {
+                            inner.rejected.fetch_add(1, Ordering::SeqCst);
+                        }
+                        return Err(e);
+                    }
+                    thread::sleep(wait);
+                    wait = (wait * 2).min(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Per-replica summary inside [`FleetStats`].
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    /// restart generation at shutdown (0 = never restarted)
+    pub generation: usize,
+    /// requests routed to this replica over all generations
+    pub routed: usize,
+    /// final generation's stats (retired generations are merged into
+    /// the fleet aggregate only)
+    pub stats: ServeStats,
+}
+
+/// Fleet-level serving statistics: the union of every generation of
+/// every replica, plus the router's own counters.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// merged percentiles — computed over the union of latency samples,
+    /// never by averaging per-replica percentiles
+    pub fleet: ServeStats,
+    pub replicas: Vec<ReplicaStats>,
+    /// dead generations replaced by the health monitor
+    pub restarts: usize,
+    /// requests resubmitted after a replica crash
+    pub resubmits: usize,
+    /// submits rejected with [`SubmitError::Overloaded`]
+    pub rejected: usize,
+    /// requests that died with a killed generation (each either
+    /// resubmitted by its [`Pending`] or surfaced as an error)
+    pub lost_in_flight: usize,
+}
+
+impl FleetStats {
+    pub fn print(&self) {
+        println!("fleet of {} replicas:", self.replicas.len());
+        for r in &self.replicas {
+            println!(
+                "  replica {} gen {}: {:>6} routed  {:>6} served  \
+                 {:>8.0} img/s",
+                r.replica,
+                r.generation,
+                r.routed,
+                r.stats.requests,
+                r.stats.throughput_rps
+            );
+        }
+        self.fleet.print();
+        println!(
+            "  restarts {}  resubmits {}  rejected {}  lost in-flight {}",
+            self.restarts, self.resubmits, self.rejected,
+            self.lost_in_flight
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("replica", num(r.replica as f64)),
+                    ("generation", num(r.generation as f64)),
+                    ("routed", num(r.routed as f64)),
+                    ("stats", r.stats.to_json()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("fleet", self.fleet.to_json()),
+            ("replicas", Json::Arr(replicas)),
+            ("restarts", num(self.restarts as f64)),
+            ("resubmits", num(self.resubmits as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("lost_in_flight", num(self.lost_in_flight as f64)),
+            ("note", s("fleet percentiles are computed over the union \
+                        of per-generation latency samples")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FreezeQuant;
+    use crate::infer::codebook::FrozenModel;
+    use crate::infer::graph::KernelMode;
+    use crate::infer::synthetic;
+
+    fn tiny_model() -> Arc<ServeModel> {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen =
+            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        Arc::new(ServeModel::new(frozen).unwrap())
+    }
+
+    fn tiny_router(policy: RoutingPolicy, replicas: usize) -> Router {
+        Router::start(
+            tiny_model(),
+            RouterConfig {
+                replicas,
+                policy,
+                queue_cap: 64,
+                health_every: Duration::ZERO, // tests drive heal_now()
+                max_retries: 4,
+                seed: 11,
+                serve: ServeConfig {
+                    workers: 1,
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    mode: KernelMode::Lut,
+                    kernel_threads: 1,
+                },
+            },
+        )
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        for (spelling, want) in [
+            ("rr", RoutingPolicy::RoundRobin),
+            ("round-robin", RoutingPolicy::RoundRobin),
+            ("least", RoutingPolicy::LeastOutstanding),
+            ("least-outstanding", RoutingPolicy::LeastOutstanding),
+            ("p2c", RoutingPolicy::PowerOfTwo),
+            ("power-of-two", RoutingPolicy::PowerOfTwo),
+        ] {
+            assert_eq!(RoutingPolicy::parse(spelling).unwrap(), want);
+        }
+        assert!(RoutingPolicy::parse("random").is_err());
+        assert_eq!(RoutingPolicy::PowerOfTwo.name(), "power-of-two");
+    }
+
+    #[test]
+    fn submit_error_display_is_typed_and_actionable() {
+        let e = SubmitError::Overloaded { outstanding: 64, cap: 64 };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(e.to_string().contains("64"));
+        let e = SubmitError::BadRequest { got: 7, want: 3072 };
+        assert!(e.to_string().contains('7'));
+        assert!(e.to_string().contains("3072"));
+        assert!(SubmitError::NoReplica.to_string().contains("no live"));
+        let e = SubmitError::Lost { resubmits: 4 };
+        assert!(e.to_string().contains('4'));
+        // typed errors fold into anyhow through std::error::Error
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("lost"));
+    }
+
+    #[test]
+    fn rand_below_stays_in_range_and_varies() {
+        let r = tiny_router(RoutingPolicy::PowerOfTwo, 2);
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            let v = r.inner.rand_below(5);
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "sampler never hit some bucket");
+        let fleet = r.shutdown();
+        assert_eq!(fleet.fleet.requests, 0);
+    }
+
+    #[test]
+    fn bad_request_is_typed_and_never_routed() {
+        let r = tiny_router(RoutingPolicy::RoundRobin, 2);
+        let img = vec![0.0f32; 7];
+        match r.submit(&img) {
+            Err(SubmitError::BadRequest { got: 7, want }) => {
+                assert_eq!(want, 32 * 32 * 3);
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        let fleet = r.shutdown();
+        assert_eq!(fleet.fleet.requests, 0);
+        assert_eq!(
+            fleet.replicas.iter().map(|x| x.routed).sum::<usize>(),
+            0
+        );
+    }
+}

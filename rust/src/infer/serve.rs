@@ -18,7 +18,17 @@
 //! * a batch larger than [`MIN_SHARD`]·workers-worth of images is split
 //!   into independent chunks on the shared queue, so idle workers steal
 //!   their share instead of watching one worker grind a 64-image batch.
+//!
+//! A `Server` is also a *replica*: [`super::router::Router`] owns N of
+//! them behind one front door. The hooks the router needs — an
+//! outstanding-request count ([`Server::outstanding`]), a non-consuming
+//! stats snapshot ([`Server::stats_snapshot`]), a liveness probe
+//! ([`Server::alive`]), drain-then-stop ([`Server::drain_then_stop`],
+//! returning mergeable [`RawServeStats`]) and a deterministic crash
+//! injector ([`Server::kill`]) — live here, next to the queue mechanics
+//! they observe.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -111,13 +121,44 @@ struct Request {
     reply: mpsc::Sender<Reply>,
 }
 
-#[derive(Default)]
-struct StatsAcc {
-    latencies_ns: Vec<f64>,
-    batch_sizes: Vec<usize>,
-    images: usize,
-    first: Option<Instant>,
-    last: Option<Instant>,
+/// Raw, mergeable serving statistics — everything [`ServeStats`] is
+/// computed from. The router concatenates replicas' raws (every
+/// generation of every replica) before computing fleet percentiles:
+/// percentiles cannot be merged from summaries, only from samples.
+#[derive(Debug, Clone, Default)]
+pub struct RawServeStats {
+    /// enqueue-to-reply latency per served request, nanoseconds
+    pub latencies_ns: Vec<f64>,
+    /// size of each executed batch (after any split)
+    pub batch_sizes: Vec<usize>,
+    /// total images served
+    pub images: usize,
+    /// earliest enqueue observed
+    pub first: Option<Instant>,
+    /// latest batch completion observed
+    pub last: Option<Instant>,
+}
+
+impl RawServeStats {
+    /// Fold another accumulator in (fleet merge: concat samples, sum
+    /// counters, widen the busy window to min(first)..max(last)).
+    pub fn merge(&mut self, other: &RawServeStats) {
+        self.latencies_ns.extend_from_slice(&other.latencies_ns);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.images += other.images;
+        self.first = match (self.first, other.first) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last = match (self.last, other.last) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    pub fn to_stats(&self) -> ServeStats {
+        ServeStats::from_raw(self)
+    }
 }
 
 /// A running inference server. Submit images, then `shutdown()` for the
@@ -126,24 +167,50 @@ pub struct Server {
     tx: Option<mpsc::Sender<Request>>,
     collector: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
-    acc: Arc<Mutex<StatsAcc>>,
+    acc: Arc<Mutex<RawServeStats>>,
+    /// submitted and not yet replied/abandoned; shared with the router's
+    /// replica slot so routing policies can read it lock-free
+    outstanding: Arc<AtomicUsize>,
+    /// chaos switch: when set, the collector and workers stop
+    /// cooperating at their next wakeup and in-queue requests are lost
+    poison: Arc<AtomicBool>,
     img_len: usize,
 }
 
 impl Server {
     pub fn start(model: Arc<ServeModel>, cfg: ServeConfig) -> Server {
+        Server::start_with(model, cfg, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// Start with an externally owned outstanding-request counter (the
+    /// router hands each replica slot's counter down so policy scans
+    /// never take the slot lock). The counter must start the server's
+    /// life at the number of requests it considers in flight (normally
+    /// zero).
+    pub fn start_with(
+        model: Arc<ServeModel>,
+        cfg: ServeConfig,
+        outstanding: Arc<AtomicUsize>,
+    ) -> Server {
         let img_len = model.image_len();
         let (req_tx, req_rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let acc = Arc::new(Mutex::new(StatsAcc::default()));
+        let acc = Arc::new(Mutex::new(RawServeStats::default()));
+        let poison = Arc::new(AtomicBool::new(false));
 
         let max_batch = cfg.max_batch.max(1);
         let max_wait = cfg.max_wait;
         let n_workers = cfg.workers.max(1);
+        let col_poison = Arc::clone(&poison);
         let collector = thread::spawn(move || {
             loop {
                 let Ok(first) = req_rx.recv() else { return };
+                if col_poison.load(Ordering::SeqCst) {
+                    // simulated crash: drop the request (and implicitly
+                    // the rest of the queue) — clients see RecvError
+                    return;
+                }
                 let mut batch = vec![first];
                 let deadline = Instant::now() + max_wait;
                 let mut open = true;
@@ -185,6 +252,8 @@ impl Server {
             let acc = Arc::clone(&acc);
             let mode = cfg.mode;
             let kernel_threads = cfg.kernel_threads.max(1);
+            let outstanding = Arc::clone(&outstanding);
+            let poison = Arc::clone(&poison);
             workers.push(thread::spawn(move || {
                 // per-worker arena: after the first batch the forward
                 // pass allocates nothing (DESIGN §9)
@@ -193,7 +262,22 @@ impl Server {
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     let Ok(batch) = msg else { return };
-                    serve_batch(&sm, &batch, mode, &acc, &mut bufs, &mut xbuf);
+                    if poison.load(Ordering::SeqCst) {
+                        // simulated crash mid-queue: the batch just
+                        // received is dropped on the floor, exactly like
+                        // a worker dying with work in hand — clients see
+                        // RecvError and (through the router) resubmit
+                        return;
+                    }
+                    serve_batch(
+                        &sm,
+                        &batch,
+                        mode,
+                        &acc,
+                        &mut bufs,
+                        &mut xbuf,
+                        &outstanding,
+                    );
                 }
             }));
         }
@@ -203,6 +287,8 @@ impl Server {
             collector: Some(collector),
             workers,
             acc,
+            outstanding,
+            poison,
             img_len,
         }
     }
@@ -216,18 +302,78 @@ impl Server {
                 self.img_len
             ));
         }
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let tx = self
-            .tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("server is shutting down"))?;
-        tx.send(Request { image, t0: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow!("server request queue closed"))?;
-        Ok(reply_rx)
+        self.try_submit(image).map_err(|_| {
+            if self.poison.load(Ordering::SeqCst) {
+                anyhow!("server killed")
+            } else {
+                anyhow!("server request queue closed")
+            }
+        })
     }
 
-    /// Drain the queue, stop all threads and return aggregate statistics.
-    pub fn shutdown(mut self) -> ServeStats {
+    /// Like [`Server::submit`], but hands the image back on rejection so
+    /// a router can re-route it without cloning. Rejects (returning the
+    /// image) on size mismatch, a poisoned server, or a closed queue.
+    pub fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>> {
+        let poisoned = self.poison.load(Ordering::SeqCst);
+        if image.len() != self.img_len || poisoned {
+            return Err(image);
+        }
+        let Some(tx) = self.tx.as_ref() else { return Err(image) };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // count before send: a worker can serve (and decrement) between
+        // the send and any later increment, which would transiently wrap
+        // the counter below zero
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        match tx.send(Request { image, t0: Instant::now(), reply: reply_tx })
+        {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::SendError(req)) => {
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(req.image)
+            }
+        }
+    }
+
+    /// Requests submitted and not yet replied (or abandoned by a kill).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Liveness probe: false once killed, or once the collector or every
+    /// worker thread has exited (e.g. panicked).
+    pub fn alive(&self) -> bool {
+        !self.poison.load(Ordering::SeqCst)
+            && self.collector.as_ref().is_some_and(|c| !c.is_finished())
+            && self.workers.iter().any(|w| !w.is_finished())
+    }
+
+    /// Chaos hook: simulate a replica crash. The collector and workers
+    /// stop cooperating at their next wakeup; requests already queued
+    /// are lost (their clients observe `RecvError`). Deterministic —
+    /// used by the router soak and the health-check tests.
+    pub fn kill(&self) {
+        self.poison.store(true, Ordering::SeqCst);
+    }
+
+    /// Non-consuming statistics snapshot (the server keeps serving).
+    pub fn stats_snapshot(&self) -> ServeStats {
+        self.raw_stats().to_stats()
+    }
+
+    /// Non-consuming raw (mergeable) statistics snapshot.
+    pub fn raw_stats(&self) -> RawServeStats {
+        self.acc.lock().unwrap().clone()
+    }
+
+    /// Drain the queue, stop all threads and return the raw accumulator.
+    /// Every reply for a request accepted by `submit` has been delivered
+    /// (or provably lost to a kill) before this returns — the router's
+    /// drain-then-stop and the fleet-stats merge depend on that.
+    pub fn drain_then_stop(mut self) -> RawServeStats {
         self.tx.take(); // close the request queue
         if let Some(c) = self.collector.take() {
             let _ = c.join();
@@ -235,8 +381,12 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let mut acc = self.acc.lock().unwrap();
-        ServeStats::from_acc(&mut acc)
+        self.acc.lock().unwrap().clone()
+    }
+
+    /// Drain the queue, stop all threads and return aggregate statistics.
+    pub fn shutdown(self) -> ServeStats {
+        self.drain_then_stop().to_stats()
     }
 }
 
@@ -244,9 +394,10 @@ fn serve_batch(
     sm: &ServeModel,
     batch: &[Request],
     mode: KernelMode,
-    acc: &Arc<Mutex<StatsAcc>>,
+    acc: &Arc<Mutex<RawServeStats>>,
     bufs: &mut ExecBuffers,
     xbuf: &mut Vec<f32>,
+    outstanding: &AtomicUsize,
 ) {
     let img_len = sm.image_len();
     // submit() validates sizes; this is defence against direct enqueue.
@@ -268,6 +419,7 @@ fn serve_batch(
         })
         .collect();
     if kept.is_empty() {
+        outstanding.fetch_sub(batch.len(), Ordering::SeqCst);
         return;
     }
     let n = kept.len();
@@ -282,10 +434,15 @@ fn serve_batch(
         Ok(l) => l,
         Err(e) => {
             eprintln!("serve: batch of {n} failed: {e:#}");
+            outstanding.fetch_sub(batch.len(), Ordering::SeqCst);
             return; // reply senders drop; clients observe RecvError
         }
     };
     let classes = sm.model.classes;
+    // the expensive part is done: stop counting this batch against the
+    // replica BEFORE the replies leave, so a client that has its reply
+    // in hand can never still observe the request as outstanding
+    outstanding.fetch_sub(batch.len(), Ordering::SeqCst);
     // replies leave BEFORE the stats mutex is touched: the client-facing
     // path never waits on bookkeeping. (Regression-tested: replies must
     // arrive even while the stats lock is held by someone else.)
@@ -329,32 +486,34 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    fn from_acc(acc: &mut StatsAcc) -> ServeStats {
-        let mut lat = std::mem::take(&mut acc.latencies_ns);
+    /// Summary statistics from a raw accumulator (non-consuming — the
+    /// same raw can be merged further and summarized again).
+    pub fn from_raw(raw: &RawServeStats) -> ServeStats {
+        let mut lat = raw.latencies_ns.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         // interpolated rank: the old floored rank understated p90/p99 —
         // at 10 samples the old p99 was sample 8 of 9, a whole sample
         // below the max
         let q = |p: f64| percentile(&lat, p) / 1e6;
-        let busy_s = match (acc.first, acc.last) {
+        let busy_s = match (raw.first, raw.last) {
             (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
             _ => 0.0,
         };
-        let batches = acc.batch_sizes.len();
+        let batches = raw.batch_sizes.len();
         ServeStats {
-            requests: acc.images,
+            requests: raw.images,
             batches,
             mean_batch: if batches == 0 {
                 0.0
             } else {
-                acc.images as f64 / batches as f64
+                raw.images as f64 / batches as f64
             },
             p50_ms: q(0.5),
             p90_ms: q(0.9),
             p99_ms: q(0.99),
             max_ms: lat.last().copied().unwrap_or(0.0) / 1e6,
             throughput_rps: if busy_s > 0.0 {
-                acc.images as f64 / busy_s
+                raw.images as f64 / busy_s
             } else {
                 0.0
             },
@@ -468,30 +627,71 @@ mod tests {
         // 10 known latencies, 1..10 ms: numpy-convention percentiles.
         // The old floored rank reported p90 = 9.0 and p99 = 9.0,
         // understating the tail by up to a whole sample.
-        let mut acc = StatsAcc {
+        let acc = RawServeStats {
             latencies_ns: (1..=10).map(|i| i as f64 * 1e6).collect(),
             batch_sizes: vec![10],
             images: 10,
             first: None,
             last: None,
         };
-        let s = ServeStats::from_acc(&mut acc);
+        let s = ServeStats::from_raw(&acc);
         assert!((s.p50_ms - 5.5).abs() < 1e-9, "p50 {}", s.p50_ms);
         assert!((s.p90_ms - 9.1).abs() < 1e-9, "p90 {}", s.p90_ms);
         assert!((s.p99_ms - 9.91).abs() < 1e-9, "p99 {}", s.p99_ms);
         assert_eq!(s.max_ms, 10.0);
         assert_eq!(s.requests, 10);
+        // non-consuming: the same raw summarizes identically twice
+        assert_eq!(ServeStats::from_raw(&acc).requests, 10);
 
         // a single sample is every percentile
-        let mut one = StatsAcc {
+        let one = RawServeStats {
             latencies_ns: vec![2e6],
             batch_sizes: vec![1],
             images: 1,
             first: None,
             last: None,
         };
-        let s = ServeStats::from_acc(&mut one);
+        let s = ServeStats::from_raw(&one);
         assert_eq!((s.p50_ms, s.p90_ms, s.p99_ms), (2.0, 2.0, 2.0));
+    }
+
+    /// Merging raws = concatenated samples, summed counters, widened
+    /// busy window — the fleet percentile is computed over the union of
+    /// samples, not an average of per-replica percentiles.
+    #[test]
+    fn raw_stats_merge_is_sample_union() {
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(10);
+        let t2 = t0 + Duration::from_millis(30);
+        let mut a = RawServeStats {
+            latencies_ns: vec![1e6, 3e6],
+            batch_sizes: vec![2],
+            images: 2,
+            first: Some(t1),
+            last: Some(t2),
+        };
+        let b = RawServeStats {
+            latencies_ns: vec![2e6, 10e6],
+            batch_sizes: vec![1, 1],
+            images: 2,
+            first: Some(t0),
+            last: Some(t1),
+        };
+        a.merge(&b);
+        assert_eq!(a.images, 4);
+        assert_eq!(a.batch_sizes, vec![2, 1, 1]);
+        assert_eq!(a.first, Some(t0), "merge must take the earliest first");
+        assert_eq!(a.last, Some(t2), "merge must keep the latest last");
+        let s = a.to_stats();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.max_ms, 10.0);
+        // p50 of {1,2,3,10} ms interpolated = 2.5
+        assert!((s.p50_ms - 2.5).abs() < 1e-9, "p50 {}", s.p50_ms);
+        // merging into an empty raw adopts the other side's window
+        let mut empty = RawServeStats::default();
+        empty.merge(&a);
+        assert_eq!((empty.first, empty.last), (Some(t0), Some(t2)));
     }
 
     #[test]
@@ -539,8 +739,8 @@ mod tests {
     }
 
     /// The satellite regression test: reply delivery must not depend on
-    /// the stats mutex. The test thread holds the `StatsAcc` lock (a
-    /// stand-in for any slow stats consumer or contended bookkeeping)
+    /// the stats mutex. The test thread holds the `RawServeStats` lock
+    /// (a stand-in for any slow stats consumer or contended bookkeeping)
     /// while requests are serving; with replies sent outside the lock
     /// every reply still arrives. Under the old send-under-the-mutex
     /// code each worker sat on the lock while replying, so the recvs
@@ -632,5 +832,108 @@ mod tests {
         // the in-flight request was drained before shutdown returned
         assert!(rx.recv().is_ok());
         assert_eq!(stats.requests, 1);
+    }
+
+    /// Drain contract the router's drain-then-stop builds on: `shutdown`
+    /// called with a queue full of in-flight submits must deliver every
+    /// pending reply *before* the stats are finalized — by the time
+    /// shutdown returns, every reply is already waiting in its channel
+    /// and the stats cover all of them.
+    #[test]
+    fn shutdown_delivers_every_inflight_reply_before_stats_finalize() {
+        // long collector wait + small batches: several batches are still
+        // queued (or not yet coalesced) when shutdown begins
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(25),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
+        let n = 57;
+        let handles: Vec<_> = (0..n)
+            .map(|_| srv.submit(vec![0.1; sm.image_len()]).unwrap())
+            .collect();
+        let stats = srv.shutdown();
+        assert_eq!(
+            stats.requests, n,
+            "stats finalized before the queue was drained"
+        );
+        for (i, h) in handles.into_iter().enumerate() {
+            // try_recv, not recv: the reply must ALREADY be there
+            h.try_recv().unwrap_or_else(|_| {
+                panic!("request {i}: reply not delivered before shutdown \
+                        returned")
+            });
+        }
+    }
+
+    /// The outstanding counter tracks submitted-not-yet-replied and
+    /// returns to zero after a drain.
+    #[test]
+    fn outstanding_counts_inflight_and_drains_to_zero() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(250),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
+        assert_eq!(srv.outstanding(), 0);
+        let handles: Vec<_> = (0..5)
+            .map(|_| srv.submit(vec![0.2; sm.image_len()]).unwrap())
+            .collect();
+        // the collector is still waiting out max_wait: all 5 in flight
+        assert_eq!(srv.outstanding(), 5);
+        for h in handles {
+            h.recv().unwrap();
+        }
+        assert_eq!(srv.outstanding(), 0, "replied requests still counted");
+        // snapshot without consuming the server; stats are recorded
+        // AFTER replies leave (DESIGN §9), so give the worker a moment
+        let t0 = Instant::now();
+        while srv.stats_snapshot().requests < 5
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            thread::yield_now();
+        }
+        assert_eq!(srv.stats_snapshot().requests, 5);
+        assert!(srv.alive());
+        assert_eq!(srv.shutdown().requests, 5);
+    }
+
+    /// kill(): alive flips false, queued requests are lost (clients see
+    /// RecvError), new submits are rejected, and drain_then_stop still
+    /// joins cleanly returning the pre-kill stats.
+    #[test]
+    fn kill_drops_queue_and_fails_liveness() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 2,
+            max_batch: 64,
+            max_wait: Duration::from_millis(500),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        });
+        assert!(srv.alive());
+        // served before the kill: recorded in stats
+        let rx = srv.submit(vec![0.3; sm.image_len()]).unwrap();
+        rx.recv().unwrap();
+        // wait: the previous reply proves the batch was served, but the
+        // collector may still be inside its max_wait window — submit,
+        // then kill while the request is queued
+        let doomed = srv.submit(vec![0.3; sm.image_len()]).unwrap();
+        srv.kill();
+        assert!(!srv.alive(), "killed server must fail the liveness probe");
+        assert!(
+            srv.try_submit(vec![0.3; sm.image_len()]).is_err(),
+            "killed server must reject new work"
+        );
+        let raw = srv.drain_then_stop();
+        assert_eq!(raw.images, 1, "only the pre-kill request was served");
+        assert!(
+            doomed.recv().is_err(),
+            "a request queued at kill time must surface as RecvError, \
+             not hang or fabricate a reply"
+        );
     }
 }

@@ -18,7 +18,8 @@ use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
 use uniq::infer::{
-    self, FrozenModel, KernelMode, ServeConfig, ServeModel, Server,
+    self, FrozenModel, KernelMode, Router, RouterConfig, RoutingPolicy,
+    ServeConfig, ServeModel, Server, SubmitError,
 };
 use uniq::runtime::{Engine, ModelState};
 
@@ -469,8 +470,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // deployment working set: packed indices only, no f32 weight copies
     let sm = Arc::new(ServeModel::lut_only(model)?);
     let defaults = ServeConfig::default();
+    let replicas = cli.get_usize("replicas", 1);
+    // --workers is the TOTAL worker budget; a replica set splits it so
+    // 1-vs-N comparisons run at equal total worker count. Rounded UP
+    // when not divisible — silently dropping the remainder would make
+    // the printed "total" a lie (the banner shows the actual layout)
+    let total_workers = cli.get_usize("workers", defaults.workers);
     let cfg = ServeConfig {
-        workers: cli.get_usize("workers", defaults.workers),
+        workers: if replicas > 1 {
+            total_workers.div_ceil(replicas).max(1)
+        } else {
+            total_workers.max(1)
+        },
         max_batch: cli.get_usize("max-batch", 64),
         max_wait: std::time::Duration::from_micros(
             (cli.get_f32("max-wait-ms", 2.0) * 1e3) as u64,
@@ -490,15 +501,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         kernel_threads: cli.get_usize("kernel-threads", 1),
     };
     let n = cli.get_usize("requests", 2048);
-    println!(
-        "{n} requests -> {} workers, max batch {}, max wait {:?}",
-        cfg.workers, cfg.max_batch, cfg.max_wait
-    );
     let data = SynthDataset::generate(SynthConfig {
         classes: sm.model.classes,
         n: n.min(512),
         ..Default::default()
     });
+    if replicas > 1 {
+        return serve_fleet(cli, &sm, cfg, replicas, n, &data);
+    }
+    println!(
+        "{n} requests -> {} workers, max batch {}, max wait {:?}",
+        cfg.workers, cfg.max_batch, cfg.max_wait
+    );
     let server = Server::start(Arc::clone(&sm), cfg);
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
@@ -519,6 +533,82 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         let j = uniq::util::json::obj(vec![
             ("model", uniq::util::json::s(&sm.model.name)),
             ("stats", stats.to_json()),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        println!("stats -> {path}");
+    }
+    Ok(())
+}
+
+/// `uniq serve --replicas N`: route the same traffic through the
+/// replica-set router — N health-checked `Server` replicas behind one
+/// front door, bounded-queue backpressure, fleet-merged percentiles.
+fn serve_fleet(
+    cli: &Cli,
+    sm: &Arc<ServeModel>,
+    serve_cfg: ServeConfig,
+    replicas: usize,
+    n: usize,
+    data: &Dataset,
+) -> Result<()> {
+    let policy = RoutingPolicy::parse(cli.get("routing").unwrap_or("p2c"))?;
+    let rcfg = RouterConfig {
+        replicas,
+        policy,
+        queue_cap: cli.get_usize("queue-cap", 1024),
+        serve: serve_cfg,
+        ..Default::default()
+    };
+    println!(
+        "{n} requests -> {replicas} replicas x {} workers each = {} \
+         total ({} routing, queue cap {}/replica, max batch {}, max \
+         wait {:?})",
+        rcfg.serve.workers,
+        replicas * rcfg.serve.workers,
+        policy.name(),
+        rcfg.queue_cap,
+        rcfg.serve.max_batch,
+        rcfg.serve.max_wait
+    );
+    let router = Router::start(Arc::clone(sm), rcfg);
+    let mut pending = std::collections::VecDeque::new();
+    let mut ok = 0usize;
+    for i in 0..n {
+        let img = data.image(i % data.n);
+        loop {
+            match router.submit(img) {
+                Ok(p) => {
+                    pending.push_back(p);
+                    break;
+                }
+                Err(SubmitError::Overloaded { .. }) => {
+                    // bounded queues: drain the oldest in-flight reply,
+                    // then retry, instead of buffering without limit
+                    let p = pending.pop_front().ok_or_else(|| {
+                        anyhow!("fleet overloaded with nothing in flight")
+                    })?;
+                    p.recv()?;
+                    ok += 1;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    for p in pending {
+        p.recv()?;
+        ok += 1;
+    }
+    let fleet = router.shutdown();
+    fleet.print();
+    if ok != n {
+        return Err(anyhow!("only {ok}/{n} requests got replies"));
+    }
+    if let Some(path) = cli.get("stats") {
+        let j = uniq::util::json::obj(vec![
+            ("model", uniq::util::json::s(&sm.model.name)),
+            ("replicas", uniq::util::json::num(replicas as f64)),
+            ("routing", uniq::util::json::s(policy.name())),
+            ("fleet", fleet.to_json()),
         ]);
         std::fs::write(path, j.to_string())?;
         println!("stats -> {path}");

@@ -1,0 +1,376 @@
+//! Replica-set router integration tests, plus the CI soak.
+//!
+//! The fast tests run in the tier-1 gate (`cargo test -q`). The soak —
+//! ≥1k requests across 3 replicas with one replica killed mid-run,
+//! asserting zero dropped requests and bit-identical outputs vs a
+//! single-replica run — is `#[ignore]`d and driven explicitly by the CI
+//! bench job:
+//!
+//!     cargo test --release -q --test serve_router -- soak --ignored
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniq::coordinator::FreezeQuant;
+use uniq::infer::{
+    synthetic, FleetStats, FrozenModel, KernelMode, Router, RouterConfig,
+    RoutingPolicy, ServeConfig, ServeModel, SubmitError,
+};
+use uniq::util::rng::Rng;
+
+fn model() -> Arc<ServeModel> {
+    let (m, st) = synthetic::mlp(32, 10, 7);
+    let frozen =
+        FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    Arc::new(ServeModel::new(frozen).unwrap())
+}
+
+fn router_cfg(
+    replicas: usize,
+    policy: RoutingPolicy,
+    queue_cap: usize,
+    max_wait: Duration,
+) -> RouterConfig {
+    RouterConfig {
+        replicas,
+        policy,
+        queue_cap,
+        // tests drive heal_now() themselves for determinism; the soak
+        // overrides this to exercise the background monitor
+        health_every: Duration::ZERO,
+        max_retries: 8,
+        seed: 11,
+        serve: ServeConfig {
+            workers: 1,
+            max_batch: 16,
+            max_wait,
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+        },
+    }
+}
+
+fn images(sm: &ServeModel, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let img_len = sm.image_len();
+    (0..n)
+        .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+/// Round-robin rotates the cursor per submit: 30 requests over 3 live
+/// replicas land exactly 10/10/10.
+#[test]
+fn round_robin_spreads_traffic_exactly() {
+    let sm = model();
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            3,
+            RoutingPolicy::RoundRobin,
+            1024,
+            Duration::from_millis(1),
+        ),
+    );
+    let imgs = images(&sm, 6, 3);
+    let pending: Vec<_> = (0..30)
+        .map(|i| router.submit(&imgs[i % imgs.len()]).unwrap())
+        .collect();
+    for p in pending {
+        p.recv().unwrap();
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 30);
+    let routed: Vec<usize> =
+        fleet.replicas.iter().map(|r| r.routed).collect();
+    assert_eq!(routed, vec![10, 10, 10], "round-robin must spread exactly");
+    assert_eq!(fleet.restarts, 0);
+    assert_eq!(fleet.resubmits, 0);
+    assert_eq!(fleet.rejected, 0);
+}
+
+/// Every routed reply is bit-identical to a direct single-image forward
+/// — the replica set inherits the PR-3 determinism invariant.
+#[test]
+fn routed_replies_match_direct_forward_bitwise() {
+    let sm = model();
+    // wide collector window: all 24 submits land before anything is
+    // served, so least-outstanding's 12/12 split is deterministic
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            2,
+            RoutingPolicy::LeastOutstanding,
+            1024,
+            Duration::from_millis(150),
+        ),
+    );
+    let imgs = images(&sm, 12, 5);
+    let pending: Vec<_> = (0..24)
+        .map(|i| (i, router.submit(&imgs[i % imgs.len()]).unwrap()))
+        .collect();
+    for (i, p) in pending {
+        let reply = p.recv().unwrap();
+        let want = sm
+            .graph
+            .forward(
+                &sm.model,
+                &sm.weights,
+                &imgs[i % imgs.len()],
+                1,
+                KernelMode::Lut,
+            )
+            .unwrap();
+        assert_eq!(reply.logits, want, "request {i}: logits drifted");
+        assert_eq!(reply.pred, uniq::infer::kernels::argmax(&want));
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 24);
+    // least-outstanding over sequential submits spreads evenly
+    let routed: Vec<usize> =
+        fleet.replicas.iter().map(|r| r.routed).collect();
+    assert_eq!(routed, vec![12, 12]);
+}
+
+/// Saturating every replica's outstanding cap rejects with the typed
+/// `Overloaded` error — and the fleet recovers once replies drain.
+#[test]
+fn backpressure_rejects_typed_then_recovers() {
+    let sm = model();
+    // long collector wait: submitted requests stay outstanding while
+    // the test probes the cap deterministically
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            3,
+            RoutingPolicy::LeastOutstanding,
+            4,
+            Duration::from_millis(300),
+        ),
+    );
+    let imgs = images(&sm, 1, 9);
+    let mut pending = Vec::new();
+    for _ in 0..12 {
+        pending.push(router.submit(&imgs[0]).unwrap());
+    }
+    assert_eq!(router.outstanding(), 12, "3 replicas x cap 4 all filled");
+    match router.submit(&imgs[0]) {
+        Err(SubmitError::Overloaded { outstanding, cap }) => {
+            assert_eq!(cap, 4);
+            assert_eq!(outstanding, 4, "least-loaded replica is at cap");
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // drain: after every reply lands, capacity is back
+    for p in pending {
+        p.recv().unwrap();
+    }
+    assert_eq!(router.outstanding(), 0);
+    let p = router.submit(&imgs[0]).expect("capacity back after drain");
+    p.recv().unwrap();
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 13);
+    assert_eq!(fleet.rejected, 1, "exactly one typed rejection");
+}
+
+/// Health sweep replaces a killed replica with a fresh generation; the
+/// dead generation's served stats survive into the fleet merge.
+#[test]
+fn killed_replica_restarts_and_history_survives() {
+    let sm = model();
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            2,
+            RoutingPolicy::RoundRobin,
+            1024,
+            Duration::from_millis(1),
+        ),
+    );
+    let imgs = images(&sm, 4, 17);
+    // phase 1: both replicas serve
+    let pending: Vec<_> = (0..8)
+        .map(|i| router.submit(&imgs[i % imgs.len()]).unwrap())
+        .collect();
+    for p in pending {
+        p.recv().unwrap();
+    }
+    assert_eq!(router.alive_count(), 2);
+    router.kill_replica(0);
+    assert_eq!(router.alive_count(), 1, "killed replica must read dead");
+    router.heal_now();
+    assert_eq!(router.alive_count(), 2, "heal must install a fresh gen");
+    assert_eq!(router.restarts(), 1);
+    // phase 2: traffic flows through the healed fleet
+    let pending: Vec<_> = (0..8)
+        .map(|i| router.submit(&imgs[i % imgs.len()]).unwrap())
+        .collect();
+    for p in pending {
+        p.recv().unwrap();
+    }
+    let fleet = router.shutdown();
+    assert_eq!(
+        fleet.fleet.requests, 16,
+        "dead generation's serves must survive into the fleet merge"
+    );
+    assert_eq!(fleet.restarts, 1);
+    assert_eq!(fleet.replicas[0].generation, 1, "replica 0 was restarted");
+    assert_eq!(fleet.replicas[1].generation, 0);
+    assert_eq!(fleet.lost_in_flight, 0, "no requests were in flight");
+}
+
+/// A replica killed WITH requests queued: the clients' `Pending::recv`
+/// observes the dropped channels and resubmits through the router —
+/// every request still gets a (bit-correct) reply.
+#[test]
+fn inflight_kill_resubmits_with_zero_drops() {
+    let sm = model();
+    // long collector wait so the first wave is still queued at the kill
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            2,
+            RoutingPolicy::LeastOutstanding,
+            1024,
+            Duration::from_millis(300),
+        ),
+    );
+    let imgs = images(&sm, 8, 21);
+    let pending: Vec<_> = (0..8)
+        .map(|i| (i, router.submit(&imgs[i]).unwrap()))
+        .collect();
+    // 4 queued on each replica; replica 0 dies with its queue intact
+    router.kill_replica(0);
+    router.heal_now();
+    assert_eq!(router.restarts(), 1);
+    for (i, p) in pending {
+        let reply = p.recv().unwrap_or_else(|e| {
+            panic!("request {i} dropped across the kill: {e}")
+        });
+        let want = sm
+            .graph
+            .forward(&sm.model, &sm.weights, &imgs[i], 1, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(reply.logits, want, "request {i}: logits drifted");
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 8, "every request served exactly once");
+    assert_eq!(
+        fleet.lost_in_flight, 4,
+        "replica 0's queued wave was lost with the kill"
+    );
+    assert_eq!(fleet.resubmits, 4, "and resubmitted by its Pendings");
+}
+
+/// Power-of-two-choices: all requests served, policy touches more than
+/// one replica (a deterministic sampler property, seeded in the config).
+#[test]
+fn power_of_two_serves_all_requests() {
+    let sm = model();
+    let router = Router::start(
+        Arc::clone(&sm),
+        router_cfg(
+            3,
+            RoutingPolicy::PowerOfTwo,
+            1024,
+            Duration::from_millis(1),
+        ),
+    );
+    let imgs = images(&sm, 10, 31);
+    let pending: Vec<_> = (0..60)
+        .map(|i| router.submit(&imgs[i % imgs.len()]).unwrap())
+        .collect();
+    for p in pending {
+        p.recv().unwrap();
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 60);
+    let routed: Vec<usize> =
+        fleet.replicas.iter().map(|r| r.routed).collect();
+    assert_eq!(routed.iter().sum::<usize>(), 60);
+    assert!(
+        routed.iter().filter(|&&r| r > 0).count() >= 2,
+        "p2c must spread over more than one replica, got {routed:?}"
+    );
+}
+
+fn run_traffic(
+    sm: &Arc<ServeModel>,
+    imgs: &[Vec<f32>],
+    n: usize,
+    replicas: usize,
+    kill_at: Option<usize>,
+) -> (Vec<Vec<f32>>, FleetStats) {
+    let router = Router::start(
+        Arc::clone(sm),
+        RouterConfig {
+            replicas,
+            policy: RoutingPolicy::PowerOfTwo,
+            queue_cap: 8192,
+            // the soak exercises the REAL health path: the background
+            // monitor must notice the kill and restart the replica
+            health_every: Duration::from_millis(3),
+            max_retries: 8,
+            seed: 29,
+            serve: ServeConfig {
+                workers: 1,
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                mode: KernelMode::Lut,
+                kernel_threads: 1,
+            },
+        },
+    );
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        if Some(i) == kill_at {
+            router.kill_replica(1);
+        }
+        pending.push(router.submit(&imgs[i % imgs.len()]).expect("submit"));
+    }
+    let logits: Vec<Vec<f32>> = pending
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            p.recv()
+                .unwrap_or_else(|e| panic!("request {i} dropped: {e}"))
+                .logits
+        })
+        .collect();
+    (logits, router.shutdown())
+}
+
+/// The CI soak: 1200 requests across 3 replicas, replica 1 killed at
+/// the halfway submit with its queue full, automatic (monitor-driven)
+/// restart, zero dropped requests, outputs bit-identical to a
+/// single-replica run of the same traffic.
+#[test]
+#[ignore = "soak: run explicitly (CI bench job) with -- soak --ignored"]
+fn soak_kill_one_replica_mid_run_zero_drops() {
+    let sm = model();
+    let n = 1200;
+    let imgs = images(&sm, 48, 13);
+    let (expected, single) = run_traffic(&sm, &imgs, n, 1, None);
+    assert_eq!(single.fleet.requests, n);
+    let (got, fleet) = run_traffic(&sm, &imgs, n, 3, Some(n / 2));
+    assert_eq!(
+        fleet.fleet.requests, n,
+        "every request must be served exactly once across the kill"
+    );
+    assert!(
+        fleet.restarts >= 1,
+        "the health monitor never restarted the killed replica"
+    );
+    for (i, (a, b)) in expected.iter().zip(&got).enumerate() {
+        assert_eq!(
+            a, b,
+            "request {i}: fleet output differs from single-replica run"
+        );
+    }
+    println!(
+        "soak: {} requests, {} restarts, {} resubmits, {} lost in flight \
+         — zero drops, bit-identical",
+        n, fleet.restarts, fleet.resubmits, fleet.lost_in_flight
+    );
+}
