@@ -108,6 +108,54 @@ def test_zero_overlap_fails_the_gate(tmp_path):
     assert run(cur, base, "--fail-below", "0.7") == 1
 
 
+def test_new_keys_skip_with_warning_not_failure(tmp_path, capsys):
+    """The aq-bench contract: keys the baseline predates (e.g.
+    m/aq_quantile4/b32) are listed as skipped and do NOT fail the gate,
+    as long as some overlap still gates."""
+    cur_keys = dict(
+        BASE,
+        **{
+            "m/aq_quantile4/b32": 1_000_000.0,
+            "m/aq_uniform4/b32": 1_000_000.0,
+        },
+    )
+    cur = write(tmp_path, "cur.json", report(cur_keys))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "not in the baseline yet" in out
+    assert "m/aq_quantile4/b32" in out
+    # the shared keys still gate: regress one of them and fail
+    cur_keys["m/lut/b1"] = 2_000_000.0
+    cur = write(tmp_path, "cur2.json", report(cur_keys))
+    assert run(cur, base, "--fail-below", "0.7") == 1
+
+
+def test_gone_keys_warn_loudly_in_gate_mode_only(tmp_path, capsys):
+    """Baseline keys missing from the current report must not fail the
+    gate (thread-count keys legitimately vanish across runners), but in
+    gate mode the log must flag the coverage hole loudly."""
+    cur = write(tmp_path, "cur.json", report({"m/lut/b1": 1_000_000.0}))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base) == 0
+    out = capsys.readouterr().out
+    assert "no longer run" in out and "WARN" not in out
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "WARN (gate does not cover these)" in out
+    assert "m/lut/b64" in out
+
+
+def test_new_keys_warning_lists_are_truncated(tmp_path, capsys):
+    many = dict(BASE, **{f"m/aq_new/{i}": 1e6 for i in range(12)})
+    cur = write(tmp_path, "cur.json", report(many))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "12 benchmark(s) not in the baseline" in out
+    assert "..." in out
+
+
 def test_nested_tables_are_harvested(tmp_path):
     cur = write(tmp_path, "cur.json", report(BASE, nested=True))
     base = write(tmp_path, "base.json", report(BASE))

@@ -127,6 +127,17 @@ def main(argv):
             "no overlapping benchmark names "
             f"({len(current)} current vs {len(baseline)} baseline)"
         )
+    # keys the baseline predates (e.g. the aq-config benches landed
+    # after the baseline was recorded): skip with a warning — a new
+    # benchmark must never render the whole comparison un-runnable, and
+    # must never silently vanish from the report either
+    new = sorted(set(current) - set(baseline))
+    if new:
+        print(
+            f"bench-compare: WARN {len(new)} benchmark(s) not in the "
+            "baseline yet (skipped; re-record to start gating them): "
+            f"{', '.join(new[:8])}{'...' if len(new) > 8 else ''}"
+        )
 
     mode = (
         f"gate: fail below {hard:.2f}x, warn below {args.warn_below:.2f}x"
@@ -156,11 +167,19 @@ def main(argv):
             f"{name:<52} {base / 1e6:>10.3f} {now / 1e6:>10.3f} "
             f"{rel:>7.2f}x{flag}"
         )
+    # Baseline keys absent from the current report are NOT a gate
+    # failure: thread-count-suffixed keys (e.g. lut_v2_t4) legitimately
+    # vanish on runners with different core counts (see the baseline's
+    # thread_key_note). But in gate mode they deserve a loud WARN —
+    # a renamed or crashed benchmark escapes gating through this hole,
+    # and only the log will say so.
     gone = sorted(set(baseline) - set(current))
     if gone:
+        sev = "WARN (gate does not cover these)" if gating else "note"
         print(
-            f"bench-compare: {len(gone)} baseline benchmarks no longer "
-            f"run: {', '.join(gone[:8])}{'...' if len(gone) > 8 else ''}"
+            f"bench-compare: {sev}: {len(gone)} baseline benchmark(s) "
+            f"no longer run: {', '.join(gone[:8])}"
+            f"{'...' if len(gone) > 8 else ''}"
         )
     if warned:
         print(

@@ -261,6 +261,77 @@ for bits in range(1, 9):
             ok = False
 check("unpack_into fast paths all widths", ok)
 
+# ---- activation-quant mirror (infer::actquant) vs the jax kernel ----
+# The rust serving path builds STATIC per-layer tables from calibrated
+# (mu, sigma): quantile thresholds mu + sigma*icdf(i/k) with bin-median
+# levels, searched with searchsorted(side="right") — analytically
+# identical to fake_quant_ref's u = cdf((x-mu)/sigma); floor(u*k)
+# (x >= t_i  <=>  u >= i/k). Values straddling a bin edge may flip bins
+# across implementations (cdf vs icdf rounding), so the gate is: almost
+# every element agrees exactly, and any stragglers moved by at most one
+# bin.
+from statistics import NormalDist
+
+from compile.kernels.ref import fake_quant_ref
+
+_ND = NormalDist()
+
+def aq_table(mode, bits, mu, sigma):
+    """Mirror of actquant::ActQuantTable::from_stats."""
+    k = 1 << bits
+    sigma = max(sigma, 1e-8)
+    if mode == "quantile":
+        thr = np.array([mu + sigma * _ND.inv_cdf(i / k)
+                        for i in range(1, k)], np.float32)
+        lvl = np.array([mu + sigma * _ND.inv_cdf((i + 0.5) / k)
+                        for i in range(k)], np.float32)
+    else:  # uniform: [-3σ, 3σ] equal bins, midpoint levels (f32 math)
+        lo = np.float32(mu) - np.float32(3.0) * np.float32(sigma)
+        width = np.float32(6.0) * np.float32(sigma) / np.float32(k)
+        thr = np.array([lo + width * np.float32(i)
+                        for i in range(1, k)], np.float32)
+        lvl = np.array([lo + width * (np.float32(i) + np.float32(0.5))
+                        for i in range(k)], np.float32)
+    return thr, lvl
+
+def aq_snap(x, thr, lvl):
+    """Mirror of kernels::ActEp: bin by ties-right search, take level."""
+    return lvl[np.searchsorted(thr, x, side="right")]
+
+for bits in (2, 4, 8):
+    for (mu, sigma) in [(0.0, 1.0), (0.31, 0.42), (-1.2, 2.5)]:
+        x = rng.normal(mu, sigma, size=20000).astype(np.float32)
+        thr, lvl = aq_table("quantile", bits, mu, sigma)
+        got = aq_snap(x, thr, lvl)
+        want = np.asarray(fake_quant_ref(
+            jnp.asarray(x), np.float32(mu), np.float32(sigma),
+            np.float32(1 << bits)))
+        exact = np.isclose(got, want, rtol=1e-5, atol=1e-6)
+        frac = exact.mean()
+        # stragglers (bin-edge flips) may move at most one bin
+        bin_w = np.diff(lvl).max() if len(lvl) > 1 else 0.0
+        worst = np.abs(got - want)[~exact].max() if (~exact).any() else 0.0
+        check(f"aq quantile table vs fake_quant_ref b{bits} mu{mu}",
+              frac > 0.999 and worst <= bin_w * 1.0001,
+              f"exact={frac:.5f} worst={worst:.3g} binw={bin_w:.3g}")
+
+# uniform mode has no jax twin; validate against an independent
+# closed-form: idx = clip(floor((x - lo)/width), 0, k-1)
+for bits in (2, 4, 8):
+    k = 1 << bits
+    mu, sigma = 0.17, 0.9
+    x = rng.normal(mu, sigma, size=20000).astype(np.float32)
+    thr, lvl = aq_table("uniform", bits, mu, sigma)
+    got = aq_snap(x, thr, lvl)
+    lo, width = mu - 3 * sigma, 6 * sigma / k
+    idx = np.clip(np.floor((x.astype(np.float64) - lo) / width), 0, k - 1)
+    want = lvl[idx.astype(int)]
+    exact = np.isclose(got, want, rtol=1e-5, atol=1e-6)
+    worst = np.abs(got - want)[~exact].max() if (~exact).any() else 0.0
+    check(f"aq uniform table closed form b{bits}",
+          exact.mean() > 0.999 and worst <= width * 1.0001,
+          f"exact={exact.mean():.5f}")
+
 # ---- full-graph check: python/compile models in eval mode vs mirror ----
 from compile.layers import Ctx
 from compile.mlp import mlp
@@ -288,37 +359,77 @@ def bn_mirror(x, gamma, beta, mean, var):
     inv = gamma / np.sqrt(var + 1e-5)
     return (x - mean) * inv + beta
 
-def mirror_forward(arch, b, params, state, x):
-    """Mirror of graph.rs: name-keyed ops with the Rust stride rules."""
+def mirror_forward(arch, b, params, state, x, aq_bits=None,
+                   lax_conv=False):
+    """Mirror of graph.rs: name-keyed ops with the Rust stride rules.
+
+    ``aq_bits`` mirrors the v2 executor's activation-quant sites (the
+    compiled plan's EpSpec.aq slots + the post-residual ActQuant step):
+    every relu'd qlayer output and the resnet downsample branch are
+    quantized; the final dense is not. Stats are per-tensor dynamic
+    here (matching the jax eval path this is validated against); the
+    rust engine freezes the same formulas at calibration time.
+
+    ``lax_conv`` swaps the im2col mirror convs for lax convs: the aq
+    placement check needs bit-level agreement with the jax models,
+    because quantization is discontinuous — a ~1e-6 conv-lowering
+    difference near a bin edge late in a resnet flips a whole bin
+    (~σ/k) and shifts every logit through the global pool. The im2col
+    lowering itself is validated against lax separately above.
+    """
     P = {m["name"]: p for m, p in zip(b.params, params)}
     S = {m["name"]: s for m, s in zip(b.state, state)}
     def conv(y, name, stride):
+        if lax_conv:
+            return np.asarray(lax.conv_general_dilated(
+                jnp.asarray(np.asarray(y, np.float32)),
+                jnp.asarray(P[name + "/w"]), (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")))
         return conv_via_im2col(y, P[name + "/w"], stride)
     def dw(y, name, stride):
+        if lax_conv:
+            c = P[name + "/w"].shape[-1]
+            return np.asarray(lax.conv_general_dilated(
+                jnp.asarray(np.asarray(y, np.float32)),
+                jnp.asarray(P[name + "/w"]), (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c))
         return depthwise(y, P[name + "/w"].reshape(9, -1), 3, stride)
     def bn(y, name):
         return bn_mirror(y, P[name + "/gamma"], P[name + "/beta"],
                          S[name + "/mean"], S[name + "/var"])
     relu = lambda v: np.maximum(v, 0.0)
+    def aq(y):
+        if aq_bits is None:
+            return y
+        # stats via jnp so they bit-match the jax models' tensor_stats:
+        # quantization is discontinuous, and np-vs-jnp reduction
+        # rounding (~1e-7) near a bin edge would flip a whole bin. The
+        # rust engine has no such split — calibration and serving share
+        # one stats implementation.
+        ja = jnp.asarray(np.asarray(y, np.float32))
+        mu = float(jnp.mean(ja)); sigma = float(jnp.std(ja)) + 1e-8
+        thr, lvl = aq_table("quantile", aq_bits, mu, sigma)
+        return aq_snap(np.asarray(y, np.float32), thr, lvl)
     if arch == "mlp":
         y = x.reshape(x.shape[0], -1)
         names = [q for q in b.qlayers]
         for i, n in enumerate(names):
             y = y @ P[n + "/w"] + P[n + "/b"]
             if i < len(names) - 1:
-                y = relu(y)
+                y = aq(relu(y))
         return y
     if arch == "mobilenet":
-        y = relu(bn(conv(x, "conv1", 1), "bn1"))
+        y = aq(relu(bn(conv(x, "conv1", 1), "bn1")))
         nblocks = sum(1 for q in b.qlayers if q.endswith("/dw"))
         for i in range(nblocks):
             stride = 2 if i % 2 == 1 else 1
-            y = relu(bn(dw(y, f"ds{i}/dw", stride), f"ds{i}/bn_dw"))
-            y = relu(bn(conv(y, f"ds{i}/pw", 1), f"ds{i}/bn_pw"))
+            y = aq(relu(bn(dw(y, f"ds{i}/dw", stride), f"ds{i}/bn_dw")))
+            y = aq(relu(bn(conv(y, f"ds{i}/pw", 1), f"ds{i}/bn_pw")))
         y = y.mean(axis=(1, 2))
         return y @ P["fc/w"] + P["fc/b"]
     if arch == "resnet":
-        y = relu(bn(conv(x, "conv1", 1), "bn1"))
+        y = aq(relu(bn(conv(x, "conv1", 1), "bn1")))
         prefixes = []
         for q in b.qlayers:
             if "/" in q:
@@ -329,11 +440,12 @@ def mirror_forward(arch, b, params, state, x):
             gi = int(p[1:p.index("b")]); bi = int(p[p.index("b")+1:])
             stride = 2 if (gi > 0 and bi == 0) else 1
             saved = y
-            y = relu(bn(conv(y, f"{p}/conv1", stride), f"{p}/bn1"))
+            y = aq(relu(bn(conv(y, f"{p}/conv1", stride), f"{p}/bn1")))
             y = bn(conv(y, f"{p}/conv2", 1), f"{p}/bn2")
             if f"{p}/down" in b.qlayers:
-                saved = bn(conv(saved, f"{p}/down", stride), f"{p}/bn_down")
-            y = relu(y + saved)
+                saved = aq(bn(conv(saved, f"{p}/down", stride),
+                              f"{p}/bn_down"))
+            y = aq(relu(y + saved))
         y = y.mean(axis=(1, 2))
         return y @ P["fc/w"] + P["fc/b"]
     raise ValueError(arch)
@@ -351,6 +463,29 @@ for arch, build in [("mlp", lambda: mlp(hidden=64)),
     got = mirror_forward(arch, b, params, state, x)
     diff = np.abs(got - want).max()
     check(f"graph mirror {arch}", diff < 2e-3, f"maxdiff={diff:.2e}")
+
+    # aq=1 graph check: the mirror's aq placement (the rust compiled
+    # plan's EpSpec.aq slots + post-residual ActQuant) and the static
+    # table semantics against the jax models evaluated with activation
+    # quantization on — lax convs isolate the placement question from
+    # conv-lowering rounding (see mirror_forward docstring).
+    for bits in (4, 8):
+        ctx_aq = Ctx([jnp.asarray(p) for p in params],
+                     [jnp.asarray(s) for s in state],
+                     train=False, k_a=float(1 << bits), aq=1.0)
+        want_aq = np.asarray(apply_fn(ctx_aq, jnp.asarray(x)))
+        got_aq = mirror_forward(arch, b, params, state, x, aq_bits=bits,
+                                lax_conv=True)
+        # gate calibration: correct placement measures ≤ 1e-3 (residual
+        # threshold-rounding bin flips); deliberately dropping a single
+        # aq site measures ≥ 5.7e-2. 1e-2 splits the two by ~5x each
+        # way and stays stable across jax/numpy versions.
+        d = np.abs(got_aq - want_aq)
+        check(f"graph mirror {arch} aq b{bits}", d.max() < 1e-2,
+              f"maxdiff={d.max():.2e}")
+        # and aq=on must actually differ from aq=off
+        check(f"graph mirror {arch} aq b{bits} is active",
+              np.abs(got_aq - got).max() > 1e-4)
 
 print("\n%d failures" % len(FAIL))
 sys.exit(1 if FAIL else 0)

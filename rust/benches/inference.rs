@@ -22,8 +22,8 @@ use uniq::coordinator::FreezeQuant;
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
 use uniq::infer::{
-    kernels, synthetic, ExecBuffers, FrozenModel, KernelMode, Router,
-    RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
+    kernels, synthetic, AqMode, ExecBuffers, FrozenModel, KernelMode,
+    Router, RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
 };
 use uniq::quant::{KQuantileGauss, QuantizerFit};
 use uniq::util::bench::Bench;
@@ -213,6 +213,77 @@ fn router_fleet_ab(
     ])
 }
 
+/// Accuracy-vs-BOPS frontier data: forward throughput + analytic BOPS
+/// per activation-quant config on mobilenet_mini — (none, uniform-4,
+/// quantile-4), the acceptance set. BOPS are the REAL served per-layer
+/// `b_w × b_a` (`Graph::served_complexity`): a layer prices at the
+/// width of the tensor it reads — f32 image input and pooled
+/// classifier input stay 32-bit, everything fed by a quantized output
+/// prices at the table width. Before this the recorded numbers were
+/// implicitly weight-only.
+fn aq_configs(b: &mut Bench, calib: &[f32], img_len: usize) -> Json {
+    let (m, state) = synthetic::model("mobilenet_mini", 16, 10, 7).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let batch = 32usize;
+    let mut jconfigs = Vec::new();
+    for (label, mode) in [
+        ("none", None),
+        ("uniform4", Some(AqMode::Uniform)),
+        ("quantile4", Some(AqMode::Quantile)),
+    ] {
+        let mut sm = ServeModel::new(frozen.clone()).unwrap();
+        if let Some(mode) = mode {
+            sm.calibrate_aq(mode, 4, calib, batch).unwrap();
+        }
+        let c = sm.graph.served_complexity(&sm.model);
+        let x = &calib[..batch * img_len];
+        let mut bufs = ExecBuffers::new();
+        let run = b.run_throughput(
+            &format!("mobilenet_mini/aq_{label}/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward_into(
+                        &sm.model,
+                        &sm.weights,
+                        x,
+                        batch,
+                        KernelMode::Lut,
+                        &mut bufs,
+                    )
+                    .unwrap();
+            },
+        );
+        println!(
+            "aq[{label}] w{}a{}: {:.4} GBOPs/img at {:.0} ns/batch{batch}",
+            sm.model.bits_w,
+            sm.model.bits_a(),
+            c.gbops(),
+            run.median_ns
+        );
+        jconfigs.push(obj(vec![
+            ("mode", s(label)),
+            ("bits_w", num(sm.model.bits_w as f64)),
+            ("bits_a", num(sm.model.bits_a() as f64)),
+            ("gbops_per_img", num(c.gbops())),
+            ("run", run.to_json()),
+        ]));
+    }
+    obj(vec![
+        ("model", s("mobilenet_mini")),
+        ("batch", num(batch as f64)),
+        ("configs", Json::Arr(jconfigs)),
+        (
+            "note",
+            s("gbops_per_img is the analytic served complexity at the \
+               config's real b_w x b_a; run.median_ns is the v2 forward \
+               at the stated batch"),
+        ),
+    ])
+}
+
 fn main() {
     let mut b = Bench::quick("inference");
     b.min_time = std::time::Duration::from_millis(400);
@@ -338,6 +409,7 @@ fn main() {
     }
 
     let jkernel = kernel_micro(&mut b, threads);
+    let jaq = aq_configs(&mut b, &probe.x, data.image_len());
 
     let report = obj(vec![
         ("bench", s("inference")),
@@ -345,6 +417,7 @@ fn main() {
         ("kernel_micro", jkernel),
         ("serve_ab", serve_json),
         ("router_fleet", fleet_json),
+        ("aq_configs", jaq),
         ("all_runs", b.report_json()),
         (
             "note",

@@ -69,6 +69,13 @@ impl Layer {
     }
 
     /// BOPs for this layer at (b_w, b_a)-bit weights/activations.
+    ///
+    /// The per-MAC cost is `b_a·b_w + b_a + b_w + log₂(n·k²)` — the
+    /// b_w·b_a product term is what makes activation bits first-class:
+    /// serving-path callers must pass the REAL activation width
+    /// (`FrozenModel::bits_a()`: the aq table width, or 32 for f32
+    /// activations — see `Graph::served_complexity`), not a
+    /// placeholder.
     pub fn bops(&self, b_w: u32, b_a: u32) -> f64 {
         let n = (self.cin / self.groups) as f64;
         let k2 = (self.ksize * self.ksize) as f64;
@@ -175,6 +182,27 @@ mod tests {
         let dw = Layer::depthwise("dw", 100, 64, 3);
         assert_eq!(dw.macs(), 100 * 64 * 9);
         assert_eq!(dw.params(), 64 * 9);
+    }
+
+    /// Activation bits are not cosmetic: at fixed weight bits, cutting
+    /// b_a must strictly cut compute BOPs (the b_w·b_a product term) —
+    /// the regression the served-graph accounting fix keys on.
+    #[test]
+    fn activation_bits_scale_bops() {
+        let arch = resnet_imagenet(18);
+        let a32 = arch.complexity(BitConfig::uniq(4, 32)).bops;
+        let a8 = arch.complexity(BitConfig::uniq(4, 8)).bops;
+        let a4 = arch.complexity(BitConfig::uniq(4, 4)).bops;
+        assert!(a32 > a8 && a8 > a4, "{a32} {a8} {a4}");
+        // hand-check the (4,4) per-MAC cost on a known layer
+        let l = Layer::conv("c", 64, 16, 32, 3);
+        let want =
+            l.macs() as f64 * (16.0 + 4.0 + 4.0 + (144f64).log2());
+        assert!((l.bops(4, 4) - want).abs() < 1.0);
+        // model size depends on b_w only — activations are transient
+        let m8 = arch.complexity(BitConfig::uniq(4, 8)).model_bits;
+        let m4 = arch.complexity(BitConfig::uniq(4, 4)).model_bits;
+        assert_eq!(m8, m4);
     }
 
     #[test]

@@ -89,17 +89,27 @@ COMMANDS:
   bops       --arch A --bits-w B --bits-a B [--skip-first-last]
                                BOPs/model-size for a full-size arch
   infer      --model M [--ckpt C --frozen DIR --export DIR --bits-w B
-              --quantizer Q --batch N --val-size N --synth --width W]
+              --quantizer Q --batch N --val-size N --synth --width W
+              --aq none|uniform|quantile --aq-bits B --calib-size N]
                                native LUT inference of a frozen model:
                                parity vs dequantized f32, throughput, and
-                               measured vs analytic BOPs (no PJRT)
+                               measured vs analytic BOPs at the real
+                               b_w x b_a of the served graph (no PJRT);
+                               --aq calibrates static per-layer
+                               activation-quant tables (fused into the
+                               GEMM epilogues) and --export ships them
+                               in the frozen format (v2)
   serve      --model M [--requests N --workers W --max-batch B
               --max-wait-ms T --kernel-threads K --engine v1|v2
               --replicas R --routing rr|least|p2c --queue-cap Q
+              --aq none|uniform|quantile --aq-bits B --calib-size N
               --synth --width W --stats out.json]
                                batched native serving with latency stats
                                (v2: tiled/fused arena engine, default;
-                               v1: the PR-1 baseline engine);
+                               v1: the PR-1 baseline engine;
+                               --aq quantizes activations in the fused
+                               epilogue — v2 only, `--aq none` strips
+                               any tables the frozen file carried);
                                --replicas R>1 serves through the
                                replica-set router: health-checked
                                replicas with automatic restart, typed

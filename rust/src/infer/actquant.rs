@@ -1,0 +1,486 @@
+//! Activation quantization for the native serving path (paper §3.4).
+//!
+//! Training argues BOPS in terms of b_w·b_a — the product of weight and
+//! activation bitwidths — yet until this module the native engine ran
+//! f32 activations end to end, so every served BOPS number was
+//! weight-only. Here the python eval semantics (`layers.act_quant`:
+//! fake-quantize a quantized layer's post-relu output) become a static,
+//! exportable per-layer table applied inside the fused GEMM epilogue
+//! (`kernels::ActEp`), with two quantizer families:
+//!
+//! * [`AqMode::Quantile`] — the paper's Gaussian k-quantile: thresholds
+//!   `μ + σ·Φ⁻¹(i/k)`, levels at the bin medians `μ + σ·Φ⁻¹((i+½)/k)`.
+//!   This is exactly the static form of the in-graph `fake_quant`
+//!   kernel (`u = Φ((x−μ)/σ); ⌊u·k⌋`), since `x ≥ t_i ⇔ u ≥ i/k`.
+//! * [`AqMode::Uniform`] — equal-width bins on `[μ−3σ, μ+3σ]` with
+//!   midpoint levels (the `quant::Uniform` ablation baseline).
+//!
+//! The python path computes (μ, σ) per tensor *dynamically* at every
+//! forward; a serving engine cannot afford a two-pass epilogue, so the
+//! stats are **calibrated once at freeze time** ([`calibrate`]): a
+//! calibration set runs through the graph with quantization disabled,
+//! per-layer running moments are folded (`σ = std + 1e-8`, mirroring
+//! `common.tensor_stats`), and the resulting tables ship inside the
+//! versioned frozen format (`codebook.rs`, format v2 — a pre-aq
+//! `frozen.json` still loads with `aq = None` and serves bit-identically
+//! to the previous engine).
+
+use anyhow::{anyhow, Result};
+
+use super::codebook::FrozenModel;
+use super::graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
+use super::kernels::ActEp;
+use crate::stats::norm_icdf;
+use crate::util::json::{num, obj, s, Json};
+
+/// Which activation fake-quantizer family the serving path applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AqMode {
+    /// equal-width bins on `[μ−3σ, μ+3σ]`, midpoint levels
+    Uniform,
+    /// Gaussian k-quantile (equiprobable bins, bin-median levels) — the
+    /// static form of the training-path `fake_quant` kernel
+    Quantile,
+}
+
+impl AqMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AqMode::Uniform => "uniform",
+            AqMode::Quantile => "quantile",
+        }
+    }
+
+    /// Parse a `--aq` flag value; `"none"` means no activation
+    /// quantization (f32 activations, today's behavior).
+    pub fn parse(v: &str) -> Result<Option<AqMode>> {
+        Ok(match v {
+            "none" => None,
+            "uniform" => Some(AqMode::Uniform),
+            "quantile" => Some(AqMode::Quantile),
+            other => {
+                return Err(anyhow!(
+                    "unknown --aq '{other}' (expected none, uniform or \
+                     quantile)"
+                ))
+            }
+        })
+    }
+}
+
+/// Static per-layer activation quantizer: k−1 ascending interior
+/// thresholds and k representation levels, built analytically from the
+/// calibrated `(μ, σ)`. The raw stats ride along for provenance (and so
+/// a table can be rebuilt at a different bitwidth without re-running
+/// calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActQuantTable {
+    pub mu: f32,
+    pub sigma: f32,
+    pub thresholds: Vec<f32>,
+    pub levels: Vec<f32>,
+}
+
+impl ActQuantTable {
+    /// Build the k = 2^bits table for `mode` from calibrated stats.
+    ///
+    /// Quantile tables use the same `norm_icdf` construction as
+    /// `quant::KQuantileGauss::fit` (f64 math, cast once); uniform
+    /// tables use the f32 arithmetic of `quant::Uniform::fit` — so each
+    /// mode is bit-consistent with its host-side weight-quantizer twin.
+    pub fn from_stats(
+        mode: AqMode,
+        bits: u32,
+        mu: f32,
+        sigma: f32,
+    ) -> ActQuantTable {
+        let k = 1usize << bits.clamp(1, 8);
+        let sigma = sigma.max(1e-8);
+        let (thresholds, levels) = match mode {
+            AqMode::Quantile => {
+                let (muf, sf) = (mu as f64, sigma as f64);
+                (
+                    (1..k)
+                        .map(|i| {
+                            (muf + sf * norm_icdf(i as f64 / k as f64))
+                                as f32
+                        })
+                        .collect(),
+                    (0..k)
+                        .map(|i| {
+                            (muf + sf
+                                * norm_icdf((i as f64 + 0.5) / k as f64))
+                                as f32
+                        })
+                        .collect(),
+                )
+            }
+            AqMode::Uniform => {
+                let lo = mu - 3.0 * sigma;
+                let width = 6.0 * sigma / k as f32;
+                (
+                    (1..k).map(|i| lo + width * i as f32).collect(),
+                    (0..k)
+                        .map(|i| lo + width * (i as f32 + 0.5))
+                        .collect(),
+                )
+            }
+        };
+        ActQuantTable { mu, sigma, thresholds, levels }
+    }
+
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Borrow as the kernel-epilogue stage.
+    pub fn ep(&self) -> ActEp<'_> {
+        ActEp { thresholds: &self.thresholds, levels: &self.levels }
+    }
+
+    /// Snap every value in `x` to its representation level (the unfused
+    /// form, used at the post-residual aq site and by tests).
+    pub fn snap_rows(&self, x: &mut [f32]) {
+        let ep = self.ep();
+        for v in x.iter_mut() {
+            *v = ep.snap(*v);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("mu", num(self.mu as f64)),
+            ("sigma", num(self.sigma as f64)),
+            ("thresholds", f32_arr(&self.thresholds)),
+            ("levels", f32_arr(&self.levels)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ActQuantTable> {
+        let t = ActQuantTable {
+            mu: req_f32(j, "mu")?,
+            sigma: req_f32(j, "sigma")?,
+            thresholds: req_f32s(j, "thresholds")?,
+            levels: req_f32s(j, "levels")?,
+        };
+        // structural validity gates the load, not the first request: a
+        // short levels array would otherwise panic inside ActEp::snap
+        // on a serving worker (bin() can return thresholds.len())
+        if t.levels.is_empty()
+            || t.levels.len() != t.thresholds.len() + 1
+            || t.levels.len() > 256
+        {
+            return Err(anyhow!(
+                "act_quant table has {} levels for {} thresholds \
+                 (want levels = thresholds + 1, at most 256)",
+                t.levels.len(),
+                t.thresholds.len()
+            ));
+        }
+        Ok(t)
+    }
+}
+
+/// Whole-model activation-quant configuration: one optional table per
+/// qlayer (`FrozenModel::layers` order). `None` slots are layers whose
+/// output the python models never activation-quantize — the final dense
+/// (logits stay f32) and, with no calibration traffic, anything else.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActQuantModel {
+    pub mode: AqMode,
+    /// activation bitwidth b_a (k = 2^bits levels per table)
+    pub bits: u8,
+    pub tables: Vec<Option<ActQuantTable>>,
+}
+
+impl ActQuantModel {
+    pub fn k(&self) -> usize {
+        1usize << self.bits
+    }
+
+    /// Table for qlayer `q`, if its output is activation-quantized.
+    pub fn table(&self, q: usize) -> Option<&ActQuantTable> {
+        self.tables.get(q).and_then(|t| t.as_ref())
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.tables.iter().filter(|t| t.is_some()).count()
+    }
+
+    pub(super) fn to_json(&self) -> Json {
+        let tables = self
+            .tables
+            .iter()
+            .map(|t| t.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null))
+            .collect();
+        obj(vec![
+            ("mode", s(self.mode.name())),
+            ("bits", num(self.bits as f64)),
+            ("tables", Json::Arr(tables)),
+        ])
+    }
+
+    pub(super) fn from_json(j: &Json) -> Result<ActQuantModel> {
+        let mode = j
+            .req("mode")
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .ok_or_else(|| anyhow!("act_quant mode not a string"))?
+            .to_string();
+        let mode = AqMode::parse(&mode)?
+            .ok_or_else(|| anyhow!("act_quant mode 'none' on disk"))?;
+        let bits = j
+            .req("bits")
+            .map_err(anyhow::Error::msg)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("act_quant bits not a number"))?;
+        let mut tables = Vec::new();
+        for jt in j
+            .req("tables")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("act_quant tables not an array"))?
+        {
+            tables.push(match jt {
+                Json::Null => None,
+                other => Some(ActQuantTable::from_json(other)?),
+            });
+        }
+        Ok(ActQuantModel { mode, bits: bits.clamp(1, 8) as u8, tables })
+    }
+}
+
+/// Per-qlayer running moments of the calibration pass.
+#[derive(Debug, Clone, Copy, Default)]
+struct Acc {
+    n: f64,
+    sum: f64,
+    sumsq: f64,
+}
+
+/// Calibrate static activation-quant tables for `m`: run `images`
+/// (flattened `[n, image]`, `n·image_len` floats) through the graph with
+/// activation quantization disabled, accumulate per-qlayer moments of
+/// every aq site's post-epilogue tensor, and build the `mode`/`bits`
+/// tables. Deterministic: same model + images ⇒ identical tables.
+///
+/// Returns the `ActQuantModel` to install as `FrozenModel::aq` (the
+/// caller decides; `ServeModel::calibrate_aq` is the serving-side
+/// convenience wrapper).
+pub fn calibrate(
+    m: &FrozenModel,
+    graph: &Graph,
+    weights: &PreparedWeights,
+    images: &[f32],
+    batch: usize,
+    mode: AqMode,
+    bits: u32,
+) -> Result<ActQuantModel> {
+    let img_len: usize = m.image.iter().product();
+    if img_len == 0 || images.is_empty() || images.len() % img_len != 0 {
+        return Err(anyhow!(
+            "calibration set is {} floats, not a whole number of {:?} \
+             images",
+            images.len(),
+            m.image
+        ));
+    }
+    let n_img = images.len() / img_len;
+    let mut acc = vec![Acc::default(); m.layers.len()];
+    let mut bufs = ExecBuffers::new();
+    let mut i0 = 0usize;
+    while i0 < n_img {
+        let b = batch.max(1).min(n_img - i0);
+        let x = &images[i0 * img_len..(i0 + b) * img_len];
+        graph.forward_calibrate(
+            m,
+            weights,
+            x,
+            b,
+            KernelMode::Lut,
+            &mut bufs,
+            &mut |q, act| {
+                let a = &mut acc[q];
+                for &v in act {
+                    let v = v as f64;
+                    a.n += 1.0;
+                    a.sum += v;
+                    a.sumsq += v * v;
+                }
+            },
+        )?;
+        i0 += b;
+    }
+    let tables = acc
+        .iter()
+        .map(|a| {
+            if a.n == 0.0 {
+                return None;
+            }
+            let mu = a.sum / a.n;
+            let var = (a.sumsq / a.n - mu * mu).max(0.0);
+            // mirror common.tensor_stats: sigma = std + 1e-8
+            let sigma = var.sqrt() + 1e-8;
+            Some(ActQuantTable::from_stats(
+                mode,
+                bits,
+                mu as f32,
+                sigma as f32,
+            ))
+        })
+        .collect();
+    Ok(ActQuantModel { mode, bits: bits.clamp(1, 8) as u8, tables })
+}
+
+fn f32_arr(vs: &[f32]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn req_f32(j: &Json, key: &str) -> Result<f32> {
+    Ok(j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{key} not a number"))? as f32)
+}
+
+fn req_f32s(j: &Json, key: &str) -> Result<Vec<f32>> {
+    j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key} not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|n| n as f32)
+                .ok_or_else(|| anyhow!("{key} holds a non-number"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden constants (scipy Φ⁻¹, μ=0, σ=1): the table construction
+    /// matches the paper's quantile formulas, not just itself.
+    #[test]
+    fn quantile_table_matches_gaussian_quantiles() {
+        let t = ActQuantTable::from_stats(AqMode::Quantile, 2, 0.0, 1.0);
+        let want_t = [-0.6744898, 0.0, 0.6744898f32];
+        let want_l = [-1.1503494, -0.3186394, 0.3186394, 1.1503494f32];
+        assert_eq!(t.k(), 4);
+        for (a, b) in t.thresholds.iter().zip(&want_t) {
+            assert!((a - b).abs() < 1e-3, "threshold {a} vs {b}");
+        }
+        for (a, b) in t.levels.iter().zip(&want_l) {
+            assert!((a - b).abs() < 1e-3, "level {a} vs {b}");
+        }
+        // shifted/scaled stats translate affinely
+        let t2 = ActQuantTable::from_stats(AqMode::Quantile, 2, 2.0, 0.5);
+        for (a, b) in t2.levels.iter().zip(&want_l) {
+            assert!((a - (2.0 + 0.5 * b)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn uniform_table_matches_uniform_fit_layout() {
+        let t = ActQuantTable::from_stats(AqMode::Uniform, 2, 0.0, 1.0);
+        assert_eq!(t.thresholds, vec![-1.5, 0.0, 1.5]);
+        assert_eq!(t.levels, vec![-2.25, -0.75, 0.75, 2.25]);
+    }
+
+    /// Each level must bin to its own index — the executor's quantized
+    /// ping-pong buffer (`ExecBuffers` qact) depends on snapped values
+    /// re-binning consistently.
+    #[test]
+    fn levels_bin_to_their_own_index() {
+        for mode in [AqMode::Uniform, AqMode::Quantile] {
+            for bits in [1u32, 2, 4, 8] {
+                let t = ActQuantTable::from_stats(mode, bits, 0.3, 0.7);
+                let ep = t.ep();
+                for (i, &lv) in t.levels.iter().enumerate() {
+                    assert_eq!(
+                        ep.bin(lv),
+                        i,
+                        "{mode:?} {bits}b level {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snap_rows_is_idempotent_and_bounded() {
+        let t = ActQuantTable::from_stats(AqMode::Quantile, 3, 0.0, 1.0);
+        let mut xs: Vec<f32> =
+            (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        t.snap_rows(&mut xs);
+        let once = xs.clone();
+        t.snap_rows(&mut xs);
+        assert_eq!(once, xs, "snap must be idempotent");
+        let mut distinct = xs.clone();
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert!(distinct.len() <= 8, "more than 2^3 levels");
+    }
+
+    #[test]
+    fn aq_model_json_roundtrip_is_exact() {
+        let m = ActQuantModel {
+            mode: AqMode::Quantile,
+            bits: 4,
+            tables: vec![
+                Some(ActQuantTable::from_stats(
+                    AqMode::Quantile,
+                    4,
+                    0.123_456_7,
+                    1.765_432_1,
+                )),
+                None,
+                Some(ActQuantTable::from_stats(
+                    AqMode::Quantile,
+                    4,
+                    -3.25,
+                    0.015_625,
+                )),
+            ],
+        };
+        let j = m.to_json();
+        let text = j.to_string();
+        let back =
+            ActQuantModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m, "json roundtrip must be bit-exact");
+        assert_eq!(m.n_tables(), 2);
+        assert!(m.table(1).is_none() && m.table(0).is_some());
+    }
+
+    /// Corrupt per-table shapes must fail at parse time, not panic
+    /// inside a serving worker's ActEp::snap.
+    #[test]
+    fn from_json_rejects_malformed_tables() {
+        for bad in [
+            // 3 thresholds but a single level: bin() could return 3
+            r#"{"mode":"quantile","bits":2,"tables":[
+                {"mu":0,"sigma":1,"thresholds":[0.0,0.5,1.0],
+                 "levels":[0.2]}]}"#,
+            // empty levels
+            r#"{"mode":"quantile","bits":2,"tables":[
+                {"mu":0,"sigma":1,"thresholds":[],"levels":[]}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let err = ActQuantModel::from_json(&j).unwrap_err();
+            assert!(err.to_string().contains("levels"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(AqMode::parse("none").unwrap(), None);
+        assert_eq!(AqMode::parse("uniform").unwrap(), Some(AqMode::Uniform));
+        assert_eq!(
+            AqMode::parse("quantile").unwrap(),
+            Some(AqMode::Quantile)
+        );
+        assert!(AqMode::parse("8bit").is_err());
+    }
+}

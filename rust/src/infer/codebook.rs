@@ -8,11 +8,19 @@
 //! and BN running statistics stay f32. Disk format is `frozen.json`
 //! (metadata + inline codebooks, via `util::json`) next to `frozen.bin`
 //! (packed indices and f32 tensors, offsets recorded in the json).
+//!
+//! Format versioning: v1 (PR 1–4) had no `version` key; v2 adds an
+//! optional `act_quant` section (per-layer activation-quant tables,
+//! `infer::actquant`). Loading is backwards-compatible — a v1 file
+//! yields `aq = None` and serves bit-identically to the pre-aq engine;
+//! a file newer than [`FORMAT_VERSION`] is rejected instead of being
+//! silently misread.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::actquant::ActQuantModel;
 use super::packed::PackedBits;
 use crate::coordinator::FreezeQuant;
 use crate::quant::Quantizer;
@@ -73,6 +81,9 @@ pub struct NamedTensor {
     pub data: Vec<f32>,
 }
 
+/// Current on-disk format version written by [`FrozenModel::save`].
+pub const FORMAT_VERSION: usize = 2;
+
 /// A frozen model ready for native LUT inference — no PJRT anywhere.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrozenModel {
@@ -89,6 +100,9 @@ pub struct FrozenModel {
     pub params: Vec<NamedTensor>,
     /// BN running statistics, manifest order
     pub state: Vec<NamedTensor>,
+    /// activation-quant tables (format v2); `None` ⇒ f32 activations,
+    /// bit-identical to the pre-aq engine
+    pub aq: Option<ActQuantModel>,
 }
 
 impl FrozenModel {
@@ -144,7 +158,15 @@ impl FrozenModel {
             layers,
             params,
             state: st,
+            aq: None,
         })
+    }
+
+    /// Activation bitwidth b_a as served: the aq table width, or 32
+    /// (f32 activations) without activation quantization — what the
+    /// served-graph BOPS accounting multiplies b_w by.
+    pub fn bits_a(&self) -> u32 {
+        self.aq.as_ref().map(|a| a.bits as u32).unwrap_or(32)
     }
 
     pub fn param(&self, name: &str) -> Option<&NamedTensor> {
@@ -211,6 +233,7 @@ impl FrozenModel {
         let jparams = jtensors(&self.params, &mut blob);
         let jstate = jtensors(&self.state, &mut blob);
         let meta = obj(vec![
+            ("version", num(FORMAT_VERSION as f64)),
             ("name", s(&self.name)),
             ("image", usize_arr(&self.image)),
             ("classes", num(self.classes as f64)),
@@ -218,6 +241,13 @@ impl FrozenModel {
             ("layers", Json::Arr(jlayers)),
             ("params", Json::Arr(jparams)),
             ("state", Json::Arr(jstate)),
+            (
+                "act_quant",
+                self.aq
+                    .as_ref()
+                    .map(|a| a.to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ]);
         std::fs::write(dir.join("frozen.json"), meta.to_string())
             .with_context(|| format!("writing {}/frozen.json", dir.display()))?;
@@ -231,6 +261,15 @@ impl FrozenModel {
         let text = std::fs::read_to_string(dir.join("frozen.json"))
             .with_context(|| format!("reading {}/frozen.json", dir.display()))?;
         let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        // v1 files (PR 1-4) predate the version key entirely
+        let version =
+            j.get("version").and_then(|v| v.as_usize()).unwrap_or(1);
+        if version > FORMAT_VERSION {
+            return Err(anyhow!(
+                "frozen.json is format v{version}, this build reads up \
+                 to v{FORMAT_VERSION}"
+            ));
+        }
         let blob = std::fs::read(dir.join("frozen.bin"))
             .with_context(|| format!("reading {}/frozen.bin", dir.display()))?;
         fn blob_slice(blob: &[u8], off: usize, n: usize) -> Result<Vec<u8>> {
@@ -271,6 +310,22 @@ impl FrozenModel {
             }
             Ok(out)
         };
+        let aq = match j.get("act_quant") {
+            None | Some(Json::Null) => None,
+            Some(ja) => Some(ActQuantModel::from_json(ja)?),
+        };
+        if let Some(a) = &aq {
+            // a short tables array would silently serve f32 activations
+            // for the missing layers while bits_a() still claims the
+            // quantized width — reject the mismatch loudly instead
+            if a.tables.len() != layers.len() {
+                return Err(anyhow!(
+                    "act_quant has {} table slots for {} layers",
+                    a.tables.len(),
+                    layers.len()
+                ));
+            }
+        }
         Ok(FrozenModel {
             name: req_str(&j, "name")?,
             image: req_usizes(&j, "image")?,
@@ -279,6 +334,7 @@ impl FrozenModel {
             layers,
             params: tensors("params")?,
             state: tensors("state")?,
+            aq,
         })
     }
 }
@@ -374,11 +430,76 @@ mod tests {
                 shape: vec![3],
                 data: vec![-1.0, 0.0, 1.0],
             }],
+            aq: None,
         };
         let dir = std::env::temp_dir().join("uniq_frozen_test");
         model.save(&dir).unwrap();
         let loaded = FrozenModel::load(&dir).unwrap();
         assert_eq!(loaded, model);
+
+        // v2 with activation-quant tables: still a bit-exact roundtrip
+        let mut with_aq = model.clone();
+        with_aq.aq = Some(super::super::actquant::ActQuantModel {
+            mode: super::super::actquant::AqMode::Quantile,
+            bits: 4,
+            tables: vec![Some(
+                super::super::actquant::ActQuantTable::from_stats(
+                    super::super::actquant::AqMode::Quantile,
+                    4,
+                    0.017,
+                    1.31,
+                ),
+            )],
+        });
+        let dir2 = std::env::temp_dir().join("uniq_frozen_test_aq");
+        with_aq.save(&dir2).unwrap();
+        assert_eq!(FrozenModel::load(&dir2).unwrap(), with_aq);
+        assert_eq!(with_aq.bits_a(), 4);
+        assert_eq!(model.bits_a(), 32);
+
+        // an act_quant section whose table count disagrees with the
+        // layer count must be rejected, not partially applied
+        let mut mismatched = model.clone();
+        mismatched.aq = Some(super::super::actquant::ActQuantModel {
+            mode: super::super::actquant::AqMode::Quantile,
+            bits: 4,
+            tables: vec![],
+        });
+        let dir3 = std::env::temp_dir().join("uniq_frozen_test_aq_short");
+        mismatched.save(&dir3).unwrap();
+        let err = FrozenModel::load(&dir3).unwrap_err();
+        assert!(err.to_string().contains("table slots"), "{err:#}");
+    }
+
+    /// A frozen.json claiming a future format version must be rejected,
+    /// not silently misread.
+    #[test]
+    fn future_format_version_rejected() {
+        let w = normal_vec(100, 6);
+        let q = crate::quant::KQuantileGauss.fit(&w, 4);
+        let model = FrozenModel {
+            name: "t".into(),
+            image: vec![2, 2, 3],
+            classes: 2,
+            bits_w: 2,
+            layers: vec![LayerCodebook::from_weights("fc1", &[12, 2], &w, &q)],
+            params: vec![],
+            state: vec![],
+            aq: None,
+        };
+        let dir = std::env::temp_dir().join("uniq_frozen_test_future");
+        model.save(&dir).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("frozen.json")).unwrap();
+        let bumped = text.replacen(
+            &format!("\"version\":{FORMAT_VERSION}"),
+            "\"version\":99",
+            1,
+        );
+        assert_ne!(bumped, text, "version key must be present on disk");
+        std::fs::write(dir.join("frozen.json"), bumped).unwrap();
+        let err = FrozenModel::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("v99"), "{err:#}");
     }
 
     #[test]
@@ -394,6 +515,7 @@ mod tests {
             layers: vec![l],
             params: vec![],
             state: vec![],
+            aq: None,
         };
         // 4-bit packing: 8x smaller than f32 (+ 64-byte codebook)
         assert_eq!(m.quantized_bytes(), 4096 / 2 + 4 * 16);

@@ -27,6 +27,7 @@
 
 use anyhow::{anyhow, Result};
 
+use super::actquant::ActQuantTable;
 use super::codebook::FrozenModel;
 use super::kernels as kn;
 use crate::bops;
@@ -82,6 +83,12 @@ struct EpSpec {
     /// (gamma, beta) index params; (mean, var) index state
     bn: Option<(usize, usize, usize, usize)>,
     relu: bool,
+    /// activation-quant site: the qlayer whose output this epilogue
+    /// produces (python `act_quant(ctx, y, qidx)` placement). A slot,
+    /// not a promise — it activates only when the model carries a
+    /// calibrated table for that layer, so aq-less models run the
+    /// pre-aq code path bit-identically.
+    aq: Option<usize>,
 }
 
 /// Compiled execution plan: the op list with every GEMM's following
@@ -102,6 +109,12 @@ enum Step {
     /// conv+bn of the *saved* activation; bn always rides the epilogue
     Downsample { q: usize, stride: usize, ep: EpSpec },
     AddResidual,
+    /// standalone activation-quant pass over the current activation —
+    /// the one aq site the fused epilogues cannot cover: the python
+    /// models quantize `relu(y + residual)` on behalf of the block's
+    /// last conv (`act_quant(ctx, relu(y+x), conv2.qidx)`), which is
+    /// only known after the residual add
+    ActQuant { q: usize },
 }
 
 /// Absorb a directly-following BatchNorm and/or Relu into a GEMM
@@ -122,6 +135,10 @@ fn fuse_epilogue(ops: &[Op], i: &mut usize, bias: Option<usize>) -> EpSpec {
 fn compile(ops: &[Op]) -> Vec<Step> {
     let mut plan = Vec::with_capacity(ops.len());
     let mut i = 0usize;
+    // the qlayer of the most recent main-path GEMM: a relu directly
+    // after a residual add quantizes on its behalf (python act_quant
+    // placement — see Step::ActQuant)
+    let mut last_gemm: Option<usize> = None;
     while i < ops.len() {
         match ops[i] {
             Op::Flatten => {
@@ -130,17 +147,25 @@ fn compile(ops: &[Op]) -> Vec<Step> {
             }
             Op::Conv { q, stride } => {
                 i += 1;
-                let ep = fuse_epilogue(ops, &mut i, None);
+                let mut ep = fuse_epilogue(ops, &mut i, None);
+                ep.aq = ep.relu.then_some(q);
+                last_gemm = Some(q);
                 plan.push(Step::Conv { q, stride, ep });
             }
             Op::Depthwise { q, stride } => {
                 i += 1;
-                let ep = fuse_epilogue(ops, &mut i, None);
+                let mut ep = fuse_epilogue(ops, &mut i, None);
+                ep.aq = ep.relu.then_some(q);
+                last_gemm = Some(q);
                 plan.push(Step::Depthwise { q, stride, ep });
             }
             Op::Dense { q, bias } => {
                 i += 1;
-                let ep = fuse_epilogue(ops, &mut i, bias);
+                let mut ep = fuse_epilogue(ops, &mut i, bias);
+                // python quantizes every relu'd qlayer output; the
+                // final (relu-less) dense keeps f32 logits
+                ep.aq = ep.relu.then_some(q);
+                last_gemm = Some(q);
                 plan.push(Step::Dense { q, ep });
             }
             Op::BatchNorm { gamma, beta, mean, var } => {
@@ -148,7 +173,14 @@ fn compile(ops: &[Op]) -> Vec<Step> {
                 i += 1;
             }
             Op::Relu => {
+                let after_add =
+                    matches!(plan.last(), Some(Step::AddResidual));
                 plan.push(Step::Relu);
+                if after_add {
+                    if let Some(q) = last_gemm {
+                        plan.push(Step::ActQuant { q });
+                    }
+                }
                 i += 1;
             }
             Op::GlobalAvgPool => {
@@ -167,6 +199,9 @@ fn compile(ops: &[Op]) -> Vec<Step> {
                         bias: None,
                         bn: Some((gamma, beta, mean, var)),
                         relu: false,
+                        // the shortcut branch is quantized right after
+                        // its bn (resnet.py: act_quant(bn_s(conv_s(x))))
+                        aq: Some(q),
                     },
                 });
                 i += 1;
@@ -300,9 +335,22 @@ pub struct ExecBuffers {
     gemm: kn::GemmScratchPool,
     saved: Vec<Saved>,
     free: Vec<Vec<f32>>,
+    /// quantized-activation ping-pong pair: bin indices of the most
+    /// recent activation-quantized tensor (`qcur[i]` is the table bin
+    /// of `cur[i]` right after an aq site). Written only when
+    /// [`ExecBuffers::track_qact`] is set AND the model carries aq
+    /// tables — the serving default keeps them empty, so the f32 hot
+    /// path pays nothing. Arena-owned like every other buffer: grown
+    /// once, reused verbatim afterwards.
+    qcur: Vec<u8>,
+    qspare: Vec<u8>,
     /// row-shard threads for the LUT-GEMM (1 = fully serial; serving
     /// workers usually keep 1 and scale via the worker pool instead)
     pub threads: usize,
+    /// record bin indices of activation-quantized tensors into the
+    /// quantized ping-pong pair (tests, debugging, future integer
+    /// kernels); off by default
+    pub track_qact: bool,
 }
 
 impl ExecBuffers {
@@ -318,8 +366,19 @@ impl ExecBuffers {
             gemm: kn::GemmScratchPool::new(),
             saved: Vec::new(),
             free: Vec::new(),
+            qcur: Vec::new(),
+            qspare: Vec::new(),
             threads: threads.max(1),
+            track_qact: false,
         }
+    }
+
+    /// Bin indices written at the last activation-quant site (empty
+    /// unless [`ExecBuffers::track_qact`] was set on an aq-enabled
+    /// model). `qact()[i]` indexes the producing layer's
+    /// `ActQuantTable::levels`.
+    pub fn qact(&self) -> &[u8] {
+        &self.qcur
     }
 
     /// `(ptr, capacity)` of every arena buffer, sorted — two calls with
@@ -331,6 +390,8 @@ impl ExecBuffers {
             (self.cur.as_ptr() as usize, self.cur.capacity()),
             (self.spare.as_ptr() as usize, self.spare.capacity()),
             (self.patches.as_ptr() as usize, self.patches.capacity()),
+            (self.qcur.as_ptr() as usize, self.qcur.capacity()),
+            (self.qspare.as_ptr() as usize, self.qspare.capacity()),
         ];
         self.gemm.fingerprint(&mut fp);
         for b in &self.free {
@@ -572,7 +633,43 @@ impl Graph {
         mode: KernelMode,
         bufs: &'a mut ExecBuffers,
     ) -> Result<&'a [f32]> {
+        self.forward_exec(m, weights, x, batch, mode, bufs, None)
+    }
+
+    /// Calibration pass for `actquant::calibrate`: runs the plan with
+    /// activation quantization **disabled** (pre-quant statistics are
+    /// what the static tables must capture) and hands every aq site's
+    /// post-epilogue tensor to `on_act(qlayer, activations)`.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn forward_calibrate(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+        bufs: &mut ExecBuffers,
+        on_act: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<()> {
+        self.forward_exec(m, weights, x, batch, mode, bufs, Some(on_act))
+            .map(|_| ())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_exec<'a>(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+        x: &[f32],
+        batch: usize,
+        mode: KernelMode,
+        bufs: &'a mut ExecBuffers,
+        mut hook: Option<&mut dyn FnMut(usize, &[f32])>,
+    ) -> Result<&'a [f32]> {
         let (ih, iw, ic) = self.check_input(m, x, batch)?;
+        // aq applies in normal execution only; a calibration pass reads
+        // the unquantized activations the tables are fitted to
+        let aq_on = hook.is_none() && m.aq.is_some();
         if mode == KernelMode::LutV1 {
             // route the baseline engine through the same entry point so
             // the serving tier can A/B the two engines per config
@@ -587,9 +684,20 @@ impl Graph {
                  set); build with PreparedWeights::new"
             ));
         }
-        let ExecBuffers { cur, spare, patches, gemm, saved, free, threads } =
-            bufs;
+        let ExecBuffers {
+            cur,
+            spare,
+            patches,
+            gemm,
+            saved,
+            free,
+            qcur,
+            qspare,
+            threads,
+            track_qact,
+        } = bufs;
         let threads = *threads;
+        let track = *track_qact;
         cur.clear();
         cur.extend_from_slice(x);
         let (mut h, mut w, mut c) = (ih, iw, ic);
@@ -619,7 +727,7 @@ impl Graph {
                         cin,
                         cout,
                         spare,
-                        resolve_ep(m, weights, ep),
+                        resolve_ep(m, weights, ep, aq_on),
                         mode,
                         threads,
                         gemm,
@@ -628,6 +736,10 @@ impl Graph {
                     h = 1;
                     w = 1;
                     c = cout;
+                    aq_site(
+                        m, ep.aq, aq_on, false, cur, qcur, qspare,
+                        track, &mut hook,
+                    );
                 }
                 Step::Conv { q, stride, ep } => {
                     let l = &m.layers[*q];
@@ -658,7 +770,7 @@ impl Graph {
                         ksize * ksize * cin,
                         cout,
                         spare,
-                        resolve_ep(m, weights, ep),
+                        resolve_ep(m, weights, ep, aq_on),
                         mode,
                         threads,
                         gemm,
@@ -667,6 +779,10 @@ impl Graph {
                     h = oh;
                     w = ow;
                     c = cout;
+                    aq_site(
+                        m, ep.aq, aq_on, false, cur, qcur, qspare,
+                        track, &mut hook,
+                    );
                 }
                 Step::Depthwise { q, stride, ep } => {
                     let l = &m.layers[*q];
@@ -677,7 +793,7 @@ impl Graph {
                             l.name
                         ));
                     }
-                    let ep = resolve_ep(m, weights, ep);
+                    let rep = resolve_ep(m, weights, ep, aq_on);
                     let (oh, ow) = match mode {
                         KernelMode::Lut => kn::lut_depthwise_into(
                             cur,
@@ -689,7 +805,7 @@ impl Graph {
                             cc,
                             ksize,
                             *stride,
-                            ep,
+                            rep,
                             spare,
                         ),
                         KernelMode::DequantF32 => kn::depthwise_f32_into(
@@ -701,7 +817,7 @@ impl Graph {
                             cc,
                             ksize,
                             *stride,
-                            ep,
+                            rep,
                             spare,
                         ),
                         KernelMode::LutV1 => unreachable!(),
@@ -709,6 +825,10 @@ impl Graph {
                     std::mem::swap(cur, spare);
                     h = oh;
                     w = ow;
+                    aq_site(
+                        m, ep.aq, aq_on, false, cur, qcur, qspare,
+                        track, &mut hook,
+                    );
                 }
                 Step::BatchNorm { gamma, beta, mean, var: _ } => {
                     kn::batchnorm_pre(
@@ -760,11 +880,18 @@ impl Graph {
                         ksize * ksize * cin,
                         cout,
                         &mut buf,
-                        resolve_ep(m, weights, ep),
+                        resolve_ep(m, weights, ep, aq_on),
                         mode,
                         threads,
                         gemm,
                     );
+                    // the shortcut's aq rides its fused epilogue; only
+                    // the calibration hook needs the tensor here (the
+                    // quantized ping-pong pair tracks the main path)
+                    if let (Some(aqq), Some(cb)) = (ep.aq, hook.as_mut())
+                    {
+                        cb(aqq, &buf);
+                    }
                     free.push(sv.data);
                     saved.push(Saved { data: buf, h: oh, w: ow, c: cout });
                 }
@@ -783,6 +910,12 @@ impl Graph {
                     }
                     kn::add_inplace(cur, &sv.data);
                     free.push(sv.data);
+                }
+                Step::ActQuant { q } => {
+                    aq_site(
+                        m, Some(*q), aq_on, true, cur, qcur, qspare,
+                        track, &mut hook,
+                    );
                 }
             }
         }
@@ -809,6 +942,16 @@ impl Graph {
         mode: KernelMode,
     ) -> Result<Vec<f32>> {
         let (ih, iw, ic) = self.check_input(m, x, batch)?;
+        if m.aq.is_some() {
+            // the v1 op walk has no aq sites (act_quant placement needs
+            // the compiled plan); refusing beats silently serving f32
+            // activations while the stats claim b_a bits
+            return Err(anyhow!(
+                "activation quantization needs the v2 engine \
+                 (KernelMode::Lut); the v1 baseline serves f32 \
+                 activations only"
+            ));
+        }
         if mode == KernelMode::DequantF32 && !weights.has_dequantized(m) {
             return Err(anyhow!(
                 "dequantized f32 weights not prepared (LUT-only working \
@@ -1056,13 +1199,129 @@ impl Graph {
     pub fn macs(&self, m: &FrozenModel) -> u64 {
         self.to_arch(m).layers.iter().map(|l| l.macs()).sum()
     }
+
+    /// Analytic BOPS of this model **as served**: real per-layer
+    /// `b_w × b_a` per MAC. A layer's activation width is that of the
+    /// tensor it READS: the first conv consumes the f32 input image
+    /// (32 bits), a layer fed by an activation-quantized output
+    /// consumes `m.bits_a()` levels, and the classifier consumes
+    /// global-avg-pooled values (averaging leaves the level grid ⇒ 32).
+    /// Without aq tables every input is 32-bit and this reduces to the
+    /// weight-only pricing the benches recorded before. The walk
+    /// mirrors the executor's aq sites: a GEMM's output is on the grid
+    /// iff its qlayer carries a table (the post-residual `ActQuant`
+    /// re-snaps the sum with conv2's table, so block outputs inherit
+    /// conv2's state).
+    pub fn served_complexity(&self, m: &FrozenModel) -> bops::Complexity {
+        let b_w = m.bits_w as u32;
+        let b_a = m.bits_a();
+        let quantized =
+            |q: usize| m.aq.as_ref().and_then(|a| a.table(q)).is_some();
+        let arch = self.to_arch(m);
+        // per priced layer (to_arch emission order): is its input on a
+        // level grid?
+        let mut in_q: Vec<bool> = Vec::with_capacity(arch.layers.len());
+        let mut cur_q = false; // the network input is the f32 image
+        let mut stack: Vec<bool> = Vec::new();
+        for op in &self.ops {
+            match *op {
+                Op::Conv { q, .. }
+                | Op::Dense { q, .. }
+                | Op::Depthwise { q, .. } => {
+                    in_q.push(cur_q);
+                    cur_q = quantized(q);
+                }
+                Op::DownsampleResidual { q, .. } => {
+                    // reads the saved (pre-block) tensor; its output is
+                    // consumed only by the residual add
+                    in_q.push(stack.pop().unwrap_or(false));
+                    stack.push(quantized(q));
+                }
+                Op::PushResidual => stack.push(cur_q),
+                Op::AddResidual => {
+                    stack.pop();
+                }
+                Op::GlobalAvgPool => cur_q = false,
+                Op::Flatten | Op::BatchNorm { .. } | Op::Relu => {}
+            }
+        }
+        debug_assert_eq!(in_q.len(), arch.layers.len());
+        let mut bops = 0.0;
+        let mut model_bits = 0.0;
+        let mut params = 0u64;
+        let mut macs = 0u64;
+        for (l, &qin) in arch.layers.iter().zip(&in_q) {
+            let ba = if qin { b_a } else { 32 };
+            bops += l.bops(b_w, ba);
+            // memory fetch + model size: weight-side, b_a-independent
+            bops += l.params() as f64 * b_w as f64;
+            model_bits += l.params() as f64 * b_w as f64;
+            params += l.params();
+            macs += l.macs();
+        }
+        bops::Complexity { bops, model_bits, params, macs }
+    }
+}
+
+/// Activation-quant table for qlayer `q`, if the model carries one.
+fn aq_table(m: &FrozenModel, q: usize) -> Option<&ActQuantTable> {
+    m.aq.as_ref().and_then(|a| a.table(q))
+}
+
+/// Post-step bookkeeping at an aq site: during calibration hand the
+/// (unquantized) tensor to the hook. In normal execution, fused sites
+/// arrive with values already snapped by the kernel epilogue
+/// (`snap = false` — only the optional bin recording remains); the
+/// standalone post-residual site snaps here too (`snap = true`).
+#[allow(clippy::too_many_arguments)]
+fn aq_site(
+    m: &FrozenModel,
+    slot: Option<usize>,
+    aq_on: bool,
+    snap: bool,
+    cur: &mut Vec<f32>,
+    qcur: &mut Vec<u8>,
+    qspare: &mut Vec<u8>,
+    track: bool,
+    hook: &mut Option<&mut dyn FnMut(usize, &[f32])>,
+) {
+    let Some(q) = slot else { return };
+    if let Some(cb) = hook.as_mut() {
+        cb(q, cur);
+        return;
+    }
+    if !aq_on {
+        return;
+    }
+    let Some(t) = aq_table(m, q) else { return };
+    let ep = t.ep();
+    if track {
+        qspare.clear();
+        if snap {
+            for v in cur.iter_mut() {
+                let b = ep.bin(*v);
+                *v = ep.levels[b];
+                qspare.push(b as u8);
+            }
+        } else {
+            qspare.extend(cur.iter().map(|&v| ep.bin(v) as u8));
+        }
+        std::mem::swap(qcur, qspare);
+    } else if snap {
+        for v in cur.iter_mut() {
+            *v = ep.snap(*v);
+        }
+    }
 }
 
 /// Resolve an [`EpSpec`]'s tensor indices to borrowed slices.
+/// `with_aq` gates the activation-quant stage (false during
+/// calibration, or when the model has no tables).
 fn resolve_ep<'a>(
     m: &'a FrozenModel,
     weights: &'a PreparedWeights,
     ep: &EpSpec,
+    with_aq: bool,
 ) -> kn::Epilogue<'a> {
     kn::Epilogue {
         bias: ep.bias.map(|b| m.params[b].data.as_slice()),
@@ -1072,6 +1331,11 @@ fn resolve_ep<'a>(
             mean: m.state[mm].data.as_slice(),
         }),
         relu: ep.relu,
+        aq: if with_aq {
+            ep.aq.and_then(|q| aq_table(m, q)).map(|t| t.ep())
+        } else {
+            None
+        },
     }
 }
 

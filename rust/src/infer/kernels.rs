@@ -141,14 +141,19 @@ pub fn transpose_idx(raw: &[u8], rows: usize, cols: usize) -> Vec<u8> {
 
 /// Per-output-channel epilogue fused into the GEMM write-back: optional
 /// bias add, optional inference-mode batchnorm (with the `1/sqrt(var+ε)`
-/// factor precomputed once per layer, see [`bn_inv`]), optional relu —
-/// applied in exactly that order, which is the op order the unfused
-/// graph ran, so fused and unfused results are bit-identical.
+/// factor precomputed once per layer, see [`bn_inv`]), optional relu,
+/// optional activation fake-quant ([`ActEp`]) — applied in exactly that
+/// order, which is the op order the unfused graph (and the python eval
+/// path: bias/bn → relu → `act_quant`) ran, so fused and unfused
+/// results are bit-identical.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Epilogue<'a> {
     pub bias: Option<&'a [f32]>,
     pub bn: Option<BnEp<'a>>,
     pub relu: bool,
+    /// activation quantization stage (paper §3.4 at inference): snap
+    /// the post-relu value to its static per-layer level
+    pub aq: Option<ActEp<'a>>,
 }
 
 /// Batchnorm factors for [`Epilogue`]: `y = (x - mean) * inv + beta`.
@@ -158,6 +163,35 @@ pub struct BnEp<'a> {
     pub inv: &'a [f32],
     pub beta: &'a [f32],
     pub mean: &'a [f32],
+}
+
+/// Activation fake-quant stage of an [`Epilogue`]: a static per-layer
+/// scalar quantizer (k−1 ascending interior thresholds, k representation
+/// levels — see `infer::actquant::ActQuantTable`, which these slices
+/// borrow from). Per-tensor, not per-channel: every output channel
+/// shares the table, matching the python `act_quant` semantics.
+#[derive(Debug, Clone, Copy)]
+pub struct ActEp<'a> {
+    /// k−1 interior thresholds, ascending
+    pub thresholds: &'a [f32],
+    /// k representation levels (one per bin)
+    pub levels: &'a [f32],
+}
+
+impl ActEp<'_> {
+    /// Bin index of `x`: delegates to the shared [`crate::quant::bin_total`]
+    /// (ties-right search, total on every f32 exactly like
+    /// `Quantizer::bin` — ±∞ in the outermost bins, NaN pinned central).
+    #[inline]
+    pub fn bin(&self, x: f32) -> usize {
+        crate::quant::bin_total(self.thresholds, self.levels.len(), x)
+    }
+
+    /// Snap `x` to its bin's representation level.
+    #[inline]
+    pub fn snap(&self, x: f32) -> f32 {
+        self.levels[self.bin(x)]
+    }
 }
 
 impl Epilogue<'_> {
@@ -173,12 +207,18 @@ impl Epilogue<'_> {
         if self.relu && v < 0.0 {
             v = 0.0;
         }
+        if let Some(aq) = self.aq {
+            v = aq.snap(v);
+        }
         v
     }
 
     /// True when applying this epilogue is the identity.
     pub fn is_noop(&self) -> bool {
-        self.bias.is_none() && self.bn.is_none() && !self.relu
+        self.bias.is_none()
+            && self.bn.is_none()
+            && !self.relu
+            && self.aq.is_none()
     }
 }
 
@@ -1020,6 +1060,7 @@ mod tests {
             bias: Some(&bias),
             bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
             relu: true,
+            aq: None,
         };
         let mut pool = GemmScratchPool::new();
         let mut got = vec![0.0f32; rows * cout];
@@ -1031,6 +1072,81 @@ mod tests {
         // and the standalone epilogue_rows pass agrees too
         let mut raw = vec![0.0f32; rows * cout];
         lut_matmul(&x, &idx_t, &levels, rows, cin, cout, &mut raw);
+        epilogue_rows(&mut raw, cout, ep);
+        assert_eq!(raw, want);
+    }
+
+    #[test]
+    fn act_ep_bin_matches_quantizer_bin_and_is_total() {
+        let thresholds = [-1.0f32, 0.0, 2.0];
+        let levels = [-2.0f32, -0.5, 1.0, 3.0];
+        let ep = ActEp { thresholds: &thresholds, levels: &levels };
+        let q = crate::quant::Quantizer {
+            thresholds: thresholds.to_vec(),
+            levels: levels.to_vec(),
+        };
+        for x in [
+            -5.0f32,
+            -1.0,
+            -0.5,
+            0.0,
+            1.9,
+            2.0,
+            9.0,
+            f32::NEG_INFINITY,
+            f32::INFINITY,
+            f32::NAN,
+        ] {
+            assert_eq!(ep.bin(x), q.bin(x), "x = {x}");
+            assert_eq!(ep.snap(x), q.quantize_one(x), "x = {x}");
+        }
+    }
+
+    #[test]
+    fn fused_aq_epilogue_applies_after_bias_bn_relu() {
+        let (rows, cin, cout) = (40usize, 13usize, 6usize);
+        let x = randvec(rows * cin, 70);
+        let (idx_t, lv, _) = quantized_layer(cin, cout, 8, 71);
+        let bias = randvec(cout, 72);
+        let gamma = randvec(cout, 73);
+        let beta = randvec(cout, 74);
+        let mean = randvec(cout, 75);
+        let var: Vec<f32> = randvec(cout, 76).iter().map(|v| v * v).collect();
+        let thresholds = [0.25f32, 0.75];
+        let levels = [0.0f32, 0.5, 1.0];
+
+        // reference: the four standalone passes in graph op order
+        let mut want = vec![0.0f32; rows * cout];
+        lut_matmul(&x, &idx_t, &lv, rows, cin, cout, &mut want);
+        bias_add(&mut want, &bias, rows, cout);
+        batchnorm(&mut want, &gamma, &beta, &mean, &var, cout);
+        relu(&mut want);
+        let aq = ActEp { thresholds: &thresholds, levels: &levels };
+        for v in want.iter_mut() {
+            *v = aq.snap(*v);
+        }
+
+        let inv = bn_inv(&gamma, &var);
+        let ep = Epilogue {
+            bias: Some(&bias),
+            bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
+            relu: true,
+            aq: Some(aq),
+        };
+        assert!(!ep.is_noop());
+        let mut pool = GemmScratchPool::new();
+        let mut got = vec![0.0f32; rows * cout];
+        lut_matmul_tiled(
+            &x, &idx_t, &lv, rows, cin, cout, &mut got, ep, 1, &mut pool,
+        );
+        assert_eq!(got, want, "fused aq drifted from the standalone stack");
+        // every value is one of the k levels
+        for v in &got {
+            assert!(levels.contains(v), "{v} not a representation level");
+        }
+        // the standalone epilogue pass agrees too
+        let mut raw = vec![0.0f32; rows * cout];
+        lut_matmul(&x, &idx_t, &lv, rows, cin, cout, &mut raw);
         epilogue_rows(&mut raw, cout, ep);
         assert_eq!(raw, want);
     }
@@ -1108,6 +1224,7 @@ mod tests {
             bias: None,
             bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
             relu: true,
+            aq: None,
         };
         let mut got = Vec::new();
         let (oh2, ow2) = lut_depthwise_into(

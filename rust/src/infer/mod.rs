@@ -10,7 +10,9 @@
 //!
 //! Layer map: `codebook` (export + disk format) → `packed` (bit streams)
 //! → `kernels` (LUT-GEMM / convs + f32 reference) → `graph` (per-variant
-//! forward pass) → `serve` (dynamic batching, latency accounting) →
+//! forward pass) → `actquant` (static per-layer activation fake-quant,
+//! calibrated at freeze time and fused into the GEMM epilogues) →
+//! `serve` (dynamic batching, latency accounting) →
 //! `router` (replica set: routing policies, health-checked restarts,
 //! typed backpressure, fleet-merged stats). `synthetic` provides
 //! manifest-faithful random models so everything here runs without AOT
@@ -23,6 +25,7 @@
 //! v1→v2 speedup instead of trusting a number written down once
 //! (DESIGN §9).
 
+pub mod actquant;
 pub mod codebook;
 pub mod graph;
 pub mod kernels;
@@ -31,6 +34,7 @@ pub mod router;
 pub mod serve;
 pub mod synthetic;
 
+pub use actquant::{ActQuantModel, ActQuantTable, AqMode};
 pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
 pub use graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
 pub use packed::PackedBits;

@@ -809,6 +809,59 @@ mod tests {
         )
     }
 
+    /// An activation-quantized model routes like any other: every
+    /// replica shares the same read-only aq tables, so fleet replies
+    /// are bit-identical to the direct v2 forward.
+    #[test]
+    fn aq_model_routes_with_bit_identical_replies() {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen =
+            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let mut sm = ServeModel::new(frozen).unwrap();
+        let img_len = sm.image_len();
+        let mut rng = crate::util::rng::Rng::new(29);
+        let calib: Vec<f32> =
+            (0..8 * img_len).map(|_| rng.normal()).collect();
+        sm.calibrate_aq(crate::infer::AqMode::Uniform, 4, &calib, 4)
+            .unwrap();
+        let sm = Arc::new(sm);
+        let router = Router::start(
+            Arc::clone(&sm),
+            RouterConfig {
+                replicas: 2,
+                policy: RoutingPolicy::RoundRobin,
+                queue_cap: 64,
+                health_every: Duration::ZERO,
+                max_retries: 4,
+                seed: 3,
+                serve: ServeConfig {
+                    workers: 1,
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    mode: KernelMode::Lut,
+                    kernel_threads: 1,
+                },
+            },
+        );
+        let images: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+            .collect();
+        let pending: Vec<_> =
+            images.iter().map(|i| router.submit(i).unwrap()).collect();
+        for (img, p) in images.iter().zip(pending) {
+            let reply = p.recv().unwrap();
+            let want = sm
+                .graph
+                .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+                .unwrap();
+            assert_eq!(reply.logits, want, "fleet aq reply drifted");
+        }
+        let stats = router.shutdown();
+        assert_eq!(stats.fleet.requests, 10);
+        assert_eq!(stats.lost_in_flight, 0);
+    }
+
     #[test]
     fn policy_parse_and_names() {
         for (spelling, want) in [

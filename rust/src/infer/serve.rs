@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::actquant::{self, AqMode};
 use super::codebook::FrozenModel;
 use super::graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
 use crate::util::bench::{fmt_ns, percentile};
@@ -67,6 +68,32 @@ impl ServeModel {
 
     pub fn image_len(&self) -> usize {
         self.model.image.iter().product()
+    }
+
+    /// Calibrate and install activation-quant tables (`--aq MODE
+    /// --aq-bits B`): run `images` through the graph with quantization
+    /// off, fit per-layer static tables, set `model.aq`. Must happen
+    /// before the model is shared (`Arc`) with workers — tables are
+    /// part of the read-only model. Recalibration is idempotent in
+    /// semantics: stats are always collected pre-quantization.
+    pub fn calibrate_aq(
+        &mut self,
+        mode: AqMode,
+        bits: u32,
+        images: &[f32],
+        batch: usize,
+    ) -> Result<()> {
+        let aq = actquant::calibrate(
+            &self.model,
+            &self.graph,
+            &self.weights,
+            images,
+            batch,
+            mode,
+            bits,
+        )?;
+        self.model.aq = Some(aq);
+        Ok(())
     }
 }
 
@@ -603,6 +630,65 @@ mod tests {
         assert!(stats.batches >= 3, "max_batch 8 => at least 3 batches");
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.p50_ms <= stats.p99_ms);
+    }
+
+    /// An activation-quantized model serves through the same tier and
+    /// replies match the direct v2 forward bit-for-bit; the v1 engine
+    /// refuses the aq model instead of silently serving f32
+    /// activations.
+    #[test]
+    fn aq_model_serves_and_matches_direct_forward() {
+        let (m, st) = synthetic::mlp(32, 10, 7);
+        let frozen =
+            FrozenModel::export(&m, &st, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let mut sm = ServeModel::new(frozen).unwrap();
+        let img_len = sm.image_len();
+        let mut rng = Rng::new(11);
+        let calib: Vec<f32> =
+            (0..8 * img_len).map(|_| rng.normal()).collect();
+        sm.calibrate_aq(crate::infer::AqMode::Quantile, 4, &calib, 4)
+            .unwrap();
+        assert_eq!(sm.model.bits_a(), 4);
+        let sm = Arc::new(sm);
+        let srv = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mode: KernelMode::Lut,
+                kernel_threads: 1,
+            },
+        );
+        let images: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+            .collect();
+        let handles: Vec<_> = images
+            .iter()
+            .map(|img| srv.submit(img.clone()).unwrap())
+            .collect();
+        for (img, h) in images.iter().zip(handles) {
+            let reply = h.recv().expect("reply");
+            let want = sm
+                .graph
+                .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+                .unwrap();
+            assert_eq!(reply.logits, want, "served aq logits drifted");
+        }
+        assert_eq!(srv.shutdown().requests, 12);
+        // the v1 baseline engine has no aq sites: hard error, not drift
+        let err = sm
+            .graph
+            .forward(
+                &sm.model,
+                &sm.weights,
+                &images[0],
+                1,
+                KernelMode::LutV1,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("v2 engine"), "{err:#}");
     }
 
     /// The v1 engine serves through the same tier (the benchmark

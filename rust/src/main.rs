@@ -18,8 +18,8 @@ use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
 use uniq::infer::{
-    self, FrozenModel, KernelMode, Router, RouterConfig, RoutingPolicy,
-    ServeConfig, ServeModel, Server, SubmitError,
+    self, AqMode, FrozenModel, KernelMode, Router, RouterConfig,
+    RoutingPolicy, ServeConfig, ServeModel, Server, SubmitError,
 };
 use uniq::runtime::{Engine, ModelState};
 
@@ -331,6 +331,56 @@ fn cmd_bops(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Apply the `--aq none|uniform|quantile --aq-bits B` flags to a built
+/// [`ServeModel`]: absent flag keeps whatever the frozen file carried,
+/// `none` strips tables (bit-identical pre-aq serving), a mode
+/// calibrates fresh tables on a deterministic synthetic set.
+fn apply_aq_flags(cli: &Cli, sm: &mut ServeModel) -> Result<()> {
+    let Some(flag) = cli.get("aq") else { return Ok(()) };
+    match AqMode::parse(flag)? {
+        None => sm.model.aq = None,
+        Some(mode) => {
+            let bits = cli.get_u32("aq-bits", 4);
+            if !(1..=8).contains(&bits) {
+                return Err(anyhow!(
+                    "--aq-bits {bits} out of range (1..=8; tables hold \
+                     2^bits levels in u8 bins)"
+                ));
+            }
+            let n = cli.get_usize("calib-size", 64).max(1);
+            // calibration data must match the MODEL's input shape, not
+            // the synthetic generator's default: the CIFAR-shaped task
+            // when it fits (serving-like stats), a deterministic
+            // Gaussian probe for any other geometry
+            let images: Vec<f32> = if sm.model.image == [32, 32, 3] {
+                SynthDataset::generate(SynthConfig {
+                    classes: sm.model.classes,
+                    n,
+                    // same synthetic task as the serving traffic,
+                    // fresh samples
+                    sample_seed: 977,
+                    ..Default::default()
+                })
+                .images
+            } else {
+                let img_len: usize = sm.model.image.iter().product();
+                let mut rng = uniq::util::rng::Rng::new(977);
+                (0..n * img_len).map(|_| rng.normal()).collect()
+            };
+            sm.calibrate_aq(mode, bits, &images, 16)?;
+            let aq = sm.model.aq.as_ref().unwrap();
+            println!(
+                "activation quant: {} at {} bits ({} layers calibrated \
+                 on {n} images)",
+                mode.name(),
+                aq.bits,
+                aq.n_tables(),
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Resolve a frozen model: `--frozen DIR` (saved export) > artifact
 /// manifest + checkpoint/init > synthetic random-weight fallback.
 fn frozen_model(cli: &Cli) -> Result<FrozenModel> {
@@ -376,11 +426,15 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         model.n_quantized_weights(),
         model.quantized_bytes() / 1024
     );
+    let mut sm = ServeModel::new(model)?;
+    apply_aq_flags(cli, &mut sm)?;
     if let Some(dir) = cli.get("export") {
-        model.save(Path::new(dir))?;
+        // exported AFTER the aq flags apply, so calibrated tables ship
+        // inside the frozen format (v2) and reload ready to serve
+        sm.model.save(Path::new(dir))?;
         println!("frozen model -> {dir}");
     }
-    let sm = ServeModel::new(model)?;
+    let sm = sm;
     let batch = cli.get_usize("batch", 64);
     let val = SynthDataset::generate(SynthConfig {
         classes: sm.model.classes,
@@ -433,10 +487,13 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         lut_rps / f32_rps
     );
 
-    // measured vs analytic BOPs, side by side (paper §4.2 regime)
+    // measured vs analytic BOPs, side by side (paper §4.2 regime) —
+    // real b_w x b_a for the served graph: b_a is the aq table width,
+    // or 32 while activations run f32
     let arch = sm.graph.to_arch(&sm.model);
+    let bits_a = sm.model.bits_a();
     let fp = arch.complexity(BitConfig::baseline());
-    let q = arch.complexity(BitConfig::uniq(bits_w, 32));
+    let q = sm.graph.served_complexity(&sm.model);
     println!("\nanalytic complexity ({}):", arch.name);
     println!(
         "  fp32 baseline : {:>10.4} GBOPs/img  {:>8.2} Mbit",
@@ -444,7 +501,7 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         fp.mbit()
     );
     println!(
-        "  LUT ({bits_w} bit w) : {:>10.4} GBOPs/img  {:>8.2} Mbit  \
+        "  LUT (w{bits_w}/a{bits_a}) : {:>10.4} GBOPs/img  {:>8.2} Mbit  \
          ({:.1}x cheaper)",
         q.gbops(),
         q.mbit(),
@@ -468,7 +525,24 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         model.bits_w
     );
     // deployment working set: packed indices only, no f32 weight copies
-    let sm = Arc::new(ServeModel::lut_only(model)?);
+    let mut sm = ServeModel::lut_only(model)?;
+    apply_aq_flags(cli, &mut sm)?;
+    if sm.model.aq.is_some() && cli.get("engine") == Some("v1") {
+        return Err(anyhow!(
+            "--engine v1 cannot serve activation quantization (v2-only \
+             epilogue feature); drop --engine v1 or use --aq none"
+        ));
+    }
+    if let Some(aq) = sm.model.aq.as_ref() {
+        println!(
+            "activation quant: {} at {} bits (b_w x b_a = {} x {})",
+            aq.mode.name(),
+            aq.bits,
+            sm.model.bits_w,
+            sm.model.bits_a()
+        );
+    }
+    let sm = Arc::new(sm);
     let defaults = ServeConfig::default();
     let replicas = cli.get_usize("replicas", 1);
     // --workers is the TOTAL worker budget; a replica set splits it so
@@ -532,6 +606,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     if let Some(path) = cli.get("stats") {
         let j = uniq::util::json::obj(vec![
             ("model", uniq::util::json::s(&sm.model.name)),
+            (
+                "aq",
+                uniq::util::json::s(
+                    sm.model
+                        .aq
+                        .as_ref()
+                        .map(|a| a.mode.name())
+                        .unwrap_or("none"),
+                ),
+            ),
+            ("bits_a", uniq::util::json::num(sm.model.bits_a() as f64)),
             ("stats", stats.to_json()),
         ]);
         std::fs::write(path, j.to_string())?;

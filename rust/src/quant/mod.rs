@@ -43,22 +43,7 @@ impl Quantizer {
     /// bin. The LUT export path (`infer::codebook`) relies on `bin`
     /// returning a valid index for anything a checkpoint may contain.
     pub fn bin(&self, x: f32) -> usize {
-        if x.is_nan() {
-            return self.levels.len() / 2;
-        }
-        // binary search over interior thresholds; ties go right like
-        // numpy searchsorted(side="right")
-        let mut lo = 0usize;
-        let mut hi = self.thresholds.len();
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if x >= self.thresholds[mid] {
-                lo = mid + 1;
-            } else {
-                hi = mid;
-            }
-        }
-        lo
+        bin_total(&self.thresholds, self.levels.len(), x)
     }
 
     pub fn quantize_one(&self, x: f32) -> f32 {
@@ -107,6 +92,30 @@ impl Quantizer {
         u.truncate(kmax + 1);
         u
     }
+}
+
+/// The one bin search every scalar quantizer in the codebase shares —
+/// [`Quantizer::bin`] and the serving epilogue's activation-quant
+/// stage (`infer::kernels::ActEp`) both delegate here, so the
+/// ties-right (numpy `searchsorted(side="right")`) and totality
+/// conventions can never silently diverge. `k` is the bin count
+/// (`levels.len()`): ±∞ land in the outermost bins, NaN is pinned to
+/// the central bin `k / 2`.
+pub fn bin_total(thresholds: &[f32], k: usize, x: f32) -> usize {
+    if x.is_nan() {
+        return k / 2;
+    }
+    let mut lo = 0usize;
+    let mut hi = thresholds.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x >= thresholds[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
 }
 
 /// Trait for quantizer families: fit to data, yielding a `Quantizer`.

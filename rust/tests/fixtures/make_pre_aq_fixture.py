@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Regenerate the pre-aq (format v1) frozen-model fixture.
+
+The fixture freezes the PR-1..PR-4 on-disk format — no ``version`` key,
+no ``act_quant`` section — so ``FrozenModel::load`` stays
+backwards-compatible forever (rust/tests/infer_aq.rs loads and serves
+it). Deterministic: every value is an exact binary fraction, so the
+JSON→f32 roundtrip is lossless and the expected logits printed at the
+end are stable.
+
+Run from the repo root:
+    python rust/tests/fixtures/make_pre_aq_fixture.py
+"""
+import json
+import struct
+from pathlib import Path
+
+OUT = Path(__file__).parent / "pre_aq_frozen"
+
+# tiny MLP the name-driven graph builder recognises: fc1 [12,6] -> relu
+# -> fc2 [6,4]; image [2,2,3] (12 features), 4 classes, 2-bit codebooks
+CB1 = [-1.5, -0.5, 0.5, 1.5]
+CB2 = [-1.0, -0.25, 0.25, 1.0]
+IDX1 = [(i * 3 + 1) % 4 for i in range(12 * 6)]
+IDX2 = [(i * 5 + 2) % 4 for i in range(6 * 4)]
+B1 = [0.125 * i - 0.25 for i in range(6)]
+B2 = [-0.5, 0.25, 0.0, 0.75]
+
+
+def pack2(vals):
+    """LSB-first 2-bit packing (infer::packed::PackedBits layout)."""
+    data = bytearray((len(vals) * 2 + 7) // 8)
+    for i, v in enumerate(vals):
+        byte, off = divmod(i * 2, 8)
+        data[byte] |= (v & 3) << off
+    return bytes(data)
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    blob = bytearray()
+    layers = []
+    for name, shape, idx, cb in [
+        ("fc1", [12, 6], IDX1, CB1),
+        ("fc2", [6, 4], IDX2, CB2),
+    ]:
+        off = len(blob)
+        blob += pack2(idx)
+        layers.append(
+            dict(name=name, shape=shape, bits=2, n=len(idx), offset=off,
+                 codebook=cb)
+        )
+    params = []
+    for name, data in [("fc1/b", B1), ("fc2/b", B2)]:
+        off = len(blob)
+        for v in data:
+            blob += struct.pack("<f", v)
+        params.append(
+            dict(name=name, shape=[len(data)], offset=off, size=len(data))
+        )
+    meta = dict(
+        name="pre_aq_mlp",
+        image=[2, 2, 3],
+        classes=4,
+        bits_w=2,
+        layers=layers,
+        params=params,
+        state=[],
+    )
+    (OUT / "frozen.json").write_text(json.dumps(meta))
+    (OUT / "frozen.bin").write_bytes(bytes(blob))
+
+    # expected logits for the deterministic probe input (exact /8
+    # fractions; see infer_aq.rs::pre_aq_fixture_loads_and_serves)
+    x = [((i * 7) % 13) / 8.0 - 0.5 for i in range(12)]
+    w1 = [[CB1[IDX1[j * 6 + o]] for o in range(6)] for j in range(12)]
+    w2 = [[CB2[IDX2[j * 4 + o]] for o in range(4)] for j in range(6)]
+    h = [max(sum(x[j] * w1[j][o] for j in range(12)) + B1[o], 0.0)
+         for o in range(6)]
+    y = [sum(h[j] * w2[j][o] for j in range(6)) + B2[o] for o in range(4)]
+    print("probe x:", x)
+    print("expected logits:", y)
+    print("argmax:", max(range(4), key=lambda i: y[i]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,484 @@
+//! Activation-quantization parity suite — the CI bitwidth matrix runs
+//! this file once per (mode, bits) cell via `UNIQ_AQ_MODE` /
+//! `UNIQ_AQ_BITS` (both uniform and quantile at 4 bits when unset, so a
+//! plain `cargo test` still covers both families).
+//!
+//! Gates, per cell:
+//!   * `aq = off` stays **bit-identical** to the PR-4 engine (v1 == v2,
+//!     and stripping calibrated tables restores the exact logits);
+//!   * `aq = on` keeps LUT and dequant-f32 parity ≤ 1e-5 on all three
+//!     architectures (the kernels share accumulation order and the
+//!     identical fused epilogue, so in practice they agree bit-for-bit);
+//!   * activations really snap to ≤ 2^bits levels (tracked through the
+//!     arena's quantized ping-pong buffer);
+//!   * the frozen format round-trips aq tables bit-exactly and still
+//!     loads the checked-in pre-aq (format v1) fixture;
+//!   * served BOPS use the real b_w × b_a (pinned constants).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniq::bops::BitConfig;
+use uniq::coordinator::FreezeQuant;
+use uniq::infer::{
+    actquant, kernels, synthetic, ActQuantTable, AqMode, ExecBuffers,
+    FrozenModel, Graph, KernelMode, LayerCodebook, PreparedWeights,
+    ServeConfig, ServeModel, Server,
+};
+use uniq::quant::{KQuantileGauss, QuantizerFit};
+use uniq::util::rng::Rng;
+
+const ARCHS: [(&str, usize); 3] =
+    [("mlp", 16), ("resnet8", 8), ("mobilenet_mini", 16)];
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.2).collect()
+}
+
+/// The (mode, bits) cells this process covers: one cell when the CI
+/// matrix sets `UNIQ_AQ_MODE`/`UNIQ_AQ_BITS`, both modes at 4 bits for
+/// a plain local `cargo test`.
+fn matrix_cfgs() -> Vec<(AqMode, u32)> {
+    let bits = std::env::var("UNIQ_AQ_BITS")
+        .ok()
+        .and_then(|v| v.parse::<u32>().ok())
+        .unwrap_or(4);
+    match std::env::var("UNIQ_AQ_MODE") {
+        Ok(m) => vec![(
+            AqMode::parse(&m)
+                .expect("UNIQ_AQ_MODE")
+                .expect("UNIQ_AQ_MODE must not be 'none'"),
+            bits,
+        )],
+        Err(_) => vec![(AqMode::Uniform, bits), (AqMode::Quantile, bits)],
+    }
+}
+
+/// Frozen synthetic model + its graph/weights, optionally calibrated.
+fn built(
+    name: &str,
+    width: usize,
+    aq: Option<(AqMode, u32)>,
+) -> (FrozenModel, Graph, PreparedWeights) {
+    let (m, state) = synthetic::model(name, width, 10, 23).unwrap();
+    let mut frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let graph = Graph::from_model(&frozen).unwrap();
+    let weights = PreparedWeights::new(&frozen, &graph);
+    if let Some((mode, bits)) = aq {
+        let img_len: usize = frozen.image.iter().product();
+        let calib = randvec(16 * img_len, 91);
+        frozen.aq = Some(
+            actquant::calibrate(
+                &frozen, &graph, &weights, &calib, 8, mode, bits,
+            )
+            .unwrap(),
+        );
+    }
+    (frozen, graph, weights)
+}
+
+/// aq = off is the PR-4 engine, bit for bit: v1 == v2 on every arch,
+/// and a model whose calibrated tables are stripped again returns the
+/// exact pre-calibration logits.
+#[test]
+fn aq_off_bit_identical_to_baseline_engine() {
+    for (name, width) in ARCHS {
+        let (frozen, graph, weights) = built(name, width, None);
+        let img_len: usize = frozen.image.iter().product();
+        let x = randvec(4 * img_len, 5);
+        let v1 = graph
+            .forward(&frozen, &weights, &x, 4, KernelMode::LutV1)
+            .unwrap();
+        let v2 = graph
+            .forward(&frozen, &weights, &x, 4, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(v2, v1, "{name}: aq-off v2 drifted from the v1 engine");
+
+        for (mode, bits) in matrix_cfgs() {
+            let (mut with, g2, w2) =
+                built(name, width, Some((mode, bits)));
+            let on = g2
+                .forward(&with, &w2, &x, 4, KernelMode::Lut)
+                .unwrap();
+            assert!(
+                on.iter().zip(&v2).any(|(a, b)| a != b),
+                "{name} {mode:?}{bits}: aq changed nothing"
+            );
+            with.aq = None;
+            let stripped = g2
+                .forward(&with, &w2, &x, 4, KernelMode::Lut)
+                .unwrap();
+            assert_eq!(
+                stripped, v2,
+                "{name} {mode:?}{bits}: stripping tables must restore \
+                 the exact baseline logits"
+            );
+        }
+    }
+}
+
+/// aq = on keeps the LUT / dequant-f32 engines in lockstep on every
+/// architecture (same accumulation order, same fused epilogue ⇒ the
+/// mirror-validated ≤ 1e-5 contract holds with quantized activations).
+#[test]
+fn aq_on_lut_matches_f32_reference_all_archs() {
+    for (mode, bits) in matrix_cfgs() {
+        for (name, width) in ARCHS {
+            let (frozen, graph, weights) =
+                built(name, width, Some((mode, bits)));
+            let img_len: usize = frozen.image.iter().product();
+            let x = randvec(4 * img_len, 7);
+            let lut = graph
+                .forward(&frozen, &weights, &x, 4, KernelMode::Lut)
+                .unwrap();
+            let refr = graph
+                .forward(&frozen, &weights, &x, 4, KernelMode::DequantF32)
+                .unwrap();
+            let max_diff = lut
+                .iter()
+                .zip(&refr)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_diff <= 1e-5,
+                "{name} {mode:?}{bits}: LUT vs f32 diff {max_diff}"
+            );
+            assert!(
+                lut.iter().all(|v| v.is_finite()),
+                "{name} {mode:?}{bits}: non-finite logits"
+            );
+        }
+    }
+}
+
+/// Single-dense graph whose output IS an aq site: the arena's quantized
+/// ping-pong buffer holds the bin of every activation, values equal
+/// their level, and the tensor takes at most 2^bits distinct values.
+#[test]
+fn aq_activations_snap_to_level_budget() {
+    let (cin, cout) = (24usize, 12usize);
+    let w = randvec(cin * cout, 31);
+    let q = KQuantileGauss.fit(&w, 16);
+    let frozen_layer =
+        LayerCodebook::from_weights("fc1", &[cin, cout], &w, &q);
+    for (mode, bits) in matrix_cfgs() {
+        let table = ActQuantTable::from_stats(mode, bits, 0.1, 0.8);
+        let mut model = FrozenModel {
+            name: "aq_unit".into(),
+            image: vec![1, 1, cin],
+            classes: cout,
+            bits_w: 4,
+            layers: vec![frozen_layer.clone()],
+            params: vec![],
+            state: vec![],
+            aq: Some(uniq::infer::ActQuantModel {
+                mode,
+                bits: bits as u8,
+                tables: vec![Some(table.clone())],
+            }),
+        };
+        // ops mirror build_mlp's non-final dense: relu'd => aq site
+        let graph = Graph::new(
+            vec![
+                uniq::infer::graph::Op::Flatten,
+                uniq::infer::graph::Op::Dense { q: 0, bias: None },
+                uniq::infer::graph::Op::Relu,
+            ],
+            "mlp",
+        );
+        let weights = PreparedWeights::new(&model, &graph);
+        let batch = 5usize;
+        let x = randvec(batch * cin, 33);
+        let mut bufs = ExecBuffers::new();
+        bufs.track_qact = true;
+        let logits = graph
+            .forward_into(
+                &model, &weights, &x, batch, KernelMode::Lut, &mut bufs,
+            )
+            .unwrap()
+            .to_vec();
+        let qact = bufs.qact().to_vec();
+        assert_eq!(qact.len(), logits.len(), "one bin per activation");
+        let mut distinct: Vec<f32> = logits.clone();
+        for (i, (&v, &b)) in logits.iter().zip(&qact).enumerate() {
+            assert!(
+                (b as usize) < table.levels.len(),
+                "bin {b} out of range"
+            );
+            assert_eq!(
+                v, table.levels[b as usize],
+                "activation {i} is not its level"
+            );
+        }
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert!(
+            distinct.len() <= 1 << bits,
+            "{} distinct values at {bits} bits",
+            distinct.len()
+        );
+
+        // untracked run produces the same values with an empty buffer
+        let mut plain = ExecBuffers::new();
+        let l2 = graph
+            .forward_into(
+                &model, &weights, &x, batch, KernelMode::Lut, &mut plain,
+            )
+            .unwrap()
+            .to_vec();
+        assert_eq!(l2, logits, "tracking changed the numbers");
+        assert!(plain.qact().is_empty());
+
+        // aq-off on the same graph: values leave the level grid
+        model.aq = None;
+        let off = graph
+            .forward(&model, &weights, &x, batch, KernelMode::Lut)
+            .unwrap();
+        assert!(off.iter().zip(&logits).any(|(a, b)| a != b));
+    }
+}
+
+/// `--aq quantile --aq-bits 4` serves every arch through the batched
+/// tier with replies bit-identical to the direct forward (the
+/// acceptance-criterion configuration).
+#[test]
+fn aq_quantile4_serves_all_archs() {
+    for (name, width) in ARCHS {
+        let (m, state) = synthetic::model(name, width, 10, 41).unwrap();
+        let frozen =
+            FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+                .unwrap();
+        let mut sm = ServeModel::new(frozen).unwrap();
+        let img_len = sm.image_len();
+        let calib = randvec(12 * img_len, 43);
+        sm.calibrate_aq(AqMode::Quantile, 4, &calib, 6).unwrap();
+        assert_eq!(sm.model.bits_a(), 4);
+        let sm = Arc::new(sm);
+        let srv = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                mode: KernelMode::Lut,
+                kernel_threads: 1,
+            },
+        );
+        let images: Vec<Vec<f32>> = (0..9)
+            .map(|i| randvec(img_len, 50 + i as u64))
+            .collect();
+        let handles: Vec<_> = images
+            .iter()
+            .map(|img| srv.submit(img.clone()).unwrap())
+            .collect();
+        for (img, h) in images.iter().zip(handles) {
+            let reply = h.recv().expect("reply");
+            let want = sm
+                .graph
+                .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+                .unwrap();
+            assert_eq!(
+                reply.logits, want,
+                "{name}: served aq logits drifted"
+            );
+            assert_eq!(reply.pred, kernels::argmax(&want));
+        }
+        assert_eq!(srv.shutdown().requests, 9, "{name}");
+    }
+}
+
+/// Frozen-format round trip with aq tables: save → load is bit-exact
+/// (model equality AND logit equality), for every matrix cell.
+#[test]
+fn frozen_roundtrip_with_aq_is_bit_exact() {
+    for (mode, bits) in matrix_cfgs() {
+        let (frozen, graph, weights) =
+            built("resnet8", 8, Some((mode, bits)));
+        let dir = std::env::temp_dir().join(format!(
+            "uniq_aq_roundtrip_{}_{bits}",
+            mode.name()
+        ));
+        frozen.save(&dir).unwrap();
+        let loaded = FrozenModel::load(&dir).unwrap();
+        assert_eq!(loaded, frozen, "{mode:?}{bits}: model roundtrip");
+
+        let img_len: usize = frozen.image.iter().product();
+        let x = randvec(2 * img_len, 61);
+        let g2 = Graph::from_model(&loaded).unwrap();
+        let w2 = PreparedWeights::new(&loaded, &g2);
+        let a = graph
+            .forward(&frozen, &weights, &x, 2, KernelMode::Lut)
+            .unwrap();
+        let b = g2.forward(&loaded, &w2, &x, 2, KernelMode::Lut).unwrap();
+        assert_eq!(a, b, "{mode:?}{bits}: logits after reload");
+    }
+}
+
+/// The checked-in pre-aq fixture (format v1: no version key, no
+/// act_quant section) still loads and serves — with pinned logits, all
+/// of whose inputs/weights are exact binary fractions.
+#[test]
+fn pre_aq_fixture_loads_and_serves() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/pre_aq_frozen");
+    let m = FrozenModel::load(&dir).unwrap();
+    assert_eq!(m.name, "pre_aq_mlp");
+    assert!(m.aq.is_none(), "v1 fixture must load with aq = None");
+    assert_eq!(m.bits_a(), 32);
+    assert_eq!(m.bits_w, 2);
+    assert_eq!(m.layers.len(), 2);
+
+    let graph = Graph::from_model(&m).unwrap();
+    let weights = PreparedWeights::new(&m, &graph);
+    // exact /8 fractions: every intermediate is exactly representable,
+    // so the logits pin bit-for-bit (make_pre_aq_fixture.py prints them)
+    let x: Vec<f32> =
+        (0..12).map(|i| ((i * 7) % 13) as f32 / 8.0 - 0.5).collect();
+    let got = graph.forward(&m, &weights, &x, 1, KernelMode::Lut).unwrap();
+    assert_eq!(got, vec![4.8125, 21.5, -21.25, -4.5625]);
+    assert_eq!(kernels::argmax(&got), 1);
+
+    // and it serves end to end
+    let sm = Arc::new(ServeModel::new(m).unwrap());
+    let srv = Server::start(Arc::clone(&sm), ServeConfig::default());
+    let reply = srv.submit(x).unwrap().recv().unwrap();
+    assert_eq!(reply.pred, 1);
+    assert_eq!(srv.shutdown().requests, 1);
+}
+
+/// Served BOPS use the real b_w × b_a: pinned totals for the synthetic
+/// archs at (w4,a4) and (w2,a8) — constants cross-computed by an
+/// independent python replica of the formula (see PR notes), tolerance
+/// 1e-6 relative for libm log2 drift.
+#[test]
+fn served_bops_pinned_at_real_bitwidths() {
+    let cases: [(&str, usize, f64, f64); 2] = [
+        // (arch, width, bops at (4,4), bops at (2,8))
+        ("resnet8", 8, 99_289_186.257_532_06, 105_722_290.257_532_06),
+        (
+            "mobilenet_mini",
+            16,
+            92_630_623.284_715_32,
+            98_936_671.284_715_32,
+        ),
+    ];
+    for (name, width, want44, want28) in cases {
+        let (frozen, graph, _weights) = built(name, width, None);
+        let arch = graph.to_arch(&frozen);
+        let got44 = arch.complexity(BitConfig::uniq(4, 4)).bops;
+        let got28 = arch.complexity(BitConfig::uniq(2, 8)).bops;
+        assert!(
+            (got44 / want44 - 1.0).abs() < 1e-6,
+            "{name} (4,4): got {got44}, want {want44}"
+        );
+        assert!(
+            (got28 / want28 - 1.0).abs() < 1e-6,
+            "{name} (2,8): got {got28}, want {want28}"
+        );
+    }
+
+    // served_complexity prices per-layer INPUT widths: without tables
+    // it reduces exactly to the all-32 activation pricing
+    let (frozen, graph, _w) = built("resnet8", 8, None);
+    let fp_a = graph.served_complexity(&frozen).bops;
+    let want_fp =
+        graph.to_arch(&frozen).complexity(BitConfig::uniq(4, 32)).bops;
+    assert_eq!(fp_a, want_fp);
+
+    // with quantile-4 tables: every layer fed by a quantized output
+    // prices at b_a=4, but conv1 (reads the f32 image) and fc (reads
+    // global-avg-pooled values, off the level grid) stay at 32
+    let (aq4, g2, _w2) = built("resnet8", 8, Some((AqMode::Quantile, 4)));
+    let q_a = g2.served_complexity(&aq4).bops;
+    let arch = g2.to_arch(&aq4);
+    let all4 = arch.complexity(BitConfig::uniq(4, 4)).bops;
+    assert!(
+        all4 < q_a && q_a < fp_a,
+        "first/last f32 inputs: expected {all4} < {q_a} < {fp_a}"
+    );
+    let first = &arch.layers[0];
+    let last = arch.layers.last().unwrap();
+    let want = all4 + (first.bops(4, 32) - first.bops(4, 4))
+        + (last.bops(4, 32) - last.bops(4, 4));
+    assert!(
+        (q_a / want - 1.0).abs() < 1e-9,
+        "served pricing drifted: got {q_a}, want {want}"
+    );
+}
+
+/// Calibration is a pure function of (model, images, mode, bits).
+#[test]
+fn calibration_is_deterministic() {
+    for (mode, bits) in matrix_cfgs() {
+        let (frozen, graph, weights) = built("mobilenet_mini", 8, None);
+        let img_len: usize = frozen.image.iter().product();
+        let calib = randvec(8 * img_len, 71);
+        let a = actquant::calibrate(
+            &frozen, &graph, &weights, &calib, 4, mode, bits,
+        )
+        .unwrap();
+        let b = actquant::calibrate(
+            &frozen, &graph, &weights, &calib, 4, mode, bits,
+        )
+        .unwrap();
+        assert_eq!(a, b, "{mode:?}{bits}: calibration not deterministic");
+        // every aq site got a table; the final dense did not
+        let fc = frozen.layer_index("fc").unwrap();
+        assert!(a.tables[fc].is_none(), "final dense must stay f32");
+        assert_eq!(
+            a.n_tables(),
+            frozen.layers.len() - 1,
+            "all non-final qlayers have aq sites"
+        );
+        // batch size must not change the tables (pure fold)
+        let c = actquant::calibrate(
+            &frozen, &graph, &weights, &calib, 3, mode, bits,
+        )
+        .unwrap();
+        assert_eq!(a, c, "{mode:?}{bits}: batch-size dependence");
+    }
+}
+
+/// Steady-state serving with aq on (and bin tracking) still reuses the
+/// arena verbatim — the zero-allocation contract extends to the
+/// quantized ping-pong pair.
+#[test]
+fn aq_serving_keeps_the_arena_allocation_free() {
+    for (mode, bits) in matrix_cfgs() {
+        let (frozen, graph, _full) =
+            built("mobilenet_mini", 8, Some((mode, bits)));
+        let weights = PreparedWeights::lut_only(&frozen, &graph);
+        let img_len: usize = frozen.image.iter().product();
+        let batch = 4usize;
+        let x = randvec(batch * img_len, 81);
+        let mut bufs = ExecBuffers::new();
+        bufs.track_qact = true;
+        for _ in 0..2 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::Lut,
+                    &mut bufs,
+                )
+                .unwrap();
+        }
+        let fp = bufs.arena_fingerprint();
+        for _ in 0..4 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::Lut,
+                    &mut bufs,
+                )
+                .unwrap();
+        }
+        assert_eq!(
+            bufs.arena_fingerprint(),
+            fp,
+            "{mode:?}{bits}: arena reallocated in steady state"
+        );
+        assert!(!bufs.qact().is_empty(), "tracking recorded nothing");
+    }
+}
