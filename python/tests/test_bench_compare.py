@@ -146,6 +146,32 @@ def test_gone_keys_warn_loudly_in_gate_mode_only(tmp_path, capsys):
     assert "m/lut/b64" in out
 
 
+def test_skipped_keys_trailing_count_sums_new_and_gone(tmp_path, capsys):
+    """The trailing one-liner: everything the comparison did not cover
+    — new keys without a baseline plus baseline keys gone from the
+    current run — lands in ONE greppable count at the end of the log."""
+    # 2 new keys (remote bench landed after the baseline), 1 gone key
+    cur_keys = {
+        "m/lut/b1": 1_000_000.0,
+        "m/inproc_b1": 1_100_000.0,
+        "m/remote_b1": 1_300_000.0,
+    }
+    cur = write(tmp_path, "cur.json", report(cur_keys))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "3 keys skipped (2 new without baseline, 1 gone from current)" in out
+    # the count trails the per-key table, not buried above it
+    assert out.rindex("keys skipped") > out.rindex("m/lut/b1 ")
+
+
+def test_skipped_keys_line_absent_at_full_coverage(tmp_path, capsys):
+    cur = write(tmp_path, "cur.json", report(BASE))
+    base = write(tmp_path, "base.json", report(BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    assert "keys skipped" not in capsys.readouterr().out
+
+
 def test_new_keys_warning_lists_are_truncated(tmp_path, capsys):
     many = dict(BASE, **{f"m/aq_new/{i}": 1e6 for i in range(12)})
     cur = write(tmp_path, "cur.json", report(many))

@@ -1,0 +1,117 @@
+"""Python mirror of the `infer::net` frame codec golden bytes.
+
+The Rust side pins the exact wire format in
+``rust/src/infer/net/frame.rs::golden_bytes_pin_the_wire_format``; this
+file pins the SAME constants via ``struct`` + ``binascii.crc32`` (the
+IEEE reflected CRC-32 the codec implements). A layout or CRC-convention
+change must fail in both places — and because this mirror is pure
+stdlib, it runs with no Rust toolchain at all.
+
+Wire format (all little-endian):
+
+    magic   b"UQNF"          4 bytes
+    version u8 (= 1)         1
+    kind    u8               1
+    reserved u16 (= 0)       2
+    id      u64              8
+    len     u32              4
+    payload len bytes
+    crc32   u32              4   over header + payload
+"""
+
+import binascii
+import struct
+
+MAGIC = b"UQNF"
+PROTO_VERSION = 1
+HEADER_LEN = 20
+MAX_PAYLOAD = 16 << 20
+
+# FrameKind discriminants (frame.rs)
+HELLO, SUBMIT, REPLY, ERROR, PING, PONG, DRAIN, DRAIN_ACK = range(1, 9)
+
+
+def encode(kind, frame_id, payload):
+    header = (
+        MAGIC
+        + bytes([PROTO_VERSION, kind])
+        + b"\x00\x00"
+        + struct.pack("<Q", frame_id)
+        + struct.pack("<I", len(payload))
+    )
+    crc = binascii.crc32(header + payload) & 0xFFFFFFFF
+    return header + payload + struct.pack("<I", crc)
+
+
+def test_header_geometry():
+    f = encode(PING, 0, b"")
+    assert len(f) == HEADER_LEN + 4
+    assert f[:4] == MAGIC
+    assert MAX_PAYLOAD == 16 * 1024 * 1024
+
+
+def test_golden_ping_frame_matches_rust_pin():
+    """The byte-for-byte Ping frame pinned in frame.rs."""
+    ping = encode(PING, 7, b"")
+    assert ping == bytes(
+        [
+            0x55, 0x51, 0x4E, 0x46,  # UQNF
+            1, 5, 0, 0,              # version, kind=ping, reserved
+            7, 0, 0, 0, 0, 0, 0, 0,  # id LE
+            0, 0, 0, 0,              # len LE
+            0x5B, 0x61, 0x6C, 0xC8,  # crc32 0xc86c615b LE
+        ]
+    )
+
+
+def test_golden_submit_crc_matches_rust_pin():
+    """The Submit-frame CRC pinned in frame.rs: id 0x0102030405060708,
+    payload = f32 LE [1.0, -2.5]."""
+    payload = struct.pack("<2f", 1.0, -2.5)
+    assert payload == bytes([0, 0, 128, 63, 0, 0, 32, 192])
+    frame = encode(SUBMIT, 0x0102030405060708, payload)
+    (crc,) = struct.unpack("<I", frame[-4:])
+    assert crc == 0x90AFB8EB
+
+
+def test_crc_is_the_zlib_polynomial():
+    """Shared reference vector: the Rust const-table CRC and
+    binascii.crc32 are the same reflected-0xEDB88320 CRC-32."""
+    assert binascii.crc32(b"123456789") == 0xCBF43926
+    assert binascii.crc32(b"") == 0
+
+
+def test_kind_discriminants_are_pinned():
+    """frame.rs FrameKind numbering — renumbering breaks every deployed
+    worker, so it is contract, not implementation detail."""
+    assert (HELLO, SUBMIT, REPLY, ERROR) == (1, 2, 3, 4)
+    assert (PING, PONG, DRAIN, DRAIN_ACK) == (5, 6, 7, 8)
+
+
+def test_crc_detects_any_single_byte_corruption():
+    """Fuzz-style mirror of the Rust malformed-frame table: flipping
+    any byte of a valid frame breaks the CRC check."""
+    frame = bytearray(encode(SUBMIT, 99, struct.pack("<3f", 0.5, -0.0, 2.0)))
+    body, (want,) = frame[:-4], struct.unpack("<I", frame[-4:])
+    assert binascii.crc32(bytes(body)) == want
+    for i in range(len(body)):
+        corrupt = bytearray(body)
+        corrupt[i] ^= 0x40
+        assert binascii.crc32(bytes(corrupt)) != want, f"byte {i}"
+
+
+def test_reply_payload_layout():
+    """proto.rs ReplyPayload: pred u32 | batch u32 | latency_ns u64 |
+    logits f32×classes, all LE — 16 bytes of fixed header, then a whole
+    number of f32s."""
+    logits = [1.5, -2.25, 0.0]
+    payload = struct.pack("<IIQ", 3, 8, 1_250_000) + struct.pack(
+        f"<{len(logits)}f", *logits
+    )
+    assert len(payload) >= 16 and (len(payload) - 16) % 4 == 0
+    pred, batch, latency_ns = struct.unpack_from("<IIQ", payload)
+    assert (pred, batch, latency_ns) == (3, 8, 1_250_000)
+    back = list(
+        struct.unpack_from(f"<{len(logits)}f", payload, offset=16)
+    )
+    assert back == logits

@@ -181,6 +181,17 @@ def main(argv):
             f"no longer run: {', '.join(gone[:8])}"
             f"{'...' if len(gone) > 8 else ''}"
         )
+    # one trailing machine-greppable count of everything the comparison
+    # did NOT cover — new keys without a baseline plus baseline keys
+    # gone from the current run — so "how much escaped the gate" is a
+    # single line, not an exercise in cross-referencing two WARNs
+    skipped = len(new) + len(gone)
+    if skipped:
+        print(
+            f"bench-compare: {skipped} keys skipped "
+            f"({len(new)} new without baseline, "
+            f"{len(gone)} gone from current)"
+        )
     if warned:
         print(
             f"bench-compare: {len(warned)} benchmark(s) below "

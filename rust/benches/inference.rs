@@ -21,6 +21,9 @@ use std::time::Duration;
 use uniq::coordinator::FreezeQuant;
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::Batcher;
+use uniq::infer::net::{
+    submit_blocking, RemoteOpts, RemoteReplica, Worker,
+};
 use uniq::infer::{
     kernels, synthetic, AqMode, ExecBuffers, FrozenModel, KernelMode,
     Router, RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
@@ -213,6 +216,83 @@ fn router_fleet_ab(
     ])
 }
 
+/// Loopback wire-transport overhead: identical batch-1 round trips
+/// through an in-process `Server` vs a `RemoteReplica` speaking the
+/// `infer::net` frame protocol to an in-process worker over 127.0.0.1.
+/// The recorded ratio prices the frame codec + TCP + reader/pump
+/// threads — the per-request cost of taking a replica slot across a
+/// process boundary.
+fn remote_loopback(
+    b: &mut Bench,
+    sm: &Arc<ServeModel>,
+    img_len: usize,
+) -> Json {
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        mode: KernelMode::Lut,
+        kernel_threads: 1,
+    };
+    let mut rng = Rng::new(41);
+    let imgs: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..img_len).map(|_| rng.normal()).collect())
+        .collect();
+
+    let srv = Server::start(Arc::clone(sm), cfg.clone());
+    let mut i = 0usize;
+    let inproc =
+        b.run_throughput("mobilenet_mini/inproc_b1", 1, || {
+            let rx = srv.submit(imgs[i % imgs.len()].clone()).unwrap();
+            rx.recv().unwrap();
+            i += 1;
+        });
+    srv.shutdown();
+
+    let worker =
+        Worker::bind(Arc::clone(sm), cfg, "127.0.0.1:0").unwrap();
+    let addr = worker.addr().to_string();
+    let handle = worker.spawn();
+    let replica = RemoteReplica::connect(
+        &addr,
+        None,
+        RemoteOpts::default(),
+        Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+    )
+    .unwrap();
+    let mut j = 0usize;
+    let remote =
+        b.run_throughput("mobilenet_mini/remote_b1", 1, || {
+            let rx = submit_blocking(
+                &replica,
+                imgs[j % imgs.len()].clone(),
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            rx.recv().unwrap();
+            j += 1;
+        });
+    let _ = replica.drain_then_stop();
+    handle.shutdown();
+
+    println!(
+        "remote loopback b1: inproc {:.0} ns, remote {:.0} ns \
+         ({:.2}x round-trip cost)",
+        inproc.median_ns,
+        remote.median_ns,
+        remote.median_ns / inproc.median_ns
+    );
+    obj(vec![
+        ("traffic", s("batch-1 round trip, single worker, loopback")),
+        ("inproc", inproc.to_json()),
+        ("remote", remote.to_json()),
+        (
+            "remote_vs_inproc_batch1",
+            num(remote.median_ns / inproc.median_ns),
+        ),
+    ])
+}
+
 /// Accuracy-vs-BOPS frontier data: forward throughput + analytic BOPS
 /// per activation-quant config on mobilenet_mini — (none, uniform-4,
 /// quantile-4), the acceptance set. BOPS are the REAL served per-layer
@@ -297,6 +377,7 @@ fn main() {
     let mut jmodels = Vec::new();
     let mut serve_json = Json::Null;
     let mut fleet_json = Json::Null;
+    let mut remote_json = Json::Null;
     for (name, width) in [("mobilenet_mini", 16usize), ("mlp", 16)] {
         let (m, state) = synthetic::model(name, width, 10, 7).unwrap();
         let frozen =
@@ -400,6 +481,7 @@ fn main() {
         if name == "mobilenet_mini" {
             serve_json = serve_ab(&sm, data.image_len(), 512);
             fleet_json = router_fleet_ab(&sm, data.image_len(), 512);
+            remote_json = remote_loopback(&mut b, &sm, data.image_len());
         }
         jmodels.push(obj(vec![
             ("model", s(name)),
@@ -417,6 +499,7 @@ fn main() {
         ("kernel_micro", jkernel),
         ("serve_ab", serve_json),
         ("router_fleet", fleet_json),
+        ("remote_loopback", remote_json),
         ("aq_configs", jaq),
         ("all_runs", b.report_json()),
         (

@@ -116,6 +116,23 @@ COMMANDS:
                                backpressure at Q outstanding per replica,
                                fleet-merged percentiles (--workers is the
                                TOTAL worker count, split across replicas)
+             [--remote-worker HOST:PORT]
+                               run this process as a fleet worker: the
+                               ServeModel behind a TCP listener speaking
+                               the infer::net frame protocol (port 0
+                               picks an ephemeral port; the listening
+                               address is printed as a banner before the
+                               first accept)
+             [--remote H:P,H:P,... | --spawn-workers N]
+                               serve the same traffic through remote
+                               workers instead of in-process replicas:
+                               --remote connects to externally managed
+                               workers (reconnect with backoff if one
+                               dies), --spawn-workers launches N child
+                               worker processes of this binary on
+                               ephemeral ports and respawns them on
+                               death; model flags are forwarded so
+                               children freeze the identical snapshot
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

@@ -14,7 +14,9 @@
 //! calibrated at freeze time and fused into the GEMM epilogues) →
 //! `serve` (dynamic batching, latency accounting) →
 //! `router` (replica set: routing policies, health-checked restarts,
-//! typed backpressure, fleet-merged stats). `synthetic` provides
+//! typed backpressure, fleet-merged stats) → `net` (frame protocol,
+//! remote workers, cross-process supervision: the router's replica
+//! slots taken across machine boundaries). `synthetic` provides
 //! manifest-faithful random models so everything here runs without AOT
 //! artifacts.
 //!
@@ -29,6 +31,7 @@ pub mod actquant;
 pub mod codebook;
 pub mod graph;
 pub mod kernels;
+pub mod net;
 pub mod packed;
 pub mod router;
 pub mod serve;
@@ -37,9 +40,11 @@ pub mod synthetic;
 pub use actquant::{ActQuantModel, ActQuantTable, AqMode};
 pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
 pub use graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
+pub use net::{RemoteOpts, RemoteReplica, Supervisor, Worker, WorkerSpec};
 pub use packed::PackedBits;
 pub use router::{
-    FleetStats, Pending, Router, RouterConfig, RoutingPolicy, SubmitError,
+    FleetStats, Pending, ReplicaBackend, ReplicaFactory, Router,
+    RouterConfig, RoutingPolicy, SubmitError,
 };
 pub use serve::{
     RawServeStats, Reply, ServeConfig, ServeModel, ServeStats, Server,

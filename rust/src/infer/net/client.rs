@@ -1,0 +1,473 @@
+//! `RemoteReplica` — the client end of a fleet connection.
+//!
+//! Speaks the [`super::frame`] protocol to one `--remote-worker`
+//! process and exposes exactly the surface the router's replica slot
+//! needs (`try_submit` / `outstanding` / `alive` / `kill` /
+//! `drain_then_stop`), so a TCP-backed worker and an in-process
+//! [`crate::infer::Server`] are interchangeable behind
+//! [`crate::infer::router::ReplicaBackend`].
+//!
+//! Ownership and timeout rules (DESIGN §12):
+//!
+//! * One background **reader thread** owns the receive side of the
+//!   socket and is the only code that touches the pending-waiter map on
+//!   the completion path. Submitters insert waiters *before* writing
+//!   the frame, so a reply can never race past its waiter.
+//! * A read **timeout is only armed during connect/handshake**. In the
+//!   steady state the reader blocks without a deadline: a timeout that
+//!   fires mid-frame would leave the stream desynchronized, which is
+//!   strictly worse than waiting — dead peers are detected by EOF/RST,
+//!   and `kill()`/`drain_then_stop()` unblock the reader by shutting
+//!   the socket down.
+//! * The **write path carries a timeout** (a wedged peer must not hang
+//!   `try_submit` forever); any write failure poisons the replica and
+//!   hands the caller its image back, which is the router's signal to
+//!   reroute.
+//! * `outstanding` counts submits not yet answered. When the
+//!   connection dies, waiters are dropped **without** decrementing it:
+//!   the residue is exactly the in-flight loss the router's `heal()`
+//!   harvests with `outstanding.swap(0)` — the same contract as a
+//!   killed local server.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::infer::serve::{RawServeStats, Reply};
+
+use super::frame::{
+    f32s_to_bytes, read_frame, write_frame, FrameError, FrameKind,
+};
+use super::proto::{ErrorMsg, Hello, ReplyPayload, WorkerStats};
+
+/// Client-side knobs. Defaults are loopback-appropriate; raise the
+/// timeouts for a real network.
+#[derive(Debug, Clone)]
+pub struct RemoteOpts {
+    /// TCP connect + handshake (Hello) deadline
+    pub connect_timeout: Duration,
+    /// per-frame write deadline on the submit path
+    pub write_timeout: Duration,
+    /// how long `drain_then_stop` waits for the worker's DrainAck
+    /// before giving up and closing the socket
+    pub drain_timeout: Duration,
+    /// bounded in-flight window: submits beyond this are refused
+    /// (handed back), independent of the router's own queue cap
+    pub max_inflight: usize,
+}
+
+impl Default for RemoteOpts {
+    fn default() -> Self {
+        RemoteOpts {
+            connect_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            drain_timeout: Duration::from_secs(10),
+            max_inflight: 4096,
+        }
+    }
+}
+
+struct Waiter {
+    tx: mpsc::Sender<Reply>,
+    t0: Instant,
+}
+
+struct PendingMap {
+    /// set by the reader on exit: no new submits may enter
+    closed: bool,
+    map: HashMap<u64, Waiter>,
+}
+
+/// The shared state the reader thread and submitters both touch.
+struct Shared {
+    pending: Mutex<PendingMap>,
+    dead: AtomicBool,
+    outstanding: Arc<AtomicUsize>,
+    acc: Mutex<RawServeStats>,
+}
+
+pub struct RemoteReplica {
+    shared: Arc<Shared>,
+    /// writer half; the Mutex serializes whole frames
+    writer: Mutex<TcpStream>,
+    /// kept solely to shutdown() the socket (unblocks the reader)
+    stream: TcpStream,
+    reader: Option<thread::JoinHandle<()>>,
+    drain_rx: mpsc::Receiver<WorkerStats>,
+    next_id: AtomicU64,
+    img_len: usize,
+    hello: Hello,
+    opts: RemoteOpts,
+    peer: SocketAddr,
+}
+
+impl RemoteReplica {
+    /// Connect, complete the Hello handshake, and start the reader.
+    /// `expect` optionally pins the fleet's reference geometry
+    /// (img_len, classes): a worker serving a different snapshot fails
+    /// here, loudly, instead of returning silently different logits.
+    pub fn connect(
+        addr: &str,
+        expect: Option<(usize, usize)>,
+        opts: RemoteOpts,
+        outstanding: Arc<AtomicUsize>,
+    ) -> Result<RemoteReplica> {
+        let peer = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving worker address {addr}"))?
+            .next()
+            .ok_or_else(|| {
+                anyhow!("worker address {addr} resolved to nothing")
+            })?;
+        let stream = TcpStream::connect_timeout(&peer, opts.connect_timeout)
+            .with_context(|| format!("connecting to worker {peer}"))?;
+        stream.set_nodelay(true).ok();
+
+        // Handshake under a read deadline: a silent listener must not
+        // wedge the fleet at startup. Cleared before steady state.
+        stream.set_read_timeout(Some(opts.connect_timeout))?;
+        let mut rd = stream.try_clone()?;
+        let hello_frame = read_frame(&mut rd).map_err(|e| {
+            anyhow!("worker {peer} handshake failed: {e}")
+        })?;
+        if hello_frame.kind != FrameKind::Hello {
+            bail!(
+                "worker {peer} opened with {:?}, expected Hello",
+                hello_frame.kind
+            );
+        }
+        let hello = Hello::decode(&hello_frame.payload)
+            .map_err(|e| anyhow!("worker {peer} bad Hello: {e}"))?;
+        if let Some((img_len, classes)) = expect {
+            if hello.img_len as usize != img_len
+                || hello.classes as usize != classes
+            {
+                bail!(
+                    "worker {peer} serves geometry {}x{} but the fleet \
+                     reference is {img_len}x{classes} — wrong snapshot?",
+                    hello.img_len,
+                    hello.classes
+                );
+            }
+        }
+        stream.set_read_timeout(None)?;
+        stream.set_write_timeout(Some(opts.write_timeout))?;
+
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(PendingMap {
+                closed: false,
+                map: HashMap::new(),
+            }),
+            dead: AtomicBool::new(false),
+            outstanding,
+            acc: Mutex::new(RawServeStats::default()),
+        });
+        let (drain_tx, drain_rx) = mpsc::channel();
+        let reader = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name(format!("uniq-remote-rd-{peer}"))
+                .spawn(move || reader_loop(rd, shared, drain_tx))
+                .context("spawning remote reader thread")?
+        };
+
+        let writer = stream.try_clone()?;
+        let img_len = hello.img_len as usize;
+        Ok(RemoteReplica {
+            shared,
+            writer: Mutex::new(writer),
+            stream,
+            reader: Some(reader),
+            drain_rx,
+            next_id: AtomicU64::new(1),
+            img_len,
+            hello,
+            opts,
+            peer,
+        })
+    }
+
+    pub fn hello(&self) -> &Hello {
+        &self.hello
+    }
+
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    pub fn img_len(&self) -> usize {
+        self.img_len
+    }
+
+    /// Same contract as `Server::try_submit`: `Err(image)` hands the
+    /// caller its buffer back untouched when the replica cannot accept
+    /// (dead, wrong length, window full, write failed) — the router
+    /// turns that into reroute-or-Overloaded.
+    pub fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>> {
+        if self.shared.dead.load(Ordering::SeqCst)
+            || image.len() != self.img_len
+            || self.shared.outstanding.load(Ordering::SeqCst)
+                >= self.opts.max_inflight
+        {
+            return Err(image);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            if p.closed {
+                return Err(image);
+            }
+            // waiter in place BEFORE the bytes leave: the reply cannot
+            // outrun it
+            p.map.insert(id, Waiter { tx, t0: Instant::now() });
+        }
+        self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+
+        let payload = f32s_to_bytes(&image);
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, FrameKind::Submit, id, &payload)
+        };
+        if wrote.is_err() {
+            // Undo this request's accounting (it never reached the
+            // wire), then poison the connection for everyone else.
+            self.shared.pending.lock().unwrap().map.remove(&id);
+            self.shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+            self.mark_dead();
+            return Err(image);
+        }
+        Ok(rx)
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.shared.outstanding.load(Ordering::SeqCst)
+    }
+
+    pub fn alive(&self) -> bool {
+        !self.shared.dead.load(Ordering::SeqCst)
+            && self.reader.as_ref().is_some_and(|r| !r.is_finished())
+    }
+
+    /// Poison the connection: refuse new submits and unblock the
+    /// reader. In-flight requests become the `outstanding` residue the
+    /// router harvests as loss — identical to killing a local server.
+    pub fn kill(&self) {
+        self.mark_dead();
+    }
+
+    fn mark_dead(&self) {
+        self.shared.dead.store(true, Ordering::SeqCst);
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    /// Ask the worker to flush everything owed on this connection, wait
+    /// (bounded) for its DrainAck, then tear the connection down and
+    /// return the client-side accounting. Every reply that arrives
+    /// before the DrainAck is delivered to its waiter first — the
+    /// worker's write pump is FIFO, so DrainAck is a true barrier.
+    pub fn drain_then_stop(mut self) -> RawServeStats {
+        let drain_sent = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, FrameKind::Drain, 0, &[]).is_ok()
+        };
+        if drain_sent {
+            match self.drain_rx.recv_timeout(self.opts.drain_timeout) {
+                Ok(ws) => {
+                    let mut acc = self.shared.acc.lock().unwrap();
+                    acc.batch_sizes
+                        .extend(ws.batch_sizes.iter().map(|b| *b as usize));
+                }
+                Err(_) => {
+                    eprintln!(
+                        "[net] worker {} did not ack drain within {:?}",
+                        self.peer, self.opts.drain_timeout
+                    );
+                }
+            }
+        }
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+        self.shared.acc.lock().unwrap().clone()
+    }
+}
+
+impl Drop for RemoteReplica {
+    fn drop(&mut self) {
+        // Belt-and-braces: never leave a reader blocked on a socket
+        // whose owner is gone.
+        self.shared.dead.store(true, Ordering::SeqCst);
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// The reader thread: sole owner of the receive side. Routes replies
+/// to their waiters, releases waiters the worker refuses, answers the
+/// drain barrier, and on any stream failure poisons the replica and
+/// abandons the remaining waiters (their receivers see RecvError, so
+/// the router resubmits; `outstanding` keeps the residue for loss
+/// accounting).
+fn reader_loop(
+    mut rd: TcpStream,
+    shared: Arc<Shared>,
+    drain_tx: mpsc::Sender<WorkerStats>,
+) {
+    loop {
+        let frame = match read_frame(&mut rd) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => break,
+            Err(e) => {
+                if !shared.dead.load(Ordering::SeqCst) {
+                    eprintln!("[net] reader: {e}");
+                }
+                break;
+            }
+        };
+        match frame.kind {
+            FrameKind::Reply => {
+                let waiter = shared
+                    .pending
+                    .lock()
+                    .unwrap()
+                    .map
+                    .remove(&frame.id);
+                let Some(waiter) = waiter else { continue };
+                shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                let Ok(p) = ReplyPayload::decode(&frame.payload) else {
+                    // malformed reply: treat as a refused request; the
+                    // dropped tx triggers resubmission upstream
+                    continue;
+                };
+                // the client-side round trip is the authoritative
+                // latency sample; first/last bracket the busy window
+                let now = Instant::now();
+                let latency = now.duration_since(waiter.t0);
+                {
+                    let mut acc = shared.acc.lock().unwrap();
+                    acc.latencies_ns.push(latency.as_nanos() as f64);
+                    acc.images += 1;
+                    acc.first = match acc.first {
+                        Some(f) => Some(f.min(waiter.t0)),
+                        None => Some(waiter.t0),
+                    };
+                    acc.last = match acc.last {
+                        Some(l) => Some(l.max(now)),
+                        None => Some(now),
+                    };
+                }
+                let _ = waiter.tx.send(Reply {
+                    pred: p.pred as usize,
+                    logits: p.logits,
+                    latency,
+                    batch: p.batch as usize,
+                });
+            }
+            FrameKind::Error => {
+                // the worker will never serve this id: release the
+                // waiter (RecvError upstream → bounded resubmission)
+                if let Ok(e) = ErrorMsg::decode(&frame.payload) {
+                    eprintln!(
+                        "[net] worker refused request {}: {} ({})",
+                        frame.id, e.msg, e.code
+                    );
+                }
+                let removed = shared
+                    .pending
+                    .lock()
+                    .unwrap()
+                    .map
+                    .remove(&frame.id)
+                    .is_some();
+                if removed {
+                    shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            FrameKind::DrainAck => {
+                let ws = WorkerStats::decode(&frame.payload)
+                    .unwrap_or(WorkerStats {
+                        images: 0,
+                        batch_sizes: vec![],
+                    });
+                let _ = drain_tx.send(ws);
+            }
+            FrameKind::Pong => {}
+            other => {
+                eprintln!(
+                    "[net] reader: unexpected {other:?} frame, ignoring"
+                );
+            }
+        }
+    }
+    // Stream over. Poison first, THEN close the map: a submitter that
+    // raced past the dead check either finds closed=true or its waiter
+    // is among the ones dropped here — never silently parked forever.
+    shared.dead.store(true, Ordering::SeqCst);
+    let mut p = shared.pending.lock().unwrap();
+    p.closed = true;
+    // Dropping waiters does NOT decrement outstanding: the residue is
+    // the in-flight loss heal() harvests, same as a killed local server.
+    p.map.clear();
+}
+
+/// A remote worker is a first-class replica: the router's routing,
+/// backpressure, health, and zero-drop resubmission machinery all run
+/// unchanged against this impl — that is the tentpole contract.
+impl crate::infer::router::ReplicaBackend for RemoteReplica {
+    fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>> {
+        RemoteReplica::try_submit(self, image)
+    }
+
+    fn outstanding(&self) -> usize {
+        RemoteReplica::outstanding(self)
+    }
+
+    fn alive(&self) -> bool {
+        RemoteReplica::alive(self)
+    }
+
+    fn kill(&self) {
+        RemoteReplica::kill(self)
+    }
+
+    fn drain_then_stop(self: Box<Self>) -> RawServeStats {
+        RemoteReplica::drain_then_stop(*self)
+    }
+}
+
+/// Convenience for callers outside the router (benches, smoke tests):
+/// submit with a bounded spin-wait while the in-flight window is full.
+pub fn submit_blocking(
+    r: &RemoteReplica,
+    mut image: Vec<f32>,
+    deadline: Duration,
+) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>> {
+    let t0 = Instant::now();
+    loop {
+        match r.try_submit(image) {
+            Ok(rx) => return Ok(rx),
+            Err(img) => {
+                if !r.alive() || t0.elapsed() > deadline {
+                    return Err(img);
+                }
+                image = img;
+                thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! Length-prefixed binary frame codec — the wire unit of `infer::net`.
+//!
+//! Every message on a fleet connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"UQNF"
+//!      4     1  version      PROTO_VERSION (future versions are refused
+//!                            with a typed error, not guessed at)
+//!      5     1  kind         FrameKind as u8
+//!      6     2  reserved     must be zero
+//!      8     8  id           correlation id, u64 LE (0 for control
+//!                            frames that need none)
+//!     16     4  payload len  u32 LE, must be <= MAX_PAYLOAD
+//!     20     N  payload      kind-specific (raw f32s or JSON, see proto)
+//!   20+N     4  crc32        IEEE CRC-32 over bytes [0, 20+N)
+//! ```
+//!
+//! Failure discipline: every way a frame can be malformed has its own
+//! [`FrameError`] variant — truncation, wrong magic, a future protocol
+//! version, an unknown kind, an oversized length prefix (rejected
+//! *before* any allocation), and a checksum mismatch. The reader can
+//! therefore tell "peer closed cleanly between frames" ([`FrameError::
+//! Closed`]) from "connection died mid-frame" ([`FrameError::Truncated`])
+//! from "stream corrupt" — three very different supervision decisions.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Wire protocol version. Bump on any layout or semantics change; a
+/// reader refuses frames from the future instead of misparsing them.
+pub const PROTO_VERSION: u8 = 1;
+
+/// `b"UQNF"` — uniq net frame.
+pub const MAGIC: [u8; 4] = *b"UQNF";
+
+/// Fixed header length (everything before the payload).
+pub const HEADER_LEN: usize = 20;
+
+/// Hard cap on payload size, enforced BEFORE the payload buffer is
+/// allocated: a corrupt or hostile length prefix must not be able to
+/// OOM the process. 16 MiB holds a ~4M-float image — two orders of
+/// magnitude above any model this repo serves.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+
+/// Frame type tag. Control frames carry JSON payloads (see
+/// [`super::proto`]); `Submit`/`Reply` carry raw binary payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// worker → client banner: model identity + geometry (JSON)
+    Hello = 1,
+    /// client → worker: one image, raw f32 LE payload, id correlates
+    Submit = 2,
+    /// worker → client: pred/batch/latency + logits, raw binary, id
+    /// matches the submit
+    Reply = 3,
+    /// worker → client: the identified request will never be served
+    /// (JSON `ErrorMsg`); the client drops its waiter so the router's
+    /// resubmission machinery takes over
+    Error = 4,
+    /// liveness probe (empty payload)
+    Ping = 5,
+    /// probe answer, id echoes the ping (empty payload)
+    Pong = 6,
+    /// client → worker: flush every reply owed on this connection,
+    /// then answer with `DrainAck` (empty payload)
+    Drain = 7,
+    /// worker → client: drain complete; payload is the worker's
+    /// serving-stats summary (JSON `WorkerStats`)
+    DrainAck = 8,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Option<FrameKind> {
+        Some(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Submit,
+            3 => FrameKind::Reply,
+            4 => FrameKind::Error,
+            5 => FrameKind::Ping,
+            6 => FrameKind::Pong,
+            7 => FrameKind::Drain,
+            8 => FrameKind::DrainAck,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Typed decode/IO failure — the supervision layer branches on these.
+#[derive(Debug)]
+pub enum FrameError {
+    /// EOF exactly between frames: the peer closed cleanly
+    Closed,
+    /// EOF mid-frame: the connection died with a frame in flight
+    Truncated { need: usize, got: usize },
+    /// first four bytes were not `MAGIC` — not our protocol
+    BadMagic([u8; 4]),
+    /// frame from a future protocol version; refused, never guessed
+    FutureVersion { got: u8, max: u8 },
+    /// reserved header bytes were non-zero
+    BadReserved([u8; 2]),
+    /// unknown frame kind tag
+    BadKind(u8),
+    /// length prefix exceeds `MAX_PAYLOAD` (rejected before allocation)
+    Oversized { len: usize, max: usize },
+    /// checksum mismatch: the bytes arrived but are not what was sent
+    CrcMismatch { want: u32, got: u32 },
+    /// underlying socket error (read or write)
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated { need, got } => write!(
+                f,
+                "truncated frame: needed {need} bytes, got {got}"
+            ),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad magic {m:02x?} (expected {MAGIC:02x?})")
+            }
+            FrameError::FutureVersion { got, max } => write!(
+                f,
+                "frame from protocol version {got}, this build speaks \
+                 <= {max}"
+            ),
+            FrameError::BadReserved(r) => {
+                write!(f, "non-zero reserved header bytes {r:02x?}")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversized { len, max } => write!(
+                f,
+                "payload length {len} exceeds the {max}-byte cap \
+                 (rejected before allocation)"
+            ),
+            FrameError::CrcMismatch { want, got } => write!(
+                f,
+                "crc mismatch: frame says {want:#010x}, payload hashes \
+                 to {got:#010x}"
+            ),
+            FrameError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — the `binascii.crc32` /
+/// zlib convention, so the python mirror test can pin the exact bytes.
+/// Table built at compile time; no runtime init, no dependency.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `parts` concatenated (header + payload without copying).
+pub fn crc32_parts(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_parts(&[bytes])
+}
+
+/// Encode a frame into a fresh buffer (header + payload + crc).
+pub fn encode(kind: FrameKind, id: u64, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    buf.extend_from_slice(&MAGIC);
+    buf.push(PROTO_VERSION);
+    buf.push(kind as u8);
+    buf.extend_from_slice(&[0u8, 0u8]);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Write one frame (single `write_all`: one syscall in the common case,
+/// and a partial write can never interleave with another frame as long
+/// as callers hold the connection's writer lock).
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    id: u64,
+    payload: &[u8],
+) -> Result<(), FrameError> {
+    w.write_all(&encode(kind, id, payload))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, mapping EOF to the typed truncation
+/// errors: EOF at offset 0 of the HEADER is a clean close; EOF anywhere
+/// else means a frame died in flight.
+fn read_exact_typed<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    clean_close_ok: bool,
+) -> Result<(), FrameError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 && clean_close_ok {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated { need: buf.len(), got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read and validate one frame. Every header field is checked before
+/// the payload buffer is allocated; the CRC is checked before the frame
+/// is surfaced.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_typed(r, &mut header, true)?;
+    if header[0..4] != MAGIC {
+        return Err(FrameError::BadMagic([
+            header[0], header[1], header[2], header[3],
+        ]));
+    }
+    if header[4] > PROTO_VERSION {
+        return Err(FrameError::FutureVersion {
+            got: header[4],
+            max: PROTO_VERSION,
+        });
+    }
+    if header[6] != 0 || header[7] != 0 {
+        return Err(FrameError::BadReserved([header[6], header[7]]));
+    }
+    let kind = FrameKind::from_u8(header[5])
+        .ok_or(FrameError::BadKind(header[5]))?;
+    let id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let len =
+        u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        // typed rejection BEFORE the allocation a hostile prefix asks for
+        return Err(FrameError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_typed(r, &mut payload, false)?;
+    let mut crc_bytes = [0u8; 4];
+    read_exact_typed(r, &mut crc_bytes, false)?;
+    let want = u32::from_le_bytes(crc_bytes);
+    let got = crc32_parts(&[&header, &payload]);
+    if want != got {
+        return Err(FrameError::CrcMismatch { want, got });
+    }
+    Ok(Frame { kind, id, payload })
+}
+
+/// f32 slice → LE bytes (submit payloads).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// LE bytes → f32 vec; `None` when the length is not a multiple of 4.
+pub fn bytes_to_f32s(bytes: &[u8]) -> Option<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(kind: FrameKind, id: u64, payload: &[u8]) -> Frame {
+        let bytes = encode(kind, id, payload);
+        read_frame(&mut Cursor::new(bytes)).expect("roundtrip")
+    }
+
+    #[test]
+    fn frames_roundtrip_bit_exactly() {
+        for (kind, id, payload) in [
+            (FrameKind::Ping, 0u64, vec![]),
+            (FrameKind::Submit, 1, f32s_to_bytes(&[1.0, -2.5, f32::MIN])),
+            (FrameKind::Hello, u64::MAX, br#"{"proto":1}"#.to_vec()),
+            (FrameKind::Reply, 0xDEAD_BEEF, vec![0u8; 4096]),
+        ] {
+            let f = roundtrip(kind, id, &payload);
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.id, id);
+            assert_eq!(f.payload, payload);
+        }
+    }
+
+    /// The exact bytes of the wire format, pinned: a change to the
+    /// layout or the CRC convention must fail HERE (and in the python
+    /// mirror `python/tests/test_net_frame_mirror.py`, which pins the
+    /// same constants via binascii.crc32), not in a cross-version soak.
+    #[test]
+    fn golden_bytes_pin_the_wire_format() {
+        let ping = encode(FrameKind::Ping, 7, &[]);
+        assert_eq!(
+            ping,
+            vec![
+                0x55, 0x51, 0x4E, 0x46, // UQNF
+                1, 5, 0, 0, // version, kind=ping, reserved
+                7, 0, 0, 0, 0, 0, 0, 0, // id LE
+                0, 0, 0, 0, // len LE
+                0x5b, 0x61, 0x6c, 0xc8, // crc32 0xc86c615b LE
+            ]
+        );
+        let submit = encode(
+            FrameKind::Submit,
+            0x0102_0304_0506_0708,
+            &f32s_to_bytes(&[1.0, -2.5]),
+        );
+        assert_eq!(&submit[0..4], b"UQNF");
+        assert_eq!(
+            &submit[20..28],
+            &[0, 0, 128, 63, 0, 0, 32, 192],
+            "f32 LE payload bytes"
+        );
+        assert_eq!(
+            u32::from_le_bytes(submit[28..32].try_into().unwrap()),
+            0x90af_b8eb,
+            "submit frame crc32 (binascii.crc32 convention)"
+        );
+    }
+
+    /// Satellite: fuzz-style table of malformed inputs, each refused
+    /// with its own typed error — truncated header, truncated payload,
+    /// bad magic, future version, unknown kind, oversized length prefix
+    /// (refused before allocation), corrupt payload, corrupt crc, and
+    /// clean close at a frame boundary.
+    #[test]
+    fn malformed_frames_fail_typed() {
+        let good = encode(FrameKind::Submit, 9, &f32s_to_bytes(&[0.5; 8]));
+
+        // clean close: zero bytes at a frame boundary
+        match read_frame(&mut Cursor::new(Vec::<u8>::new())) {
+            Err(FrameError::Closed) => {}
+            other => panic!("empty stream: {other:?}"),
+        }
+
+        // every strict prefix of the header is a truncation, not Closed
+        for cut in 1..HEADER_LEN {
+            match read_frame(&mut Cursor::new(good[..cut].to_vec())) {
+                Err(FrameError::Truncated { need, got }) => {
+                    assert_eq!(need, HEADER_LEN);
+                    assert_eq!(got, cut);
+                }
+                other => panic!("header cut at {cut}: {other:?}"),
+            }
+        }
+
+        // payload / crc truncations
+        for cut in [HEADER_LEN + 1, good.len() - 5, good.len() - 1] {
+            match read_frame(&mut Cursor::new(good[..cut].to_vec())) {
+                Err(FrameError::Truncated { .. }) => {}
+                other => panic!("body cut at {cut}: {other:?}"),
+            }
+        }
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::BadMagic(m)) => assert_eq!(m[0], b'X'),
+            other => panic!("bad magic: {other:?}"),
+        }
+
+        // future protocol version is refused, not guessed at — note the
+        // crc is NOT consulted first: version gates everything
+        let mut bad = good.clone();
+        bad[4] = PROTO_VERSION + 1;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::FutureVersion { got, max }) => {
+                assert_eq!(got, PROTO_VERSION + 1);
+                assert_eq!(max, PROTO_VERSION);
+            }
+            other => panic!("future version: {other:?}"),
+        }
+
+        // unknown kind
+        let mut bad = good.clone();
+        bad[5] = 200;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::BadKind(200)) => {}
+            other => panic!("bad kind: {other:?}"),
+        }
+
+        // non-zero reserved bytes
+        let mut bad = good.clone();
+        bad[6] = 1;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::BadReserved([1, 0])) => {}
+            other => panic!("reserved: {other:?}"),
+        }
+
+        // oversized length prefix: typed rejection BEFORE allocation —
+        // the stream only contains a header, so if the reader tried to
+        // allocate-and-read 3 GiB this test would fail on Truncated (or
+        // die trying), not Oversized
+        let mut hdr = good[..HEADER_LEN].to_vec();
+        hdr[16..20].copy_from_slice(&(3u32 << 30).to_le_bytes());
+        match read_frame(&mut Cursor::new(hdr)) {
+            Err(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, 3usize << 30);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("oversized: {other:?}"),
+        }
+
+        // flipped payload byte → crc mismatch
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 3] ^= 0x40;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::CrcMismatch { want, got }) => {
+                assert_ne!(want, got)
+            }
+            other => panic!("payload corruption: {other:?}"),
+        }
+
+        // flipped crc byte → crc mismatch
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bad)),
+            Err(FrameError::CrcMismatch { .. })
+        ));
+
+        // the pristine frame still parses (the table above really was
+        // testing the mutations, not a broken fixture)
+        let f = read_frame(&mut Cursor::new(good)).unwrap();
+        assert_eq!(f.kind, FrameKind::Submit);
+        assert_eq!(f.id, 9);
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip_and_reject_ragged() {
+        let xs = [0.0f32, -0.0, 1.5e-38, f32::MAX, -1.0];
+        assert_eq!(
+            bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(),
+            xs.to_vec()
+        );
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn crc_matches_zlib_vectors() {
+        // standard check value for the IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(
+            crc32_parts(&[b"1234", b"56789"]),
+            crc32(b"123456789"),
+            "split computation must equal the concatenated one"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Multi-host fleet transport: the wire layer that takes
+//! [`crate::infer::router`] across process and machine boundaries.
+//!
+//! The paper's serving argument (accuracy per BOP "assuming a look-up
+//! table availability") and the ROADMAP's production north star both
+//! land here eventually: one process's cores stop being the capacity
+//! ceiling once a replica slot can live on the far side of a TCP
+//! connection. Layer map:
+//!
+//! * [`frame`] — length-prefixed, CRC-checked binary frames with a
+//!   versioned header; every malformed input fails with its own typed
+//!   error, and oversized length prefixes are refused before any
+//!   allocation.
+//! * [`proto`] — typed control messages (handshake `Hello`, per-request
+//!   `ErrorMsg`, drain-barrier `WorkerStats`) as JSON with loud
+//!   `MissingField`/`TypeError` decoding; data-plane payloads (images,
+//!   logits) stay binary so cross-process bit-identity is exact.
+//! * [`client`] — [`RemoteReplica`], a TCP-backed implementation of the
+//!   router's replica surface with per-request correlation ids, a
+//!   bounded in-flight window, and kill/drain semantics identical to a
+//!   local [`crate::infer::Server`].
+//! * [`worker`] — `uniq serve --remote-worker HOST:PORT`: a
+//!   `ServeModel` behind a listener, single-writer per-connection pump,
+//!   FIFO drain barrier.
+//! * [`supervise`] — per-slot factories that spawn/respawn worker
+//!   processes (or reconnect to externally managed ones), feeding the
+//!   router's health monitor so a SIGKILLed worker is drained, its
+//!   loss accounted, and a fresh generation installed with zero
+//!   client-visible drops.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod supervise;
+pub mod worker;
+
+pub use client::{submit_blocking, RemoteOpts, RemoteReplica};
+pub use frame::{Frame, FrameError, FrameKind, PROTO_VERSION};
+pub use proto::{ErrorMsg, Hello, ProtoError, ReplyPayload, WorkerStats};
+pub use supervise::{ModelExpect, Supervisor, WorkerSpec};
+pub use worker::{Worker, WorkerHandle};

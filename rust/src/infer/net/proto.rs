@@ -1,0 +1,388 @@
+//! Typed control messages for the fleet wire protocol.
+//!
+//! Control frames (`Hello`, `Error`, `DrainAck`) carry JSON payloads,
+//! but never as stringly-typed blobs: each message is a versioned Rust
+//! struct with an explicit decode that fails loudly — a missing key is
+//! a [`ProtoError::MissingField`] naming the struct and field, a value
+//! of the wrong shape is a [`ProtoError::TypeError`] naming what was
+//! wanted. Data-plane frames (`Submit`/`Reply`) stay binary; JSON is
+//! for the low-rate handshake/teardown path only.
+
+use std::fmt;
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::frame::PROTO_VERSION;
+
+/// Typed decode failure for control messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProtoError {
+    /// required key absent from the JSON object
+    MissingField { ty: &'static str, field: &'static str },
+    /// key present but the wrong JSON type/shape
+    TypeError { ty: &'static str, field: &'static str, want: &'static str },
+    /// payload is not parseable JSON at all
+    Parse(String),
+    /// peer speaks a newer protocol than this build
+    Version { got: u64, max: u64 },
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::MissingField { ty, field } => {
+                write!(f, "{ty}: missing field '{field}'")
+            }
+            ProtoError::TypeError { ty, field, want } => {
+                write!(f, "{ty}: field '{field}' is not {want}")
+            }
+            ProtoError::Parse(e) => write!(f, "bad json payload: {e}"),
+            ProtoError::Version { got, max } => write!(
+                f,
+                "peer speaks protocol {got}, this build speaks <= {max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn req_u64(
+    j: &Json,
+    ty: &'static str,
+    field: &'static str,
+) -> Result<u64, ProtoError> {
+    match j.get(field) {
+        None => Err(ProtoError::MissingField { ty, field }),
+        Some(v) => v
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .map(|n| n as u64)
+            .ok_or(ProtoError::TypeError {
+                ty,
+                field,
+                want: "a non-negative integer",
+            }),
+    }
+}
+
+fn req_str(
+    j: &Json,
+    ty: &'static str,
+    field: &'static str,
+) -> Result<String, ProtoError> {
+    match j.get(field) {
+        None => Err(ProtoError::MissingField { ty, field }),
+        Some(v) => v
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or(ProtoError::TypeError { ty, field, want: "a string" }),
+    }
+}
+
+fn parse_payload(
+    ty: &'static str,
+    payload: &[u8],
+) -> Result<Json, ProtoError> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|e| ProtoError::Parse(format!("{ty}: {e}")))?;
+    Json::parse(text).map_err(|e| ProtoError::Parse(format!("{ty}: {e}")))
+}
+
+/// Worker banner, sent once per connection immediately after accept.
+/// The client refuses to serve traffic through a connection whose
+/// geometry disagrees with the fleet's reference model — a worker
+/// running the wrong snapshot must fail the handshake, not return
+/// silently different logits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    /// wire protocol version the worker speaks
+    pub proto: u64,
+    /// model identity string (name/engine), informational
+    pub model: String,
+    /// flattened input length the worker expects per submit
+    pub img_len: u64,
+    /// logits per reply
+    pub classes: u64,
+}
+
+impl Hello {
+    const TY: &'static str = "Hello";
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("proto", num(self.proto as f64)),
+            ("model", s(&self.model)),
+            ("img_len", num(self.img_len as f64)),
+            ("classes", num(self.classes as f64)),
+        ])
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Hello, ProtoError> {
+        let proto = req_u64(j, Self::TY, "proto")?;
+        if proto > PROTO_VERSION as u64 {
+            return Err(ProtoError::Version {
+                got: proto,
+                max: PROTO_VERSION as u64,
+            });
+        }
+        Ok(Hello {
+            proto,
+            model: req_str(j, Self::TY, "model")?,
+            img_len: req_u64(j, Self::TY, "img_len")?,
+            classes: req_u64(j, Self::TY, "classes")?,
+        })
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Hello, ProtoError> {
+        Hello::from_json(&parse_payload(Self::TY, payload)?)
+    }
+}
+
+/// Worker-side serving summary, the `DrainAck` payload. The client owns
+/// the request-level latency samples (measured as round-trip at the
+/// submitting end); the worker contributes what only it can see — how
+/// the collector actually batched the work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStats {
+    /// images the worker's server forwarded
+    pub images: u64,
+    /// executed batch sizes, in completion order
+    pub batch_sizes: Vec<u64>,
+}
+
+impl WorkerStats {
+    const TY: &'static str = "WorkerStats";
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("images", num(self.images as f64)),
+            (
+                "batch_sizes",
+                Json::Arr(
+                    self.batch_sizes
+                        .iter()
+                        .map(|b| num(*b as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerStats, ProtoError> {
+        let images = req_u64(j, Self::TY, "images")?;
+        let arr = match j.get("batch_sizes") {
+            None => {
+                return Err(ProtoError::MissingField {
+                    ty: Self::TY,
+                    field: "batch_sizes",
+                })
+            }
+            Some(v) => v.as_arr().ok_or(ProtoError::TypeError {
+                ty: Self::TY,
+                field: "batch_sizes",
+                want: "an array of integers",
+            })?,
+        };
+        let mut batch_sizes = Vec::with_capacity(arr.len());
+        for v in arr {
+            batch_sizes.push(
+                v.as_f64()
+                    .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                    .map(|n| n as u64)
+                    .ok_or(ProtoError::TypeError {
+                        ty: Self::TY,
+                        field: "batch_sizes",
+                        want: "an array of integers",
+                    })?,
+            );
+        }
+        Ok(WorkerStats { images, batch_sizes })
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WorkerStats, ProtoError> {
+        WorkerStats::from_json(&parse_payload(Self::TY, payload)?)
+    }
+}
+
+/// Per-request failure notice (`Error` frame payload). The id on the
+/// frame names the doomed request; the client releases its waiter so
+/// the router's bounded resubmission takes over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorMsg {
+    /// stable machine-readable code ("overloaded", "dropped", "bad_frame")
+    pub code: String,
+    /// human-readable detail for logs
+    pub msg: String,
+}
+
+impl ErrorMsg {
+    const TY: &'static str = "ErrorMsg";
+
+    pub fn new(code: &str, msg: &str) -> ErrorMsg {
+        ErrorMsg { code: code.to_string(), msg: msg.to_string() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![("code", s(&self.code)), ("msg", s(&self.msg))])
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    pub fn from_json(j: &Json) -> Result<ErrorMsg, ProtoError> {
+        Ok(ErrorMsg {
+            code: req_str(j, Self::TY, "code")?,
+            msg: req_str(j, Self::TY, "msg")?,
+        })
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ErrorMsg, ProtoError> {
+        ErrorMsg::from_json(&parse_payload(Self::TY, payload)?)
+    }
+}
+
+/// Binary `Reply` frame payload: `pred u32 | batch u32 | latency_ns u64
+/// | logits f32 × classes`, all little-endian. Kept binary (not JSON)
+/// because bit-identity of logits across process boundaries is a tested
+/// guarantee — f32→LE bytes→f32 is exact, f32→decimal text→f32 need
+/// not be under this crate's hand-rolled float formatting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplyPayload {
+    pub pred: u32,
+    /// size of the executed batch this request rode in
+    pub batch: u32,
+    /// worker-side enqueue-to-reply latency (informational; the client
+    /// records its own round-trip as the authoritative sample)
+    pub latency_ns: u64,
+    pub logits: Vec<f32>,
+}
+
+impl ReplyPayload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.logits.len() * 4);
+        out.extend_from_slice(&self.pred.to_le_bytes());
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(&self.latency_ns.to_le_bytes());
+        for x in &self.logits {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ReplyPayload, ProtoError> {
+        if payload.len() < 16 || (payload.len() - 16) % 4 != 0 {
+            return Err(ProtoError::Parse(format!(
+                "ReplyPayload: bad length {} (want 16 + 4*classes)",
+                payload.len()
+            )));
+        }
+        let pred = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+        let batch = u32::from_le_bytes(payload[4..8].try_into().unwrap());
+        let latency_ns =
+            u64::from_le_bytes(payload[8..16].try_into().unwrap());
+        let logits = payload[16..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(ReplyPayload { pred, batch, latency_ns, logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrips() {
+        let h = Hello {
+            proto: PROTO_VERSION as u64,
+            model: "mobilenet_mini/lut".into(),
+            img_len: 3072,
+            classes: 10,
+        };
+        assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn hello_failures_are_loud_and_typed() {
+        // missing field names the struct and the field
+        let j = Json::parse(r#"{"proto":1,"model":"m","classes":10}"#)
+            .unwrap();
+        assert_eq!(
+            Hello::from_json(&j).unwrap_err(),
+            ProtoError::MissingField { ty: "Hello", field: "img_len" }
+        );
+        // wrong type names what was wanted
+        let j = Json::parse(
+            r#"{"proto":1,"model":"m","img_len":"big","classes":10}"#,
+        )
+        .unwrap();
+        match Hello::from_json(&j).unwrap_err() {
+            ProtoError::TypeError { ty: "Hello", field: "img_len", .. } => {}
+            e => panic!("{e}"),
+        }
+        // future protocol refused
+        let j = Json::parse(
+            r#"{"proto":99,"model":"m","img_len":1,"classes":1}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Hello::from_json(&j).unwrap_err(),
+            ProtoError::Version { got: 99, max: PROTO_VERSION as u64 }
+        );
+        // non-JSON payload
+        assert!(matches!(
+            Hello::decode(b"\xff\xfe not json"),
+            Err(ProtoError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn worker_stats_roundtrip_and_reject_ragged() {
+        let w = WorkerStats { images: 128, batch_sizes: vec![8, 8, 4, 1] };
+        assert_eq!(WorkerStats::decode(&w.encode()).unwrap(), w);
+        let j =
+            Json::parse(r#"{"images":1,"batch_sizes":[1,"two"]}"#).unwrap();
+        assert!(matches!(
+            WorkerStats::from_json(&j).unwrap_err(),
+            ProtoError::TypeError { ty: "WorkerStats", .. }
+        ));
+    }
+
+    #[test]
+    fn error_msg_roundtrips() {
+        let e = ErrorMsg::new("dropped", "server poisoned mid-batch");
+        assert_eq!(ErrorMsg::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn reply_payload_is_bit_exact() {
+        let r = ReplyPayload {
+            pred: 3,
+            batch: 8,
+            latency_ns: 123_456_789,
+            logits: vec![1.0, -2.5e-12, f32::MAX, -0.0, 3.3],
+        };
+        let d = ReplyPayload::decode(&r.encode()).unwrap();
+        // compare bit patterns, not float equality: -0.0 must survive
+        assert_eq!(d.pred, r.pred);
+        assert_eq!(d.batch, r.batch);
+        assert_eq!(d.latency_ns, r.latency_ns);
+        assert_eq!(
+            d.logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            r.logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(ReplyPayload::decode(&[0u8; 10]).is_err());
+        assert!(ReplyPayload::decode(&[0u8; 18]).is_err());
+    }
+}

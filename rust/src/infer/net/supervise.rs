@@ -1,0 +1,259 @@
+//! Cross-process supervision: the factory layer that turns the
+//! router's health monitor into a fleet manager.
+//!
+//! The router already knows how to detect a dead replica, drain its
+//! corpse, harvest in-flight loss, and install a fresh generation
+//! ([`crate::infer::router`]). What it needs from this module is a
+//! [`ReplicaFactory`] per slot — "give me a new backend for slot i" —
+//! and [`Supervisor`] provides the two remote flavors:
+//!
+//! * **Connect**: the worker process is externally managed (systemd, a
+//!   test harness, another host). The factory (re)connects, and the
+//!   router's per-slot exponential backoff paces reconnection attempts
+//!   while the worker is down.
+//! * **Spawn**: the supervisor owns the worker's lifecycle. The
+//!   factory reaps the previous child (if any), spawns
+//!   `<cmd> serve --remote-worker 127.0.0.1:0 ...`, parses the
+//!   ephemeral-port banner from the child's stdout, and connects.
+//!
+//! Supervision state machine per slot (DESIGN §12): **connecting**
+//! (factory running; slot empty, routed around) → **serving**
+//! (backend installed, `up`) → **draining** (backend removed under the
+//! slot lock, corpse drained off-lock, stats merged, in-flight residue
+//! counted as lost) → **dead** (slot empty; next health tick retries
+//! the factory, backoff-paced) → connecting. SIGKILLing a spawned
+//! child traverses serving → draining → connecting → serving with zero
+//! client-visible drops — the chaos soak in `tests/serve_remote.rs`
+//! proves it.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::infer::router::{ReplicaBackend, ReplicaFactory};
+
+use super::client::{RemoteOpts, RemoteReplica};
+
+/// Fleet reference geometry every worker must match. Derived from the
+/// client-side copy of the model; a worker serving a different
+/// snapshot fails its handshake instead of polluting the fleet with
+/// non-identical logits.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelExpect {
+    pub img_len: usize,
+    pub classes: usize,
+}
+
+/// How one fleet slot gets its worker.
+#[derive(Debug, Clone)]
+pub enum WorkerSpec {
+    /// connect to an externally managed worker at this address
+    Connect(String),
+    /// spawn (and respawn) the worker process ourselves; the command
+    /// must print the `remote-worker listening on HOST:PORT` banner on
+    /// stdout before serving
+    Spawn { cmd: String, args: Vec<String> },
+}
+
+/// Owns spawned worker children and builds per-slot replica factories.
+pub struct Supervisor {
+    specs: Vec<WorkerSpec>,
+    expect: ModelExpect,
+    opts: RemoteOpts,
+    /// slot-indexed; `Some` only for Spawn slots with a live-ish child
+    children: Vec<Mutex<Option<Child>>>,
+    /// total processes spawned (first launches included)
+    spawns: AtomicUsize,
+}
+
+/// How long to wait for a spawned worker's banner before declaring the
+/// launch failed. Covers model build + bind on a loaded CI runner.
+const BANNER_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl Supervisor {
+    pub fn new(
+        specs: Vec<WorkerSpec>,
+        expect: ModelExpect,
+        opts: RemoteOpts,
+    ) -> Arc<Supervisor> {
+        let children = specs.iter().map(|_| Mutex::new(None)).collect();
+        Arc::new(Supervisor {
+            specs,
+            expect,
+            opts,
+            children,
+            spawns: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Processes spawned so far (Spawn slots only; first launches
+    /// count, so a 2-worker fleet that lost one child reads 3).
+    pub fn spawn_count(&self) -> usize {
+        self.spawns.load(Ordering::SeqCst)
+    }
+
+    /// One factory per slot, for [`Router::start_with_backends`]. The
+    /// router calls a slot's factory at startup and again from `heal`
+    /// whenever the slot needs a fresh generation.
+    ///
+    /// [`Router::start_with_backends`]:
+    /// crate::infer::router::Router::start_with_backends
+    pub fn factories(self: &Arc<Self>) -> Vec<ReplicaFactory> {
+        (0..self.specs.len())
+            .map(|slot| {
+                let sup = Arc::clone(self);
+                let f: ReplicaFactory = Box::new(move |outstanding| {
+                    sup.make(slot, outstanding)
+                });
+                f
+            })
+            .collect()
+    }
+
+    fn make(
+        &self,
+        slot: usize,
+        outstanding: Arc<AtomicUsize>,
+    ) -> Result<Box<dyn ReplicaBackend>> {
+        let expect = Some((self.expect.img_len, self.expect.classes));
+        match &self.specs[slot] {
+            WorkerSpec::Connect(addr) => {
+                let r = RemoteReplica::connect(
+                    addr,
+                    expect,
+                    self.opts.clone(),
+                    outstanding,
+                )
+                .with_context(|| format!("slot {slot}: worker {addr}"))?;
+                Ok(Box::new(r))
+            }
+            WorkerSpec::Spawn { cmd, args } => {
+                // Reap whatever is in the slot — after a SIGKILL the
+                // corpse must be wait()ed or it lingers as a zombie.
+                {
+                    let mut child = self.children[slot].lock().unwrap();
+                    if let Some(mut c) = child.take() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+                let addr = {
+                    let (child, addr) = spawn_worker(cmd, args)
+                        .with_context(|| {
+                            format!("slot {slot}: spawning {cmd}")
+                        })?;
+                    self.spawns.fetch_add(1, Ordering::SeqCst);
+                    *self.children[slot].lock().unwrap() = Some(child);
+                    addr
+                };
+                let r = RemoteReplica::connect(
+                    &addr,
+                    expect,
+                    self.opts.clone(),
+                    outstanding,
+                )
+                .with_context(|| {
+                    format!("slot {slot}: spawned worker at {addr}")
+                })?;
+                Ok(Box::new(r))
+            }
+        }
+    }
+
+    /// Chaos hook: SIGKILL the child owning `slot` (Spawn slots only).
+    /// Returns true if a process was killed. The corpse stays in the
+    /// slot for the next `make` to reap — exactly like a worker dying
+    /// on its own.
+    pub fn kill_worker(&self, slot: usize) -> bool {
+        let mut child = self.children[slot].lock().unwrap();
+        match child.as_mut() {
+            Some(c) => {
+                let _ = c.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Kill and reap every owned child. Idempotent.
+    pub fn shutdown(&self) {
+        for slot in &self.children {
+            if let Some(mut c) = slot.lock().unwrap().take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Launch one worker process and wait (bounded) for its banner. The
+/// child's stdout stays owned by a drain thread for the child's whole
+/// life: a worker whose stdout pipe fills up would block inside a
+/// `println!` mid-serve, which is a silent fleet stall — never let
+/// that happen.
+fn spawn_worker(cmd: &str, args: &[String]) -> Result<(Child, String)> {
+    let mut child = Command::new(cmd)
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("exec {cmd}"))?;
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow!("child stdout not captured"))?;
+
+    let (tx, rx) = mpsc::channel::<String>();
+    thread::Builder::new()
+        .name("uniq-worker-stdout".into())
+        .spawn(move || {
+            let reader = BufReader::new(stdout);
+            let mut tx = Some(tx);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if line.contains("remote-worker listening on") {
+                    if let Some(tx) = tx.take() {
+                        let _ = tx.send(line);
+                        continue;
+                    }
+                }
+                // post-banner output is relayed, never buffered
+                eprintln!("[worker stdout] {line}");
+            }
+        })
+        .context("spawning stdout drain thread")?;
+
+    let banner = match rx.recv_timeout(BANNER_TIMEOUT) {
+        Ok(b) => b,
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!(
+                "worker printed no 'remote-worker listening on' banner \
+                 within {BANNER_TIMEOUT:?}"
+            );
+        }
+    };
+    let addr = banner
+        .split_whitespace()
+        .last()
+        .ok_or_else(|| anyhow!("empty banner line"))?
+        .to_string();
+    Ok((child, addr))
+}

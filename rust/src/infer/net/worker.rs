@@ -1,0 +1,341 @@
+//! The remote worker: a [`Server`] behind a TCP listener.
+//!
+//! `uniq serve --remote-worker HOST:PORT` builds a `ServeModel`
+//! exactly as the in-process path does, binds a listener (port 0 picks
+//! an ephemeral port; the chosen address is printed as the banner the
+//! supervisor parses), and serves fleet connections.
+//!
+//! Per connection, two threads:
+//!
+//! * the **read loop** (connection thread) decodes frames and submits
+//!   images into the shared `Server` — it never writes to the socket;
+//! * the **write pump** is the only writer. The read loop enqueues
+//!   work items in arrival order and the pump emits frames strictly
+//!   FIFO; because a `Drain` item is enqueued after every submit that
+//!   preceded it, `DrainAck` is a true barrier: when the client sees
+//!   it, every reply owed on the connection has already been written.
+//!
+//! Replies are forwarded in submission order (the pump blocks on each
+//! request's reply channel in turn). Out-of-order completion inside
+//! the server just parks the pump briefly; correctness and the drain
+//! barrier come free, and the write side needs no reordering buffer.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::infer::serve::{Reply, ServeConfig, ServeModel, Server};
+
+use super::frame::{
+    bytes_to_f32s, read_frame, write_frame, FrameError, FrameKind,
+    PROTO_VERSION,
+};
+use super::proto::{ErrorMsg, Hello, ReplyPayload, WorkerStats};
+
+/// One queued write for the pump. Variants mirror the client-visible
+/// frame kinds; ordering in this queue IS the ordering on the wire.
+enum PumpItem {
+    Reply { id: u64, rx: mpsc::Receiver<Reply> },
+    Refuse { id: u64, err: ErrorMsg },
+    Pong { id: u64 },
+    Drain { id: u64 },
+}
+
+/// A bound-but-not-yet-serving worker.
+pub struct Worker {
+    listener: TcpListener,
+    addr: SocketAddr,
+    server: Arc<Mutex<Server>>,
+    hello: Hello,
+}
+
+impl Worker {
+    /// Build the server and bind the listener. `addr` may use port 0
+    /// to request an ephemeral port; `self.addr()` reports the actual
+    /// binding.
+    pub fn bind(
+        sm: Arc<ServeModel>,
+        cfg: ServeConfig,
+        addr: &str,
+    ) -> Result<Worker> {
+        let hello = Hello {
+            proto: PROTO_VERSION as u64,
+            model: format!("{}/{:?}", sm.model.name, cfg.mode),
+            img_len: sm.image_len() as u64,
+            classes: sm.model.classes as u64,
+        };
+        let server = Arc::new(Mutex::new(Server::start(
+            Arc::clone(&sm),
+            cfg,
+        )));
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding worker listener on {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(Worker { listener, addr, server, hello })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The banner line the supervisor greps for. Printed (and flushed)
+    /// BEFORE the first accept so a parent process can parse the
+    /// ephemeral port without racing the serve loop.
+    pub fn banner(&self) -> String {
+        format!("remote-worker listening on {}", self.addr)
+    }
+
+    /// Serve connections forever on the calling thread (CLI mode).
+    pub fn run(self) -> Result<()> {
+        loop {
+            let (conn, peer) = self.listener.accept()?;
+            let server = Arc::clone(&self.server);
+            let hello = self.hello.clone();
+            thread::Builder::new()
+                .name(format!("uniq-worker-conn-{peer}"))
+                .spawn(move || {
+                    if let Err(e) = handle_conn(conn, server, hello) {
+                        eprintln!("[worker] connection {peer}: {e:#}");
+                    }
+                })
+                .context("spawning connection handler")?;
+        }
+    }
+
+    /// Serve connections on a background thread (in-process tests and
+    /// chaos drills). The returned handle can poison the worker the
+    /// way SIGKILL would from outside: abruptly, replies in flight.
+    pub fn spawn(self) -> WorkerHandle {
+        let Worker { listener, addr, server, hello } = self;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let server = Arc::clone(&server);
+            thread::Builder::new()
+                .name(format!("uniq-worker-accept-{addr}"))
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(conn) = conn else { break };
+                        if let Ok(c) = conn.try_clone() {
+                            conns.lock().unwrap().push(c);
+                        }
+                        let server = Arc::clone(&server);
+                        let hello = hello.clone();
+                        let _ = thread::Builder::new()
+                            .name("uniq-worker-conn".into())
+                            .spawn(move || {
+                                let _ = handle_conn(conn, server, hello);
+                            });
+                    }
+                })
+                .expect("spawn worker accept thread")
+        };
+        WorkerHandle { addr, server, stop, conns, accept: Some(accept) }
+    }
+}
+
+/// Handle to an in-process worker (tests/chaos only; a real deployment
+/// runs `Worker::run` in its own process and dies by signal).
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    server: Arc<Mutex<Server>>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// In-process stand-in for SIGKILL: poison the server (in-queue
+    /// requests are lost) and sever every connection without draining.
+    /// Clients observe exactly what a process kill produces — a dead
+    /// stream with replies owed.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.server.lock().unwrap().kill();
+        for c in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Stop accepting and reap the accept thread (the server drains
+    /// when the process exits; tests use `kill` for the abrupt path).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for c in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn handle_conn(
+    conn: TcpStream,
+    server: Arc<Mutex<Server>>,
+    hello: Hello,
+) -> Result<()> {
+    conn.set_nodelay(true).ok();
+    let mut rd = conn.try_clone().context("cloning connection")?;
+    let mut wr = conn.try_clone().context("cloning connection")?;
+
+    // Banner first: the client's handshake read is waiting on it.
+    write_frame(&mut wr, FrameKind::Hello, 0, &hello.encode())
+        .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
+
+    let (pump_tx, pump_rx) = mpsc::channel::<PumpItem>();
+    let pump = {
+        let server = Arc::clone(&server);
+        thread::Builder::new()
+            .name("uniq-worker-pump".into())
+            .spawn(move || pump_loop(wr, pump_rx, server))
+            .context("spawning write pump")?
+    };
+
+    // Read loop: decode → submit → enqueue. Never writes.
+    let result = loop {
+        let frame = match read_frame(&mut rd) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => break Ok(()),
+            Err(e) => break Err(anyhow::anyhow!("read: {e}")),
+        };
+        match frame.kind {
+            FrameKind::Submit => {
+                let item = match bytes_to_f32s(&frame.payload) {
+                    None => PumpItem::Refuse {
+                        id: frame.id,
+                        err: ErrorMsg::new(
+                            "bad_frame",
+                            "submit payload is not a whole number of f32s",
+                        ),
+                    },
+                    Some(image) => {
+                        match server.lock().unwrap().try_submit(image) {
+                            Ok(rx) => PumpItem::Reply { id: frame.id, rx },
+                            Err(_) => PumpItem::Refuse {
+                                id: frame.id,
+                                err: ErrorMsg::new(
+                                    "refused",
+                                    "server rejected the image \
+                                     (poisoned or wrong length)",
+                                ),
+                            },
+                        }
+                    }
+                };
+                if pump_tx.send(item).is_err() {
+                    break Err(anyhow::anyhow!("write pump died"));
+                }
+            }
+            FrameKind::Ping => {
+                let _ = pump_tx.send(PumpItem::Pong { id: frame.id });
+            }
+            FrameKind::Drain => {
+                let _ = pump_tx.send(PumpItem::Drain { id: frame.id });
+            }
+            other => {
+                let _ = pump_tx.send(PumpItem::Refuse {
+                    id: frame.id,
+                    err: ErrorMsg::new(
+                        "bad_frame",
+                        &format!("unexpected {other:?} frame from client"),
+                    ),
+                });
+            }
+        }
+    };
+
+    // Closing the queue lets the pump finish everything already owed,
+    // then exit — replies outlive the read side of the connection.
+    drop(pump_tx);
+    let _ = pump.join();
+    let _ = conn.shutdown(Shutdown::Both);
+    result
+}
+
+/// The single writer. FIFO over `rx`; every item becomes exactly one
+/// frame. Write failures end the pump — the read loop notices via the
+/// closed channel and the client's reader sees the dead stream.
+fn pump_loop(
+    mut wr: TcpStream,
+    rx: mpsc::Receiver<PumpItem>,
+    server: Arc<Mutex<Server>>,
+) {
+    while let Ok(item) = rx.recv() {
+        let ok = match item {
+            PumpItem::Reply { id, rx } => match rx.recv() {
+                Ok(reply) => {
+                    let payload = ReplyPayload {
+                        pred: reply.pred as u32,
+                        batch: reply.batch as u32,
+                        latency_ns: reply.latency.as_nanos() as u64,
+                        logits: reply.logits,
+                    };
+                    write_frame(
+                        &mut wr,
+                        FrameKind::Reply,
+                        id,
+                        &payload.encode(),
+                    )
+                    .is_ok()
+                }
+                // the server dropped the request (kill mid-flight):
+                // tell the client so its waiter is released promptly
+                Err(_) => write_frame(
+                    &mut wr,
+                    FrameKind::Error,
+                    id,
+                    &ErrorMsg::new("dropped", "server dropped the request")
+                        .encode(),
+                )
+                .is_ok(),
+            },
+            PumpItem::Refuse { id, err } => {
+                write_frame(&mut wr, FrameKind::Error, id, &err.encode())
+                    .is_ok()
+            }
+            PumpItem::Pong { id } => {
+                write_frame(&mut wr, FrameKind::Pong, id, &[]).is_ok()
+            }
+            PumpItem::Drain { id } => {
+                // every reply enqueued before this Drain has been
+                // written above; the ack carries the worker-side view
+                let raw = server.lock().unwrap().raw_stats();
+                let stats = WorkerStats {
+                    images: raw.images as u64,
+                    batch_sizes: raw
+                        .batch_sizes
+                        .iter()
+                        .map(|b| *b as u64)
+                        .collect(),
+                };
+                write_frame(
+                    &mut wr,
+                    FrameKind::DrainAck,
+                    id,
+                    &stats.encode(),
+                )
+                .is_ok()
+            }
+        };
+        if !ok {
+            break;
+        }
+    }
+}

@@ -1,15 +1,18 @@
-//! Replica-set serving router: N [`Server`] replicas behind one front
-//! door.
+//! Replica-set serving router: N replicas behind one front door.
 //!
 //! PR 3 scaled serving across one process's worker pool; this module is
-//! the next rung — "many replicas, one front door" — and the replica
-//! abstraction multi-host serving will later slot into (the `Replica`
-//! slot is exactly the surface a remote stub has to implement: submit,
-//! outstanding, alive, drain). Each replica is a full `Server` with its
-//! own collector, worker pool, arenas and `KernelMode`; all replicas
-//! share one read-only [`ServeModel`], so any replica serves any request
-//! bit-identically (the PR-3 thread-count invariance extends to replica
-//! count).
+//! the next rung — "many replicas, one front door". A replica slot
+//! holds any [`ReplicaBackend`]: an in-process [`Server`] (the
+//! [`Router::start`] default) or a TCP-backed
+//! [`crate::infer::net::RemoteReplica`] in another process or on
+//! another host ([`Router::start_with_backends`] + per-slot
+//! [`ReplicaFactory`] closures, usually built by
+//! [`crate::infer::net::Supervisor`]). Locally every replica is a full
+//! `Server` with its own collector, worker pool, arenas and
+//! `KernelMode`; all replicas share one read-only [`ServeModel`], so
+//! any replica serves any request bit-identically (the PR-3
+//! thread-count invariance extends to replica count, and — PR 6 — to
+//! process count: logits cross the wire as raw f32 bytes).
 //!
 //! Responsibilities, in the order a request meets them:
 //!
@@ -22,11 +25,14 @@
 //!   tell "shed load" apart from "you sent garbage"
 //!   ([`SubmitError::BadRequest`]) and "the fleet is down"
 //!   ([`SubmitError::NoReplica`]).
-//! * **Health**: a monitor thread probes [`Server::alive`] every
-//!   `health_every` and restarts dead replicas in place
-//!   (drain-then-stop the corpse, bank its stats, swap in a fresh
-//!   generation). [`Router::heal_now`] runs one sweep synchronously for
-//!   deterministic tests.
+//! * **Health**: a monitor thread probes [`ReplicaBackend::alive`]
+//!   every `health_every` and restarts dead replicas in place
+//!   (drain-then-stop the corpse, bank its stats, call the slot's
+//!   factory for a fresh generation). Factory failures — a remote
+//!   worker that is still down — leave the slot empty and are retried
+//!   with per-slot exponential backoff, so a dead host is probed at a
+//!   polite rate while the rest of the fleet serves. [`Router::
+//!   heal_now`] runs one sweep synchronously for deterministic tests.
 //! * **Recovery**: a crashed replica drops its queued replies; the
 //!   [`Pending`] handle observes the dropped channel and resubmits
 //!   through the router (bounded by `max_retries`), so clients see zero
@@ -163,26 +169,110 @@ impl Default for RouterConfig {
     }
 }
 
-/// One replica slot. The `Server` sits behind a mutex so the health
+/// The surface a replica slot requires of its backend — exactly what
+/// multi-host serving has to implement: submit, outstanding, alive,
+/// drain. [`Server`] (in-process) and
+/// [`crate::infer::net::RemoteReplica`] (TCP) both satisfy it, which is
+/// what makes a remote worker indistinguishable from a local one to the
+/// routing, backpressure, health and zero-drop machinery.
+///
+/// `Send` only (not `Sync`): backends hold `mpsc` senders and are only
+/// ever touched under their slot's mutex.
+pub trait ReplicaBackend: Send + 'static {
+    /// Accept one image or hand it back (`Err`) when the backend
+    /// cannot serve it — dead, wrong length, or at its own cap. The
+    /// router treats any rejection from an `alive()` backend as a
+    /// crash-in-progress.
+    fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>>;
+    /// Requests accepted and not yet replied (mirrors the slot's shared
+    /// lock-free counter; exposed for completeness and diagnostics).
+    fn outstanding(&self) -> usize;
+    fn alive(&self) -> bool;
+    /// Abrupt stop: in-queue work is lost, `outstanding` keeps the
+    /// in-flight residue for the router's loss accounting.
+    fn kill(&self);
+    /// Deliver every reply still owed, stop, and surrender the raw
+    /// serving stats for the fleet merge.
+    fn drain_then_stop(self: Box<Self>) -> RawServeStats;
+}
+
+impl ReplicaBackend for Server {
+    fn try_submit(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Vec<f32>> {
+        Server::try_submit(self, image)
+    }
+
+    fn outstanding(&self) -> usize {
+        Server::outstanding(self)
+    }
+
+    fn alive(&self) -> bool {
+        Server::alive(self)
+    }
+
+    fn kill(&self) {
+        Server::kill(self)
+    }
+
+    fn drain_then_stop(self: Box<Self>) -> RawServeStats {
+        Server::drain_then_stop(*self)
+    }
+}
+
+/// Builds one fresh backend generation for a slot. Called at startup
+/// and again by `heal` after every death; receives the slot's shared
+/// outstanding counter so the new generation keeps feeding the same
+/// lock-free gauge the routing policies read. May fail (a remote
+/// worker still down): the slot stays empty and the factory is retried
+/// with exponential backoff.
+pub type ReplicaFactory = Box<
+    dyn Fn(Arc<AtomicUsize>) -> Result<Box<dyn ReplicaBackend>>
+        + Send
+        + Sync,
+>;
+
+/// Reconnect pacing for a slot whose factory is failing.
+struct RestartBackoff {
+    /// consecutive failures since the last success
+    attempts: u32,
+    /// do not retry before this instant (`None` = retry immediately)
+    next: Option<Instant>,
+}
+
+const BACKOFF_BASE: Duration = Duration::from_millis(20);
+const BACKOFF_CAP: Duration = Duration::from_secs(1);
+
+/// One replica slot. The backend sits behind a mutex so the health
 /// monitor can swap generations in place; the policies never touch that
 /// lock — they read the shared `outstanding` counter, which each
-/// generation's server increments/decrements itself.
+/// generation's backend increments/decrements itself.
 struct Replica {
-    /// current generation; `None` only while a restart is in flight
-    server: Mutex<Option<Server>>,
-    /// lock-free queue-depth mirror (shared with the live server)
+    /// current generation; `None` while a restart/reconnect is pending
+    server: Mutex<Option<Box<dyn ReplicaBackend>>>,
+    /// builds the next generation (local `Server::start_with` closure
+    /// or a supervisor's spawn/reconnect closure)
+    factory: ReplicaFactory,
+    /// lock-free queue-depth mirror (shared with the live backend)
     outstanding: Arc<AtomicUsize>,
     /// routing eligibility: cleared the moment anyone observes the
     /// replica dead, set again once a fresh generation is installed
     up: AtomicBool,
-    /// restart count (generation 0 = the original server)
+    /// whether any generation was ever installed — the first successful
+    /// install is generation 0, not a restart
+    ever: AtomicBool,
+    /// restart count (generation 0 = the original backend)
     generation: AtomicUsize,
     /// requests routed here over all generations (incl. resubmissions)
     routed: AtomicUsize,
+    backoff: Mutex<RestartBackoff>,
 }
 
 struct Inner {
-    model: Arc<ServeModel>,
     cfg: RouterConfig,
     replicas: Vec<Replica>,
     img_len: usize,
@@ -364,8 +454,11 @@ impl Inner {
 
     /// One health sweep: for every dead replica, drain the corpse (its
     /// threads join; stragglers finish touching the shared counter),
-    /// bank its stats and lost-request count, and install a fresh
-    /// generation.
+    /// bank its stats and lost-request count, and ask the slot's
+    /// factory for a fresh generation. A failing factory (remote worker
+    /// still down) leaves the slot empty and is retried on later sweeps
+    /// under per-slot exponential backoff — supervision's
+    /// connecting → serving → draining → dead cycle (DESIGN §12).
     fn heal(&self) {
         if self.stopping.load(Ordering::SeqCst) {
             return;
@@ -380,33 +473,68 @@ impl Inner {
                     None
                 }
             };
-            let Some(dead) = dead else { continue };
-            // join first: a worker mid-batch still decrements the shared
-            // outstanding counter until the join completes, after which
-            // the residue is exactly the lost in-flight work
-            let raw = dead.drain_then_stop();
-            self.retired.lock().unwrap().merge(&raw);
-            let lost = r.outstanding.swap(0, Ordering::SeqCst);
-            self.lost.fetch_add(lost, Ordering::SeqCst);
+            if let Some(dead) = dead {
+                // join first: a worker mid-batch still decrements the
+                // shared outstanding counter until the join completes,
+                // after which the residue is exactly the lost in-flight
+                // work
+                let raw = dead.drain_then_stop();
+                self.retired.lock().unwrap().merge(&raw);
+                let lost = r.outstanding.swap(0, Ordering::SeqCst);
+                self.lost.fetch_add(lost, Ordering::SeqCst);
+            }
             if self.stopping.load(Ordering::SeqCst) {
-                return; // shutting down: leave the slot empty
+                return; // shutting down: leave slots empty
             }
-            let fresh = Server::start_with(
-                Arc::clone(&self.model),
-                self.cfg.serve.clone(),
-                Arc::clone(&r.outstanding),
-            );
+            // (Re)install if the slot is empty — whether we just
+            // drained it or a previous factory attempt failed.
+            if r.server.lock().unwrap().is_some() {
+                continue;
+            }
+            if r
+                .backoff
+                .lock()
+                .unwrap()
+                .next
+                .is_some_and(|next| Instant::now() < next)
             {
-                // install and revive under one lock hold: route() and
-                // note_dead() mark replicas down under this same lock,
-                // so their observations and our `up=true` serialize —
-                // no stale down-mark can outlive the fresh generation
-                let mut slot = r.server.lock().unwrap();
-                *slot = Some(fresh);
-                r.up.store(true, Ordering::SeqCst);
+                continue; // still inside the backoff window
             }
-            r.generation.fetch_add(1, Ordering::SeqCst);
-            self.restarts.fetch_add(1, Ordering::SeqCst);
+            // The factory runs OFF the slot lock: it may block on a TCP
+            // connect; routing must keep flowing to the live replicas.
+            match (r.factory)(Arc::clone(&r.outstanding)) {
+                Ok(fresh) => {
+                    {
+                        // install and revive under one lock hold:
+                        // route() and note_dead() mark replicas down
+                        // under this same lock, so their observations
+                        // and our `up=true` serialize — no stale
+                        // down-mark can outlive the fresh generation
+                        let mut slot = r.server.lock().unwrap();
+                        *slot = Some(fresh);
+                        r.up.store(true, Ordering::SeqCst);
+                    }
+                    *r.backoff.lock().unwrap() =
+                        RestartBackoff { attempts: 0, next: None };
+                    // the very first install is generation 0, not a
+                    // restart
+                    if r.ever.swap(true, Ordering::SeqCst) {
+                        r.generation.fetch_add(1, Ordering::SeqCst);
+                        self.restarts.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                Err(e) => {
+                    let mut bo = r.backoff.lock().unwrap();
+                    let wait = BACKOFF_CAP
+                        .min(BACKOFF_BASE * 2u32.pow(bo.attempts.min(8)));
+                    bo.attempts = bo.attempts.saturating_add(1);
+                    bo.next = Some(Instant::now() + wait);
+                    eprintln!(
+                        "[router] replica factory failed ({e:#}); \
+                         retrying in {wait:?}"
+                    );
+                }
+            }
         }
     }
 }
@@ -419,30 +547,75 @@ pub struct Router {
 }
 
 impl Router {
+    /// The in-process fleet: every slot's factory starts a local
+    /// [`Server`] over the shared read-only model.
     pub fn start(model: Arc<ServeModel>, cfg: RouterConfig) -> Router {
         let n = cfg.replicas.max(1);
-        let replicas: Vec<Replica> = (0..n)
+        let img_len = model.image_len();
+        let factories: Vec<ReplicaFactory> = (0..n)
             .map(|_| {
+                let model = Arc::clone(&model);
+                let serve = cfg.serve.clone();
+                let f: ReplicaFactory = Box::new(move |outstanding| {
+                    Ok(Box::new(Server::start_with(
+                        Arc::clone(&model),
+                        serve.clone(),
+                        outstanding,
+                    )) as Box<dyn ReplicaBackend>)
+                });
+                f
+            })
+            .collect();
+        Router::start_with_backends(cfg, img_len, factories)
+    }
+
+    /// The general fleet: one [`ReplicaFactory`] per slot — local
+    /// servers, remote workers
+    /// ([`crate::infer::net::Supervisor::factories`]), or any mix. A
+    /// factory that fails at startup leaves its slot empty (routed
+    /// around, typed `NoReplica` if the whole fleet is empty); the
+    /// health monitor keeps retrying it with backoff, so a fleet can
+    /// come up before all of its workers do.
+    pub fn start_with_backends(
+        mut cfg: RouterConfig,
+        img_len: usize,
+        factories: Vec<ReplicaFactory>,
+    ) -> Router {
+        assert!(!factories.is_empty(), "router needs at least one slot");
+        cfg.replicas = factories.len();
+        let replicas: Vec<Replica> = factories
+            .into_iter()
+            .map(|factory| {
                 let outstanding = Arc::new(AtomicUsize::new(0));
-                let server = Server::start_with(
-                    Arc::clone(&model),
-                    cfg.serve.clone(),
-                    Arc::clone(&outstanding),
-                );
+                let (server, up, ever) =
+                    match factory(Arc::clone(&outstanding)) {
+                        Ok(backend) => (Some(backend), true, true),
+                        Err(e) => {
+                            eprintln!(
+                                "[router] replica factory failed at \
+                                 startup ({e:#}); slot empty, will retry"
+                            );
+                            (None, false, false)
+                        }
+                    };
                 Replica {
-                    server: Mutex::new(Some(server)),
+                    server: Mutex::new(server),
+                    factory,
                     outstanding,
-                    up: AtomicBool::new(true),
+                    up: AtomicBool::new(up),
+                    ever: AtomicBool::new(ever),
                     generation: AtomicUsize::new(0),
                     routed: AtomicUsize::new(0),
+                    backoff: Mutex::new(RestartBackoff {
+                        attempts: 0,
+                        next: None,
+                    }),
                 }
             })
             .collect();
-        let img_len = model.image_len();
         let seed = cfg.seed;
         let health_every = cfg.health_every;
         let inner = Arc::new(Inner {
-            model,
             cfg,
             replicas,
             img_len,

@@ -17,6 +17,9 @@ use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
+use uniq::infer::net::{
+    ModelExpect, RemoteOpts, Supervisor, Worker, WorkerSpec,
+};
 use uniq::infer::{
     self, AqMode, FrozenModel, KernelMode, Router, RouterConfig,
     RoutingPolicy, ServeConfig, ServeModel, Server, SubmitError,
@@ -574,12 +577,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         },
         kernel_threads: cli.get_usize("kernel-threads", 1),
     };
+    if let Some(addr) = cli.get("remote-worker") {
+        return serve_remote_worker(sm, cfg, addr);
+    }
     let n = cli.get_usize("requests", 2048);
     let data = SynthDataset::generate(SynthConfig {
         classes: sm.model.classes,
         n: n.min(512),
         ..Default::default()
     });
+    if cli.get("remote").is_some() || cli.get("spawn-workers").is_some() {
+        return serve_remote_fleet(cli, &sm, cfg, n, &data);
+    }
     if replicas > 1 {
         return serve_fleet(cli, &sm, cfg, replicas, n, &data);
     }
@@ -656,6 +665,121 @@ fn serve_fleet(
         rcfg.serve.max_wait
     );
     let router = Router::start(Arc::clone(sm), rcfg);
+    drive_fleet(cli, sm, policy, replicas, router, n, data)
+}
+
+/// `uniq serve --remote-worker HOST:PORT`: run this process's
+/// `ServeModel` behind a TCP listener for a fleet client to route to.
+/// Port 0 requests an ephemeral port; the banner line (flushed before
+/// the first accept) is the contract a supervising parent parses.
+fn serve_remote_worker(
+    sm: Arc<ServeModel>,
+    cfg: ServeConfig,
+    addr: &str,
+) -> Result<()> {
+    let worker = Worker::bind(sm, cfg, addr)?;
+    println!("{}", worker.banner());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    worker.run()
+}
+
+/// `uniq serve --remote a:p,b:p,...` (connect to externally managed
+/// workers) or `uniq serve --spawn-workers N` (launch N child worker
+/// processes of this binary on ephemeral ports): the same fleet traffic
+/// as `--replicas N`, but every replica is in another process. This
+/// process still builds the model — it is the geometry reference the
+/// workers' Hello handshakes are checked against.
+fn serve_remote_fleet(
+    cli: &Cli,
+    sm: &Arc<ServeModel>,
+    serve_cfg: ServeConfig,
+    n: usize,
+    data: &Dataset,
+) -> Result<()> {
+    let policy = RoutingPolicy::parse(cli.get("routing").unwrap_or("p2c"))?;
+    let expect = ModelExpect {
+        img_len: sm.image_len(),
+        classes: sm.model.classes,
+    };
+    let specs: Vec<WorkerSpec> = if let Some(list) = cli.get("remote") {
+        list.split(',')
+            .map(|a| a.trim())
+            .filter(|a| !a.is_empty())
+            .map(|a| WorkerSpec::Connect(a.to_string()))
+            .collect()
+    } else {
+        let k = cli.get_usize("spawn-workers", 2).max(1);
+        let exe = std::env::current_exe()?;
+        // forward every model-defining flag so the children freeze the
+        // identical snapshot (bit-identical logits are a tested fleet
+        // guarantee, so the worker must not fall back to defaults this
+        // invocation overrode)
+        let mut args = vec![
+            "serve".to_string(),
+            "--remote-worker".to_string(),
+            "127.0.0.1:0".to_string(),
+        ];
+        for flag in [
+            "model", "width", "classes", "seed", "frozen", "artifacts",
+            "ckpt", "bits-w", "quantizer", "aq", "aq-bits", "calib-size",
+            "engine", "workers", "max-batch", "max-wait-ms",
+            "kernel-threads",
+        ] {
+            if let Some(v) = cli.get(flag) {
+                args.push(format!("--{flag}"));
+                args.push(v.to_string());
+            }
+        }
+        if cli.has("synth") {
+            args.push("--synth".to_string());
+        }
+        (0..k)
+            .map(|_| WorkerSpec::Spawn {
+                cmd: exe.to_string_lossy().into_owned(),
+                args: args.clone(),
+            })
+            .collect()
+    };
+    if specs.is_empty() {
+        return Err(anyhow!("--remote got an empty address list"));
+    }
+    let replicas = specs.len();
+    let spawned = matches!(specs[0], WorkerSpec::Spawn { .. });
+    let sup = Supervisor::new(specs, expect, RemoteOpts::default());
+    let rcfg = RouterConfig {
+        replicas,
+        policy,
+        queue_cap: cli.get_usize("queue-cap", 1024),
+        serve: serve_cfg,
+        ..Default::default()
+    };
+    println!(
+        "{n} requests -> {replicas} remote workers ({}; {} routing, \
+         queue cap {}/replica)",
+        if spawned { "spawned children" } else { "external processes" },
+        policy.name(),
+        rcfg.queue_cap
+    );
+    let router =
+        Router::start_with_backends(rcfg, expect.img_len, sup.factories());
+    let result = drive_fleet(cli, sm, policy, replicas, router, n, data);
+    sup.shutdown();
+    result
+}
+
+/// The shared fleet traffic loop: submit `n` requests through the
+/// router with bounded in-flight buffering, then shut down and report
+/// merged fleet statistics.
+fn drive_fleet(
+    cli: &Cli,
+    sm: &Arc<ServeModel>,
+    policy: RoutingPolicy,
+    replicas: usize,
+    router: Router,
+    n: usize,
+    data: &Dataset,
+) -> Result<()> {
     let mut pending = std::collections::VecDeque::new();
     let mut ok = 0usize;
     for i in 0..n {
