@@ -22,7 +22,7 @@ sys.path.insert(
 import bench_compare  # noqa: E402
 
 
-def report(medians, nested=False):
+def report(medians, nested=False, ratios=None):
     """A util::bench-shaped report: {..., all_runs: {benchmarks: {...}}}."""
     table = {
         name: {"median_ns": ns, "p10_ns": ns, "p90_ns": ns, "iters": 10}
@@ -31,8 +31,12 @@ def report(medians, nested=False):
     body = {"group": "inference", "benchmarks": table}
     if nested:
         # bench tables can sit anywhere in the tree (models[..] etc.)
-        return {"bench": "inference", "models": [{"all_runs": body}]}
-    return {"bench": "inference", "all_runs": body}
+        out = {"bench": "inference", "models": [{"all_runs": body}]}
+    else:
+        out = {"bench": "inference", "all_runs": body}
+    if ratios is not None:
+        out["ratios"] = dict(ratios)
+    return out
 
 
 def write(tmp_path, name, payload):
@@ -198,6 +202,112 @@ def test_collect_medians_walks_any_nesting():
         "x": 5.0,
         "y": 7.0,
         "z": 9.0,
+    }
+
+
+RATIO_BASE = {"v3_vs_v2_batch1": 1.0, "v3_vs_v2_batch64": 1.0}
+
+
+def test_ratio_keys_gate_as_absolute_factors(tmp_path, capsys):
+    """Ratio keys compare current_factor / baseline_factor directly:
+    a measured speedup at/above the 1.0 floor passes, one below the
+    hard threshold fails the gate."""
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+    )
+    good = {"v3_vs_v2_batch1": 1.4, "v3_vs_v2_batch64": 1.8}
+    cur = write(tmp_path, "cur.json", report(BASE, ratios=good))
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "2 ratio keys" in out
+    assert "ratio/v3_vs_v2_batch64" in out
+    bad = {"v3_vs_v2_batch1": 1.4, "v3_vs_v2_batch64": 0.6}
+    cur = write(tmp_path, "cur2.json", report(BASE, ratios=bad))
+    assert run(cur, base, "--fail-below", "0.7") == 1
+    out = capsys.readouterr().out
+    assert "ratio/v3_vs_v2_batch64" in out and "FAIL" in out
+
+
+def test_ratio_regression_cannot_hide_inside_a_faster_runner(tmp_path):
+    """The reason ratios are NOT re-normalized through throughput: a
+    runner 3x faster than the baseline machine makes every time key
+    look great, but the v3-vs-v2 factor measured in the same run still
+    says v3 lost its edge — the gate must see that."""
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+    )
+    fast_times = {k: v / 3 for k, v in BASE.items()}
+    sick = {"v3_vs_v2_batch1": 0.5, "v3_vs_v2_batch64": 0.5}
+    cur = write(
+        tmp_path, "cur.json", report(fast_times, ratios=sick)
+    )
+    assert run(cur, base, "--fail-below", "0.7") == 1
+
+
+def test_ratio_soft_band_warns_without_failing(tmp_path, capsys):
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+    )
+    mild = {"v3_vs_v2_batch1": 0.85, "v3_vs_v2_batch64": 1.2}
+    cur = write(tmp_path, "cur.json", report(BASE, ratios=mild))
+    assert (
+        run(cur, base, "--fail-below", "0.7", "--warn-below", "0.9") == 0
+    )
+    out = capsys.readouterr().out
+    assert "WARN" in out and "FAIL" not in out
+
+
+def test_ratio_keys_join_the_skip_accounting(tmp_path, capsys):
+    """A ratio key present on only one side skips like a time key:
+    new-without-baseline warns, gone-from-current warns in gate mode,
+    and both land in the trailing skipped count."""
+    base = write(
+        tmp_path,
+        "base.json",
+        report(BASE, ratios=dict(RATIO_BASE, old_ratio=1.0)),
+    )
+    cur = write(
+        tmp_path,
+        "cur.json",
+        report(BASE, ratios=dict(RATIO_BASE, brand_new=2.0)),
+    )
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    out = capsys.readouterr().out
+    assert "ratio/brand_new" in out and "ratio/old_ratio" in out
+    assert "2 keys skipped (1 new without baseline, 1 gone" in out
+
+
+def test_ratio_only_overlap_still_lets_the_gate_run(tmp_path):
+    """Zero overlapping time keys is not fatal when ratio keys still
+    overlap — the gate compares what it can instead of refusing."""
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+    )
+    cur = write(
+        tmp_path,
+        "cur.json",
+        report({"renamed/key": 1e6}, ratios=RATIO_BASE),
+    )
+    assert run(cur, base, "--fail-below", "0.7") == 0
+    sick = {k: 0.4 for k in RATIO_BASE}
+    cur = write(
+        tmp_path,
+        "cur2.json",
+        report({"renamed/key": 1e6}, ratios=sick),
+    )
+    assert run(cur, base, "--fail-below", "0.7") == 1
+
+
+def test_collect_ratios_walks_any_nesting():
+    tree = {
+        "a": [{"ratios": {"x": 1.5}}],
+        "b": {"c": {"ratios": {"y": 2.0, "skipme": "a-note"}}},
+        "ratios": {"z": 1.0},
+    }
+    assert bench_compare.collect_ratios(tree) == {
+        "x": 1.5,
+        "y": 2.0,
+        "z": 1.0,
     }
 
 

@@ -12,6 +12,14 @@ per shared benchmark, the *relative throughput*
 ``baseline_median_ns / current_median_ns`` — 1.0 is parity, below 1.0 is
 slower than baseline.
 
+Reports may also carry ``{"ratios": {name: factor}}`` objects (nested
+anywhere): machine-independent ABSOLUTE speedup factors such as
+``v3_vs_v2_batch64`` = v2 median / v3 median measured in the same run.
+Those are compared as ``rel = current_factor / baseline_factor`` —
+NOT re-normalized through throughput — so a baseline of 1.0 asserts
+"v3 at least matches v2" on every runner, fast or slow: a uniformly
+faster machine cannot hide a relative v3 regression.
+
 Modes:
 
 * default (no ``--fail-below``): the historical warn-only visibility
@@ -51,6 +59,29 @@ def collect_medians(node, prefix=""):
     elif isinstance(node, list):
         for i, val in enumerate(node):
             found.update(collect_medians(val, f"{prefix}{i}/"))
+    return found
+
+
+def collect_ratios(node):
+    """Recursively harvest {ratio_name: factor} from a report tree.
+
+    Ratio entries are plain numbers (absolute speedup factors computed
+    inside one bench run), not ``median_ns`` stat dicts — the two
+    namespaces never mix.
+    """
+    found = {}
+    if isinstance(node, dict):
+        table = node.get("ratios")
+        if isinstance(table, dict):
+            for name, val in table.items():
+                if isinstance(val, (int, float)):
+                    found[name] = float(val)
+        for key, val in node.items():
+            if key != "ratios":
+                found.update(collect_ratios(val))
+    elif isinstance(node, list):
+        for val in node:
+            found.update(collect_ratios(val))
     return found
 
 
@@ -119,10 +150,15 @@ def main(argv):
         record_recipe(args.current, args.baseline)
         return gate_skip(f"no committed baseline at {args.baseline}")
 
-    current = collect_medians(json.loads(args.current.read_text()))
-    baseline = collect_medians(json.loads(args.baseline.read_text()))
+    cur_tree = json.loads(args.current.read_text())
+    base_tree = json.loads(args.baseline.read_text())
+    current = collect_medians(cur_tree)
+    baseline = collect_medians(base_tree)
+    cur_ratios = collect_ratios(cur_tree)
+    base_ratios = collect_ratios(base_tree)
     shared = sorted(set(current) & set(baseline))
-    if not shared:
+    shared_r = sorted(set(cur_ratios) & set(base_ratios))
+    if not shared and not shared_r:
         return gate_skip(
             "no overlapping benchmark names "
             f"({len(current)} current vs {len(baseline)} baseline)"
@@ -132,6 +168,9 @@ def main(argv):
     # benchmark must never render the whole comparison un-runnable, and
     # must never silently vanish from the report either
     new = sorted(set(current) - set(baseline))
+    new += sorted(
+        f"ratio/{k}" for k in set(cur_ratios) - set(base_ratios)
+    )
     if new:
         print(
             f"bench-compare: WARN {len(new)} benchmark(s) not in the "
@@ -145,28 +184,47 @@ def main(argv):
         else f"warn-only below {args.warn_below:.2f}x"
     )
     print(
-        f"bench-compare: {len(shared)} benchmarks vs baseline "
-        f"({args.baseline}; {mode})"
+        f"bench-compare: {len(shared)} benchmarks + {len(shared_r)} "
+        f"ratio keys vs baseline ({args.baseline}; {mode})"
     )
     print(
         f"{'benchmark':<52} {'base ms':>10} {'now ms':>10} {'rel tput':>8}"
     )
     failed, warned = [], []
+
+    def judge(name, rel):
+        if gating and rel < hard:
+            failed.append(name)
+            return "  FAIL: regression beyond the hard threshold"
+        if rel < args.warn_below:
+            warned.append(name)
+            return "  WARN: slower than baseline"
+        return ""
+
     for name in shared:
         base, now = baseline[name], current[name]
         # relative throughput: >1 faster than baseline, <1 slower
         rel = base / now if now > 0 else float("inf")
-        flag = ""
-        if gating and rel < hard:
-            flag = "  FAIL: regression beyond the hard threshold"
-            failed.append(name)
-        elif rel < args.warn_below:
-            flag = "  WARN: slower than baseline"
-            warned.append(name)
+        flag = judge(name, rel)
         print(
             f"{name:<52} {base / 1e6:>10.3f} {now / 1e6:>10.3f} "
             f"{rel:>7.2f}x{flag}"
         )
+    if shared_r:
+        # absolute speedup factors: base/now columns ARE the factors,
+        # rel = now/base (higher = the measured speedup improved)
+        print(
+            f"{'ratio (absolute factor)':<52} {'base x':>10} "
+            f"{'now x':>10} {'rel':>8}"
+        )
+        for name in shared_r:
+            base, now = base_ratios[name], cur_ratios[name]
+            rel = now / base if base > 0 else float("inf")
+            flag = judge(f"ratio/{name}", rel)
+            print(
+                f"ratio/{name:<46} {base:>10.3f} {now:>10.3f} "
+                f"{rel:>7.2f}x{flag}"
+            )
     # Baseline keys absent from the current report are NOT a gate
     # failure: thread-count-suffixed keys (e.g. lut_v2_t4) legitimately
     # vanish on runners with different core counts (see the baseline's
@@ -174,6 +232,9 @@ def main(argv):
     # a renamed or crashed benchmark escapes gating through this hole,
     # and only the log will say so.
     gone = sorted(set(baseline) - set(current))
+    gone += sorted(
+        f"ratio/{k}" for k in set(base_ratios) - set(cur_ratios)
+    )
     if gone:
         sev = "WARN (gate does not cover these)" if gating else "note"
         print(

@@ -1,0 +1,303 @@
+"""Python mirror of the Rust v3 LUT² kernels (infer/kernels.rs).
+
+Mirrors (1:1 port of the Rust code): ActQuantTable::product_table,
+the bit-packed weight-index gather, lut2_matmul's j-ascending
+accumulation, qim2col_into's pad sentinel, and lut2_depthwise_into.
+Ground truth is twofold:
+
+* a v2-style dequant mirror with the IDENTICAL accumulation order —
+  compared for BIT equality (``.tobytes()``), because the v3 design
+  claim is exact-zero divergence: every product-table entry is the
+  exact f32 multiply the v2 kernel performs on a snapped activation,
+  and both kernels add terms j-ascending into a +0.0 accumulator;
+* a float64 matmul — compared at loose tolerance, so the two mirrors
+  cannot both be wrong in the same way.
+
+numpy-only (no jax): scalar f32 semantics come from ordered
+elementwise float32 adds, which numpy performs in IEEE round-to-
+nearest exactly like the Rust scalar loop.
+"""
+
+import sys
+from statistics import NormalDist
+
+import numpy as np
+
+rng = np.random.default_rng(7)
+FAIL = []
+
+
+def check(name, cond, msg=""):
+    print(("PASS " if cond else "FAIL ") + name + (" " + msg if msg else ""))
+    if not cond:
+        FAIL.append(name)
+
+
+# ---- packed.rs mirror: pack + gather_row bit layout ----
+def pack(vals, bits):
+    nbytes = (len(vals) * bits + 7) // 8
+    data = bytearray(nbytes)
+    for i, v in enumerate(vals):
+        bitpos = i * bits
+        byte, off = divmod(bitpos, 8)
+        w = v << off
+        data[byte] |= w & 0xFF
+        if off + bits > 8:
+            data[byte + 1] |= w >> 8
+    return bytes(data)
+
+
+def get(data, bits, i):
+    bitpos = i * bits
+    byte, off = divmod(bitpos, 8)
+    lo = data[byte]
+    hi = data[byte + 1] if off + bits > 8 else 0
+    return ((lo | (hi << 8)) >> off) & ((1 << bits) - 1)
+
+
+def bits_for_k(k):
+    return max((k - 1).bit_length(), 1)
+
+
+# ---- actquant.rs mirrors ----
+def quantile_levels(bits, mu, sigma):
+    """Mirror of ActQuantTable::from_stats (quantile mode levels)."""
+    k = 1 << bits
+    nd = NormalDist()
+    return np.array(
+        [mu + sigma * nd.inv_cdf((i + 0.5) / k) for i in range(k)],
+        np.float32,
+    )
+
+
+def product_table(levels, codebook):
+    """Mirror of ActQuantTable::product_table: row-major k_w x (k_a+1),
+    entry [w, a] = codebook[w] * levels[a] in f32, pad column zero."""
+    ka = len(levels)
+    stride = ka + 1
+    t = np.zeros(len(codebook) * stride, np.float32)
+    for w, cw in enumerate(codebook):
+        t[w * stride : w * stride + ka] = np.float32(cw) * levels
+    return t, stride
+
+
+# product-table shape/content against scalar multiplies
+lvl = quantile_levels(4, 0.2, 0.8)
+cb = np.sort(rng.normal(size=5)).astype(np.float32)
+tab, stride = product_table(lvl, cb)
+ok = stride == len(lvl) + 1 and len(tab) == len(cb) * stride
+for w in range(len(cb)):
+    for a in range(len(lvl)):
+        if tab[w * stride + a] != np.float32(cb[w]) * np.float32(lvl[a]):
+            ok = False
+    if tab[w * stride + len(lvl)] != 0.0:
+        ok = False
+check("product table: exact f32 products + zero pad column", ok)
+
+
+# ---- lut2_matmul mirror vs v2 dequant mirror (bit equality) ----
+# Both Rust kernels (O_TILE and 16-lane) accumulate j-ascending per
+# (r, o); the tiling only reorders INDEPENDENT accumulators. The
+# mirrors below use one ordered f32 add per j, vectorized over (r, o).
+def lut2_gemm(qa, wpacked, wbits, table, stride, rows, k, cout):
+    """Mirror of lut2_otile_shard / lut2_lanes16_shard accumulation,
+    weight indices read through the packed gather like lut2_fill_wtile."""
+    qw = np.empty((cout, k), np.int64)
+    for o in range(cout):
+        for j in range(k):
+            qw[o, j] = get(wpacked, wbits, o * k + j) * stride
+    acc = np.zeros((rows, cout), np.float32)
+    for j in range(k):
+        acc += table[qa[:, j][:, None] + qw[None, :, j]]
+    return acc
+
+
+def v2_gemm(x_snap, wdeq, rows, k, cout):
+    """v2 dequant reference: f32 multiply per term, same j order.
+    ``wdeq`` is the [k, cout] dequantized weight matrix."""
+    acc = np.zeros((rows, cout), np.float32)
+    for j in range(k):
+        acc += x_snap[:, j][:, None] * wdeq[j][None, :]
+    return acc
+
+
+ok = True
+worst64 = 0.0
+for kw, ka in [(2, 4), (5, 16), (16, 4), (32, 256), (256, 16)]:
+    rows, k, cout = 37, 29, 13  # O_TILE tail AND 16-lane tail
+    levels = np.sort(rng.normal(0, 0.9, size=ka)).astype(np.float32)
+    codebook = np.sort(rng.normal(size=kw)).astype(np.float32)
+    table, stride = product_table(levels, codebook)
+    qa = rng.integers(0, ka, size=(rows, k))
+    widx_t = rng.integers(0, kw, size=(cout, k))  # transposed [cout, k]
+    wbits = bits_for_k(kw)
+    wpacked = pack([int(v) for v in widx_t.reshape(-1)], wbits)
+    v3 = lut2_gemm(qa, wpacked, wbits, table, stride, rows, k, cout)
+    v2 = v2_gemm(
+        levels[qa], codebook[widx_t].T.copy(), rows, k, cout
+    )
+    if v3.tobytes() != v2.tobytes():
+        ok = False
+    want = levels[qa].astype(np.float64) @ codebook[widx_t].T.astype(
+        np.float64
+    )
+    worst64 = max(worst64, np.abs(v3 - want).max())
+    if np.abs(v3 - want).max() > 1e-3:
+        ok = False
+check(
+    "lut2 gemm bit-identical to v2 dequant + f64 sanity",
+    ok,
+    f"worst-vs-f64={worst64:.2e}",
+)
+
+
+# ---- qim2col pad sentinel: v3 conv vs v2 f32-zero-padding conv ----
+def same_pads(inp, k, stride):
+    out = -(-inp // stride)
+    needed = (out - 1) * stride + k
+    return out, max(needed - inp, 0) // 2
+
+
+def im2col_f32(x, b, h, w, c, k, stride):
+    """kernels::im2col_into mirror: f32 patches, zero padding."""
+    oh, ph = same_pads(h, k, stride)
+    ow, pw = same_pads(w, k, stride)
+    rl = k * k * c
+    patches = np.zeros((b * oh * ow, rl), np.float32)
+    for bi in range(b):
+        img = x[bi]
+        for oy in range(oh):
+            for ox in range(ow):
+                row = patches[(bi * oh + oy) * ow + ox]
+                for kh in range(k):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h:
+                        continue
+                    for kw_ in range(k):
+                        ix = ox * stride + kw_ - pw
+                        if ix < 0 or ix >= w:
+                            continue
+                        d = (kh * k + kw_) * c
+                        row[d : d + c] = img[iy, ix]
+    return patches, oh, ow
+
+
+def qim2col(q, b, h, w, c, k, stride, pad):
+    """kernels::qim2col_into mirror: index patches, pad sentinel."""
+    oh, ph = same_pads(h, k, stride)
+    ow, pw = same_pads(w, k, stride)
+    rl = k * k * c
+    patches = np.full((b * oh * ow, rl), pad, np.int64)
+    for bi in range(b):
+        img = q[bi]
+        for oy in range(oh):
+            for ox in range(ow):
+                row = patches[(bi * oh + oy) * ow + ox]
+                for kh in range(k):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h:
+                        continue
+                    for kw_ in range(k):
+                        ix = ox * stride + kw_ - pw
+                        if ix < 0 or ix >= w:
+                            continue
+                        d = (kh * k + kw_) * c
+                        row[d : d + c] = img[iy, ix]
+    return patches, oh, ow
+
+
+ok = True
+for stride_c in (1, 2):
+    b, h, w, c, ks = 2, 7, 6, 3, 3
+    ka, kw = 16, 4
+    levels = np.sort(rng.normal(0, 0.7, size=ka)).astype(np.float32)
+    codebook = np.sort(rng.normal(size=kw)).astype(np.float32)
+    table, stride_t = product_table(levels, codebook)
+    qa_img = rng.integers(0, ka, size=(b, h, w, c))
+    rl = ks * ks * c
+    cout = 5
+    widx_t = rng.integers(0, kw, size=(cout, rl))
+    wbits = bits_for_k(kw)
+    wpacked = pack([int(v) for v in widx_t.reshape(-1)], wbits)
+    qp, oh, ow = qim2col(qa_img, b, h, w, c, ks, stride_c, ka)
+    v3 = lut2_gemm(
+        qp, wpacked, wbits, table, stride_t, b * oh * ow, rl, cout
+    )
+    fp, oh2, ow2 = im2col_f32(
+        levels[qa_img], b, h, w, c, ks, stride_c
+    )
+    v2 = v2_gemm(fp, codebook[widx_t].T.copy(), b * oh * ow, rl, cout)
+    # the pad sentinel gathers the table's zero column; v2 multiplies
+    # codebook * 0.0 (which may be -0.0) — both leave the +0.0
+    # accumulator bit-unchanged, so the conv stays BIT-identical
+    if (oh, ow) != (oh2, ow2) or v3.tobytes() != v2.tobytes():
+        ok = False
+check("qim2col pad sentinel: v3 conv bit-identical to v2 conv", ok)
+
+
+# ---- lut2_depthwise mirror vs v2 dequant depthwise ----
+def lut2_depthwise(qa, idx, table, stride_t, b, h, w, c, ks, stride):
+    """kernels::lut2_depthwise_into mirror: tap-major idx gather,
+    out-of-bounds taps skipped (no sentinel on this path)."""
+    oh, ph = same_pads(h, ks, stride)
+    ow, pw = same_pads(w, ks, stride)
+    out = np.zeros((b, oh, ow, c), np.float32)
+    for bi in range(b):
+        for oy in range(oh):
+            for ox in range(ow):
+                for kh in range(ks):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h:
+                        continue
+                    for kw_ in range(ks):
+                        ix = ox * stride + kw_ - pw
+                        if ix < 0 or ix >= w:
+                            continue
+                        tap = kh * ks + kw_
+                        out[bi, oy, ox] += table[
+                            idx[tap] * stride_t + qa[bi, iy, ix]
+                        ]
+    return out
+
+
+def v2_depthwise(x, wtap, b, h, w, c, ks, stride):
+    oh, ph = same_pads(h, ks, stride)
+    ow, pw = same_pads(w, ks, stride)
+    out = np.zeros((b, oh, ow, c), np.float32)
+    for bi in range(b):
+        for oy in range(oh):
+            for ox in range(ow):
+                for kh in range(ks):
+                    iy = oy * stride + kh - ph
+                    if iy < 0 or iy >= h:
+                        continue
+                    for kw_ in range(ks):
+                        ix = ox * stride + kw_ - pw
+                        if ix < 0 or ix >= w:
+                            continue
+                        tap = kh * ks + kw_
+                        out[bi, oy, ox] += x[bi, iy, ix] * wtap[tap]
+    return out
+
+
+ok = True
+for stride_c in (1, 2):
+    b, h, w, c, ks = 2, 8, 7, 4, 3
+    ka, kw = 8, 4
+    levels = np.sort(rng.normal(0, 0.5, size=ka)).astype(np.float32)
+    codebook = np.sort(rng.normal(size=kw)).astype(np.float32)
+    table, stride_t = product_table(levels, codebook)
+    qa_img = rng.integers(0, ka, size=(b, h, w, c))
+    idx = rng.integers(0, kw, size=(ks * ks, c))  # tap-major [tap, c]
+    v3 = lut2_depthwise(
+        qa_img, idx, table, stride_t, b, h, w, c, ks, stride_c
+    )
+    v2 = v2_depthwise(
+        levels[qa_img], codebook[idx], b, h, w, c, ks, stride_c
+    )
+    if v3.tobytes() != v2.tobytes():
+        ok = False
+check("lut2 depthwise bit-identical to v2 dequant", ok)
+
+print("\n%d failures" % len(FAIL))
+sys.exit(1 if FAIL else 0)

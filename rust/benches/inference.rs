@@ -25,8 +25,9 @@ use uniq::infer::net::{
     submit_blocking, RemoteOpts, RemoteReplica, Worker,
 };
 use uniq::infer::{
-    kernels, synthetic, AqMode, ExecBuffers, FrozenModel, KernelMode,
-    Router, RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
+    kernels, synthetic, ActQuantTable, AqMode, ExecBuffers, FrozenModel,
+    KernelMode, PackedBits, Router, RouterConfig, RoutingPolicy,
+    ServeConfig, ServeModel, Server,
 };
 use uniq::quant::{KQuantileGauss, QuantizerFit};
 use uniq::util::bench::Bench;
@@ -44,9 +45,10 @@ fn threads_avail() -> usize {
         .clamp(1, 8)
 }
 
-/// Kernel-level v1-vs-v2 micro-benchmark on a conv-shaped GEMM
-/// (batch-8 mobilenet pointwise layer scale).
-fn kernel_micro(b: &mut Bench, threads: usize) -> Json {
+/// Kernel-level v1-vs-v2-vs-v3 micro-benchmark on a conv-shaped GEMM
+/// (batch-8 mobilenet pointwise layer scale). Returns the JSON block
+/// plus the v3-vs-v2 speedup for the top-level ratio table.
+fn kernel_micro(b: &mut Bench, threads: usize) -> (Json, f64) {
     let (rows, cin, cout) = (2048usize, 144usize, 32usize);
     let mut rng = Rng::new(97);
     let x: Vec<f32> = (0..rows * cin).map(|_| rng.normal()).collect();
@@ -89,15 +91,138 @@ fn kernel_micro(b: &mut Bench, threads: usize) -> Json {
             &mut pool,
         );
     });
-    obj(vec![
-        ("shape", s(&format!("{rows}x{cin}x{cout}"))),
-        ("threads_mt", num(threads as f64)),
-        ("v1", v1.to_json()),
-        ("v2_t1", v2.to_json()),
-        ("v2_mt", v2_mt.to_json()),
-        ("v2_vs_v1_speedup", num(v1.median_ns / v2.median_ns)),
-        ("v2_mt_vs_v1_speedup", num(v1.median_ns / v2_mt.median_ns)),
-    ])
+    // v3 LUT²: the same GEMM consuming a 4-bit activation-index
+    // stream against the packed weight indices through the product
+    // table — the integer-only hot path
+    let t = ActQuantTable::from_stats(AqMode::Quantile, 4, 0.0, 1.0);
+    let aep = t.ep();
+    let qa: Vec<u8> = x.iter().map(|&v| aep.bin(v) as u8).collect();
+    let (table, stride) = t.product_table(&q.levels);
+    let widx = PackedBits::pack(&idx_t, 4);
+    let v3 = b.run(&format!("{name}/v3"), || {
+        kernels::lut2_matmul(
+            &qa,
+            &widx,
+            &table,
+            stride,
+            rows,
+            cin,
+            cout,
+            &mut out,
+            kernels::Epilogue::default(),
+            1,
+            &mut pool,
+        );
+    });
+    let v3_ratio = v2.median_ns / v3.median_ns;
+    (
+        obj(vec![
+            ("shape", s(&format!("{rows}x{cin}x{cout}"))),
+            ("threads_mt", num(threads as f64)),
+            ("v1", v1.to_json()),
+            ("v2_t1", v2.to_json()),
+            ("v2_mt", v2_mt.to_json()),
+            ("v3", v3.to_json()),
+            ("v2_vs_v1_speedup", num(v1.median_ns / v2.median_ns)),
+            ("v2_mt_vs_v1_speedup", num(v1.median_ns / v2_mt.median_ns)),
+            ("v3_vs_v2_speedup", num(v3_ratio)),
+        ]),
+        v3_ratio,
+    )
+}
+
+/// v3-vs-v2 A/B on the acceptance configuration (mobilenet_mini,
+/// quantile-4 aq): the same calibrated model through both engines with
+/// per-engine persistent arenas, batch 1 and 64. Asserts bit-identity
+/// before timing — a perf number for a wrong kernel is worse than no
+/// number. Returns the JSON block plus named speedup ratios for the
+/// top-level `ratios` table (gated as absolute factors by
+/// bench_compare).
+fn v3_ab(
+    b: &mut Bench,
+    calib: &[f32],
+    img_len: usize,
+) -> (Json, Vec<(String, f64)>) {
+    let (m, state) = synthetic::model("mobilenet_mini", 16, 10, 7).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let mut sm = ServeModel::new(frozen).unwrap();
+    sm.calibrate_aq(AqMode::Quantile, 4, calib, 32).unwrap();
+    let mut ratios = Vec::new();
+    let mut jbatches = Vec::new();
+    for batch in [1usize, 64] {
+        let x = &calib[..batch * img_len];
+        let mut bufs2 = ExecBuffers::new();
+        let mut bufs3 = ExecBuffers::new();
+        {
+            let a = sm
+                .graph
+                .forward_into(
+                    &sm.model, &sm.weights, x, batch, KernelMode::Lut,
+                    &mut bufs2,
+                )
+                .unwrap()
+                .to_vec();
+            let bb = sm
+                .graph
+                .forward_into(
+                    &sm.model, &sm.weights, x, batch, KernelMode::LutV3,
+                    &mut bufs3,
+                )
+                .unwrap()
+                .to_vec();
+            assert_eq!(a, bb, "v3 != v2 at batch {batch}; not timing a lie");
+        }
+        let v2 = b.run_throughput(
+            &format!("mobilenet_mini/lut_v2_aq/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward_into(
+                        &sm.model, &sm.weights, x, batch, KernelMode::Lut,
+                        &mut bufs2,
+                    )
+                    .unwrap();
+            },
+        );
+        let v3 = b.run_throughput(
+            &format!("mobilenet_mini/lut_v3/b{batch}"),
+            batch,
+            || {
+                sm.graph
+                    .forward_into(
+                        &sm.model, &sm.weights, x, batch,
+                        KernelMode::LutV3, &mut bufs3,
+                    )
+                    .unwrap();
+            },
+        );
+        let ratio = v2.median_ns / v3.median_ns;
+        println!(
+            "v3[b{batch}]: v2-aq {:.0} ns, v3 {:.0} ns ({ratio:.2}x)",
+            v2.median_ns, v3.median_ns
+        );
+        ratios.push((format!("v3_vs_v2_batch{batch}"), ratio));
+        jbatches.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("lut_v2_aq", v2.to_json()),
+            ("lut_v3", v3.to_json()),
+            ("v3_vs_v2_speedup", num(ratio)),
+        ]));
+    }
+    let j = obj(vec![
+        ("model", s("mobilenet_mini")),
+        ("aq", s("quantile4")),
+        ("v3_table_bytes", num(sm.weights.v3_table_bytes() as f64)),
+        ("batches", Json::Arr(jbatches)),
+        (
+            "note",
+            s("same calibrated model, per-engine persistent arenas; \
+               speedups are v2-aq median / v3 median at equal batch"),
+        ),
+    ]);
+    (j, ratios)
 }
 
 /// Serve-tier A/B: identical traffic through the v1 and v2 engines at
@@ -490,8 +615,18 @@ fn main() {
         ]));
     }
 
-    let jkernel = kernel_micro(&mut b, threads);
+    let (jkernel, kernel_ratio) = kernel_micro(&mut b, threads);
     let jaq = aq_configs(&mut b, &probe.x, data.image_len());
+    let (jv3, v3_ratios) = v3_ab(&mut b, &probe.x, data.image_len());
+
+    // absolute speedup factors, gated by bench_compare as
+    // rel = now/base (NOT re-normalized throughput)
+    let mut ratio_pairs: Vec<(&str, Json)> = v3_ratios
+        .iter()
+        .map(|(k, v)| (k.as_str(), num(*v)))
+        .collect();
+    ratio_pairs.push(("v3_vs_v2_kernel", num(kernel_ratio)));
+    let jratios = obj(ratio_pairs);
 
     let report = obj(vec![
         ("bench", s("inference")),
@@ -501,11 +636,15 @@ fn main() {
         ("router_fleet", fleet_json),
         ("remote_loopback", remote_json),
         ("aq_configs", jaq),
+        ("v3_ab", jv3),
+        ("ratios", jratios),
         ("all_runs", b.report_json()),
         (
             "note",
             s("median_ns per forward call; throughput = batch / median; \
-               v1 = PR-1 engine, v2 = tiled/fused/arena engine"),
+               v1 = PR-1 engine, v2 = tiled/fused/arena engine, \
+               v3 = LUT2 integer-index engine (ratios are absolute \
+               speedup factors, v2 median / v3 median)"),
         ),
     ]);
     std::fs::write("BENCH_inference.json", report.to_string())

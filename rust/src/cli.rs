@@ -90,7 +90,8 @@ COMMANDS:
                                BOPs/model-size for a full-size arch
   infer      --model M [--ckpt C --frozen DIR --export DIR --bits-w B
               --quantizer Q --batch N --val-size N --synth --width W
-              --aq none|uniform|quantile --aq-bits B --calib-size N]
+              --aq none|uniform|quantile --aq-bits B --calib-size N
+              --engine v1|v2|v3 --stats out.json]
                                native LUT inference of a frozen model:
                                parity vs dequantized f32, throughput, and
                                measured vs analytic BOPs at the real
@@ -98,15 +99,21 @@ COMMANDS:
                                --aq calibrates static per-layer
                                activation-quant tables (fused into the
                                GEMM epilogues) and --export ships them
-                               in the frozen format (v2)
+                               in the frozen format (v2); --stats writes
+                               engine, parity, throughput and per-layer
+                               LUT² product-table bytes as JSON
   serve      --model M [--requests N --workers W --max-batch B
-              --max-wait-ms T --kernel-threads K --engine v1|v2
+              --max-wait-ms T --kernel-threads K --engine v1|v2|v3
               --replicas R --routing rr|least|p2c --queue-cap Q
               --aq none|uniform|quantile --aq-bits B --calib-size N
               --synth --width W --stats out.json]
                                batched native serving with latency stats
                                (v2: tiled/fused arena engine, default;
                                v1: the PR-1 baseline engine;
+                               v3: integer-only LUT² — GEMMs consume u8
+                               bin indices through a weight-level x
+                               activation-level product table; needs
+                               --aq, bit-identical to v2;
                                --aq quantizes activations in the fused
                                epilogue — v2 only, `--aq none` strips
                                any tables the frozen file carried);

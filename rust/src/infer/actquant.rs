@@ -147,6 +147,32 @@ impl ActQuantTable {
         }
     }
 
+    /// The activation level vector (the product-table construction
+    /// surface; `LayerCodebook::levels` is the weight-side twin).
+    pub fn level_vec(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// The v3 LUT² product table of this activation table against a
+    /// weight codebook: row-major `k_w × (k_a + 1)`, entry `[w, a] =
+    /// codebook[w] * levels[a]` — the exact f32 multiply the v2 kernel
+    /// performs on a snapped activation, hoisted to plan-compile time —
+    /// plus a trailing all-zero "pad" column at `a = k_a` standing in
+    /// for SAME-conv zero padding (u16 patch sentinel). Returns
+    /// `(table, stride)` with `stride = k_a + 1`.
+    pub fn product_table(&self, codebook: &[f32]) -> (Vec<f32>, usize) {
+        let ka = self.levels.len();
+        let stride = ka + 1;
+        let mut t = vec![0.0f32; codebook.len() * stride];
+        for (w, &cw) in codebook.iter().enumerate() {
+            let row = &mut t[w * stride..w * stride + ka];
+            for (e, &la) in row.iter_mut().zip(&self.levels) {
+                *e = cw * la;
+            }
+        }
+        (t, stride)
+    }
+
     fn to_json(&self) -> Json {
         obj(vec![
             ("mu", num(self.mu as f64)),

@@ -49,6 +49,13 @@ impl LayerCodebook {
         self.indices.len
     }
 
+    /// The weight level vector (the product-table construction surface;
+    /// `ActQuantTable::level_vec` is the activation-side twin — see
+    /// `ActQuantTable::product_table`).
+    pub fn levels(&self) -> &[f32] {
+        &self.codebook
+    }
+
     /// Quantize a weight tensor against a fitted quantizer.
     pub fn from_weights(
         name: &str,

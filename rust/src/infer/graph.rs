@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 use super::actquant::ActQuantTable;
 use super::codebook::FrozenModel;
 use super::kernels as kn;
+use super::packed::PackedBits;
 use crate::bops;
 
 /// Which weight representation the executor reads.
@@ -41,8 +42,32 @@ pub enum KernelMode {
     /// the PR-1 LUT engine (naive kernel, per-op allocation) — the
     /// recorded baseline for the v2 speedup
     LutV1,
+    /// the v3 LUT² engine: GEMM steps whose input edge is
+    /// [`EdgeType::QIdx`] consume the u8 bin-index stream directly
+    /// against bit-packed weight indices through a precomputed
+    /// `k_w × (k_a + 1)` product table — no dequant pass, no f32
+    /// multiply on the hot path. F32 seams (image input, post-pool,
+    /// post-residual, downsample branches) fall back to the v2 kernels
+    /// step-by-step, so output stays bit-identical to `Lut`. Requires
+    /// aq tables; refused otherwise.
+    LutV3,
     /// dequantized f32 weights, same graph and accumulation order
     DequantF32,
+}
+
+/// Static type of the activation edge feeding a GEMM step — the
+/// compile-time replacement for the implicit "qcur is valid iff
+/// track_qact" convention. Computed by the plan compiler from the aq
+/// slot dataflow and resolved against a concrete model's tables by
+/// [`Graph::gemm_edges`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeType {
+    /// the f32 ping-pong buffer: image input, post-pool, post-residual
+    /// and shortcut-branch seams — v3 runs these steps on the v2 kernel
+    F32,
+    /// the quantized ping-pong pair: u8 bin indices into qlayer `src`'s
+    /// `ActQuantTable::levels`, `bits` wide
+    QIdx { src: usize, bits: u8 },
 }
 
 /// One step of the stack-machine program.
@@ -96,9 +121,14 @@ struct EpSpec {
 #[derive(Debug, Clone)]
 enum Step {
     Flatten,
-    Dense { q: usize, ep: EpSpec },
-    Conv { q: usize, stride: usize, ep: EpSpec },
-    Depthwise { q: usize, stride: usize, ep: EpSpec },
+    /// GEMM steps carry `qin`: the qlayer whose aq slot produced the
+    /// current activation, i.e. the static [`EdgeType::QIdx`] source —
+    /// `None` marks a mandatory f32 seam. Like `EpSpec::aq` this is a
+    /// slot, not a promise: the edge is live at runtime only when the
+    /// model carries a table for `qin`.
+    Dense { q: usize, ep: EpSpec, qin: Option<usize> },
+    Conv { q: usize, stride: usize, ep: EpSpec, qin: Option<usize> },
+    Depthwise { q: usize, stride: usize, ep: EpSpec, qin: Option<usize> },
     /// a batchnorm not preceded by a GEMM (none in the current archs,
     /// but the compiler keeps the general case correct)
     BatchNorm { gamma: usize, beta: usize, mean: usize, var: usize },
@@ -139,9 +169,15 @@ fn compile(ops: &[Op]) -> Vec<Step> {
     // after a residual add quantizes on its behalf (python act_quant
     // placement — see Step::ActQuant)
     let mut last_gemm: Option<usize> = None;
+    // the qlayer whose aq slot produced the current activation — the
+    // static QIdx edge typing recorded as each GEMM step's `qin`.
+    // Anything that leaves the level grid (standalone bn/relu, pooling,
+    // a residual add before its re-snap) resets it to None (f32 seam).
+    let mut cur_src: Option<usize> = None;
     while i < ops.len() {
         match ops[i] {
             Op::Flatten => {
+                // a reshape: the edge type passes through
                 plan.push(Step::Flatten);
                 i += 1;
             }
@@ -150,14 +186,18 @@ fn compile(ops: &[Op]) -> Vec<Step> {
                 let mut ep = fuse_epilogue(ops, &mut i, None);
                 ep.aq = ep.relu.then_some(q);
                 last_gemm = Some(q);
-                plan.push(Step::Conv { q, stride, ep });
+                let qin = cur_src;
+                cur_src = ep.aq;
+                plan.push(Step::Conv { q, stride, ep, qin });
             }
             Op::Depthwise { q, stride } => {
                 i += 1;
                 let mut ep = fuse_epilogue(ops, &mut i, None);
                 ep.aq = ep.relu.then_some(q);
                 last_gemm = Some(q);
-                plan.push(Step::Depthwise { q, stride, ep });
+                let qin = cur_src;
+                cur_src = ep.aq;
+                plan.push(Step::Depthwise { q, stride, ep, qin });
             }
             Op::Dense { q, bias } => {
                 i += 1;
@@ -166,25 +206,32 @@ fn compile(ops: &[Op]) -> Vec<Step> {
                 // final (relu-less) dense keeps f32 logits
                 ep.aq = ep.relu.then_some(q);
                 last_gemm = Some(q);
-                plan.push(Step::Dense { q, ep });
+                let qin = cur_src;
+                cur_src = ep.aq;
+                plan.push(Step::Dense { q, ep, qin });
             }
             Op::BatchNorm { gamma, beta, mean, var } => {
                 plan.push(Step::BatchNorm { gamma, beta, mean, var });
+                cur_src = None;
                 i += 1;
             }
             Op::Relu => {
                 let after_add =
                     matches!(plan.last(), Some(Step::AddResidual));
                 plan.push(Step::Relu);
+                cur_src = None;
                 if after_add {
                     if let Some(q) = last_gemm {
                         plan.push(Step::ActQuant { q });
+                        // the post-residual re-snap restores the grid
+                        cur_src = Some(q);
                     }
                 }
                 i += 1;
             }
             Op::GlobalAvgPool => {
                 plan.push(Step::GlobalAvgPool);
+                cur_src = None;
                 i += 1;
             }
             Op::PushResidual => {
@@ -208,6 +255,9 @@ fn compile(ops: &[Op]) -> Vec<Step> {
             }
             Op::AddResidual => {
                 plan.push(Step::AddResidual);
+                // the sum of two snapped tensors is off-grid until the
+                // following relu's ActQuant re-snaps it
+                cur_src = None;
                 i += 1;
             }
         }
@@ -231,6 +281,34 @@ pub struct PreparedWeights {
     /// param position (empty vec elsewhere) — hoisted out of the hot
     /// path so the fused epilogue does no divides/sqrts per batch
     pub bn_inv: Vec<Vec<f32>>,
+    /// v3 LUT² working set, one slot per qlayer: `Some` exactly for
+    /// the GEMM steps whose input edge is a live [`EdgeType::QIdx`].
+    /// Built by [`PreparedWeights::prepare_v3`] (automatic at
+    /// construction; re-run it after installing aq tables).
+    pub v3: Vec<Option<V3Layer>>,
+}
+
+/// Per-layer v3 working set: the plan-compile-time product table plus
+/// the bit-packed transposed weight indices the LUT² GEMM streams.
+#[derive(Debug, Clone)]
+pub struct V3Layer {
+    /// bit-packed transposed `[cout, K]` weight indices (GEMM layers;
+    /// `None` for depthwise, which gathers the tap-major unpacked
+    /// `PreparedWeights::idx` directly)
+    pub widx: Option<PackedBits>,
+    /// row-major `k_w × stride` product table:
+    /// `ActQuantTable::product_table` against this layer's codebook
+    pub table: Vec<f32>,
+    /// table row stride `k_a + 1` (zero pad column at `k_a`)
+    pub stride: usize,
+}
+
+impl V3Layer {
+    /// Resident bytes of the product table (the stats-JSON surface for
+    /// the paper's BOPS-vs-LUT-memory tradeoff).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<f32>()
+    }
 }
 
 impl PreparedWeights {
@@ -288,7 +366,50 @@ impl PreparedWeights {
                 }
             }
         }
-        PreparedWeights { idx, deq: Vec::new(), bn_inv }
+        let mut w =
+            PreparedWeights { idx, deq: Vec::new(), bn_inv, v3: Vec::new() };
+        w.prepare_v3(m, graph);
+        w
+    }
+
+    /// Build the v3 LUT² working set: for every GEMM step whose static
+    /// input edge ([`Step`] `qin`) resolves to a live
+    /// [`EdgeType::QIdx`] against `m`'s aq tables, precompute the
+    /// `k_w × (k_a + 1)` product table and (for dense/conv) bit-pack
+    /// the transposed weight indices. Idempotent; cheap on aq-less
+    /// models (every slot stays `None`, so v3 execution degenerates to
+    /// the v2 kernels — which is why it is refused up front instead).
+    ///
+    /// Called at construction; **must be re-run after installing aq
+    /// tables** on a model whose weights were prepared earlier
+    /// (`ServeModel::calibrate_aq` does this).
+    pub fn prepare_v3(&mut self, m: &FrozenModel, graph: &Graph) {
+        self.v3 = vec![None; m.layers.len()];
+        let Some(aq) = m.aq.as_ref() else { return };
+        for st in &graph.plan {
+            let (q, qin, dw) = match *st {
+                Step::Dense { q, qin, .. } => (q, qin, false),
+                Step::Conv { q, qin, .. } => (q, qin, false),
+                Step::Depthwise { q, qin, .. } => (q, qin, true),
+                _ => continue,
+            };
+            let Some(src) = qin else { continue };
+            let Some(t) = aq.table(src) else { continue };
+            let l = &m.layers[q];
+            let (table, stride) = t.product_table(l.levels());
+            // dense/conv stream the [cout, K]-transposed indices the
+            // GEMM wants; depthwise gathers the tap-major unpacked
+            // copy in `idx` directly
+            let widx = (!dw)
+                .then(|| PackedBits::pack(&self.idx[q], l.indices.bits));
+            self.v3[q] = Some(V3Layer { widx, table, stride });
+        }
+    }
+
+    /// Total resident product-table bytes across layers (0 when v3 is
+    /// not prepared / the model has no aq tables).
+    pub fn v3_table_bytes(&self) -> usize {
+        self.v3.iter().flatten().map(|v| v.table_bytes()).sum()
     }
 
     /// True when the f32 reference copies are resident.
@@ -338,12 +459,17 @@ pub struct ExecBuffers {
     /// quantized-activation ping-pong pair: bin indices of the most
     /// recent activation-quantized tensor (`qcur[i]` is the table bin
     /// of `cur[i]` right after an aq site). Written only when
-    /// [`ExecBuffers::track_qact`] is set AND the model carries aq
-    /// tables — the serving default keeps them empty, so the f32 hot
-    /// path pays nothing. Arena-owned like every other buffer: grown
-    /// once, reused verbatim afterwards.
+    /// [`ExecBuffers::track_qact`] is set (or the engine is
+    /// `KernelMode::LutV3`, which consumes the index stream) AND the
+    /// model carries aq tables — the serving default keeps them empty,
+    /// so the f32 hot path pays nothing. Arena-owned like every other
+    /// buffer: grown once, reused verbatim afterwards.
     qcur: Vec<u8>,
     qspare: Vec<u8>,
+    /// v3 quantized im2col patches: u16 because the SAME-conv padding
+    /// sentinel is the product table's zero column at index `k_a`,
+    /// which is 256 at 8-bit aq — one past what u8 can hold
+    qpatches: Vec<u16>,
     /// row-shard threads for the LUT-GEMM (1 = fully serial; serving
     /// workers usually keep 1 and scale via the worker pool instead)
     pub threads: usize,
@@ -368,6 +494,7 @@ impl ExecBuffers {
             free: Vec::new(),
             qcur: Vec::new(),
             qspare: Vec::new(),
+            qpatches: Vec::new(),
             threads: threads.max(1),
             track_qact: false,
         }
@@ -392,6 +519,7 @@ impl ExecBuffers {
             (self.patches.as_ptr() as usize, self.patches.capacity()),
             (self.qcur.as_ptr() as usize, self.qcur.capacity()),
             (self.qspare.as_ptr() as usize, self.qspare.capacity()),
+            (self.qpatches.as_ptr() as usize, self.qpatches.capacity()),
         ];
         self.gemm.fingerprint(&mut fp);
         for b in &self.free {
@@ -684,6 +812,16 @@ impl Graph {
                  set); build with PreparedWeights::new"
             ));
         }
+        if mode == KernelMode::LutV3 && m.aq.is_none() {
+            // the LUT² product table is weight-level × activation-level:
+            // without calibrated activation tables there is no index
+            // stream to consume. Refusing beats silently serving v2.
+            return Err(anyhow!(
+                "--engine v3 needs activation-quant tables (LUT² \
+                 indexes weight level × activation level); calibrate \
+                 with `uniq aq-calibrate` or serve --engine v2"
+            ));
+        }
         let ExecBuffers {
             cur,
             spare,
@@ -693,11 +831,13 @@ impl Graph {
             free,
             qcur,
             qspare,
+            qpatches,
             threads,
             track_qact,
         } = bufs;
         let threads = *threads;
-        let track = *track_qact;
+        // v3 consumes the bin-index stream, so it always tracks
+        let track = *track_qact || mode == KernelMode::LutV3;
         cur.clear();
         cur.extend_from_slice(x);
         let (mut h, mut w, mut c) = (ih, iw, ic);
@@ -708,7 +848,7 @@ impl Graph {
                     h = 1;
                     w = 1;
                 }
-                Step::Dense { q, ep } => {
+                Step::Dense { q, ep, qin } => {
                     let l = &m.layers[*q];
                     let (cin, cout) = (l.shape[0], l.shape[1]);
                     let d = h * w * c;
@@ -718,20 +858,41 @@ impl Graph {
                             l.name
                         ));
                     }
-                    run_gemm(
-                        m,
-                        weights,
-                        *q,
-                        cur,
-                        batch,
-                        cin,
-                        cout,
-                        spare,
-                        resolve_ep(m, weights, ep, aq_on),
-                        mode,
-                        threads,
-                        gemm,
-                    );
+                    if let Some(v3l) =
+                        v3_edge(m, weights, *q, *qin, mode, aq_on)?
+                    {
+                        // live QIdx edge: consume the bin-index stream
+                        // the previous aq site left in qcur
+                        size_out(spare, batch * cout);
+                        kn::lut2_matmul(
+                            &qcur[..batch * cin],
+                            v3l.widx.as_ref().expect("dense v3 widx"),
+                            &v3l.table,
+                            v3l.stride,
+                            batch,
+                            cin,
+                            cout,
+                            spare,
+                            resolve_ep(m, weights, ep, aq_on),
+                            threads,
+                            gemm,
+                        );
+                    } else {
+                        run_gemm(
+                            m,
+                            weights,
+                            *q,
+                            cur,
+                            batch,
+                            cin,
+                            cout,
+                            spare,
+                            resolve_ep(m, weights, ep, aq_on),
+                            mode,
+                            threads,
+                            gemm,
+                        );
+                    }
                     std::mem::swap(cur, spare);
                     h = 1;
                     w = 1;
@@ -741,7 +902,7 @@ impl Graph {
                         track, &mut hook,
                     );
                 }
-                Step::Conv { q, stride, ep } => {
+                Step::Conv { q, stride, ep, qin } => {
                     let l = &m.layers[*q];
                     if l.shape.len() != 4 {
                         return Err(anyhow!(
@@ -758,23 +919,59 @@ impl Graph {
                             l.name
                         ));
                     }
-                    let (oh, ow) = kn::im2col_into(
-                        cur, batch, h, w, cin, ksize, *stride, patches,
-                    );
-                    run_gemm(
-                        m,
-                        weights,
-                        *q,
-                        patches,
-                        batch * oh * ow,
-                        ksize * ksize * cin,
-                        cout,
-                        spare,
-                        resolve_ep(m, weights, ep, aq_on),
-                        mode,
-                        threads,
-                        gemm,
-                    );
+                    let (oh, ow) = if let Some(v3l) =
+                        v3_edge(m, weights, *q, *qin, mode, aq_on)?
+                    {
+                        // live QIdx edge: lower the *index* image (no
+                        // f32 im2col pass at all); SAME padding becomes
+                        // the product table's zero column at k_a
+                        let (oh, ow) = kn::qim2col_into(
+                            &qcur[..batch * h * w * cin],
+                            batch,
+                            h,
+                            w,
+                            cin,
+                            ksize,
+                            *stride,
+                            (v3l.stride - 1) as u16,
+                            qpatches,
+                        );
+                        let rows = batch * oh * ow;
+                        size_out(spare, rows * cout);
+                        kn::lut2_matmul(
+                            &qpatches[..],
+                            v3l.widx.as_ref().expect("conv v3 widx"),
+                            &v3l.table,
+                            v3l.stride,
+                            rows,
+                            ksize * ksize * cin,
+                            cout,
+                            spare,
+                            resolve_ep(m, weights, ep, aq_on),
+                            threads,
+                            gemm,
+                        );
+                        (oh, ow)
+                    } else {
+                        let (oh, ow) = kn::im2col_into(
+                            cur, batch, h, w, cin, ksize, *stride, patches,
+                        );
+                        run_gemm(
+                            m,
+                            weights,
+                            *q,
+                            patches,
+                            batch * oh * ow,
+                            ksize * ksize * cin,
+                            cout,
+                            spare,
+                            resolve_ep(m, weights, ep, aq_on),
+                            mode,
+                            threads,
+                            gemm,
+                        );
+                        (oh, ow)
+                    };
                     std::mem::swap(cur, spare);
                     h = oh;
                     w = ow;
@@ -784,7 +981,7 @@ impl Graph {
                         track, &mut hook,
                     );
                 }
-                Step::Depthwise { q, stride, ep } => {
+                Step::Depthwise { q, stride, ep, qin } => {
                     let l = &m.layers[*q];
                     let (ksize, cc) = (l.shape[0], l.shape[3]);
                     if c != cc {
@@ -794,11 +991,16 @@ impl Graph {
                         ));
                     }
                     let rep = resolve_ep(m, weights, ep, aq_on);
-                    let (oh, ow) = match mode {
-                        KernelMode::Lut => kn::lut_depthwise_into(
-                            cur,
+                    let v3l = v3_edge(m, weights, *q, *qin, mode, aq_on)?;
+                    let (oh, ow) = if let Some(v3l) = v3l {
+                        // live QIdx edge: taps gather straight from the
+                        // tap-major unpacked indices (OOB taps are
+                        // skipped by the loop, so no pad sentinel)
+                        kn::lut2_depthwise_into(
+                            &qcur[..batch * h * w * cc],
                             &weights.idx[*q],
-                            &l.codebook,
+                            &v3l.table,
+                            v3l.stride,
                             batch,
                             h,
                             w,
@@ -807,20 +1009,40 @@ impl Graph {
                             *stride,
                             rep,
                             spare,
-                        ),
-                        KernelMode::DequantF32 => kn::depthwise_f32_into(
-                            cur,
-                            &weights.deq[*q],
-                            batch,
-                            h,
-                            w,
-                            cc,
-                            ksize,
-                            *stride,
-                            rep,
-                            spare,
-                        ),
-                        KernelMode::LutV1 => unreachable!(),
+                        )
+                    } else {
+                        match mode {
+                            KernelMode::Lut | KernelMode::LutV3 => {
+                                kn::lut_depthwise_into(
+                                    cur,
+                                    &weights.idx[*q],
+                                    &l.codebook,
+                                    batch,
+                                    h,
+                                    w,
+                                    cc,
+                                    ksize,
+                                    *stride,
+                                    rep,
+                                    spare,
+                                )
+                            }
+                            KernelMode::DequantF32 => {
+                                kn::depthwise_f32_into(
+                                    cur,
+                                    &weights.deq[*q],
+                                    batch,
+                                    h,
+                                    w,
+                                    cc,
+                                    ksize,
+                                    *stride,
+                                    rep,
+                                    spare,
+                                )
+                            }
+                            KernelMode::LutV1 => unreachable!(),
+                        }
                     };
                     std::mem::swap(cur, spare);
                     h = oh;
@@ -1022,6 +1244,9 @@ impl Graph {
                         ksize,
                         stride,
                     ),
+                    KernelMode::LutV3 => {
+                        unreachable!("v3 runs on the arena executor")
+                    }
                 };
                 Ok(Act { data, h: oh, w: ow, c })
             }
@@ -1054,6 +1279,9 @@ impl Graph {
                         cout,
                         &mut out,
                     ),
+                    KernelMode::LutV3 => {
+                        unreachable!("v3 runs on the arena executor")
+                    }
                 }
                 if let Some(b) = bias {
                     kn::bias_add(&mut out, &m.params[b].data, batch, cout);
@@ -1261,11 +1489,81 @@ impl Graph {
         }
         bops::Complexity { bops, model_bits, params, macs }
     }
+
+    /// Static edge type of every GEMM step of the compiled plan, in
+    /// plan order, resolved against `m`'s aq tables: `(qlayer,
+    /// EdgeType)`. This is the v3 coverage report — a `QIdx` edge runs
+    /// on the LUT² kernel under `KernelMode::LutV3`, an `F32` edge
+    /// falls back to the v2 kernel. Downsample steps read the *saved*
+    /// (pre-block) tensor and are always `F32` seams.
+    pub fn gemm_edges(&self, m: &FrozenModel) -> Vec<(usize, EdgeType)> {
+        let bits = m.bits_a().min(8) as u8;
+        let live =
+            |src: usize| m.aq.as_ref().and_then(|a| a.table(src)).is_some();
+        let mut out = Vec::new();
+        for st in &self.plan {
+            let (q, qin) = match *st {
+                Step::Dense { q, qin, .. }
+                | Step::Conv { q, qin, .. }
+                | Step::Depthwise { q, qin, .. } => (q, qin),
+                Step::Downsample { q, .. } => (q, None),
+                _ => continue,
+            };
+            let et = match qin {
+                Some(src) if live(src) => EdgeType::QIdx { src, bits },
+                _ => EdgeType::F32,
+            };
+            out.push((q, et));
+        }
+        out
+    }
 }
 
 /// Activation-quant table for qlayer `q`, if the model carries one.
 fn aq_table(m: &FrozenModel, q: usize) -> Option<&ActQuantTable> {
     m.aq.as_ref().and_then(|a| a.table(q))
+}
+
+/// Size an output buffer, reusing already-right-sized storage.
+fn size_out(out: &mut Vec<f32>, n: usize) {
+    if out.len() != n {
+        out.clear();
+        out.resize(n, 0.0);
+    }
+}
+
+/// Resolve a GEMM step's static `qin` slot to a live v3 working set,
+/// or `None` for a dead edge (not v3 mode, calibration pass, no table
+/// for the source layer) — the caller then runs the v2 kernel, which
+/// is the "auto-inserted f32 fallback" of the plan.
+///
+/// Erroring on a live edge with no prepared [`V3Layer`] catches the
+/// one way the invariant can break: weights prepared before aq tables
+/// were installed and never refreshed.
+fn v3_edge<'a>(
+    m: &FrozenModel,
+    weights: &'a PreparedWeights,
+    q: usize,
+    qin: Option<usize>,
+    mode: KernelMode,
+    aq_on: bool,
+) -> Result<Option<&'a V3Layer>> {
+    if mode != KernelMode::LutV3 || !aq_on {
+        return Ok(None);
+    }
+    let Some(src) = qin else { return Ok(None) };
+    if aq_table(m, src).is_none() {
+        return Ok(None);
+    }
+    match weights.v3.get(q).and_then(|v| v.as_ref()) {
+        Some(v) => Ok(Some(v)),
+        None => Err(anyhow!(
+            "v3 working set missing for qlayer {q} ({}): weights were \
+             prepared before aq tables existed — call \
+             PreparedWeights::prepare_v3 after calibration",
+            m.layers[q].name
+        )),
+    }
 }
 
 /// Post-step bookkeeping at an aq site: during calibration hand the
@@ -1357,13 +1655,11 @@ fn run_gemm(
     threads: usize,
     gemm: &mut kn::GemmScratchPool,
 ) {
-    let n = rows * cout;
-    if out.len() != n {
-        out.clear();
-        out.resize(n, 0.0);
-    }
+    size_out(out, rows * cout);
     match mode {
-        KernelMode::Lut => kn::lut_matmul_tiled(
+        // a LutV3 run lands here only on a dead (F32) edge — the
+        // auto-inserted fallback runs the step on the v2 kernel
+        KernelMode::Lut | KernelMode::LutV3 => kn::lut_matmul_tiled(
             input,
             &weights.idx[q],
             &m.layers[q].codebook,
@@ -1429,6 +1725,7 @@ fn conv_apply_v1(
             cout,
             &mut out,
         ),
+        KernelMode::LutV3 => unreachable!("v3 runs on the arena executor"),
     }
     Ok(Act { data: out, h: oh, w: ow, c: cout })
 }

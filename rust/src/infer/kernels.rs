@@ -14,11 +14,22 @@
 //! outputs agree bit-for-bit; parity tests assert ≤ 1e-5 to stay robust
 //! if either path is ever reordered (e.g. SIMD blocking).
 //!
-//! Two generations of the LUT-GEMM live here:
+//! Three generations of the LUT-GEMM live here:
 //!
 //! * [`lut_matmul`] — the v1 kernel (PR 1): row-blocked, one output
 //!   channel at a time, allocates its transpose/accumulator scratch per
 //!   call. Kept as the measured baseline (`KernelMode::LutV1`).
+//! * [`lut2_matmul`] — the v3 LUT² kernel: both operands stay integer
+//!   indices on the hot path. Activations arrive as the aq bin-index
+//!   stream (`ExecBuffers` ping-pong pair), weights as bit-packed
+//!   codebook indices, and the inner loop is a gather into a
+//!   precomputed `k_w × (k_a + 1)` product table plus an add — no
+//!   dequant pass and no f32 multiply (paper §4.2's "look-up table
+//!   availability" regime, executed rather than priced). An explicit
+//!   16-lane variant ([`lut2_matmul_lanes16`]) widens the o-tile to 16
+//!   accumulators; both variants keep per-(r, o) accumulation
+//!   j-ascending, so v3 output is bit-identical to v2 (the product
+//!   table stores the exact f32 products v2 would multiply).
 //! * [`lut_matmul_tiled`] — the v2 kernel: same row blocking, but
 //!   [`O_TILE`] output channels advance together so each transposed
 //!   activation load feeds 4 accumulator rows, the weight tile is
@@ -36,6 +47,8 @@
 //! (one filter per channel, 9 taps) skip im2col and dequantize through the
 //! codebook in place; the fused epilogue is applied per output pixel right
 //! after its taps accumulate, while the row is cache-hot.
+
+use crate::infer::packed::PackedBits;
 
 /// TensorFlow/XLA "SAME" padding: output size and leading pad.
 pub fn same_pads(input: usize, ksize: usize, stride: usize) -> (usize, usize) {
@@ -254,6 +267,11 @@ pub struct GemmScratch {
     xt: Vec<f32>,
     acc: Vec<f32>,
     wtile: Vec<f32>,
+    /// v3: one gathered row of packed weight indices
+    qrow: Vec<u8>,
+    /// v3: the pre-scaled (`index * table_stride`) weight-index tile,
+    /// sized for the widest variant ([`V3_LANES`] rows)
+    qw: Vec<u32>,
 }
 
 impl GemmScratch {
@@ -266,6 +284,15 @@ impl GemmScratch {
         }
         if self.wtile.len() < O_TILE * cin {
             self.wtile.resize(O_TILE * cin, 0.0);
+        }
+    }
+
+    fn ensure_v3(&mut self, k: usize) {
+        if self.qrow.len() < k {
+            self.qrow.resize(k, 0);
+        }
+        if self.qw.len() < V3_LANES * k {
+            self.qw.resize(V3_LANES * k, 0);
         }
     }
 }
@@ -296,6 +323,8 @@ impl GemmScratchPool {
             out.push((s.xt.as_ptr() as usize, s.xt.capacity()));
             out.push((s.acc.as_ptr() as usize, s.acc.capacity()));
             out.push((s.wtile.as_ptr() as usize, s.wtile.capacity()));
+            out.push((s.qrow.as_ptr() as usize, s.qrow.capacity()));
+            out.push((s.qw.as_ptr() as usize, s.qw.capacity()));
         }
     }
 }
@@ -532,6 +561,430 @@ fn lut_matmul_shard(
         }
         r0 += rb;
     }
+}
+
+/// Lane width of the explicit unrolled v3 variant: 16 output channels
+/// advance per activation-index load (vs [`O_TILE`] = 4). The index
+/// stream is u8/u16, so 16 lanes still fit one cache line of gathered
+/// offsets; the dispatcher is gated by the `v3-lanes16` cargo feature
+/// while both variants always compile and stay bit-compared in tests.
+pub const V3_LANES: usize = 16;
+
+/// Index element of a v3 activation stream.
+///
+/// Dense layers feed the u8 aq bin indices straight from the
+/// `ExecBuffers` ping-pong pair; conv layers feed u16 patch buffers
+/// ([`qim2col_into`]) because the SAME-padding sentinel `k_a` does not
+/// fit in u8 when the activation table has 256 levels (8-bit aq).
+pub trait QIdx: Copy + Send + Sync {
+    fn ix(self) -> usize;
+}
+
+impl QIdx for u8 {
+    #[inline(always)]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+impl QIdx for u16 {
+    #[inline(always)]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+/// v3 LUT² GEMM: `out[r, o] = Σ_j table[widx[o, j] · stride + a[r, j]]`.
+///
+/// `a` is the `[rows, k]` activation *bin-index* stream (u8 from the aq
+/// ping-pong pair, or u16 conv patches with the pad sentinel `k_a`);
+/// `widx` is the bit-packed transposed `[cout, k]` weight-index matrix;
+/// `table` is the per-layer `k_w × stride` product table
+/// (`ActQuantTable::product_table`: entry `[w, a] = codebook[w] ·
+/// levels[a]`, pad column zero). The hot loop is gather + add only — no
+/// dequant pass, no f32 multiply.
+///
+/// Dispatches to the [`O_TILE`] tile ([`lut2_matmul_otile`]) or, with
+/// the `v3-lanes16` feature, the explicit 16-lane unroll
+/// ([`lut2_matmul_lanes16`]). Both keep per-(r, o) accumulation
+/// j-ascending and both shard rows exactly like [`lut_matmul_tiled`],
+/// so output is bit-identical to v2 at any thread count and under
+/// either feature setting.
+#[allow(clippy::too_many_arguments)]
+pub fn lut2_matmul<I: QIdx>(
+    a: &[I],
+    widx: &PackedBits,
+    table: &[f32],
+    stride: usize,
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    threads: usize,
+    pool: &mut GemmScratchPool,
+) {
+    #[cfg(not(feature = "v3-lanes16"))]
+    lut2_matmul_otile(
+        a, widx, table, stride, rows, k, cout, out, ep, threads, pool,
+    );
+    #[cfg(feature = "v3-lanes16")]
+    lut2_matmul_lanes16(
+        a, widx, table, stride, rows, k, cout, out, ep, threads, pool,
+    );
+}
+
+/// Row-shard a v3 GEMM across scoped workers (the [`lut_matmul_tiled`]
+/// sharding policy verbatim: single shard under [`GEMM_PAR_MIN_MACS`],
+/// fixed `div_ceil` split points above it).
+#[allow(clippy::too_many_arguments)]
+fn lut2_sharded<I: QIdx>(
+    a: &[I],
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    threads: usize,
+    pool: &mut GemmScratchPool,
+    shard: impl Fn(&[I], usize, &mut [f32], &mut GemmScratch) + Sync,
+) {
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * cout);
+    if rows == 0 {
+        return;
+    }
+    let shards = if rows * k * cout < GEMM_PAR_MIN_MACS {
+        1
+    } else {
+        threads.clamp(1, rows)
+    };
+    pool.ensure_workers(shards);
+    if shards == 1 {
+        shard(a, rows, out, &mut pool.per_worker[0]);
+        return;
+    }
+    let chunk = rows.div_ceil(shards);
+    std::thread::scope(|s| {
+        let shard = &shard;
+        let mut out_rest = out;
+        let mut r0 = 0usize;
+        for sc in pool.per_worker[..shards].iter_mut() {
+            if r0 >= rows {
+                break;
+            }
+            let r1 = (r0 + chunk).min(rows);
+            let (o_head, o_tail) =
+                std::mem::take(&mut out_rest).split_at_mut((r1 - r0) * cout);
+            out_rest = o_tail;
+            let a_sh = &a[r0 * k..r1 * k];
+            s.spawn(move || shard(a_sh, r1 - r0, o_head, sc));
+            r0 = r1;
+        }
+    });
+}
+
+/// v3 with the [`O_TILE`]-wide tile (the auto-vectorizer-friendly
+/// shape: 4 gathered offsets per u8/u16 index load).
+#[allow(clippy::too_many_arguments)]
+pub fn lut2_matmul_otile<I: QIdx>(
+    a: &[I],
+    widx: &PackedBits,
+    table: &[f32],
+    stride: usize,
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    threads: usize,
+    pool: &mut GemmScratchPool,
+) {
+    debug_assert_eq!(widx.len, k * cout);
+    lut2_sharded(a, rows, k, cout, out, threads, pool, |a, rows, out, sc| {
+        lut2_otile_shard(a, widx, table, stride, rows, k, cout, out, ep, sc)
+    });
+}
+
+/// v3 with the explicit unrolled [`V3_LANES`]-wide tile.
+#[allow(clippy::too_many_arguments)]
+pub fn lut2_matmul_lanes16<I: QIdx>(
+    a: &[I],
+    widx: &PackedBits,
+    table: &[f32],
+    stride: usize,
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    threads: usize,
+    pool: &mut GemmScratchPool,
+) {
+    debug_assert_eq!(widx.len, k * cout);
+    lut2_sharded(a, rows, k, cout, out, threads, pool, |a, rows, out, sc| {
+        lut2_lanes16_shard(a, widx, table, stride, rows, k, cout, out, ep, sc)
+    });
+}
+
+/// Gather + pre-scale `ot` transposed weight-index rows into the u32
+/// tile: `qw[oo·k + j] = widx[o0+oo, j] · stride`, so the accumulation
+/// loop is a single add + table gather per (lane, j).
+#[inline]
+fn lut2_fill_wtile(
+    widx: &PackedBits,
+    stride: usize,
+    o0: usize,
+    ot: usize,
+    k: usize,
+    qrow: &mut [u8],
+    qw: &mut [u32],
+) {
+    for oo in 0..ot {
+        widx.gather_row((o0 + oo) * k, &mut qrow[..k]);
+        let wrow = &mut qw[oo * k..(oo + 1) * k];
+        for (w, &ix) in wrow.iter_mut().zip(qrow.iter()) {
+            *w = ix as u32 * stride as u32;
+        }
+    }
+}
+
+/// One shard of the O_TILE v3 kernel.
+#[allow(clippy::too_many_arguments)]
+fn lut2_otile_shard<I: QIdx>(
+    a: &[I],
+    widx: &PackedBits,
+    table: &[f32],
+    stride: usize,
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    scratch: &mut GemmScratch,
+) {
+    if rows == 0 {
+        return;
+    }
+    scratch.ensure_v3(k);
+    let GemmScratch { qrow, qw, .. } = scratch;
+    let mut o0 = 0usize;
+    while o0 < cout {
+        let ot = O_TILE.min(cout - o0);
+        lut2_fill_wtile(widx, stride, o0, ot, k, qrow, qw);
+        if ot == O_TILE {
+            let w0 = &qw[..k];
+            let w1 = &qw[k..2 * k];
+            let w2 = &qw[2 * k..3 * k];
+            let w3 = &qw[3 * k..4 * k];
+            for r in 0..rows {
+                let arow = &a[r * k..(r + 1) * k];
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (j, &av) in arow.iter().enumerate() {
+                    let aj = av.ix();
+                    s0 += table[w0[j] as usize + aj];
+                    s1 += table[w1[j] as usize + aj];
+                    s2 += table[w2[j] as usize + aj];
+                    s3 += table[w3[j] as usize + aj];
+                }
+                let ob = &mut out[r * cout + o0..r * cout + o0 + O_TILE];
+                ob[0] = ep.apply(s0, o0);
+                ob[1] = ep.apply(s1, o0 + 1);
+                ob[2] = ep.apply(s2, o0 + 2);
+                ob[3] = ep.apply(s3, o0 + 3);
+            }
+        } else {
+            for oo in 0..ot {
+                let wrow = &qw[oo * k..(oo + 1) * k];
+                for r in 0..rows {
+                    let arow = &a[r * k..(r + 1) * k];
+                    let mut s = 0.0f32;
+                    for (j, &av) in arow.iter().enumerate() {
+                        s += table[wrow[j] as usize + av.ix()];
+                    }
+                    out[r * cout + o0 + oo] = ep.apply(s, o0 + oo);
+                }
+            }
+        }
+        o0 += ot;
+    }
+}
+
+/// One shard of the 16-lane v3 kernel: a fixed-bound inner lane loop
+/// over per-lane row slices, which LLVM fully unrolls — 16 independent
+/// accumulators per activation-index load.
+#[allow(clippy::too_many_arguments)]
+fn lut2_lanes16_shard<I: QIdx>(
+    a: &[I],
+    widx: &PackedBits,
+    table: &[f32],
+    stride: usize,
+    rows: usize,
+    k: usize,
+    cout: usize,
+    out: &mut [f32],
+    ep: Epilogue<'_>,
+    scratch: &mut GemmScratch,
+) {
+    if rows == 0 {
+        return;
+    }
+    scratch.ensure_v3(k);
+    let GemmScratch { qrow, qw, .. } = scratch;
+    let mut o0 = 0usize;
+    while o0 < cout {
+        let ot = V3_LANES.min(cout - o0);
+        lut2_fill_wtile(widx, stride, o0, ot, k, qrow, qw);
+        if ot == V3_LANES {
+            let wr: [&[u32]; V3_LANES] =
+                std::array::from_fn(|l| &qw[l * k..(l + 1) * k]);
+            for r in 0..rows {
+                let arow = &a[r * k..(r + 1) * k];
+                let mut s = [0.0f32; V3_LANES];
+                for (j, &av) in arow.iter().enumerate() {
+                    let aj = av.ix();
+                    for l in 0..V3_LANES {
+                        s[l] += table[wr[l][j] as usize + aj];
+                    }
+                }
+                let ob = &mut out[r * cout + o0..r * cout + o0 + V3_LANES];
+                for (l, ov) in ob.iter_mut().enumerate() {
+                    *ov = ep.apply(s[l], o0 + l);
+                }
+            }
+        } else {
+            // cout tail: scalar per-channel accumulation, j-ascending
+            for oo in 0..ot {
+                let wrow = &qw[oo * k..(oo + 1) * k];
+                for r in 0..rows {
+                    let arow = &a[r * k..(r + 1) * k];
+                    let mut s = 0.0f32;
+                    for (j, &av) in arow.iter().enumerate() {
+                        s += table[wrow[j] as usize + av.ix()];
+                    }
+                    out[r * cout + o0 + oo] = ep.apply(s, o0 + oo);
+                }
+            }
+        }
+        o0 += ot;
+    }
+}
+
+/// [`im2col_into`] over a bin-index image: widen the u8 aq indices to a
+/// u16 patch buffer whose padding positions hold the sentinel `pad`
+/// (the product table's zero column, `k_a`) instead of 0.0 — the v3
+/// conv path's only per-layer buffer. Inner dimension ordered
+/// (kh, kw, c) exactly like [`im2col_into`], so patch rows line up with
+/// the same transposed HWIO weight flattening and the accumulation
+/// visits taps in the identical order.
+#[allow(clippy::too_many_arguments)]
+pub fn qim2col_into(
+    q: &[u8],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    pad: u16,
+    patches: &mut Vec<u16>,
+) -> (usize, usize) {
+    let (oh, pad_h) = same_pads(h, ksize, stride);
+    let (ow, pad_w) = same_pads(w, ksize, stride);
+    let row_len = ksize * ksize * c;
+    patches.clear();
+    patches.resize(batch * oh * ow * row_len, pad);
+    for b in 0..batch {
+        let img = &q[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row0 = ((b * oh + oy) * ow + ox) * row_len;
+                for kh in 0..ksize {
+                    let iy = (oy * stride + kh) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // pad sentinel stays in place
+                    }
+                    for kw in 0..ksize {
+                        let ix = (ox * stride + kw) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        let dst = row0 + (kh * ksize + kw) * c;
+                        for (d, &s) in patches[dst..dst + c]
+                            .iter_mut()
+                            .zip(&img[src..src + c])
+                        {
+                            *d = s as u16;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// v3 depthwise conv: accumulate product-table gathers over the u8
+/// bin-index image directly — no pad sentinel needed because
+/// out-of-bounds taps are skipped exactly like [`lut_depthwise_into`]
+/// (same loop structure, same `continue`s), so the accumulation order
+/// and the term values are bit-identical to the v2 path. `stride_t` is
+/// the table row stride (`k_a + 1`).
+#[allow(clippy::too_many_arguments)]
+pub fn lut2_depthwise_into(
+    qa: &[u8],
+    idx: &[u8],
+    table: &[f32],
+    stride_t: usize,
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ksize: usize,
+    stride: usize,
+    ep: Epilogue<'_>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let (oh, pad_h) = same_pads(h, ksize, stride);
+    let (ow, pad_w) = same_pads(w, ksize, stride);
+    out.clear();
+    out.resize(batch * oh * ow * c, 0.0);
+    for b in 0..batch {
+        let img = &qa[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let o0 = ((b * oh + oy) * ow + ox) * c;
+                let orow = &mut out[o0..o0 + c];
+                for kh in 0..ksize {
+                    let iy = (oy * stride + kh) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..ksize {
+                        let ix =
+                            (ox * stride + kw) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        let tap = kh * ksize + kw;
+                        for (ch, v) in orow.iter_mut().enumerate() {
+                            *v += table[idx[tap * c + ch] as usize
+                                * stride_t
+                                + img[src + ch] as usize];
+                        }
+                    }
+                }
+                if !ep.is_noop() {
+                    for (ch, v) in orow.iter_mut().enumerate() {
+                        *v = ep.apply(*v, ch);
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
 }
 
 /// f32 reference GEMM with the same accumulation order as the LUT
@@ -1149,6 +1602,281 @@ mod tests {
         lut_matmul(&x, &idx_t, &lv, rows, cin, cout, &mut raw);
         epilogue_rows(&mut raw, cout, ep);
         assert_eq!(raw, want);
+    }
+
+    /// A k_a-level uniform activation table plus the (bins, snapped)
+    /// pair of a random matrix pushed through it — the exact state the
+    /// aq epilogue leaves in (`cur`, `qcur`) for a v3 consumer.
+    fn aq_stream(
+        n: usize,
+        ka: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<u8>, Vec<f32>) {
+        let step = 2.0 / ka as f32;
+        let levels: Vec<f32> =
+            (0..ka).map(|i| -1.0 + step * (i as f32 + 0.5)).collect();
+        let thresholds: Vec<f32> =
+            (1..ka).map(|i| -1.0 + step * i as f32).collect();
+        let ep = ActEp { thresholds: &thresholds, levels: &levels };
+        let raw = randvec(n, seed);
+        let bins: Vec<u8> = raw.iter().map(|&v| ep.bin(v) as u8).collect();
+        let snapped: Vec<f32> =
+            bins.iter().map(|&b| levels[b as usize]).collect();
+        (thresholds, levels, bins, snapped)
+    }
+
+    /// The product table the graph layer precomputes: `[w, a] =
+    /// codebook[w] * levels[a]` with a trailing zero pad column.
+    fn ptable(codebook: &[f32], levels: &[f32]) -> (Vec<f32>, usize) {
+        let stride = levels.len() + 1;
+        let mut t = vec![0.0f32; codebook.len() * stride];
+        for (w, &cw) in codebook.iter().enumerate() {
+            for (a, &la) in levels.iter().enumerate() {
+                t[w * stride + a] = cw * la;
+            }
+        }
+        (t, stride)
+    }
+
+    /// The tentpole kernel pin: both v3 variants (O_TILE and the
+    /// 16-lane unroll) are bit-identical to the v2 f32-multiply kernel
+    /// on snapped activations, at every thread count, for codebook
+    /// widths that exercise the aligned (4-bit) and straddling (5-bit)
+    /// packed-weight gather.
+    #[test]
+    fn lut2_matmul_bit_identical_to_v2_and_lanes16() {
+        for (rows, cin, cout, kw, ka) in [
+            (1usize, 27usize, 16usize, 16usize, 4usize),
+            (300, 17, 5, 16, 8),
+            (257, 64, 33, 32, 16),
+        ] {
+            let (_, levels, bins, snapped) =
+                aq_stream(rows * cin, ka, 80 + rows as u64);
+            let (idx_t, codebook, _) =
+                quantized_layer(cin, cout, kw, 81 + rows as u64);
+            let bias = randvec(cout, 82);
+            let ep = Epilogue {
+                bias: Some(&bias),
+                relu: true,
+                ..Default::default()
+            };
+            let mut v2 = vec![0.0f32; rows * cout];
+            let mut pool = GemmScratchPool::new();
+            lut_matmul_tiled(
+                &snapped, &idx_t, &codebook, rows, cin, cout, &mut v2, ep,
+                1, &mut pool,
+            );
+            let widx =
+                PackedBits::pack(&idx_t, PackedBits::bits_for_k(kw));
+            let (table, stride) = ptable(&codebook, &levels);
+            for threads in [1usize, 3] {
+                let mut v3 = vec![0.0f32; rows * cout];
+                lut2_matmul_otile(
+                    &bins, &widx, &table, stride, rows, cin, cout, &mut v3,
+                    ep, threads, &mut pool,
+                );
+                assert_eq!(
+                    v3, v2,
+                    "{rows}x{cin}x{cout} kw={kw} ka={ka} t={threads}: \
+                     v3 o-tile drifted from v2"
+                );
+                let mut l16 = vec![0.0f32; rows * cout];
+                lut2_matmul_lanes16(
+                    &bins, &widx, &table, stride, rows, cin, cout,
+                    &mut l16, ep, threads, &mut pool,
+                );
+                assert_eq!(
+                    l16, v3,
+                    "{rows}x{cin}x{cout} t={threads}: 16-lane variant \
+                     drifted from o-tile"
+                );
+                // the feature-gated dispatcher resolves to one of them
+                let mut d = vec![0.0f32; rows * cout];
+                lut2_matmul(
+                    &bins, &widx, &table, stride, rows, cin, cout, &mut d,
+                    ep, threads, &mut pool,
+                );
+                assert_eq!(d, v3);
+            }
+        }
+    }
+
+    /// u16 streams with pad sentinels (the conv patch form): a pad
+    /// position contributes the table's zero column, which must leave
+    /// the accumulator bit-identical to v2's `w * 0.0` padding terms.
+    #[test]
+    fn lut2_pad_column_matches_f32_zero_padding() {
+        let (rows, cin, cout, kw, ka) = (60usize, 23usize, 9usize, 8, 4);
+        let (_, levels, bins, mut snapped) =
+            aq_stream(rows * cin, ka, 90);
+        let mut q16: Vec<u16> =
+            bins.iter().map(|&b| b as u16).collect();
+        // punch pad sentinels into ~1/7 of the positions
+        for i in (0..rows * cin).step_by(7) {
+            q16[i] = ka as u16;
+            snapped[i] = 0.0;
+        }
+        let (idx_t, codebook, _) = quantized_layer(cin, cout, kw, 91);
+        let mut v2 = vec![0.0f32; rows * cout];
+        let mut pool = GemmScratchPool::new();
+        lut_matmul_tiled(
+            &snapped,
+            &idx_t,
+            &codebook,
+            rows,
+            cin,
+            cout,
+            &mut v2,
+            Epilogue::default(),
+            1,
+            &mut pool,
+        );
+        let widx = PackedBits::pack(&idx_t, PackedBits::bits_for_k(kw));
+        let (table, stride) = ptable(&codebook, &levels);
+        let mut v3 = vec![0.0f32; rows * cout];
+        lut2_matmul_otile(
+            &q16,
+            &widx,
+            &table,
+            stride,
+            rows,
+            cin,
+            cout,
+            &mut v3,
+            Epilogue::default(),
+            1,
+            &mut pool,
+        );
+        assert_eq!(v3, v2, "pad column drifted from f32 zero padding");
+        let mut l16 = vec![0.0f32; rows * cout];
+        lut2_matmul_lanes16(
+            &q16,
+            &widx,
+            &table,
+            stride,
+            rows,
+            cin,
+            cout,
+            &mut l16,
+            Epilogue::default(),
+            1,
+            &mut pool,
+        );
+        assert_eq!(l16, v2);
+    }
+
+    /// The full v3 conv lowering (qim2col + LUT² GEMM) against the v2
+    /// lowering (im2col + LUT GEMM) on the same snapped image: the u16
+    /// patch layout must line up position-for-position with the f32
+    /// patch layout, pads included, and the GEMM output must match
+    /// bit-for-bit.
+    #[test]
+    fn qim2col_lut2_conv_bit_identical_to_v2_lowering() {
+        let (batch, h, w, cin, cout, ks, ka, kw) =
+            (2usize, 6, 5, 3, 7, 3, 8, 16);
+        let (_, levels, bins, snapped) =
+            aq_stream(batch * h * w * cin, ka, 95);
+        let (idx_t, codebook, _) =
+            quantized_layer(ks * ks * cin, cout, kw, 96);
+        for stride in [1usize, 2] {
+            let mut fpatch = Vec::new();
+            let (oh, ow) = im2col_into(
+                &snapped, batch, h, w, cin, ks, stride, &mut fpatch,
+            );
+            let mut qpatch = Vec::new();
+            let (qoh, qow) = qim2col_into(
+                &bins,
+                batch,
+                h,
+                w,
+                cin,
+                ks,
+                stride,
+                ka as u16,
+                &mut qpatch,
+            );
+            assert_eq!((oh, ow), (qoh, qow));
+            for (i, (&qp, &fp)) in
+                qpatch.iter().zip(fpatch.iter()).enumerate()
+            {
+                let want =
+                    if qp == ka as u16 { 0.0 } else { levels[qp as usize] };
+                assert_eq!(fp, want, "patch position {i}");
+            }
+            let rows = batch * oh * ow;
+            let k = ks * ks * cin;
+            let mut pool = GemmScratchPool::new();
+            let mut v2 = vec![0.0f32; rows * cout];
+            lut_matmul_tiled(
+                &fpatch,
+                &idx_t,
+                &codebook,
+                rows,
+                k,
+                cout,
+                &mut v2,
+                Epilogue::default(),
+                1,
+                &mut pool,
+            );
+            let widx =
+                PackedBits::pack(&idx_t, PackedBits::bits_for_k(kw));
+            let (table, tstride) = ptable(&codebook, &levels);
+            let mut v3 = vec![0.0f32; rows * cout];
+            lut2_matmul(
+                &qpatch,
+                &widx,
+                &table,
+                tstride,
+                rows,
+                k,
+                cout,
+                &mut v3,
+                Epilogue::default(),
+                1,
+                &mut pool,
+            );
+            assert_eq!(v3, v2, "stride {stride}: conv lowering drifted");
+        }
+    }
+
+    /// v3 depthwise against the v2 depthwise on the same snapped image,
+    /// fused epilogue included — same tap skipping, same bits.
+    #[test]
+    fn lut2_depthwise_bit_identical_to_v2() {
+        let (batch, h, w, c, ks, ka, kw) = (2usize, 6, 6, 5, 3, 4, 8);
+        let (_, levels, bins, snapped) =
+            aq_stream(batch * h * w * c, ka, 97);
+        let wraw = randvec(ks * ks * c, 98);
+        let q = KQuantileGauss.fit(&wraw, kw);
+        let idx: Vec<u8> = wraw.iter().map(|&v| q.bin(v) as u8).collect();
+        let gamma = randvec(c, 99);
+        let beta = randvec(c, 100);
+        let mean = randvec(c, 101);
+        let var: Vec<f32> =
+            randvec(c, 102).iter().map(|v| v * v).collect();
+        let inv = bn_inv(&gamma, &var);
+        let ep = Epilogue {
+            bias: None,
+            bn: Some(BnEp { inv: &inv, beta: &beta, mean: &mean }),
+            relu: true,
+            aq: None,
+        };
+        for stride in [1usize, 2] {
+            let mut v2 = Vec::new();
+            let (oh, ow) = lut_depthwise_into(
+                &snapped, &idx, &q.levels, batch, h, w, c, ks, stride, ep,
+                &mut v2,
+            );
+            let (table, tstride) = ptable(&q.levels, &levels);
+            let mut v3 = Vec::new();
+            let (oh2, ow2) = lut2_depthwise_into(
+                &bins, &idx, &table, tstride, batch, h, w, c, ks, stride,
+                ep, &mut v3,
+            );
+            assert_eq!((oh, ow), (oh2, ow2));
+            assert_eq!(v3, v2, "stride {stride}: depthwise v3 drifted");
+        }
     }
 
     #[test]

@@ -25,7 +25,11 @@
 //! zero heap allocation per batch in steady state. The PR-1 engine
 //! survives as `KernelMode::LutV1` so every benchmark run records the
 //! v1→v2 speedup instead of trusting a number written down once
-//! (DESIGN §9).
+//! (DESIGN §9). On activation-quantized models `KernelMode::LutV3`
+//! goes one step further: GEMM steps fed by a quantized edge consume
+//! the u8 bin-index stream against a precomputed weight-level ×
+//! activation-level product table — table gathers and adds only, no
+//! dequant and no f32 multiply on the hot path (DESIGN §13).
 
 pub mod actquant;
 pub mod codebook;
@@ -39,7 +43,9 @@ pub mod synthetic;
 
 pub use actquant::{ActQuantModel, ActQuantTable, AqMode};
 pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
-pub use graph::{ExecBuffers, Graph, KernelMode, PreparedWeights};
+pub use graph::{
+    EdgeType, ExecBuffers, Graph, KernelMode, PreparedWeights, V3Layer,
+};
 pub use net::{RemoteOpts, RemoteReplica, Supervisor, Worker, WorkerSpec};
 pub use packed::PackedBits;
 pub use router::{

@@ -118,6 +118,48 @@ impl PackedBits {
         }
     }
 
+    /// Decode `out.len()` consecutive indices starting at element
+    /// `start` into a caller slice — the allocation-free row gather the
+    /// v3 LUT² kernel uses to stream one output-channel row of the
+    /// packed transposed weight indices into its per-tile scratch.
+    ///
+    /// Unlike [`PackedBits::unpack_into`] this never touches capacity:
+    /// `out` is a fixed slice, so a hot loop that calls it per o-tile
+    /// is heap-silent by construction. The 8-bit width is a memcpy;
+    /// everything else runs a local shift register seeded at the row's
+    /// first byte, which handles unaligned starts (3/5/6/7-bit rows
+    /// rarely begin on a byte boundary) without per-index `get` calls.
+    #[inline]
+    pub fn gather_row(&self, start: usize, out: &mut [u8]) {
+        debug_assert!(start + out.len() <= self.len);
+        if out.is_empty() {
+            return;
+        }
+        let bits = self.bits as usize;
+        if bits == 8 {
+            out.copy_from_slice(&self.data[start..start + out.len()]);
+            return;
+        }
+        let mask = (1u32 << bits) - 1;
+        let bitpos = start * bits;
+        let mut byte = bitpos / 8;
+        let off = bitpos % 8;
+        // shift register seeded at the row's first byte, `have` valid
+        // low bits; one refill byte always suffices since bits <= 7
+        let mut reg = (self.data[byte] >> off) as u32;
+        let mut have = 8 - off;
+        for o in out.iter_mut() {
+            if have < bits {
+                byte += 1;
+                reg |= (self.data[byte] as u32) << have;
+                have += 8;
+            }
+            *o = (reg & mask) as u8;
+            reg >>= bits;
+            have -= bits;
+        }
+    }
+
     /// Packed payload size in bytes.
     pub fn byte_len(&self) -> usize {
         self.data.len()
@@ -241,6 +283,36 @@ mod tests {
                 (ptr, cap),
                 "bits {bits}: buffer reallocated on reuse"
             );
+        }
+    }
+
+    /// `gather_row` must agree with per-index `get` for every width at
+    /// every (aligned and straddling) start offset — the v3 kernel
+    /// gathers transposed weight rows whose bit offsets land anywhere.
+    #[test]
+    fn gather_row_matches_get_all_widths_and_offsets() {
+        let mut rng = Rng::new(31);
+        for bits in 1..=8u8 {
+            let vals: Vec<u8> = (0..233)
+                .map(|_| (rng.next_u32() & ((1u32 << bits) - 1)) as u8)
+                .collect();
+            let p = PackedBits::pack(&vals, bits);
+            let mut row = [0u8; 19];
+            for start in [0usize, 1, 2, 3, 7, 8, 9, 100, 214] {
+                p.gather_row(start, &mut row);
+                for (j, &got) in row.iter().enumerate() {
+                    assert_eq!(
+                        got,
+                        p.get(start + j),
+                        "bits {bits} start {start} j {j}"
+                    );
+                }
+            }
+            // zero-length and full-tail rows are legal
+            p.gather_row(vals.len(), &mut []);
+            let mut tail = vec![0u8; 11];
+            p.gather_row(vals.len() - 11, &mut tail);
+            assert_eq!(tail, vals[vals.len() - 11..], "bits {bits} tail");
         }
     }
 

@@ -93,6 +93,9 @@ impl ServeModel {
             bits,
         )?;
         self.model.aq = Some(aq);
+        // weights were prepared before the tables existed; refresh the
+        // v3 LUT² working set so live QIdx edges have product tables
+        self.weights.prepare_v3(&self.model, &self.graph);
         Ok(())
     }
 }

@@ -418,6 +418,43 @@ fn frozen_model(cli: &Cli) -> Result<FrozenModel> {
     FrozenModel::export(&m, &state, fq, bits)
 }
 
+/// Parse `--engine` into a LUT-side kernel mode; reject unknown values
+/// so a typo can't silently record one engine's numbers as another's.
+fn parse_engine(cli: &Cli, default: &str) -> Result<KernelMode> {
+    Ok(match cli.get("engine").unwrap_or(default) {
+        "v1" => KernelMode::LutV1,
+        "v2" => KernelMode::Lut,
+        "v3" => KernelMode::LutV3,
+        other => {
+            return Err(anyhow!(
+                "unknown --engine '{other}' (expected v1, v2, or v3)"
+            ))
+        }
+    })
+}
+
+fn engine_name(mode: KernelMode) -> &'static str {
+    match mode {
+        KernelMode::LutV1 => "v1",
+        KernelMode::Lut => "v2",
+        KernelMode::LutV3 => "v3",
+        KernelMode::DequantF32 => "dequant-f32",
+    }
+}
+
+/// The fail-fast half of the v3 contract: LUT² has no index stream to
+/// consume without calibrated activation tables.
+fn check_v3_aq(mode: KernelMode, sm: &ServeModel) -> Result<()> {
+    if mode == KernelMode::LutV3 && sm.model.aq.is_none() {
+        return Err(anyhow!(
+            "--engine v3 needs activation-quant tables (LUT² indexes \
+             weight level x activation level); add --aq MODE or use \
+             --engine v2"
+        ));
+    }
+    Ok(())
+}
+
 fn cmd_infer(cli: &Cli) -> Result<()> {
     let model = frozen_model(cli)?;
     let bits_w = model.bits_w as u32;
@@ -438,6 +475,8 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         println!("frozen model -> {dir}");
     }
     let sm = sm;
+    let lut_mode = parse_engine(cli, "v2")?;
+    check_v3_aq(lut_mode, &sm)?;
     let batch = cli.get_usize("batch", 64);
     let val = SynthDataset::generate(SynthConfig {
         classes: sm.model.classes,
@@ -446,10 +485,11 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
     });
     let batches = Batcher::eval_batches(&val, batch);
 
-    // parity + accuracy + wall-clock, LUT vs dequantized-f32 reference
+    // parity + accuracy + wall-clock, the chosen LUT engine vs the
+    // dequantized-f32 reference
     let mut results = Vec::new();
     let mut max_diff = 0.0f32;
-    for mode in [KernelMode::Lut, KernelMode::DequantF32] {
+    for mode in [lut_mode, KernelMode::DequantF32] {
         let t0 = std::time::Instant::now();
         let mut correct = 0usize;
         let mut seen = 0usize;
@@ -485,8 +525,9 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         100.0 * *lut_correct as f64 / *n as f64
     );
     println!(
-        "throughput (batch {batch}): LUT {lut_rps:.0} img/s, \
+        "throughput (batch {batch}): LUT[{}] {lut_rps:.0} img/s, \
          dequant-f32 {f32_rps:.0} img/s ({:.2}x)",
+        engine_name(lut_mode),
         lut_rps / f32_rps
     );
 
@@ -516,6 +557,75 @@ fn cmd_infer(cli: &Cli) -> Result<()> {
         q.gbops() * lut_rps,
         fp.gbops() * f32_rps
     );
+
+    if let Some(path) = cli.get("stats") {
+        use uniq::infer::EdgeType;
+        use uniq::util::json::{num, obj, s, Json};
+        // per-qlayer v3 working-set report next to the served-BOPS
+        // numbers: which edges run on the LUT² kernel, and how many
+        // resident product-table bytes each one costs
+        let edges = sm.graph.gemm_edges(&sm.model);
+        let layers: Vec<Json> = sm
+            .model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let bytes = sm
+                    .weights
+                    .v3
+                    .get(i)
+                    .and_then(|v| v.as_ref())
+                    .map(|v| v.table_bytes())
+                    .unwrap_or(0);
+                let edge = edges
+                    .iter()
+                    .find(|(qi, _)| *qi == i)
+                    .map(|(_, e)| match e {
+                        EdgeType::F32 => "f32".to_string(),
+                        EdgeType::QIdx { bits, .. } => {
+                            format!("qidx{bits}")
+                        }
+                    })
+                    .unwrap_or_else(|| "none".to_string());
+                obj(vec![
+                    ("name", s(&l.name)),
+                    ("edge", s(&edge)),
+                    ("product_table_bytes", num(bytes as f64)),
+                ])
+            })
+            .collect();
+        let j = obj(vec![
+            ("model", s(&sm.model.name)),
+            ("engine", s(engine_name(lut_mode))),
+            (
+                "aq",
+                s(sm.model
+                    .aq
+                    .as_ref()
+                    .map(|a| a.mode.name())
+                    .unwrap_or("none")),
+            ),
+            ("bits_w", num(bits_w as f64)),
+            ("bits_a", num(bits_a as f64)),
+            ("parity_max_diff", num(max_diff as f64)),
+            (
+                "accuracy",
+                num(*lut_correct as f64 / (*n).max(1) as f64),
+            ),
+            ("lut_img_per_s", num(*lut_rps)),
+            ("dequant_img_per_s", num(*f32_rps)),
+            ("served_gbops_per_img", num(q.gbops())),
+            ("fp32_gbops_per_img", num(fp.gbops())),
+            (
+                "v3_table_bytes",
+                num(sm.weights.v3_table_bytes() as f64),
+            ),
+            ("layers", Json::Arr(layers)),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        println!("stats -> {path}");
+    }
     Ok(())
 }
 
@@ -530,11 +640,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // deployment working set: packed indices only, no f32 weight copies
     let mut sm = ServeModel::lut_only(model)?;
     apply_aq_flags(cli, &mut sm)?;
-    if sm.model.aq.is_some() && cli.get("engine") == Some("v1") {
+    let engine = parse_engine(cli, "v2")?;
+    if sm.model.aq.is_some() && engine == KernelMode::LutV1 {
         return Err(anyhow!(
             "--engine v1 cannot serve activation quantization (v2-only \
              epilogue feature); drop --engine v1 or use --aq none"
         ));
+    }
+    check_v3_aq(engine, &sm)?;
+    if engine == KernelMode::LutV3 {
+        println!(
+            "engine v3 (LUT²): {} KiB resident product tables",
+            sm.weights.v3_table_bytes() / 1024
+        );
     }
     if let Some(aq) = sm.model.aq.as_ref() {
         println!(
@@ -563,18 +681,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         max_wait: std::time::Duration::from_micros(
             (cli.get_f32("max-wait-ms", 2.0) * 1e3) as u64,
         ),
-        // --engine v1 serves through the PR-1 engine (A/B baseline);
-        // reject unknown values so a typo can't silently record v2
-        // numbers as the v1 baseline
-        mode: match cli.get("engine").unwrap_or("v2") {
-            "v1" => KernelMode::LutV1,
-            "v2" => KernelMode::Lut,
-            other => {
-                return Err(anyhow!(
-                    "unknown --engine '{other}' (expected v1 or v2)"
-                ))
-            }
-        },
+        // v1 = PR-1 baseline engine, v2 = tiled arena engine,
+        // v3 = integer-only LUT² (aq models only)
+        mode: engine,
         kernel_threads: cli.get_usize("kernel-threads", 1),
     };
     if let Some(addr) = cli.get("remote-worker") {
@@ -626,6 +735,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 ),
             ),
             ("bits_a", uniq::util::json::num(sm.model.bits_a() as f64)),
+            ("engine", uniq::util::json::s(engine_name(engine))),
+            (
+                "v3_table_bytes",
+                uniq::util::json::num(sm.weights.v3_table_bytes() as f64),
+            ),
             ("stats", stats.to_json()),
         ]);
         std::fs::write(path, j.to_string())?;

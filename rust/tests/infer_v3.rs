@@ -1,0 +1,417 @@
+//! v3 (LUT²) engine suite — the `--engine v3` column of the CI
+//! bitwidth matrix (`UNIQ_AQ_MODE`/`UNIQ_AQ_BITS` select one cell, a
+//! plain `cargo test` covers both aq families at 4 bits).
+//!
+//! Gates:
+//!   * the full weight-bits × activation-bits matrix
+//!     (w ∈ {1,2,3,4,5,8} × a ∈ {2,4,8}; 5 exercises the generic
+//!     non-power-of-two PackedBits gather) keeps v3 **bit-identical**
+//!     to v2 and ≤ 1e-5 from the dequant-f32 reference on all three
+//!     architectures;
+//!   * edge typing is structural: f32 seams exactly where the plan
+//!     says (image input, post-pool, downsample branch), QIdx
+//!     everywhere a table feeds a GEMM, product tables resident for
+//!     exactly the QIdx edges;
+//!   * v3 without aq tables is refused, and a live edge with a stale
+//!     working set (tables installed after weight prep, no refresh)
+//!     errors naming `prepare_v3` instead of serving garbage;
+//!   * steady-state v3 serving performs zero heap allocation (arena
+//!     fingerprint, including the u16 qpatches buffer);
+//!   * `ServeConfig { mode: LutV3 }` serves end-to-end — directly and
+//!     through the replica-set router — bit-identical to v2 replies.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniq::coordinator::FreezeQuant;
+use uniq::infer::{
+    actquant, kernels, synthetic, AqMode, EdgeType, ExecBuffers,
+    FrozenModel, Graph, KernelMode, PreparedWeights, Router,
+    RouterConfig, RoutingPolicy, ServeConfig, ServeModel, Server,
+};
+use uniq::util::rng::Rng;
+
+const ARCHS: [(&str, usize); 3] =
+    [("mlp", 12), ("resnet8", 8), ("mobilenet_mini", 8)];
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.2).collect()
+}
+
+/// The aq cells this process covers (same contract as infer_aq.rs):
+/// one cell under the CI matrix env vars, both modes at 4 bits for a
+/// plain local `cargo test`.
+fn matrix_cfgs() -> Vec<(AqMode, u32)> {
+    let bits = std::env::var("UNIQ_AQ_BITS")
+        .ok()
+        .and_then(|v| v.parse::<u32>().ok())
+        .unwrap_or(4);
+    match std::env::var("UNIQ_AQ_MODE") {
+        Ok(m) => vec![(
+            AqMode::parse(&m)
+                .expect("UNIQ_AQ_MODE")
+                .expect("UNIQ_AQ_MODE must not be 'none'"),
+            bits,
+        )],
+        Err(_) => vec![(AqMode::Uniform, bits), (AqMode::Quantile, bits)],
+    }
+}
+
+/// Frozen synthetic model at `bits_w` weight bits, optionally aq
+/// calibrated — with the v3 working set refreshed after the tables
+/// land (the step `ServeModel::calibrate_aq` performs in production).
+fn built(
+    name: &str,
+    width: usize,
+    bits_w: u32,
+    aq: Option<(AqMode, u32)>,
+) -> (FrozenModel, Graph, PreparedWeights) {
+    let (m, state) = synthetic::model(name, width, 10, 29).unwrap();
+    let mut frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, bits_w)
+            .unwrap();
+    let graph = Graph::from_model(&frozen).unwrap();
+    let mut weights = PreparedWeights::new(&frozen, &graph);
+    if let Some((mode, bits)) = aq {
+        let img_len: usize = frozen.image.iter().product();
+        let calib = randvec(12 * img_len, 97);
+        frozen.aq = Some(
+            actquant::calibrate(
+                &frozen, &graph, &weights, &calib, 6, mode, bits,
+            )
+            .unwrap(),
+        );
+        weights.prepare_v3(&frozen, &graph);
+    }
+    (frozen, graph, weights)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+/// The bitwidth-pair matrix: every (b_w, b_a) cell on every arch keeps
+/// v3 bit-identical to v2 and within 1e-5 of the f32 reference. The aq
+/// mode alternates per cell so both families appear in every run.
+#[test]
+fn v3_bitwidth_matrix_bit_identical_to_v2_all_archs() {
+    let w_bits = [1u32, 2, 3, 4, 5, 8];
+    let a_bits = [2u32, 4, 8];
+    for (ci, &bw) in w_bits.iter().enumerate() {
+        for (cj, &ba) in a_bits.iter().enumerate() {
+            let mode = if (ci + cj) % 2 == 0 {
+                AqMode::Quantile
+            } else {
+                AqMode::Uniform
+            };
+            for (name, width) in ARCHS {
+                let (frozen, graph, weights) =
+                    built(name, width, bw, Some((mode, ba)));
+                let img_len: usize = frozen.image.iter().product();
+                let x = randvec(2 * img_len, 11 + bw as u64 * 10 + ba as u64);
+                let v2 = graph
+                    .forward(&frozen, &weights, &x, 2, KernelMode::Lut)
+                    .unwrap();
+                let v3 = graph
+                    .forward(&frozen, &weights, &x, 2, KernelMode::LutV3)
+                    .unwrap();
+                assert_eq!(
+                    v3, v2,
+                    "{name} w{bw}a{ba} {mode:?}: v3 drifted from v2"
+                );
+                let refr = graph
+                    .forward(
+                        &frozen, &weights, &x, 2, KernelMode::DequantF32,
+                    )
+                    .unwrap();
+                let d = max_abs_diff(&v3, &refr);
+                assert!(
+                    d <= 1e-5,
+                    "{name} w{bw}a{ba} {mode:?}: v3 vs f32 diff {d}"
+                );
+                assert!(v3.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+}
+
+/// Edge typing is structural, not incidental: on an aq-calibrated
+/// mobilenet the first conv (f32 image) and the classifier (post-pool)
+/// are F32 seams, every depthwise/pointwise GEMM is a QIdx edge, and
+/// the v3 working set is resident for exactly the QIdx-fed layers.
+#[test]
+fn v3_edge_typing_marks_seams_and_builds_tables() {
+    for (mode, bits) in matrix_cfgs() {
+        let (frozen, graph, weights) =
+            built("mobilenet_mini", 8, 4, Some((mode, bits)));
+        let edges = graph.gemm_edges(&frozen);
+        assert_eq!(edges.len(), frozen.layers.len());
+        let fc = frozen.layer_index("fc").unwrap();
+        let conv1 = frozen.layer_index("conv1").unwrap();
+        let mut qidx_layers = Vec::new();
+        for &(q, et) in &edges {
+            match et {
+                EdgeType::F32 => assert!(
+                    q == fc || q == conv1,
+                    "{}: unexpected f32 seam",
+                    frozen.layers[q].name
+                ),
+                EdgeType::QIdx { src, bits: b } => {
+                    assert_eq!(b as u32, bits);
+                    assert!(
+                        frozen.aq.as_ref().unwrap().table(src).is_some(),
+                        "QIdx edge from a table-less source"
+                    );
+                    qidx_layers.push(q);
+                }
+            }
+        }
+        assert_eq!(
+            qidx_layers.len(),
+            frozen.layers.len() - 2,
+            "every GEMM between the seams rides the index stream"
+        );
+        for (q, v3) in weights.v3.iter().enumerate() {
+            assert_eq!(
+                v3.is_some(),
+                qidx_layers.contains(&q),
+                "{}: v3 working set vs edge type",
+                frozen.layers[q].name
+            );
+            if let Some(v3) = v3 {
+                let l = &frozen.layers[q];
+                let k_w = l.codebook.len();
+                let k_a = v3.stride - 1;
+                assert!(k_w <= 256 && k_a <= 256);
+                assert_eq!(v3.table.len(), k_w * v3.stride);
+                assert_eq!(v3.table_bytes(), 4 * k_w * v3.stride);
+                // the pad column is exactly zero
+                for w in 0..k_w {
+                    assert_eq!(v3.table[w * v3.stride + k_a], 0.0);
+                }
+                // depthwise gathers unpacked indices, GEMMs stream
+                // packed transposed rows
+                let dw = l.name.ends_with("/dw");
+                assert_eq!(v3.widx.is_none(), dw, "{}", l.name);
+            }
+        }
+        assert!(weights.v3_table_bytes() > 0);
+        // resnet adds the third seam kind: the downsample branch reads
+        // the saved pre-block tensor and must stay f32
+        let (rfrozen, rgraph, _) =
+            built("resnet8", 8, 4, Some((mode, bits)));
+        let redges = rgraph.gemm_edges(&rfrozen);
+        for &(q, et) in &redges {
+            if rfrozen.layers[q].name.ends_with("/down") {
+                assert_eq!(
+                    et,
+                    EdgeType::F32,
+                    "downsample branch must be an f32 seam"
+                );
+            }
+        }
+        assert!(
+            redges.iter().any(|&(_, et)| matches!(
+                et,
+                EdgeType::QIdx { .. }
+            )),
+            "resnet main path must have live QIdx edges"
+        );
+    }
+}
+
+/// `--engine v3` without aq tables is refused up front (there is no
+/// index stream to consume), for both the direct forward and the
+/// serving wrapper.
+#[test]
+fn v3_refused_without_aq_tables() {
+    let (frozen, graph, weights) = built("mlp", 12, 4, None);
+    let img_len: usize = frozen.image.iter().product();
+    let x = randvec(img_len, 3);
+    let err = graph
+        .forward(&frozen, &weights, &x, 1, KernelMode::LutV3)
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("activation-quant"),
+        "unhelpful refusal: {err}"
+    );
+}
+
+/// Installing tables after weight prep without refreshing the working
+/// set is the one way the v3 invariant can break — the executor must
+/// error naming the fix, not fall back silently.
+#[test]
+fn v3_stale_working_set_errors_naming_prepare_v3() {
+    let (mode, bits) = matrix_cfgs()[0];
+    let (mut frozen, graph, mut weights) = built("mlp", 12, 4, None);
+    let img_len: usize = frozen.image.iter().product();
+    let calib = randvec(8 * img_len, 13);
+    frozen.aq = Some(
+        actquant::calibrate(
+            &frozen, &graph, &weights, &calib, 4, mode, bits,
+        )
+        .unwrap(),
+    );
+    let x = randvec(img_len, 17);
+    let err = graph
+        .forward(&frozen, &weights, &x, 1, KernelMode::LutV3)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("prepare_v3"), "unhelpful error: {err}");
+    // the named fix works
+    weights.prepare_v3(&frozen, &graph);
+    let v3 = graph
+        .forward(&frozen, &weights, &x, 1, KernelMode::LutV3)
+        .unwrap();
+    let v2 = graph
+        .forward(&frozen, &weights, &x, 1, KernelMode::Lut)
+        .unwrap();
+    assert_eq!(v3, v2);
+}
+
+/// Steady-state v3 execution reuses the arena verbatim — the
+/// zero-allocation contract extends to the index stream and the u16
+/// quantized-patch buffer.
+#[test]
+fn v3_serving_keeps_the_arena_allocation_free() {
+    for (mode, bits) in matrix_cfgs() {
+        let (frozen, graph, _full) =
+            built("mobilenet_mini", 8, 4, Some((mode, bits)));
+        let weights = PreparedWeights::lut_only(&frozen, &graph);
+        let img_len: usize = frozen.image.iter().product();
+        let batch = 4usize;
+        let x = randvec(batch * img_len, 37);
+        let mut bufs = ExecBuffers::new();
+        for _ in 0..2 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::LutV3,
+                    &mut bufs,
+                )
+                .unwrap();
+        }
+        let fp = bufs.arena_fingerprint();
+        for _ in 0..4 {
+            graph
+                .forward_into(
+                    &frozen, &weights, &x, batch, KernelMode::LutV3,
+                    &mut bufs,
+                )
+                .unwrap();
+        }
+        assert_eq!(
+            bufs.arena_fingerprint(),
+            fp,
+            "{mode:?}{bits}: v3 arena reallocated in steady state"
+        );
+    }
+}
+
+/// `ServeConfig { mode: LutV3 }` end to end: calibrate through the
+/// serving wrapper (which refreshes the v3 working set), serve a
+/// batch, and match both the direct v3 forward and the v2 engine
+/// bit-for-bit.
+#[test]
+fn v3_serves_end_to_end_matching_v2() {
+    let (m, state) = synthetic::model("mobilenet_mini", 8, 10, 53).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let mut sm = ServeModel::new(frozen).unwrap();
+    let img_len = sm.image_len();
+    let calib = randvec(12 * img_len, 59);
+    sm.calibrate_aq(AqMode::Quantile, 4, &calib, 6).unwrap();
+    assert!(
+        sm.weights.v3_table_bytes() > 0,
+        "calibrate_aq must refresh the v3 working set"
+    );
+    let sm = Arc::new(sm);
+    let srv = Server::start(
+        Arc::clone(&sm),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            mode: KernelMode::LutV3,
+            kernel_threads: 1,
+        },
+    );
+    let images: Vec<Vec<f32>> =
+        (0..9).map(|i| randvec(img_len, 70 + i as u64)).collect();
+    let handles: Vec<_> = images
+        .iter()
+        .map(|img| srv.submit(img.clone()).unwrap())
+        .collect();
+    for (img, h) in images.iter().zip(handles) {
+        let reply = h.recv().expect("reply");
+        let v3 = sm
+            .graph
+            .forward(&sm.model, &sm.weights, img, 1, KernelMode::LutV3)
+            .unwrap();
+        let v2 = sm
+            .graph
+            .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+            .unwrap();
+        assert_eq!(reply.logits, v3, "served v3 logits drifted");
+        assert_eq!(v3, v2, "v3 != v2 through the serving tier");
+        assert_eq!(reply.pred, kernels::argmax(&v3));
+    }
+    assert_eq!(srv.shutdown().requests, 9);
+}
+
+/// The replica-set router threads `--engine v3` through every replica:
+/// routed replies stay bit-identical to the direct v3 forward.
+#[test]
+fn v3_through_replica_router_bitwise() {
+    let (m, state) = synthetic::model("mlp", 16, 10, 61).unwrap();
+    let frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let mut sm = ServeModel::new(frozen).unwrap();
+    let img_len = sm.image_len();
+    let calib = randvec(10 * img_len, 67);
+    sm.calibrate_aq(AqMode::Uniform, 4, &calib, 5).unwrap();
+    let sm = Arc::new(sm);
+    let router = Router::start(
+        Arc::clone(&sm),
+        RouterConfig {
+            replicas: 2,
+            policy: RoutingPolicy::RoundRobin,
+            queue_cap: 1024,
+            health_every: Duration::ZERO,
+            max_retries: 8,
+            seed: 11,
+            serve: ServeConfig {
+                workers: 1,
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                mode: KernelMode::LutV3,
+                kernel_threads: 1,
+            },
+        },
+    );
+    let images: Vec<Vec<f32>> =
+        (0..8).map(|i| randvec(img_len, 80 + i as u64)).collect();
+    let pending: Vec<_> = (0..16)
+        .map(|i| (i, router.submit(&images[i % images.len()]).unwrap()))
+        .collect();
+    for (i, p) in pending {
+        let reply = p.recv().unwrap();
+        let want = sm
+            .graph
+            .forward(
+                &sm.model,
+                &sm.weights,
+                &images[i % images.len()],
+                1,
+                KernelMode::LutV3,
+            )
+            .unwrap();
+        assert_eq!(reply.logits, want, "request {i}: routed v3 drifted");
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.fleet.requests, 16);
+    assert_eq!(fleet.rejected, 0);
+}
