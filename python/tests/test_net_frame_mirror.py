@@ -22,6 +22,8 @@ Wire format (all little-endian):
 import binascii
 import struct
 
+import pytest
+
 MAGIC = b"UQNF"
 PROTO_VERSION = 1
 HEADER_LEN = 20
@@ -41,6 +43,44 @@ def encode(kind, frame_id, payload):
     )
     crc = binascii.crc32(header + payload) & 0xFFFFFFFF
     return header + payload + struct.pack("<I", crc)
+
+
+def decode(frame):
+    """Minimal mirror of ``frame.rs::read_frame`` validation, in the
+    same order: truncation → magic → version → reserved → kind →
+    length cap → CRC. Raises ``ValueError(code)`` with a typed code
+    string; returns ``(kind, id, payload)`` on success."""
+    if len(frame) < HEADER_LEN:
+        raise ValueError("truncated")
+    if frame[:4] != MAGIC:
+        raise ValueError("bad_magic")
+    if frame[4] > PROTO_VERSION:
+        raise ValueError("future_version")
+    if frame[6:8] != b"\x00\x00":
+        raise ValueError("bad_reserved")
+    if not HELLO <= frame[5] <= DRAIN_ACK:
+        raise ValueError("bad_kind")
+    (length,) = struct.unpack_from("<I", frame, 16)
+    if length > MAX_PAYLOAD:
+        raise ValueError("oversized")
+    if len(frame) < HEADER_LEN + length + 4:
+        raise ValueError("truncated")
+    payload = frame[HEADER_LEN : HEADER_LEN + length]
+    (want,) = struct.unpack_from("<I", frame, HEADER_LEN + length)
+    got = binascii.crc32(bytes(frame[:HEADER_LEN]) + bytes(payload))
+    if got != want:
+        raise ValueError("crc_mismatch")
+    (frame_id,) = struct.unpack_from("<Q", frame, 8)
+    return frame[5], frame_id, bytes(payload)
+
+
+def truncate_mid_payload(frame):
+    """Mirror of ``fault.rs::truncate_mid_payload``: keep the header
+    plus half the payload+crc tail."""
+    if len(frame) <= HEADER_LEN:
+        return frame
+    body = len(frame) - HEADER_LEN
+    return frame[: HEADER_LEN + body // 2]
 
 
 def test_header_geometry():
@@ -98,6 +138,49 @@ def test_crc_detects_any_single_byte_corruption():
         corrupt = bytearray(body)
         corrupt[i] ^= 0x40
         assert binascii.crc32(bytes(corrupt)) != want, f"byte {i}"
+
+
+def test_decode_accepts_the_pristine_frame():
+    """The validator really parses — the mutation tests below are
+    testing mutations, not a broken fixture."""
+    payload = struct.pack("<16f", *([1.5] * 16))
+    kind, frame_id, back = decode(encode(REPLY, 42, payload))
+    assert (kind, frame_id, back) == (REPLY, 42, payload)
+
+
+def test_unknown_kind_sweep_fails_typed():
+    """Mirror of frame.rs ``injector_driven_mutations_fail_typed``:
+    every kind byte outside the registered 1..=8 range is refused."""
+    good = bytearray(encode(REPLY, 42, struct.pack("<16f", *([1.5] * 16))))
+    for k in (0, 9, 10, 42, 99, 200, 255):
+        bad = bytearray(good)
+        bad[5] = k
+        with pytest.raises(ValueError, match="bad_kind"):
+            decode(bad)
+
+
+def test_truncate_mid_payload_fails_typed():
+    """A frame cut mid-payload by the injector's rule is a typed
+    truncation, never a short parse."""
+    good = encode(REPLY, 42, struct.pack("<16f", *([1.5] * 16)))
+    cut = truncate_mid_payload(good)
+    assert HEADER_LEN < len(cut) < len(good)
+    with pytest.raises(ValueError, match="truncated"):
+        decode(cut)
+
+
+def test_bit_flipped_header_always_fails_typed():
+    """Every single-bit flip in the 20-byte header yields SOME typed
+    error — the CRC covers the whole header, so a flip that survives
+    field validation still dies at the CRC check. Exhaustive (160
+    bits), a superset of the Rust side's seeded sweep."""
+    good = encode(REPLY, 42, struct.pack("<16f", *([1.5] * 16)))
+    for byte in range(HEADER_LEN):
+        for bit in range(8):
+            bad = bytearray(good)
+            bad[byte] ^= 1 << bit
+            with pytest.raises(ValueError):
+                decode(bad)
 
 
 def test_reply_payload_layout():

@@ -241,6 +241,7 @@ fn serve_ab(sm: &Arc<ServeModel>, img_len: usize, n_requests: usize) -> Json {
                 max_wait: Duration::from_millis(2),
                 mode,
                 kernel_threads: 1,
+                shed_after: None,
             },
         );
         let mut rng = Rng::new(5);
@@ -298,12 +299,16 @@ fn router_fleet_ab(
                 health_every: Duration::from_millis(5),
                 max_retries: 4,
                 seed: 23,
+                request_timeout: None,
+                breaker_threshold: 3,
+                breaker_cooldown: Duration::from_millis(250),
                 serve: ServeConfig {
                     workers: (total_workers / replicas).max(1),
                     max_batch: 1, // batch-1 traffic: front-door bound
                     max_wait: Duration::ZERO,
                     mode: KernelMode::Lut,
                     kernel_threads: 1,
+                    shed_after: None,
                 },
             },
         );
@@ -346,18 +351,23 @@ fn router_fleet_ab(
 /// `infer::net` frame protocol to an in-process worker over 127.0.0.1.
 /// The recorded ratio prices the frame codec + TCP + reader/pump
 /// threads — the per-request cost of taking a replica slot across a
-/// process boundary.
+/// process boundary. A third leg re-runs the remote round trips with
+/// an aggressive 5 ms heartbeat armed, pricing the liveness layer
+/// (pings sharing the writer lock, pongs sharing the reader) against
+/// the plain connection; the returned factor is
+/// plain median / heartbeat median (1.0 = heartbeats are free).
 fn remote_loopback(
     b: &mut Bench,
     sm: &Arc<ServeModel>,
     img_len: usize,
-) -> Json {
+) -> (Json, f64) {
     let cfg = ServeConfig {
         workers: 1,
         max_batch: 1,
         max_wait: Duration::ZERO,
         mode: KernelMode::Lut,
         kernel_threads: 1,
+        shed_after: None,
     };
     let mut rng = Rng::new(41);
     let imgs: Vec<Vec<f32>> = (0..32)
@@ -378,10 +388,12 @@ fn remote_loopback(
         Worker::bind(Arc::clone(sm), cfg, "127.0.0.1:0").unwrap();
     let addr = worker.addr().to_string();
     let handle = worker.spawn();
+    // plain leg: heartbeats explicitly OFF so the key keeps measuring
+    // the bare wire cost it always has
     let replica = RemoteReplica::connect(
         &addr,
         None,
-        RemoteOpts::default(),
+        RemoteOpts { heartbeat_every: None, ..RemoteOpts::default() },
         Arc::new(std::sync::atomic::AtomicUsize::new(0)),
     )
     .unwrap();
@@ -398,24 +410,55 @@ fn remote_loopback(
             j += 1;
         });
     let _ = replica.drain_then_stop();
+
+    // heartbeat leg: 5 ms pings interleave with the bench traffic on
+    // the same writer lock and reader thread
+    let hb_replica = RemoteReplica::connect(
+        &addr,
+        None,
+        RemoteOpts {
+            heartbeat_every: Some(Duration::from_millis(5)),
+            ..RemoteOpts::default()
+        },
+        Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+    )
+    .unwrap();
+    let mut k = 0usize;
+    let hb = b.run_throughput("mobilenet_mini/remote_b1_hb", 1, || {
+        let rx = submit_blocking(
+            &hb_replica,
+            imgs[k % imgs.len()].clone(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        rx.recv().unwrap();
+        k += 1;
+    });
+    let _ = hb_replica.drain_then_stop();
     handle.shutdown();
 
+    let hb_vs_plain = remote.median_ns / hb.median_ns;
     println!(
         "remote loopback b1: inproc {:.0} ns, remote {:.0} ns \
-         ({:.2}x round-trip cost)",
+         ({:.2}x round-trip cost), heartbeat-armed {:.0} ns \
+         ({:.2}x vs plain)",
         inproc.median_ns,
         remote.median_ns,
-        remote.median_ns / inproc.median_ns
+        remote.median_ns / inproc.median_ns,
+        hb.median_ns,
+        1.0 / hb_vs_plain
     );
-    obj(vec![
+    let report = obj(vec![
         ("traffic", s("batch-1 round trip, single worker, loopback")),
         ("inproc", inproc.to_json()),
         ("remote", remote.to_json()),
+        ("remote_hb", hb.to_json()),
         (
             "remote_vs_inproc_batch1",
             num(remote.median_ns / inproc.median_ns),
         ),
-    ])
+    ]);
+    (report, hb_vs_plain)
 }
 
 /// Accuracy-vs-BOPS frontier data: forward throughput + analytic BOPS
@@ -503,6 +546,7 @@ fn main() {
     let mut serve_json = Json::Null;
     let mut fleet_json = Json::Null;
     let mut remote_json = Json::Null;
+    let mut remote_hb_ratio = 1.0f64;
     for (name, width) in [("mobilenet_mini", 16usize), ("mlp", 16)] {
         let (m, state) = synthetic::model(name, width, 10, 7).unwrap();
         let frozen =
@@ -606,7 +650,10 @@ fn main() {
         if name == "mobilenet_mini" {
             serve_json = serve_ab(&sm, data.image_len(), 512);
             fleet_json = router_fleet_ab(&sm, data.image_len(), 512);
-            remote_json = remote_loopback(&mut b, &sm, data.image_len());
+            let (rj, hb_ratio) =
+                remote_loopback(&mut b, &sm, data.image_len());
+            remote_json = rj;
+            remote_hb_ratio = hb_ratio;
         }
         jmodels.push(obj(vec![
             ("model", s(name)),
@@ -626,6 +673,10 @@ fn main() {
         .map(|(k, v)| (k.as_str(), num(*v)))
         .collect();
     ratio_pairs.push(("v3_vs_v2_kernel", num(kernel_ratio)));
+    // liveness-layer cost gate: plain remote median / heartbeat-armed
+    // remote median, measured in the same run (1.0 = heartbeats free)
+    ratio_pairs
+        .push(("remote_b1_heartbeat_vs_plain", num(remote_hb_ratio)));
     let jratios = obj(ratio_pairs);
 
     let report = obj(vec![

@@ -123,13 +123,27 @@ COMMANDS:
                                backpressure at Q outstanding per replica,
                                fleet-merged percentiles (--workers is the
                                TOTAL worker count, split across replicas)
+             [--request-timeout-ms T --shed-after-ms T]
+                               liveness budgets (0/absent = off):
+                               --request-timeout-ms expires waiters past
+                               T (typed DeadlineExceeded, counted in
+                               fleet stats; consecutive expiries trip a
+                               per-slot circuit breaker that half-open
+                               probes before re-admission);
+                               --shed-after-ms makes workers shed
+                               requests already older than T at batch
+                               time instead of serving dead traffic
              [--remote-worker HOST:PORT]
                                run this process as a fleet worker: the
                                ServeModel behind a TCP listener speaking
                                the infer::net frame protocol (port 0
                                picks an ephemeral port; the listening
                                address is printed as a banner before the
-                               first accept)
+                               first accept); --fault-plan
+                               kind:at[:delay_ms[:seed]] arms scripted
+                               chaos (corrupt|truncate|delay|stall|
+                               freeze) on this worker's write pump —
+                               tests/soaks only
              [--remote H:P,H:P,... | --spawn-workers N]
                                serve the same traffic through remote
                                workers instead of in-process replicas:
@@ -139,7 +153,12 @@ COMMANDS:
                                worker processes of this binary on
                                ephemeral ports and respawns them on
                                death; model flags are forwarded so
-                               children freeze the identical snapshot
+                               children freeze the identical snapshot;
+                               --heartbeat-ms I (default 500, 0 = off)
+                               pings each worker and declares it stalled
+                               after --heartbeat-misses silent windows
+                               (default 3); --banner-timeout-ms bounds
+                               the spawned-worker banner wait
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

@@ -46,12 +46,16 @@ pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
 pub use graph::{
     EdgeType, ExecBuffers, Graph, KernelMode, PreparedWeights, V3Layer,
 };
-pub use net::{RemoteOpts, RemoteReplica, Supervisor, Worker, WorkerSpec};
+pub use net::{
+    FaultKind, FaultPlan, RemoteOpts, RemoteReplica, Supervisor, Worker,
+    WorkerSpec,
+};
 pub use packed::PackedBits;
 pub use router::{
-    FleetStats, Pending, ReplicaBackend, ReplicaFactory, Router,
+    FleetStats, Liveness, Pending, ReplicaBackend, ReplicaFactory, Router,
     RouterConfig, RoutingPolicy, SubmitError,
 };
 pub use serve::{
     RawServeStats, Reply, ServeConfig, ServeModel, ServeStats, Server,
+    SHED_PRED,
 };

@@ -18,7 +18,17 @@
 //!   fires mid-frame would leave the stream desynchronized, which is
 //!   strictly worse than waiting — dead peers are detected by EOF/RST,
 //!   and `kill()`/`drain_then_stop()` unblock the reader by shutting
-//!   the socket down.
+//!   the socket down. Liveness of a *wedged-but-connected* peer is the
+//!   **heartbeat thread's** job (DESIGN §14): it pings on an interval,
+//!   counts any received frame as proof of life, and after
+//!   `heartbeat_misses` silent windows declares the replica stalled by
+//!   shutting the socket down itself — which lands in the same
+//!   reader-death / resubmit ledger as an EOF.
+//! * The same thread sweeps waiters past `request_timeout`: their
+//!   receivers see `RecvError` (router resubmits elsewhere), and —
+//!   unlike reader death — `outstanding` IS decremented, because the
+//!   slot's connection is still healthy and the late reply will be
+//!   tolerated and discarded, not lost.
 //! * The **write path carries a timeout** (a wedged peer must not hang
 //!   `try_submit` forever); any write failure poisons the replica and
 //!   hands the caller its image back, which is the router's signal to
@@ -59,6 +69,19 @@ pub struct RemoteOpts {
     /// bounded in-flight window: submits beyond this are refused
     /// (handed back), independent of the router's own queue cap
     pub max_inflight: usize,
+    /// heartbeat interval: `Some` arms a client-side Ping cycle where
+    /// any received frame counts as proof of life; `heartbeat_misses`
+    /// consecutive silent windows declare the replica stalled (socket
+    /// shut down → reader death → the resubmit ledger fires). `None`
+    /// disables heartbeats entirely (no liveness thread is spawned).
+    pub heartbeat_every: Option<Duration>,
+    /// consecutive silent heartbeat windows before a stall verdict
+    pub heartbeat_misses: u32,
+    /// client-side per-request deadline: waiters older than this are
+    /// reaped (receiver sees `RecvError` → router resubmits) with
+    /// `outstanding` decremented, since the connection itself is
+    /// still healthy. `None` = wait forever.
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for RemoteOpts {
@@ -68,6 +91,9 @@ impl Default for RemoteOpts {
             write_timeout: Duration::from_secs(2),
             drain_timeout: Duration::from_secs(10),
             max_inflight: 4096,
+            heartbeat_every: Some(Duration::from_millis(500)),
+            heartbeat_misses: 3,
+            request_timeout: None,
         }
     }
 }
@@ -83,21 +109,37 @@ struct PendingMap {
     map: HashMap<u64, Waiter>,
 }
 
-/// The shared state the reader thread and submitters both touch.
+/// The shared state the reader, liveness thread and submitters touch.
 struct Shared {
     pending: Mutex<PendingMap>,
     dead: AtomicBool,
+    /// tells the liveness thread to exit (drain/drop); distinct from
+    /// `dead`, which poisons the whole connection
+    stop: AtomicBool,
     outstanding: Arc<AtomicUsize>,
     acc: Mutex<RawServeStats>,
+    /// liveness clock origin; `last_rx_ns` is nanos-since-epoch of the
+    /// most recent frame received on this connection (ANY kind)
+    epoch: Instant,
+    last_rx_ns: AtomicU64,
+    /// pings sent so far; ids are 1..=hb_sent, so a Pong above the
+    /// counter was never solicited
+    hb_sent: AtomicU64,
+    pongs: AtomicU64,
+    unexpected_pongs: AtomicU64,
+    hb_stalls: AtomicU64,
+    deadline_reaped: AtomicU64,
 }
 
 pub struct RemoteReplica {
     shared: Arc<Shared>,
-    /// writer half; the Mutex serializes whole frames
-    writer: Mutex<TcpStream>,
+    /// writer half; the Mutex serializes whole frames (submits and
+    /// heartbeat pings share it)
+    writer: Arc<Mutex<TcpStream>>,
     /// kept solely to shutdown() the socket (unblocks the reader)
     stream: TcpStream,
     reader: Option<thread::JoinHandle<()>>,
+    liveness: Option<thread::JoinHandle<()>>,
     drain_rx: mpsc::Receiver<WorkerStats>,
     next_id: AtomicU64,
     img_len: usize,
@@ -164,8 +206,16 @@ impl RemoteReplica {
                 map: HashMap::new(),
             }),
             dead: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
             outstanding,
             acc: Mutex::new(RawServeStats::default()),
+            epoch: Instant::now(),
+            last_rx_ns: AtomicU64::new(0),
+            hb_sent: AtomicU64::new(0),
+            pongs: AtomicU64::new(0),
+            unexpected_pongs: AtomicU64::new(0),
+            hb_stalls: AtomicU64::new(0),
+            deadline_reaped: AtomicU64::new(0),
         });
         let (drain_tx, drain_rx) = mpsc::channel();
         let reader = {
@@ -176,13 +226,32 @@ impl RemoteReplica {
                 .context("spawning remote reader thread")?
         };
 
-        let writer = stream.try_clone()?;
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        // the liveness thread exists only when there is liveness work:
+        // the plain path (both None) spawns nothing and pays nothing
+        let liveness = if opts.heartbeat_every.is_some()
+            || opts.request_timeout.is_some()
+        {
+            let shared = Arc::clone(&shared);
+            let writer = Arc::clone(&writer);
+            let sock = stream.try_clone()?;
+            let o = opts.clone();
+            Some(
+                thread::Builder::new()
+                    .name(format!("uniq-remote-hb-{peer}"))
+                    .spawn(move || liveness_loop(shared, writer, sock, o, peer))
+                    .context("spawning remote liveness thread")?,
+            )
+        } else {
+            None
+        };
         let img_len = hello.img_len as usize;
         Ok(RemoteReplica {
             shared,
-            writer: Mutex::new(writer),
+            writer,
             stream,
             reader: Some(reader),
+            liveness,
             drain_rx,
             next_id: AtomicU64::new(1),
             img_len,
@@ -202,6 +271,24 @@ impl RemoteReplica {
 
     pub fn img_len(&self) -> usize {
         self.img_len
+    }
+
+    /// Snapshot of the liveness ledger: pongs seen, pongs never asked
+    /// for, stall verdicts, and deadline-reaped waiters. Surfaces in
+    /// the router's merged fleet stats.
+    pub fn liveness(&self) -> crate::infer::router::Liveness {
+        crate::infer::router::Liveness {
+            pongs: self.shared.pongs.load(Ordering::SeqCst),
+            unexpected_pongs: self
+                .shared
+                .unexpected_pongs
+                .load(Ordering::SeqCst),
+            hb_stalls: self.shared.hb_stalls.load(Ordering::SeqCst),
+            deadline_reaped: self
+                .shared
+                .deadline_reaped
+                .load(Ordering::SeqCst),
+        }
     }
 
     /// Same contract as `Server::try_submit`: `Err(image)` hands the
@@ -275,6 +362,12 @@ impl RemoteReplica {
     /// before the DrainAck is delivered to its waiter first — the
     /// worker's write pump is FIFO, so DrainAck is a true barrier.
     pub fn drain_then_stop(mut self) -> RawServeStats {
+        // quiesce liveness first: no pings or deadline reaping may
+        // interleave with the drain barrier
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.liveness.take() {
+            let _ = h.join();
+        }
         let drain_sent = {
             let mut w = self.writer.lock().unwrap();
             write_frame(&mut *w, FrameKind::Drain, 0, &[]).is_ok()
@@ -306,8 +399,12 @@ impl Drop for RemoteReplica {
     fn drop(&mut self) {
         // Belt-and-braces: never leave a reader blocked on a socket
         // whose owner is gone.
+        self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.dead.store(true, Ordering::SeqCst);
         let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.liveness.take() {
+            let _ = h.join();
+        }
         if let Some(r) = self.reader.take() {
             let _ = r.join();
         }
@@ -336,6 +433,12 @@ fn reader_loop(
                 break;
             }
         };
+        // ANY well-formed frame is proof of life for the heartbeat
+        // window — a busy worker streaming replies never needs a pong
+        shared.last_rx_ns.store(
+            shared.epoch.elapsed().as_nanos() as u64,
+            Ordering::SeqCst,
+        );
         match frame.kind {
             FrameKind::Reply => {
                 let waiter = shared
@@ -376,23 +479,40 @@ fn reader_loop(
                 });
             }
             FrameKind::Error => {
-                // the worker will never serve this id: release the
-                // waiter (RecvError upstream → bounded resubmission)
-                if let Ok(e) = ErrorMsg::decode(&frame.payload) {
-                    eprintln!(
-                        "[net] worker refused request {}: {} ({})",
-                        frame.id, e.msg, e.code
-                    );
-                }
-                let removed = shared
+                let err = ErrorMsg::decode(&frame.payload).ok();
+                let waiter = shared
                     .pending
                     .lock()
                     .unwrap()
                     .map
-                    .remove(&frame.id)
-                    .is_some();
-                if removed {
-                    shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    .remove(&frame.id);
+                let Some(waiter) = waiter else { continue };
+                shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                match err {
+                    // worker-side deadline shed: forward the sentinel
+                    // so the router surfaces a typed DeadlineExceeded
+                    // instead of resubmitting already-expired work
+                    Some(e) if e.code == "deadline" => {
+                        shared
+                            .deadline_reaped
+                            .fetch_add(1, Ordering::SeqCst);
+                        let _ = waiter.tx.send(Reply {
+                            pred: crate::infer::serve::SHED_PRED,
+                            logits: Vec::new(),
+                            latency: waiter.t0.elapsed(),
+                            batch: 0,
+                        });
+                    }
+                    // any other refusal: release the waiter (RecvError
+                    // upstream → bounded resubmission)
+                    e => {
+                        if let Some(e) = e {
+                            eprintln!(
+                                "[net] worker refused request {}: {} ({})",
+                                frame.id, e.msg, e.code
+                            );
+                        }
+                    }
                 }
             }
             FrameKind::DrainAck => {
@@ -403,7 +523,23 @@ fn reader_loop(
                     });
                 let _ = drain_tx.send(ws);
             }
-            FrameKind::Pong => {}
+            FrameKind::Pong => {
+                // ids 1..=hb_sent are ours; anything else was never
+                // solicited — count it instead of dropping it silently
+                let sent = shared.hb_sent.load(Ordering::SeqCst);
+                if (1..=sent).contains(&frame.id) {
+                    shared.pongs.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    shared
+                        .unexpected_pongs
+                        .fetch_add(1, Ordering::SeqCst);
+                    eprintln!(
+                        "[net] reader: unexpected Pong id {} \
+                         ({sent} pings sent)",
+                        frame.id
+                    );
+                }
+            }
             other => {
                 eprintln!(
                     "[net] reader: unexpected {other:?} frame, ignoring"
@@ -420,6 +556,91 @@ fn reader_loop(
     // Dropping waiters does NOT decrement outstanding: the residue is
     // the in-flight loss heal() harvests, same as a killed local server.
     p.map.clear();
+}
+
+/// The liveness thread (DESIGN §14): one per connection, spawned only
+/// when heartbeats or a request deadline are configured. Three duties
+/// on a short tick: (1) send a Ping every `heartbeat_every`; (2) if no
+/// frame of ANY kind arrived for `heartbeat_misses` consecutive
+/// windows, declare the replica stalled and shut the socket down — the
+/// reader dies, waiters drop, and the router's lost-in-flight ledger
+/// resubmits, exactly as if the peer had closed the connection; (3)
+/// reap waiters older than `request_timeout`, decrementing
+/// `outstanding` (the connection is healthy; a late reply is tolerated
+/// and discarded by the Reply arm).
+fn liveness_loop(
+    shared: Arc<Shared>,
+    writer: Arc<Mutex<TcpStream>>,
+    sock: TcpStream,
+    opts: RemoteOpts,
+    peer: SocketAddr,
+) {
+    // tick fast enough that test-scale intervals (10ms) stay accurate
+    // and drop/drain joins return promptly
+    let slice = Duration::from_millis(2);
+    let mut last_ping = Instant::now();
+    loop {
+        thread::sleep(slice);
+        if shared.stop.load(Ordering::SeqCst)
+            || shared.dead.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        if let Some(interval) = opts.heartbeat_every {
+            if last_ping.elapsed() >= interval {
+                last_ping = Instant::now();
+                let id = shared.hb_sent.fetch_add(1, Ordering::SeqCst) + 1;
+                let wrote = {
+                    let mut w = writer.lock().unwrap();
+                    write_frame(&mut *w, FrameKind::Ping, id, &[])
+                };
+                if wrote.is_err() {
+                    shared.dead.store(true, Ordering::SeqCst);
+                    let _ = sock.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            let window = interval * opts.heartbeat_misses.max(1);
+            let last_rx = Duration::from_nanos(
+                shared.last_rx_ns.load(Ordering::SeqCst),
+            );
+            let silent = shared.epoch.elapsed().saturating_sub(last_rx);
+            if silent > window {
+                shared.hb_stalls.fetch_add(1, Ordering::SeqCst);
+                eprintln!(
+                    "[net] worker {peer} stalled: silent for {silent:?} \
+                     (heartbeat window {window:?}); shutting reader down"
+                );
+                shared.dead.store(true, Ordering::SeqCst);
+                let _ = sock.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        if let Some(deadline) = opts.request_timeout {
+            let reaped = {
+                let mut p = shared.pending.lock().unwrap();
+                let expired: Vec<u64> = p
+                    .map
+                    .iter()
+                    .filter(|(_, w)| w.t0.elapsed() > deadline)
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in &expired {
+                    p.map.remove(id);
+                }
+                expired.len()
+            };
+            if reaped > 0 {
+                // unlike reader death these slots are NOT lost: the
+                // connection still works, so decrement here and let
+                // the eventual late Reply hit the missing-waiter arm
+                shared.outstanding.fetch_sub(reaped, Ordering::SeqCst);
+                shared
+                    .deadline_reaped
+                    .fetch_add(reaped as u64, Ordering::SeqCst);
+            }
+        }
+    }
 }
 
 /// A remote worker is a first-class replica: the router's routing,
@@ -443,6 +664,10 @@ impl crate::infer::router::ReplicaBackend for RemoteReplica {
 
     fn kill(&self) {
         RemoteReplica::kill(self)
+    }
+
+    fn liveness(&self) -> crate::infer::router::Liveness {
+        RemoteReplica::liveness(self)
     }
 
     fn drain_then_stop(self: Box<Self>) -> RawServeStats {

@@ -1,0 +1,308 @@
+//! Deterministic, seeded fault injection at the frame read/write seams.
+//!
+//! The SIGKILL soak proves the fleet survives faults that *close a
+//! socket*; this module scripts the faults that don't: corrupt CRCs,
+//! frames truncated mid-payload, delayed or stalled writes, and a
+//! worker pump thread frozen on a schedule (wedged-but-connected). A
+//! [`FaultPlan`] is a pure function of `(kind, at, every, seed)` —
+//! every chaos cell reproduces the same byte stream on every run, so
+//! the zero-drop/bit-identity assertions test recovery logic, not
+//! timing luck.
+//!
+//! Wiring is test/soak-only: `Worker::bind_with` threads an optional
+//! plan into each connection, where [`FaultyWriter`] wraps the pump's
+//! write half ([`crate::infer::net::frame::write_frame`] issues one
+//! `write` call per frame, so the shim sees whole frames) and the pump
+//! loop honors [`FaultKind::FreezePump`] by sleeping in place. The
+//! production path (`bind`, plan = `None`) is byte-for-byte untouched.
+
+use std::io::{self, Write};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::frame::HEADER_LEN;
+
+/// What the injector does when the plan fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip bits in the frame's trailing CRC: the peer sees a typed
+    /// `CrcMismatch`, kills its reader, and the resubmit ledger fires.
+    CorruptCrc,
+    /// Emit only the header plus half the payload, then keep the
+    /// connection open: the peer desyncs (Truncated / BadMagic /
+    /// CrcMismatch on the next read) without a socket close.
+    TruncateMidPayload,
+    /// Sleep `delay` before each scheduled write: latency inflation
+    /// that request deadlines, not heartbeats, must catch.
+    DelayWrite,
+    /// Sleep a long `delay` once, blocking the single-writer pump:
+    /// replies AND pongs starve, so the heartbeat window must trip.
+    StallWrite,
+    /// Freeze the pump thread itself (sleep inside the pump loop, not
+    /// the writer): same starvation as a paused VM or SIGSTOP, while
+    /// the TCP connection stays fully open.
+    FreezePump,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::CorruptCrc => "corrupt",
+            FaultKind::TruncateMidPayload => "truncate",
+            FaultKind::DelayWrite => "delay",
+            FaultKind::StallWrite => "stall",
+            FaultKind::FreezePump => "freeze",
+        }
+    }
+}
+
+/// A scripted fault: fire `kind` at frame/item index `at` (0-based),
+/// optionally repeating every `every` frames, with `delay` and `seed`
+/// controlling magnitude and byte choice. Parsed from
+/// `kind:at[:delay_ms[:seed]]` (worker-only `--fault-plan` flag).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    pub at: u64,
+    pub every: Option<u64>,
+    pub delay: Duration,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse `kind:at[:delay_ms[:seed]]`. Kinds: `corrupt`,
+    /// `truncate`, `delay`, `stall`, `freeze`. `delay` repeats every
+    /// `at` frames (periodic latency); the others fire once.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 2 || parts.len() > 4 {
+            return Err(format!(
+                "bad fault plan '{spec}' (want kind:at[:delay_ms[:seed]])"
+            ));
+        }
+        let kind = match parts[0] {
+            "corrupt" => FaultKind::CorruptCrc,
+            "truncate" => FaultKind::TruncateMidPayload,
+            "delay" => FaultKind::DelayWrite,
+            "stall" => FaultKind::StallWrite,
+            "freeze" => FaultKind::FreezePump,
+            other => return Err(format!("unknown fault kind '{other}'")),
+        };
+        let at: u64 = parts[1]
+            .parse()
+            .map_err(|_| format!("bad fault index '{}'", parts[1]))?;
+        let default_ms = match kind {
+            FaultKind::CorruptCrc | FaultKind::TruncateMidPayload => 0,
+            FaultKind::DelayWrite => 25,
+            FaultKind::StallWrite => 10_000,
+            FaultKind::FreezePump => 3_600_000,
+        };
+        let delay_ms: u64 = match parts.get(2) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("bad fault delay_ms '{v}'"))?,
+            None => default_ms,
+        };
+        let seed: u64 = match parts.get(3) {
+            Some(v) => {
+                v.parse().map_err(|_| format!("bad fault seed '{v}'"))?
+            }
+            None => 0x_FA_57,
+        };
+        Ok(FaultPlan {
+            kind,
+            // a periodic delay models a consistently slow link; the
+            // destructive kinds fire once so recovery is observable
+            every: match kind {
+                FaultKind::DelayWrite => Some(at.max(1)),
+                _ => None,
+            },
+            at,
+            delay: Duration::from_millis(delay_ms),
+            seed,
+        })
+    }
+
+    /// Does the plan fire at 0-based frame/item index `idx`?
+    pub fn fires_at(&self, idx: u64) -> bool {
+        match self.every {
+            Some(every) => idx >= self.at && (idx - self.at) % every == 0,
+            None => idx == self.at,
+        }
+    }
+}
+
+/// XOR the frame's trailing CRC byte: guaranteed `CrcMismatch` (the
+/// header stays valid, so the error is typed, not a desync).
+pub fn corrupt_crc(frame: &mut [u8]) {
+    if let Some(last) = frame.last_mut() {
+        *last ^= 0xA5;
+    }
+}
+
+/// Keep the header plus half the payload+crc tail — a frame cut
+/// mid-payload with the connection still open.
+pub fn truncate_mid_payload(frame: &[u8]) -> &[u8] {
+    if frame.len() <= HEADER_LEN {
+        return frame;
+    }
+    let body = frame.len() - HEADER_LEN;
+    &frame[..HEADER_LEN + body / 2]
+}
+
+/// Flip one seeded-random bit inside the header: exercises the typed
+/// header validation sweep (BadMagic / FutureVersion / BadReserved /
+/// BadKind / Truncated / Oversized / CrcMismatch — never a panic).
+pub fn flip_header_bit(frame: &mut [u8], rng: &mut Rng) {
+    let n = frame.len().min(HEADER_LEN);
+    if n == 0 {
+        return;
+    }
+    let byte = rng.below(n);
+    let bit = rng.below(8) as u32;
+    frame[byte] ^= 1u8 << bit;
+}
+
+/// A `Write` shim over the worker pump's write half. `write_frame`
+/// hands a whole encoded frame to a single `write` call, so the shim
+/// counts frames (not bytes) and applies the plan's byte mutation or
+/// sleep on the scheduled indices. Off-schedule frames pass through
+/// untouched.
+pub struct FaultyWriter<W: Write> {
+    inner: W,
+    plan: FaultPlan,
+    frames: u64,
+    rng: Rng,
+}
+
+impl<W: Write> FaultyWriter<W> {
+    pub fn new(inner: W, plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        FaultyWriter { inner, plan, frames: 0, rng }
+    }
+}
+
+impl<W: Write> Write for FaultyWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let idx = self.frames;
+        self.frames += 1;
+        if !self.plan.fires_at(idx) {
+            self.inner.write_all(buf)?;
+            return Ok(buf.len());
+        }
+        match self.plan.kind {
+            FaultKind::CorruptCrc => {
+                let mut bad = buf.to_vec();
+                corrupt_crc(&mut bad);
+                // also scramble one payload byte so even a peer that
+                // skipped CRC checks would observe the corruption
+                if bad.len() > HEADER_LEN + 4 {
+                    let span = bad.len() - HEADER_LEN - 4;
+                    let i = HEADER_LEN + self.rng.below(span);
+                    bad[i] ^= 0x40;
+                }
+                self.inner.write_all(&bad)?;
+            }
+            FaultKind::TruncateMidPayload => {
+                self.inner.write_all(truncate_mid_payload(buf))?;
+            }
+            FaultKind::DelayWrite | FaultKind::StallWrite => {
+                std::thread::sleep(self.plan.delay);
+                self.inner.write_all(buf)?;
+            }
+            // handled by the pump loop, not the writer: pass through
+            FaultKind::FreezePump => self.inner.write_all(buf)?,
+        }
+        // report full consumption either way: the *peer* sees the
+        // fault; the local pump must keep running so recovery is
+        // driven by the client, exactly like a real wedged worker
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::net::frame::{encode, read_frame, FrameError, FrameKind};
+
+    #[test]
+    fn plan_parse_roundtrip() {
+        let p = FaultPlan::parse("corrupt:8").unwrap();
+        assert_eq!(p.kind, FaultKind::CorruptCrc);
+        assert_eq!(p.at, 8);
+        assert_eq!(p.every, None);
+        assert!(p.fires_at(8) && !p.fires_at(7) && !p.fires_at(9));
+
+        let p = FaultPlan::parse("delay:4:2:99").unwrap();
+        assert_eq!(p.kind, FaultKind::DelayWrite);
+        assert_eq!(p.every, Some(4));
+        assert_eq!(p.delay, Duration::from_millis(2));
+        assert_eq!(p.seed, 99);
+        assert!(p.fires_at(4) && p.fires_at(8) && !p.fires_at(5));
+
+        let p = FaultPlan::parse("freeze:10").unwrap();
+        assert_eq!(p.kind, FaultKind::FreezePump);
+        assert_eq!(p.delay, Duration::from_millis(3_600_000));
+
+        assert!(FaultPlan::parse("corrupt").is_err());
+        assert!(FaultPlan::parse("melt:1").is_err());
+        assert!(FaultPlan::parse("corrupt:x").is_err());
+        assert!(FaultPlan::parse("corrupt:1:2:3:4").is_err());
+    }
+
+    #[test]
+    fn corrupt_crc_yields_typed_mismatch() {
+        let mut f = encode(FrameKind::Submit, 3, &[1, 2, 3, 4]);
+        corrupt_crc(&mut f);
+        match read_frame(&mut f.as_slice()) {
+            Err(FrameError::CrcMismatch { .. }) => {}
+            other => panic!("want CrcMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncate_yields_typed_truncated() {
+        let f = encode(FrameKind::Submit, 3, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut cut = truncate_mid_payload(&f);
+        assert!(cut.len() > HEADER_LEN && cut.len() < f.len());
+        match read_frame(&mut cut) {
+            Err(FrameError::Truncated { .. }) => {}
+            other => panic!("want Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn faulty_writer_passes_clean_frames_verbatim() {
+        let plan = FaultPlan::parse("corrupt:1").unwrap();
+        let mut out = Vec::new();
+        {
+            let mut w = FaultyWriter::new(&mut out, plan);
+            let f = encode(FrameKind::Ping, 7, &[]);
+            w.write_all(&f).unwrap(); // frame 0: off-schedule
+        }
+        let mut rd = out.as_slice();
+        let got = read_frame(&mut rd).unwrap();
+        assert_eq!(got.kind, FrameKind::Ping);
+        assert_eq!(got.id, 7);
+    }
+
+    #[test]
+    fn faulty_writer_corrupts_on_schedule() {
+        let plan = FaultPlan::parse("corrupt:0").unwrap();
+        let mut out = Vec::new();
+        {
+            let mut w = FaultyWriter::new(&mut out, plan);
+            let f = encode(FrameKind::Submit, 9, &[0u8; 16]);
+            w.write_all(&f).unwrap();
+        }
+        match read_frame(&mut out.as_slice()) {
+            Err(FrameError::CrcMismatch { .. }) => {}
+            other => panic!("want CrcMismatch, got {other:?}"),
+        }
+    }
+}

@@ -484,6 +484,58 @@ mod tests {
         assert_eq!(f.id, 9);
     }
 
+    /// Satellite extension: the same failure discipline, driven through
+    /// the fault injector (`net::fault`) instead of hand-built byte
+    /// edits — an unknown-kind byte sweep, a mid-payload cut from the
+    /// injector's truncation helper, and a seeded bit-flipped-header
+    /// sweep. The CRC covers the whole header, so EVERY single-bit
+    /// header flip must surface a typed error (header validation or
+    /// `CrcMismatch`) — never a panic, never a silently altered frame.
+    /// Mirrored in `python/tests/test_net_frame_mirror.py`.
+    #[test]
+    fn injector_driven_mutations_fail_typed() {
+        use crate::infer::net::fault::{
+            flip_header_bit, truncate_mid_payload,
+        };
+        use crate::util::rng::Rng;
+
+        let good = encode(FrameKind::Reply, 42, &f32s_to_bytes(&[1.5; 16]));
+
+        // unknown-kind sweep: bytes outside the registered 1..=8 range
+        for k in [0u8, 9, 10, 42, 99, 200, 255] {
+            let mut bad = good.clone();
+            bad[5] = k;
+            match read_frame(&mut Cursor::new(bad)) {
+                Err(FrameError::BadKind(got)) => assert_eq!(got, k),
+                other => panic!("kind {k}: {other:?}"),
+            }
+        }
+
+        // injector truncation: a frame cut mid-payload, stream "open"
+        let cut = truncate_mid_payload(&good);
+        assert!(cut.len() > HEADER_LEN && cut.len() < good.len());
+        match read_frame(&mut Cursor::new(cut.to_vec())) {
+            Err(FrameError::Truncated { .. }) => {}
+            other => panic!("mid-payload cut: {other:?}"),
+        }
+
+        // seeded header bit-flip sweep: 256 deterministic mutations
+        let mut rng = Rng::new(0xF1A9);
+        for i in 0..256 {
+            let mut bad = good.clone();
+            flip_header_bit(&mut bad, &mut rng);
+            assert_ne!(bad, good, "iteration {i}: flip was a no-op");
+            match read_frame(&mut Cursor::new(bad)) {
+                Err(_) => {} // any typed FrameError is the contract
+                Ok(f) => panic!(
+                    "iteration {i}: bit-flipped header parsed as \
+                     {:?} id {}",
+                    f.kind, f.id
+                ),
+            }
+        }
+    }
+
     #[test]
     fn f32_bytes_roundtrip_and_reject_ragged() {
         let xs = [0.0f32, -0.0, 1.5e-38, f32::MAX, -1.0];

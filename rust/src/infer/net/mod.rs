@@ -27,15 +27,23 @@
 //!   router's health monitor so a SIGKILLed worker is drained, its
 //!   loss accounted, and a fresh generation installed with zero
 //!   client-visible drops.
+//! * [`fault`] — deterministic, seeded fault injection at the frame
+//!   write seams (corrupt / truncate / delay / stall / freeze), wired
+//!   in by tests and the chaos soak only; the production path never
+//!   constructs a plan.
 
 pub mod client;
+pub mod fault;
 pub mod frame;
 pub mod proto;
 pub mod supervise;
 pub mod worker;
 
 pub use client::{submit_blocking, RemoteOpts, RemoteReplica};
+pub use fault::{FaultKind, FaultPlan, FaultyWriter};
 pub use frame::{Frame, FrameError, FrameKind, PROTO_VERSION};
 pub use proto::{ErrorMsg, Hello, ProtoError, ReplyPayload, WorkerStats};
-pub use supervise::{ModelExpect, Supervisor, WorkerSpec};
+pub use supervise::{
+    ModelExpect, Supervisor, WorkerSpec, DEFAULT_BANNER_TIMEOUT,
+};
 pub use worker::{Worker, WorkerHandle};

@@ -56,9 +56,21 @@ pub enum WorkerSpec {
     Connect(String),
     /// spawn (and respawn) the worker process ourselves; the command
     /// must print the `remote-worker listening on HOST:PORT` banner on
-    /// stdout before serving
-    Spawn { cmd: String, args: Vec<String> },
+    /// stdout before serving. `banner_timeout` bounds the wait for
+    /// that banner before the launch is declared failed — default
+    /// [`DEFAULT_BANNER_TIMEOUT`] covers model build + bind on a
+    /// loaded CI runner; tests probing the unreachable-spawn path use
+    /// a fast value so failure costs milliseconds, not 30 s.
+    Spawn {
+        cmd: String,
+        args: Vec<String>,
+        banner_timeout: Duration,
+    },
 }
+
+/// Default banner wait for [`WorkerSpec::Spawn`] (CLI override:
+/// `--banner-timeout-ms`).
+pub const DEFAULT_BANNER_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Owns spawned worker children and builds per-slot replica factories.
 pub struct Supervisor {
@@ -70,10 +82,6 @@ pub struct Supervisor {
     /// total processes spawned (first launches included)
     spawns: AtomicUsize,
 }
-
-/// How long to wait for a spawned worker's banner before declaring the
-/// launch failed. Covers model build + bind on a loaded CI runner.
-const BANNER_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl Supervisor {
     pub fn new(
@@ -136,7 +144,7 @@ impl Supervisor {
                 .with_context(|| format!("slot {slot}: worker {addr}"))?;
                 Ok(Box::new(r))
             }
-            WorkerSpec::Spawn { cmd, args } => {
+            WorkerSpec::Spawn { cmd, args, banner_timeout } => {
                 // Reap whatever is in the slot — after a SIGKILL the
                 // corpse must be wait()ed or it lingers as a zombie.
                 {
@@ -147,10 +155,11 @@ impl Supervisor {
                     }
                 }
                 let addr = {
-                    let (child, addr) = spawn_worker(cmd, args)
-                        .with_context(|| {
-                            format!("slot {slot}: spawning {cmd}")
-                        })?;
+                    let (child, addr) =
+                        spawn_worker(cmd, args, *banner_timeout)
+                            .with_context(|| {
+                                format!("slot {slot}: spawning {cmd}")
+                            })?;
                     self.spawns.fetch_add(1, Ordering::SeqCst);
                     *self.children[slot].lock().unwrap() = Some(child);
                     addr
@@ -206,7 +215,11 @@ impl Drop for Supervisor {
 /// life: a worker whose stdout pipe fills up would block inside a
 /// `println!` mid-serve, which is a silent fleet stall — never let
 /// that happen.
-fn spawn_worker(cmd: &str, args: &[String]) -> Result<(Child, String)> {
+fn spawn_worker(
+    cmd: &str,
+    args: &[String],
+    banner_timeout: Duration,
+) -> Result<(Child, String)> {
     let mut child = Command::new(cmd)
         .args(args)
         .stdout(Stdio::piped())
@@ -239,14 +252,14 @@ fn spawn_worker(cmd: &str, args: &[String]) -> Result<(Child, String)> {
         })
         .context("spawning stdout drain thread")?;
 
-    let banner = match rx.recv_timeout(BANNER_TIMEOUT) {
+    let banner = match rx.recv_timeout(banner_timeout) {
         Ok(b) => b,
         Err(_) => {
             let _ = child.kill();
             let _ = child.wait();
             bail!(
                 "worker printed no 'remote-worker listening on' banner \
-                 within {BANNER_TIMEOUT:?}"
+                 within {banner_timeout:?}"
             );
         }
     };

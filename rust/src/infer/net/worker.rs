@@ -20,6 +20,7 @@
 //! the server just parks the pump briefly; correctness and the drain
 //! barrier come free, and the write side needs no reordering buffer.
 
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -27,8 +28,9 @@ use std::thread;
 
 use anyhow::{Context, Result};
 
-use crate::infer::serve::{Reply, ServeConfig, ServeModel, Server};
+use crate::infer::serve::{Reply, ServeConfig, ServeModel, Server, SHED_PRED};
 
+use super::fault::{FaultKind, FaultPlan, FaultyWriter};
 use super::frame::{
     bytes_to_f32s, read_frame, write_frame, FrameError, FrameKind,
     PROTO_VERSION,
@@ -50,6 +52,9 @@ pub struct Worker {
     addr: SocketAddr,
     server: Arc<Mutex<Server>>,
     hello: Hello,
+    /// scripted chaos (`--fault-plan`, tests/soaks only): applied to
+    /// every connection's write pump. `None` on the production path.
+    fault: Option<FaultPlan>,
 }
 
 impl Worker {
@@ -60,6 +65,20 @@ impl Worker {
         sm: Arc<ServeModel>,
         cfg: ServeConfig,
         addr: &str,
+    ) -> Result<Worker> {
+        Worker::bind_with(sm, cfg, addr, None)
+    }
+
+    /// [`Worker::bind`] with a scripted fault plan wired into each
+    /// connection's write pump — the chaos-soak entry point. The plan
+    /// fires on the pump's frame/item schedule (the handshake `Hello`
+    /// is written before the pump exists and is never faulted, so a
+    /// chaos worker always comes up cleanly before misbehaving).
+    pub fn bind_with(
+        sm: Arc<ServeModel>,
+        cfg: ServeConfig,
+        addr: &str,
+        fault: Option<FaultPlan>,
     ) -> Result<Worker> {
         let hello = Hello {
             proto: PROTO_VERSION as u64,
@@ -74,7 +93,7 @@ impl Worker {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding worker listener on {addr}"))?;
         let addr = listener.local_addr()?;
-        Ok(Worker { listener, addr, server, hello })
+        Ok(Worker { listener, addr, server, hello, fault })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -94,10 +113,12 @@ impl Worker {
             let (conn, peer) = self.listener.accept()?;
             let server = Arc::clone(&self.server);
             let hello = self.hello.clone();
+            let fault = self.fault.clone();
             thread::Builder::new()
                 .name(format!("uniq-worker-conn-{peer}"))
                 .spawn(move || {
-                    if let Err(e) = handle_conn(conn, server, hello) {
+                    if let Err(e) = handle_conn(conn, server, hello, fault)
+                    {
                         eprintln!("[worker] connection {peer}: {e:#}");
                     }
                 })
@@ -109,7 +130,7 @@ impl Worker {
     /// chaos drills). The returned handle can poison the worker the
     /// way SIGKILL would from outside: abruptly, replies in flight.
     pub fn spawn(self) -> WorkerHandle {
-        let Worker { listener, addr, server, hello } = self;
+        let Worker { listener, addr, server, hello, fault } = self;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<TcpStream>>> =
             Arc::new(Mutex::new(Vec::new()));
@@ -130,10 +151,12 @@ impl Worker {
                         }
                         let server = Arc::clone(&server);
                         let hello = hello.clone();
+                        let fault = fault.clone();
                         let _ = thread::Builder::new()
                             .name("uniq-worker-conn".into())
                             .spawn(move || {
-                                let _ = handle_conn(conn, server, hello);
+                                let _ =
+                                    handle_conn(conn, server, hello, fault);
                             });
                     }
                 })
@@ -190,12 +213,14 @@ fn handle_conn(
     conn: TcpStream,
     server: Arc<Mutex<Server>>,
     hello: Hello,
+    fault: Option<FaultPlan>,
 ) -> Result<()> {
     conn.set_nodelay(true).ok();
     let mut rd = conn.try_clone().context("cloning connection")?;
     let mut wr = conn.try_clone().context("cloning connection")?;
 
     // Banner first: the client's handshake read is waiting on it.
+    // Written before the pump exists, so a fault plan never touches it.
     write_frame(&mut wr, FrameKind::Hello, 0, &hello.encode())
         .map_err(|e| anyhow::anyhow!("sending hello: {e}"))?;
 
@@ -204,7 +229,22 @@ fn handle_conn(
         let server = Arc::clone(&server);
         thread::Builder::new()
             .name("uniq-worker-pump".into())
-            .spawn(move || pump_loop(wr, pump_rx, server))
+            .spawn(move || match fault {
+                None => pump_loop(wr, pump_rx, server, None),
+                Some(plan) => {
+                    // FreezePump wedges the pump loop itself; the byte
+                    // faults live in the writer shim. Either way the
+                    // shim is harmless for the kinds it doesn't own.
+                    let freeze = (plan.kind == FaultKind::FreezePump)
+                        .then(|| plan.clone());
+                    pump_loop(
+                        FaultyWriter::new(wr, plan),
+                        pump_rx,
+                        server,
+                        freeze,
+                    )
+                }
+            })
             .context("spawning write pump")?
     };
 
@@ -272,14 +312,44 @@ fn handle_conn(
 /// The single writer. FIFO over `rx`; every item becomes exactly one
 /// frame. Write failures end the pump — the read loop notices via the
 /// closed channel and the client's reader sees the dead stream.
-fn pump_loop(
-    mut wr: TcpStream,
+/// `freeze` is the chaos hook: a `FreezePump` plan wedges this thread
+/// (sleep in place, connection fully open) at the scheduled item index
+/// — the starvation signature of a paused VM or SIGSTOP.
+fn pump_loop<W: Write>(
+    mut wr: W,
     rx: mpsc::Receiver<PumpItem>,
     server: Arc<Mutex<Server>>,
+    freeze: Option<FaultPlan>,
 ) {
+    let mut items: u64 = 0;
     while let Ok(item) = rx.recv() {
+        if let Some(plan) = &freeze {
+            if plan.fires_at(items) {
+                eprintln!(
+                    "[worker] chaos: freezing pump at item {items} for \
+                     {:?}",
+                    plan.delay
+                );
+                thread::sleep(plan.delay);
+            }
+        }
+        items += 1;
         let ok = match item {
+            // shed by the worker-side deadline: the sentinel carries no
+            // logits — surface it as a typed Error so the client's
+            // waiter is released with a deadline verdict, not a guess
             PumpItem::Reply { id, rx } => match rx.recv() {
+                Ok(reply) if reply.pred == SHED_PRED => write_frame(
+                    &mut wr,
+                    FrameKind::Error,
+                    id,
+                    &ErrorMsg::new(
+                        "deadline",
+                        "request shed by worker-side queue-age deadline",
+                    )
+                    .encode(),
+                )
+                .is_ok(),
                 Ok(reply) => {
                     let payload = ReplyPayload {
                         pred: reply.pred as u32,

@@ -44,7 +44,9 @@
 //!   (`util::bench::percentile`).
 
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -53,6 +55,7 @@ use anyhow::{anyhow, Result};
 
 use super::serve::{
     RawServeStats, Reply, ServeConfig, ServeModel, ServeStats, Server,
+    SHED_PRED,
 };
 use crate::util::json::{num, obj, s, Json};
 
@@ -106,6 +109,10 @@ pub enum SubmitError {
     /// the request was resubmitted `resubmits` times and every serving
     /// replica dropped it — give up rather than loop forever
     Lost { resubmits: usize },
+    /// the reply did not arrive within `RouterConfig::request_timeout`
+    /// (or the worker shed the request as already expired); feeds the
+    /// serving replica's circuit breaker
+    DeadlineExceeded { waited_ms: u64 },
 }
 
 impl fmt::Display for SubmitError {
@@ -127,11 +134,40 @@ impl fmt::Display for SubmitError {
                 f,
                 "request lost after {resubmits} resubmissions"
             ),
+            SubmitError::DeadlineExceeded { waited_ms } => write!(
+                f,
+                "request deadline exceeded after {waited_ms} ms"
+            ),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Heartbeat/deadline accounting a backend surfaces into the merged
+/// fleet stats. Backends without liveness machinery (an in-process
+/// [`Server`]) report the default zeros via the trait's default impl.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Liveness {
+    /// solicited heartbeat pongs received
+    pub pongs: u64,
+    /// pongs whose id was never sent (logged and counted, not dropped)
+    pub unexpected_pongs: u64,
+    /// stall verdicts: a full heartbeat window passed with no frames,
+    /// so the reader was shut down and the resubmit ledger fired
+    pub hb_stalls: u64,
+    /// waiters reaped by the client-side request-deadline sweeper
+    pub deadline_reaped: u64,
+}
+
+impl Liveness {
+    pub fn merge(&mut self, other: &Liveness) {
+        self.pongs += other.pongs;
+        self.unexpected_pongs += other.unexpected_pongs;
+        self.hb_stalls += other.hb_stalls;
+        self.deadline_reaped += other.deadline_reaped;
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -151,6 +187,17 @@ pub struct RouterConfig {
     pub max_retries: usize,
     /// seed for the power-of-two sampler (deterministic tests)
     pub seed: u64,
+    /// per-request reply deadline enforced by [`Pending::recv`]:
+    /// `Some` turns a late reply into the typed
+    /// [`SubmitError::DeadlineExceeded`] and feeds the replica's
+    /// circuit breaker; `None` (default) waits forever
+    pub request_timeout: Option<Duration>,
+    /// consecutive deadline expiries on one replica before its breaker
+    /// trips open (a failed half-open probe trips instantly)
+    pub breaker_threshold: u32,
+    /// how long a tripped breaker stays open before offering a single
+    /// half-open probe request
+    pub breaker_cooldown: Duration,
     /// per-replica server configuration (worker count, batching, engine)
     pub serve: ServeConfig,
 }
@@ -164,6 +211,9 @@ impl Default for RouterConfig {
             health_every: Duration::from_millis(5),
             max_retries: 4,
             seed: 0x7031,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: ServeConfig::default(),
         }
     }
@@ -194,6 +244,11 @@ pub trait ReplicaBackend: Send + 'static {
     /// Abrupt stop: in-queue work is lost, `outstanding` keeps the
     /// in-flight residue for the router's loss accounting.
     fn kill(&self);
+    /// Heartbeat/deadline ledger for the fleet stats merge. Backends
+    /// without liveness machinery keep the default (all zeros).
+    fn liveness(&self) -> Liveness {
+        Liveness::default()
+    }
     /// Deliver every reply still owed, stop, and surrender the raw
     /// serving stats for the fleet merge.
     fn drain_then_stop(self: Box<Self>) -> RawServeStats;
@@ -270,7 +325,23 @@ struct Replica {
     /// requests routed here over all generations (incl. resubmissions)
     routed: AtomicUsize,
     backoff: Mutex<RestartBackoff>,
+    /// circuit breaker state: BRK_CLOSED / BRK_OPEN / BRK_HALF /
+    /// BRK_PROBE (DESIGN §14 state machine)
+    breaker: AtomicU8,
+    /// nanos-since-router-epoch when an Open breaker may offer a
+    /// half-open probe (also bounds how long a claimed probe may hang)
+    breaker_until_ns: AtomicU64,
+    /// consecutive deadline expiries since the last successful reply
+    consec_fails: AtomicU32,
 }
+
+/// Breaker states: Closed admits everything; Open admits nothing until
+/// the cooldown elapses; HalfOpen offers exactly one probe request;
+/// Probe blocks further traffic while that request is in flight.
+const BRK_CLOSED: u8 = 0;
+const BRK_OPEN: u8 = 1;
+const BRK_HALF: u8 = 2;
+const BRK_PROBE: u8 = 3;
 
 struct Inner {
     cfg: RouterConfig,
@@ -282,6 +353,14 @@ struct Inner {
     resubmits: AtomicUsize,
     restarts: AtomicUsize,
     lost: AtomicUsize,
+    /// replies that missed `request_timeout` (typed DeadlineExceeded)
+    deadline_expired: AtomicUsize,
+    /// Closed→Open breaker transitions across the fleet
+    breaker_trips: AtomicUsize,
+    /// monotonic clock origin for the breakers' `breaker_until_ns`
+    epoch: Instant,
+    /// liveness ledgers of retired (dead, drained) generations
+    live_acc: Mutex<Liveness>,
     /// merged raw stats of every retired (dead, drained) generation
     retired: Mutex<RawServeStats>,
     stopping: AtomicBool,
@@ -300,6 +379,70 @@ impl Inner {
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
         z ^= z >> 31;
         (z % n.max(1) as u64) as usize
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Routing eligibility per the slot's circuit breaker. Closed and
+    /// HalfOpen admit; Open (and a hung Probe) flip to HalfOpen once
+    /// their `breaker_until_ns` passes, so a tripped slot is re-probed
+    /// at the cooldown cadence instead of being exiled forever.
+    fn breaker_admits(&self, i: usize) -> bool {
+        let r = &self.replicas[i];
+        loop {
+            match r.breaker.load(Ordering::SeqCst) {
+                BRK_CLOSED | BRK_HALF => return true,
+                st @ (BRK_OPEN | BRK_PROBE) => {
+                    if self.now_ns()
+                        < r.breaker_until_ns.load(Ordering::SeqCst)
+                    {
+                        return false;
+                    }
+                    if r.breaker
+                        .compare_exchange(
+                            st,
+                            BRK_HALF,
+                            Ordering::SeqCst,
+                            Ordering::SeqCst,
+                        )
+                        .is_ok()
+                    {
+                        return true;
+                    }
+                    // raced with another transition: re-read the state
+                }
+                _ => return true,
+            }
+        }
+    }
+
+    /// A reply arrived from `idx`: the breaker's only success path.
+    /// Closes a probing/half-open breaker (full re-admission) and
+    /// clears the consecutive-failure count.
+    fn note_ok(&self, idx: usize) {
+        let r = &self.replicas[idx];
+        r.consec_fails.store(0, Ordering::SeqCst);
+        r.breaker.store(BRK_CLOSED, Ordering::SeqCst);
+    }
+
+    /// A request on `idx` blew its deadline: count it fleet-wide and
+    /// trip the slot's breaker after `breaker_threshold` consecutive
+    /// expiries — or instantly when the victim was the half-open probe.
+    fn note_slow(&self, idx: usize) {
+        self.deadline_expired.fetch_add(1, Ordering::SeqCst);
+        let Some(r) = self.replicas.get(idx) else { return };
+        let fails = r.consec_fails.fetch_add(1, Ordering::SeqCst) + 1;
+        let probing = r.breaker.load(Ordering::SeqCst) == BRK_PROBE;
+        if probing || fails >= self.cfg.breaker_threshold.max(1) {
+            let until = self.now_ns()
+                + self.cfg.breaker_cooldown.as_nanos() as u64;
+            r.breaker_until_ns.store(until, Ordering::SeqCst);
+            if r.breaker.swap(BRK_OPEN, Ordering::SeqCst) != BRK_OPEN {
+                self.breaker_trips.fetch_add(1, Ordering::SeqCst);
+            }
+        }
     }
 
     /// The `j`-th currently-live replica (scan; no allocation).
@@ -338,7 +481,7 @@ impl Inner {
                     if !up(i) {
                         continue;
                     }
-                    if under(i) {
+                    if under(i) && self.breaker_admits(i) {
                         if j >= start {
                             chosen = Some(i);
                             break;
@@ -355,7 +498,7 @@ impl Inner {
                 // strict `<` keeps first-min tie-breaking
                 let mut best: Option<usize> = None;
                 for i in 0..n {
-                    if !(up(i) && under(i)) {
+                    if !(up(i) && under(i) && self.breaker_admits(i)) {
                         continue;
                     }
                     let better = match best {
@@ -381,11 +524,15 @@ impl Inner {
                     (x, y) => x.or(y),
                 };
                 match best {
-                    Some(i) if under(i) => Some(i),
-                    // samples saturated or raced away: scan before
-                    // rejecting, so backpressure reflects the fleet,
-                    // not bad luck
-                    _ => (0..n).find(|&i| up(i) && under(i)),
+                    Some(i) if under(i) && self.breaker_admits(i) => {
+                        Some(i)
+                    }
+                    // samples saturated, breaker-blocked or raced
+                    // away: scan before rejecting, so backpressure
+                    // reflects the fleet, not bad luck
+                    _ => (0..n).find(|&i| {
+                        up(i) && under(i) && self.breaker_admits(i)
+                    }),
                 }
             }
         };
@@ -412,6 +559,28 @@ impl Inner {
         for _ in 0..=self.replicas.len() {
             let idx = self.pick()?;
             let r = &self.replicas[idx];
+            // a HalfOpen breaker admits exactly one probe at a time:
+            // claim it (with a hang budget so a lost probe re-offers
+            // after the cooldown), or walk on if a racer beat us to it
+            if r.breaker.load(Ordering::SeqCst) == BRK_HALF {
+                if r.breaker
+                    .compare_exchange(
+                        BRK_HALF,
+                        BRK_PROBE,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_ok()
+                {
+                    r.breaker_until_ns.store(
+                        self.now_ns()
+                            + self.cfg.breaker_cooldown.as_nanos() as u64,
+                        Ordering::SeqCst,
+                    );
+                } else {
+                    continue;
+                }
+            }
             {
                 // down-marking happens UNDER the slot lock: heal() also
                 // installs-and-revives under it, so a stale `up=false`
@@ -474,6 +643,20 @@ impl Inner {
                 }
             };
             if let Some(dead) = dead {
+                // bank the corpse's liveness ledger before the drain
+                // consumes it: hb stalls from dead generations must
+                // survive into the fleet stats
+                let live = dead.liveness();
+                self.live_acc.lock().unwrap().merge(&live);
+                if live.hb_stalls > 0 {
+                    // a stall verdict is a breaker trip: the slot was
+                    // pulled for misbehaving, not for closing a socket
+                    if r.breaker.swap(BRK_OPEN, Ordering::SeqCst)
+                        != BRK_OPEN
+                    {
+                        self.breaker_trips.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
                 // join first: a worker mid-batch still decrements the
                 // shared outstanding counter until the join completes,
                 // after which the residue is exactly the lost in-flight
@@ -514,6 +697,13 @@ impl Inner {
                         *slot = Some(fresh);
                         r.up.store(true, Ordering::SeqCst);
                     }
+                    // a fresh generation earns full re-admission by
+                    // answering one half-open probe first (until=now:
+                    // the probe is offered immediately)
+                    r.consec_fails.store(0, Ordering::SeqCst);
+                    r.breaker_until_ns
+                        .store(self.now_ns(), Ordering::SeqCst);
+                    r.breaker.store(BRK_HALF, Ordering::SeqCst);
                     *r.backoff.lock().unwrap() =
                         RestartBackoff { attempts: 0, next: None };
                     // the very first install is generation 0, not a
@@ -610,6 +800,9 @@ impl Router {
                         attempts: 0,
                         next: None,
                     }),
+                    breaker: AtomicU8::new(BRK_CLOSED),
+                    breaker_until_ns: AtomicU64::new(0),
+                    consec_fails: AtomicU32::new(0),
                 }
             })
             .collect();
@@ -625,6 +818,10 @@ impl Router {
             resubmits: AtomicUsize::new(0),
             restarts: AtomicUsize::new(0),
             lost: AtomicUsize::new(0),
+            deadline_expired: AtomicUsize::new(0),
+            breaker_trips: AtomicUsize::new(0),
+            epoch: Instant::now(),
+            live_acc: Mutex::new(Liveness::default()),
             retired: Mutex::new(RawServeStats::default()),
             stopping: AtomicBool::new(false),
         });
@@ -676,6 +873,7 @@ impl Router {
                 rx,
                 replica,
                 resubmits: 0,
+                t0: Instant::now(),
             }),
             Err(e) => {
                 if matches!(e, SubmitError::Overloaded { .. }) {
@@ -744,11 +942,15 @@ impl Router {
         }
         let inner = &self.inner;
         let mut fleet = inner.retired.lock().unwrap().clone();
+        let mut liveness = *inner.live_acc.lock().unwrap();
         let mut replicas = Vec::with_capacity(inner.replicas.len());
         for (i, r) in inner.replicas.iter().enumerate() {
             let taken = r.server.lock().unwrap().take();
             let raw = match taken {
-                Some(srv) => srv.drain_then_stop(),
+                Some(srv) => {
+                    liveness.merge(&srv.liveness());
+                    srv.drain_then_stop()
+                }
                 None => RawServeStats::default(),
             };
             // a replica that died right at shutdown still owes its
@@ -772,6 +974,11 @@ impl Router {
             resubmits: inner.resubmits.load(Ordering::SeqCst),
             rejected: inner.rejected.load(Ordering::SeqCst),
             lost_in_flight: inner.lost.load(Ordering::SeqCst),
+            deadline_expired: inner
+                .deadline_expired
+                .load(Ordering::SeqCst),
+            breaker_trips: inner.breaker_trips.load(Ordering::SeqCst),
+            liveness,
         }
     }
 }
@@ -787,6 +994,9 @@ pub struct Pending<'a> {
     rx: mpsc::Receiver<Reply>,
     replica: usize,
     resubmits: usize,
+    /// submit time; the `request_timeout` budget spans the request's
+    /// whole life, resubmissions included
+    t0: Instant,
 }
 
 impl fmt::Debug for Pending<'_> {
@@ -811,10 +1021,53 @@ impl Pending<'_> {
     /// out with bounded backoff instead of failing the request; only a
     /// fleet that stays broken past the budget surfaces the typed error.
     pub fn recv(mut self) -> std::result::Result<Reply, SubmitError> {
+        enum Got {
+            Reply(Reply),
+            /// the reply channel dropped: replica crash → resubmit
+            Dead,
+            /// `request_timeout` elapsed with no reply
+            Expired,
+        }
         loop {
-            match self.rx.recv() {
-                Ok(reply) => return Ok(reply),
-                Err(mpsc::RecvError) => {
+            let got = match self.router.inner.cfg.request_timeout {
+                None => match self.rx.recv() {
+                    Ok(r) => Got::Reply(r),
+                    Err(mpsc::RecvError) => Got::Dead,
+                },
+                Some(budget) => {
+                    let left = budget.saturating_sub(self.t0.elapsed());
+                    match self.rx.recv_timeout(left) {
+                        Ok(r) => Got::Reply(r),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            Got::Dead
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            Got::Expired
+                        }
+                    }
+                }
+            };
+            match got {
+                // the worker shed this request off its queue as
+                // already expired (sentinel reply): same verdict as a
+                // local timeout, typed instead of silent
+                Got::Reply(r) if r.pred == SHED_PRED => {
+                    self.router.inner.note_slow(self.replica);
+                    return Err(SubmitError::DeadlineExceeded {
+                        waited_ms: self.t0.elapsed().as_millis() as u64,
+                    });
+                }
+                Got::Reply(r) => {
+                    self.router.inner.note_ok(self.replica);
+                    return Ok(r);
+                }
+                Got::Expired => {
+                    self.router.inner.note_slow(self.replica);
+                    return Err(SubmitError::DeadlineExceeded {
+                        waited_ms: self.t0.elapsed().as_millis() as u64,
+                    });
+                }
+                Got::Dead => {
                     self.router.inner.note_dead(self.replica);
                     if self.resubmits >= self.router.inner.cfg.max_retries {
                         return Err(SubmitError::Lost {
@@ -895,6 +1148,14 @@ pub struct FleetStats {
     /// requests that died with a killed generation (each either
     /// resubmitted by its [`Pending`] or surfaced as an error)
     pub lost_in_flight: usize,
+    /// replies that missed `request_timeout` (typed
+    /// [`SubmitError::DeadlineExceeded`], incl. worker-shed requests)
+    pub deadline_expired: usize,
+    /// Closed→Open circuit-breaker transitions across the fleet
+    /// (consecutive expiries, failed probes, heartbeat stalls)
+    pub breaker_trips: usize,
+    /// merged heartbeat/deadline ledger over every generation
+    pub liveness: Liveness,
 }
 
 impl FleetStats {
@@ -916,6 +1177,16 @@ impl FleetStats {
             "  restarts {}  resubmits {}  rejected {}  lost in-flight {}",
             self.restarts, self.resubmits, self.rejected,
             self.lost_in_flight
+        );
+        println!(
+            "  deadline expired {}  breaker trips {}  hb stalls {}  \
+             pongs {} (+{} unexpected)  deadline reaped {}",
+            self.deadline_expired,
+            self.breaker_trips,
+            self.liveness.hb_stalls,
+            self.liveness.pongs,
+            self.liveness.unexpected_pongs,
+            self.liveness.deadline_reaped
         );
     }
 
@@ -939,6 +1210,23 @@ impl FleetStats {
             ("resubmits", num(self.resubmits as f64)),
             ("rejected", num(self.rejected as f64)),
             ("lost_in_flight", num(self.lost_in_flight as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            ("breaker_trips", num(self.breaker_trips as f64)),
+            (
+                "liveness",
+                obj(vec![
+                    ("pongs", num(self.liveness.pongs as f64)),
+                    (
+                        "unexpected_pongs",
+                        num(self.liveness.unexpected_pongs as f64),
+                    ),
+                    ("hb_stalls", num(self.liveness.hb_stalls as f64)),
+                    (
+                        "deadline_reaped",
+                        num(self.liveness.deadline_reaped as f64),
+                    ),
+                ]),
+            ),
             ("note", s("fleet percentiles are computed over the union \
                         of per-generation latency samples")),
         ])
@@ -971,12 +1259,16 @@ mod tests {
                 health_every: Duration::ZERO, // tests drive heal_now()
                 max_retries: 4,
                 seed: 11,
+                request_timeout: None,
+                breaker_threshold: 3,
+                breaker_cooldown: Duration::from_millis(250),
                 serve: ServeConfig {
                     workers: 1,
                     max_batch: 8,
                     max_wait: Duration::from_millis(1),
                     mode: KernelMode::Lut,
                     kernel_threads: 1,
+                    shed_after: None,
                 },
             },
         )
@@ -1008,12 +1300,16 @@ mod tests {
                 health_every: Duration::ZERO,
                 max_retries: 4,
                 seed: 3,
+                request_timeout: None,
+                breaker_threshold: 3,
+                breaker_cooldown: Duration::from_millis(250),
                 serve: ServeConfig {
                     workers: 1,
                     max_batch: 8,
                     max_wait: Duration::from_millis(1),
                     mode: KernelMode::Lut,
                     kernel_threads: 1,
+                    shed_after: None,
                 },
             },
         );
@@ -1062,9 +1358,116 @@ mod tests {
         assert!(SubmitError::NoReplica.to_string().contains("no live"));
         let e = SubmitError::Lost { resubmits: 4 };
         assert!(e.to_string().contains('4'));
+        let e = SubmitError::DeadlineExceeded { waited_ms: 120 };
+        assert!(e.to_string().contains("deadline"));
+        assert!(e.to_string().contains("120"));
         // typed errors fold into anyhow through std::error::Error
-        let a: anyhow::Error = e.into();
+        let a: anyhow::Error = SubmitError::Lost { resubmits: 4 }.into();
         assert!(a.to_string().contains("lost"));
+    }
+
+    /// The breaker state machine on a slot: consecutive deadline
+    /// expiries trip it Open (blocked), the cooldown offers a single
+    /// half-open probe, and a success closes it again.
+    #[test]
+    fn breaker_trips_half_opens_and_closes() {
+        let r = tiny_router(RoutingPolicy::RoundRobin, 1);
+        let inner = &r.inner;
+        assert!(inner.breaker_admits(0));
+        // threshold-1 expiries: still closed
+        for _ in 0..2 {
+            inner.note_slow(0);
+        }
+        assert!(inner.breaker_admits(0));
+        assert_eq!(inner.breaker_trips.load(Ordering::SeqCst), 0);
+        // the third consecutive expiry trips it open
+        inner.note_slow(0);
+        assert_eq!(inner.breaker_trips.load(Ordering::SeqCst), 1);
+        assert!(!inner.breaker_admits(0));
+        assert_eq!(
+            inner.deadline_expired.load(Ordering::SeqCst),
+            3,
+            "every expiry is counted fleet-wide"
+        );
+        // force the cooldown to elapse: the slot half-opens
+        inner.replicas[0].breaker_until_ns.store(0, Ordering::SeqCst);
+        assert!(inner.breaker_admits(0));
+        assert_eq!(
+            inner.replicas[0].breaker.load(Ordering::SeqCst),
+            BRK_HALF
+        );
+        // a probe that also expires re-trips instantly (no threshold)
+        inner.replicas[0]
+            .breaker
+            .store(BRK_PROBE, Ordering::SeqCst);
+        inner.note_slow(0);
+        assert_eq!(inner.breaker_trips.load(Ordering::SeqCst), 2);
+        assert!(!inner.breaker_admits(0));
+        // a success closes it from any state
+        inner.note_ok(0);
+        assert!(inner.breaker_admits(0));
+        assert_eq!(
+            inner.replicas[0].breaker.load(Ordering::SeqCst),
+            BRK_CLOSED
+        );
+        let fleet = r.shutdown();
+        assert_eq!(fleet.deadline_expired, 4);
+        assert_eq!(fleet.breaker_trips, 2);
+    }
+
+    /// `request_timeout` turns a slow replica into a typed
+    /// `DeadlineExceeded` instead of an indefinite block, and the
+    /// expiries trip the slot's breaker.
+    #[test]
+    fn request_deadline_expires_typed() {
+        let cfg = RouterConfig {
+            replicas: 1,
+            policy: RoutingPolicy::RoundRobin,
+            queue_cap: 64,
+            health_every: Duration::ZERO,
+            max_retries: 4,
+            seed: 11,
+            request_timeout: Some(Duration::from_millis(30)),
+            breaker_threshold: 2,
+            // long cooldown: the post-trip assertions below must not
+            // race the half-open re-offer on a slow CI machine
+            breaker_cooldown: Duration::from_secs(30),
+            serve: ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                // collector holds batches far past the deadline
+                max_wait: Duration::from_millis(400),
+                mode: KernelMode::Lut,
+                kernel_threads: 1,
+                shed_after: None,
+            },
+        };
+        let router = Router::start(tiny_model(), cfg);
+        let img = vec![0.1f32; 32 * 32 * 3];
+        let mut expired = 0usize;
+        for _ in 0..2 {
+            let p = router.submit(&img).expect("submit accepted");
+            match p.recv() {
+                Err(SubmitError::DeadlineExceeded { waited_ms }) => {
+                    assert!(waited_ms >= 29, "waited {waited_ms} ms");
+                    expired += 1;
+                }
+                Err(other) => {
+                    panic!("expected DeadlineExceeded, got {other:?}")
+                }
+                Ok(_) => panic!("reply beat a 30ms deadline on a \
+                                 400ms collector"),
+            }
+        }
+        assert_eq!(expired, 2);
+        // threshold 2 reached → the only slot is breaker-blocked now
+        match router.submit(&img) {
+            Err(SubmitError::Overloaded { .. }) => {}
+            other => panic!("expected breaker block, got {other:?}"),
+        }
+        let fleet = router.shutdown();
+        assert_eq!(fleet.deadline_expired, 2);
+        assert!(fleet.breaker_trips >= 1);
     }
 
     #[test]

@@ -105,6 +105,15 @@ impl ServeModel {
 /// setup, reply wiring) or the split costs more than it steals back.
 const MIN_SHARD: usize = 8;
 
+/// Sentinel `pred` for a shed (queue-age-expired) request. The reply
+/// is still delivered — outstanding accounting and drain barriers stay
+/// exact — but carries no logits and `batch == 0`. Remote worker pumps
+/// map it to an `Error` frame with code `"deadline"`; the router's
+/// `Pending::recv` maps it to `SubmitError::DeadlineExceeded`. A real
+/// prediction can never collide: `pred` is a class index bounded by
+/// `model.classes`.
+pub const SHED_PRED: usize = usize::MAX;
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub workers: usize,
@@ -116,6 +125,11 @@ pub struct ServeConfig {
     /// under load the worker pool is the better parallelism knob, so
     /// this matters mostly for low-concurrency latency)
     pub kernel_threads: usize,
+    /// worker-side deadline: at batch-execution time, shed any request
+    /// older than this with a sentinel reply ([`SHED_PRED`]) instead of
+    /// burning kernel time on an answer its client stopped waiting
+    /// for. `None` = serve everything regardless of queue age.
+    pub shed_after: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -130,6 +144,7 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         }
     }
 }
@@ -167,6 +182,9 @@ pub struct RawServeStats {
     pub first: Option<Instant>,
     /// latest batch completion observed
     pub last: Option<Instant>,
+    /// requests shed by the worker-side queue-age deadline (sentinel
+    /// reply delivered, no kernel time spent) — not counted in `images`
+    pub shed: usize,
 }
 
 impl RawServeStats {
@@ -176,6 +194,7 @@ impl RawServeStats {
         self.latencies_ns.extend_from_slice(&other.latencies_ns);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
         self.images += other.images;
+        self.shed += other.shed;
         self.first = match (self.first, other.first) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -282,6 +301,7 @@ impl Server {
             let acc = Arc::clone(&acc);
             let mode = cfg.mode;
             let kernel_threads = cfg.kernel_threads.max(1);
+            let shed_after = cfg.shed_after;
             let outstanding = Arc::clone(&outstanding);
             let poison = Arc::clone(&poison);
             workers.push(thread::spawn(move || {
@@ -303,6 +323,7 @@ impl Server {
                         &sm,
                         &batch,
                         mode,
+                        shed_after,
                         &acc,
                         &mut bufs,
                         &mut xbuf,
@@ -420,10 +441,12 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_batch(
     sm: &ServeModel,
     batch: &[Request],
     mode: KernelMode,
+    shed_after: Option<Duration>,
     acc: &Arc<Mutex<RawServeStats>>,
     bufs: &mut ExecBuffers,
     xbuf: &mut Vec<f32>,
@@ -448,8 +471,38 @@ fn serve_batch(
             }
         })
         .collect();
+    // worker-side deadline: a request already older than the shed
+    // budget gets a sentinel reply NOW (the client stopped waiting, or
+    // is about to) instead of a slot in the forward pass. The reply is
+    // delivered, not dropped, so drain barriers and the outstanding
+    // counter stay exact.
+    let mut shed = 0usize;
+    let kept: Vec<&Request> = match shed_after {
+        None => kept,
+        Some(budget) => kept
+            .into_iter()
+            .filter(|r| {
+                let age = r.t0.elapsed();
+                if age > budget {
+                    shed += 1;
+                    let _ = r.reply.send(Reply {
+                        pred: SHED_PRED,
+                        logits: Vec::new(),
+                        latency: age,
+                        batch: 0,
+                    });
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect(),
+    };
     if kept.is_empty() {
         outstanding.fetch_sub(batch.len(), Ordering::SeqCst);
+        if shed > 0 {
+            acc.lock().unwrap().shed += shed;
+        }
         return;
     }
     let n = kept.len();
@@ -465,6 +518,9 @@ fn serve_batch(
         Err(e) => {
             eprintln!("serve: batch of {n} failed: {e:#}");
             outstanding.fetch_sub(batch.len(), Ordering::SeqCst);
+            if shed > 0 {
+                acc.lock().unwrap().shed += shed;
+            }
             return; // reply senders drop; clients observe RecvError
         }
     };
@@ -498,6 +554,7 @@ fn serve_batch(
     a.last = Some(now);
     a.batch_sizes.push(n);
     a.images += n;
+    a.shed += shed;
     a.latencies_ns.extend_from_slice(&lat_ns);
 }
 
@@ -513,6 +570,8 @@ pub struct ServeStats {
     pub max_ms: f64,
     /// images/sec over the busy window (first to last batch completion)
     pub throughput_rps: f64,
+    /// requests shed by the worker-side queue-age deadline
+    pub shed: usize,
 }
 
 impl ServeStats {
@@ -547,6 +606,7 @@ impl ServeStats {
             } else {
                 0.0
             },
+            shed: raw.shed,
         }
     }
 
@@ -563,6 +623,9 @@ impl ServeStats {
             fmt_ns(self.max_ms * 1e6),
         );
         println!("  throughput {:.0} img/s", self.throughput_rps);
+        if self.shed > 0 {
+            println!("  shed {} (worker-side deadline)", self.shed);
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -575,6 +638,7 @@ impl ServeStats {
             ("p99_ms", num(self.p99_ms)),
             ("max_ms", num(self.max_ms)),
             ("throughput_rps", num(self.throughput_rps)),
+            ("shed", num(self.shed as f64)),
             ("unit", s("latency in milliseconds")),
         ])
     }
@@ -603,6 +667,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             mode,
             kernel_threads: 1,
+            shed_after: None,
         })
     }
 
@@ -662,6 +727,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 mode: KernelMode::Lut,
                 kernel_threads: 1,
+                shed_after: None,
             },
         );
         let images: Vec<Vec<f32>> = (0..12)
@@ -722,6 +788,7 @@ mod tests {
             images: 10,
             first: None,
             last: None,
+            shed: 0,
         };
         let s = ServeStats::from_raw(&acc);
         assert!((s.p50_ms - 5.5).abs() < 1e-9, "p50 {}", s.p50_ms);
@@ -739,6 +806,7 @@ mod tests {
             images: 1,
             first: None,
             last: None,
+            shed: 0,
         };
         let s = ServeStats::from_raw(&one);
         assert_eq!((s.p50_ms, s.p90_ms, s.p99_ms), (2.0, 2.0, 2.0));
@@ -758,6 +826,7 @@ mod tests {
             images: 2,
             first: Some(t1),
             last: Some(t2),
+            shed: 1,
         };
         let b = RawServeStats {
             latencies_ns: vec![2e6, 10e6],
@@ -765,9 +834,11 @@ mod tests {
             images: 2,
             first: Some(t0),
             last: Some(t1),
+            shed: 2,
         };
         a.merge(&b);
         assert_eq!(a.images, 4);
+        assert_eq!(a.shed, 3, "shed counters must sum across replicas");
         assert_eq!(a.batch_sizes, vec![2, 1, 1]);
         assert_eq!(a.first, Some(t0), "merge must take the earliest first");
         assert_eq!(a.last, Some(t2), "merge must keep the latest last");
@@ -812,6 +883,7 @@ mod tests {
             max_wait: Duration::from_millis(250),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         let handles: Vec<_> = (0..4)
             .map(|_| srv.submit(vec![0.1; sm.image_len()]).unwrap())
@@ -844,6 +916,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         let guard = srv.acc.lock().unwrap();
         let handles: Vec<_> = (0..4)
@@ -874,6 +947,7 @@ mod tests {
             max_wait: Duration::from_secs(2),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         let handles: Vec<_> = (0..64)
             .map(|_| srv.submit(vec![0.3; sm.image_len()]).unwrap())
@@ -938,6 +1012,7 @@ mod tests {
             max_wait: Duration::from_millis(25),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         let n = 57;
         let handles: Vec<_> = (0..n)
@@ -967,6 +1042,7 @@ mod tests {
             max_wait: Duration::from_millis(250),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         assert_eq!(srv.outstanding(), 0);
         let handles: Vec<_> = (0..5)
@@ -991,6 +1067,61 @@ mod tests {
         assert_eq!(srv.shutdown().requests, 5);
     }
 
+    /// Worker-side deadline: with `shed_after` = zero every request is
+    /// already expired when the batch executes, so each gets the
+    /// sentinel reply (`SHED_PRED`, no logits, batch 0), nothing is
+    /// served, the shed counter records them all, and the outstanding
+    /// counter still drains to zero.
+    #[test]
+    fn shed_after_expires_queued_requests_with_sentinel_reply() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+            shed_after: Some(Duration::ZERO),
+        });
+        let handles: Vec<_> = (0..4)
+            .map(|_| srv.submit(vec![0.1; sm.image_len()]).unwrap())
+            .collect();
+        for h in handles {
+            let reply = h.recv().expect("shed requests still get a reply");
+            assert_eq!(reply.pred, SHED_PRED);
+            assert!(reply.logits.is_empty());
+            assert_eq!(reply.batch, 0);
+        }
+        assert_eq!(srv.outstanding(), 0, "shed must release outstanding");
+        let raw = srv.drain_then_stop();
+        assert_eq!(raw.images, 0, "a shed request must not count as served");
+        assert_eq!(raw.shed, 4);
+    }
+
+    /// A generous shed budget sheds nothing: replies are real
+    /// predictions and the shed counter stays zero.
+    #[test]
+    fn generous_shed_budget_serves_everything() {
+        let (sm, srv) = tiny_server_cfg(ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            mode: KernelMode::Lut,
+            kernel_threads: 1,
+            shed_after: Some(Duration::from_secs(60)),
+        });
+        let handles: Vec<_> = (0..6)
+            .map(|_| srv.submit(vec![0.2; sm.image_len()]).unwrap())
+            .collect();
+        for h in handles {
+            let reply = h.recv().unwrap();
+            assert_ne!(reply.pred, SHED_PRED);
+            assert!(!reply.logits.is_empty());
+        }
+        let raw = srv.drain_then_stop();
+        assert_eq!(raw.images, 6);
+        assert_eq!(raw.shed, 0);
+    }
+
     /// kill(): alive flips false, queued requests are lost (clients see
     /// RecvError), new submits are rejected, and drain_then_stop still
     /// joins cleanly returning the pre-kill stats.
@@ -1002,6 +1133,7 @@ mod tests {
             max_wait: Duration::from_millis(500),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         });
         assert!(srv.alive());
         // served before the kill: recorded in stats

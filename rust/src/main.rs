@@ -18,7 +18,8 @@ use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
 use uniq::infer::net::{
-    ModelExpect, RemoteOpts, Supervisor, Worker, WorkerSpec,
+    FaultPlan, ModelExpect, RemoteOpts, Supervisor, Worker, WorkerSpec,
+    DEFAULT_BANNER_TIMEOUT,
 };
 use uniq::infer::{
     self, AqMode, FrozenModel, KernelMode, Router, RouterConfig,
@@ -685,9 +686,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         // v3 = integer-only LUT² (aq models only)
         mode: engine,
         kernel_threads: cli.get_usize("kernel-threads", 1),
+        shed_after: positive_ms(cli, "shed-after-ms"),
     };
     if let Some(addr) = cli.get("remote-worker") {
-        return serve_remote_worker(sm, cfg, addr);
+        // --fault-plan is a worker-only chaos knob: the fleet parent
+        // never forwards it, so a soak can script ONE misbehaving slot
+        let fault = match cli.get("fault-plan") {
+            Some(spec) => {
+                Some(FaultPlan::parse(spec).map_err(|e| anyhow!(e))?)
+            }
+            None => None,
+        };
+        return serve_remote_worker(sm, cfg, addr, fault);
     }
     let n = cli.get_usize("requests", 2048);
     let data = SynthDataset::generate(SynthConfig {
@@ -748,6 +758,29 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `--FLAG-ms` as an optional duration: values <= 0 (or the flag
+/// absent) mean "off". Fractional milliseconds are honored.
+fn positive_ms(cli: &Cli, flag: &str) -> Option<std::time::Duration> {
+    let v = cli.get_f32(flag, 0.0);
+    (v > 0.0).then(|| std::time::Duration::from_micros((v * 1e3) as u64))
+}
+
+/// Client-side liveness knobs (DESIGN §14). `--heartbeat-ms 0`
+/// disables the ping cycle entirely; the default keeps the
+/// `RemoteOpts` 500 ms cadence. `--request-timeout-ms` arms both the
+/// remote sweeper and the router's typed `DeadlineExceeded` budget.
+fn remote_opts(cli: &Cli) -> RemoteOpts {
+    let hb = cli.get_f32("heartbeat-ms", 500.0);
+    RemoteOpts {
+        heartbeat_every: (hb > 0.0).then(|| {
+            std::time::Duration::from_micros((hb * 1e3) as u64)
+        }),
+        heartbeat_misses: cli.get_u32("heartbeat-misses", 3),
+        request_timeout: positive_ms(cli, "request-timeout-ms"),
+        ..RemoteOpts::default()
+    }
+}
+
 /// `uniq serve --replicas N`: route the same traffic through the
 /// replica-set router — N health-checked `Server` replicas behind one
 /// front door, bounded-queue backpressure, fleet-merged percentiles.
@@ -765,6 +798,7 @@ fn serve_fleet(
         policy,
         queue_cap: cli.get_usize("queue-cap", 1024),
         serve: serve_cfg,
+        request_timeout: positive_ms(cli, "request-timeout-ms"),
         ..Default::default()
     };
     println!(
@@ -790,8 +824,19 @@ fn serve_remote_worker(
     sm: Arc<ServeModel>,
     cfg: ServeConfig,
     addr: &str,
+    fault: Option<FaultPlan>,
 ) -> Result<()> {
-    let worker = Worker::bind(sm, cfg, addr)?;
+    if let Some(plan) = &fault {
+        eprintln!(
+            "[worker] CHAOS fault plan armed: {} at item {} (every {:?}, \
+             delay {:?})",
+            plan.kind.name(),
+            plan.at,
+            plan.every,
+            plan.delay
+        );
+    }
+    let worker = Worker::bind_with(sm, cfg, addr, fault)?;
     println!("{}", worker.banner());
     use std::io::Write as _;
     std::io::stdout().flush()?;
@@ -838,7 +883,7 @@ fn serve_remote_fleet(
             "model", "width", "classes", "seed", "frozen", "artifacts",
             "ckpt", "bits-w", "quantizer", "aq", "aq-bits", "calib-size",
             "engine", "workers", "max-batch", "max-wait-ms",
-            "kernel-threads",
+            "kernel-threads", "shed-after-ms",
         ] {
             if let Some(v) = cli.get(flag) {
                 args.push(format!("--{flag}"));
@@ -848,10 +893,13 @@ fn serve_remote_fleet(
         if cli.has("synth") {
             args.push("--synth".to_string());
         }
+        let banner_timeout = positive_ms(cli, "banner-timeout-ms")
+            .unwrap_or(DEFAULT_BANNER_TIMEOUT);
         (0..k)
             .map(|_| WorkerSpec::Spawn {
                 cmd: exe.to_string_lossy().into_owned(),
                 args: args.clone(),
+                banner_timeout,
             })
             .collect()
     };
@@ -860,12 +908,14 @@ fn serve_remote_fleet(
     }
     let replicas = specs.len();
     let spawned = matches!(specs[0], WorkerSpec::Spawn { .. });
-    let sup = Supervisor::new(specs, expect, RemoteOpts::default());
+    let opts = remote_opts(cli);
+    let sup = Supervisor::new(specs, expect, opts.clone());
     let rcfg = RouterConfig {
         replicas,
         policy,
         queue_cap: cli.get_usize("queue-cap", 1024),
         serve: serve_cfg,
+        request_timeout: opts.request_timeout,
         ..Default::default()
     };
     println!(
@@ -896,6 +946,18 @@ fn drive_fleet(
 ) -> Result<()> {
     let mut pending = std::collections::VecDeque::new();
     let mut ok = 0usize;
+    // a request that exceeded its --request-timeout-ms budget is an
+    // accounted outcome (typed, counted in fleet stats), not a failed
+    // run — only drops (requests with NO outcome) fail the drive
+    let mut expired = 0usize;
+    let mut recv_one = |p: uniq::infer::Pending| -> Result<()> {
+        match p.recv() {
+            Ok(_) => ok += 1,
+            Err(SubmitError::DeadlineExceeded { .. }) => expired += 1,
+            Err(e) => return Err(e.into()),
+        }
+        Ok(())
+    };
     for i in 0..n {
         let img = data.image(i % data.n);
         loop {
@@ -910,20 +972,21 @@ fn drive_fleet(
                     let p = pending.pop_front().ok_or_else(|| {
                         anyhow!("fleet overloaded with nothing in flight")
                     })?;
-                    p.recv()?;
-                    ok += 1;
+                    recv_one(p)?;
                 }
                 Err(e) => return Err(e.into()),
             }
         }
     }
     for p in pending {
-        p.recv()?;
-        ok += 1;
+        recv_one(p)?;
     }
     let fleet = router.shutdown();
     fleet.print();
-    if ok != n {
+    if expired > 0 {
+        println!("  {expired} requests exceeded their deadline");
+    }
+    if ok + expired != n {
         return Err(anyhow!("only {ok}/{n} requests got replies"));
     }
     if let Some(path) = cli.get("stats") {

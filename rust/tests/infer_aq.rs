@@ -266,6 +266,7 @@ fn aq_quantile4_serves_all_archs() {
                 max_wait: Duration::from_millis(1),
                 mode: KernelMode::Lut,
                 kernel_threads: 1,
+                shed_after: None,
             },
         );
         let images: Vec<Vec<f32>> = (0..9)

@@ -344,6 +344,7 @@ fn serve_end_to_end_parity() {
             max_wait: Duration::from_millis(1),
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         },
     );
     let img_len = sm.image_len();

@@ -336,6 +336,7 @@ fn v3_serves_end_to_end_matching_v2() {
             max_wait: Duration::from_millis(1),
             mode: KernelMode::LutV3,
             kernel_threads: 1,
+            shed_after: None,
         },
     );
     let images: Vec<Vec<f32>> =
@@ -383,12 +384,16 @@ fn v3_through_replica_router_bitwise() {
             health_every: Duration::ZERO,
             max_retries: 8,
             seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: ServeConfig {
                 workers: 1,
                 max_batch: 16,
                 max_wait: Duration::from_millis(1),
                 mode: KernelMode::LutV3,
                 kernel_threads: 1,
+                shed_after: None,
             },
         },
     );

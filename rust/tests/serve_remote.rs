@@ -11,8 +11,18 @@
 //! is `#[ignore]`d and driven explicitly by the CI bench job:
 //!
 //!     cargo test --release -q --test serve_remote -- soak --ignored
+//!
+//! The deterministic chaos matrix — scripted `--fault-plan` faults
+//! (stall/corrupt/delay/freeze) on one of two spawned workers, crossed
+//! with routing policies — is likewise `#[ignore]`d and driven by the
+//! CI chaos-matrix job:
+//!
+//!     UNIQ_CHAOS_FAULT=stall UNIQ_CHAOS_ROUTING=rr \
+//!         cargo test --release -q --test serve_remote -- chaos --ignored
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -20,12 +30,13 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use uniq::coordinator::FreezeQuant;
+use uniq::infer::net::frame::{write_frame, FrameKind};
 use uniq::infer::net::{
-    submit_blocking, ModelExpect, RemoteOpts, RemoteReplica, Supervisor,
-    Worker, WorkerSpec,
+    submit_blocking, FaultPlan, Hello, ModelExpect, RemoteOpts,
+    RemoteReplica, Supervisor, Worker, WorkerSpec, PROTO_VERSION,
 };
 use uniq::infer::{
-    synthetic, FrozenModel, KernelMode, RawServeStats, Reply,
+    synthetic, FrozenModel, KernelMode, Pending, RawServeStats, Reply,
     ReplicaBackend, ReplicaFactory, Router, RouterConfig, RoutingPolicy,
     ServeConfig, ServeModel, SubmitError,
 };
@@ -46,6 +57,7 @@ fn serve_cfg(max_wait: Duration) -> ServeConfig {
         max_wait,
         mode: KernelMode::Lut,
         kernel_threads: 1,
+        shed_after: None,
     }
 }
 
@@ -223,6 +235,9 @@ fn fleet_kill_one_worker_resubmits_zero_drops() {
             health_every: Duration::ZERO,
             max_retries: 8,
             seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: serve_cfg(Duration::from_millis(150)),
         },
         sm.image_len(),
@@ -293,6 +308,9 @@ fn unreachable_worker_slot_degrades_gracefully() {
             health_every: Duration::ZERO,
             max_retries: 8,
             seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: serve_cfg(Duration::from_millis(1)),
         },
         sm.image_len(),
@@ -457,6 +475,9 @@ fn slow_replica_surfaces_overloaded_before_cap_exceeded() {
             health_every: Duration::ZERO,
             max_retries: 8,
             seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: serve_cfg(Duration::from_millis(1)),
         },
         8,
@@ -508,6 +529,9 @@ fn p2c_steers_away_from_slow_replica() {
             health_every: Duration::ZERO,
             max_retries: 8,
             seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: serve_cfg(Duration::from_millis(1)),
         },
         8,
@@ -702,6 +726,7 @@ fn soak_sigkill_worker_process_mid_run_zero_drops() {
     let spec = WorkerSpec::Spawn {
         cmd: env!("CARGO_BIN_EXE_uniq").to_string(),
         args: worker_args(),
+        banner_timeout: Duration::from_secs(30),
     };
     let sup = Supervisor::new(
         vec![spec.clone(), spec],
@@ -721,6 +746,9 @@ fn soak_sigkill_worker_process_mid_run_zero_drops() {
             health_every: Duration::from_millis(3),
             max_retries: 8,
             seed: 29,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: serve_cfg(Duration::from_millis(1)),
         },
         sm.image_len(),
@@ -779,6 +807,437 @@ fn soak_sigkill_worker_process_mid_run_zero_drops() {
         fleet.restarts,
         fleet.resubmits,
         fleet.lost_in_flight
+    );
+    sup.shutdown();
+}
+
+// ---------------------------------------------------------------- //
+// Liveness layer: heartbeats, deadlines, breaker, chaos plans      //
+// ---------------------------------------------------------------- //
+
+/// A worker whose `--shed-after-ms` budget is already blown sheds the
+/// request at batch time and the client surfaces it as the SAME typed
+/// `DeadlineExceeded` a local expiry produces — worker-side sheds are
+/// accounted (fleet counter, liveness ledger, breaker), never silent.
+#[test]
+fn worker_side_shed_surfaces_typed_deadline() {
+    let sm = model();
+    let mut cfg = serve_cfg(Duration::from_millis(1));
+    cfg.shed_after = Some(Duration::ZERO);
+    let worker =
+        Worker::bind(Arc::clone(&sm), cfg, "127.0.0.1:0").unwrap();
+    let addr = worker.addr().to_string();
+    let handle = worker.spawn();
+
+    let expect = expect_of(&sm);
+    let router = Router::start_with_backends(
+        RouterConfig {
+            replicas: 1,
+            policy: RoutingPolicy::RoundRobin,
+            queue_cap: 1024,
+            health_every: Duration::ZERO,
+            max_retries: 8,
+            seed: 11,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            serve: serve_cfg(Duration::from_millis(1)),
+        },
+        sm.image_len(),
+        vec![connect_factory(addr, expect)],
+    );
+
+    let imgs = images(&sm, 3, 17);
+    for (i, img) in imgs.iter().enumerate() {
+        match router.submit(img).unwrap().recv() {
+            Err(SubmitError::DeadlineExceeded { .. }) => {}
+            other => panic!(
+                "request {i}: want DeadlineExceeded from the \
+                 worker-side shed, got {other:?}"
+            ),
+        }
+    }
+    let fleet = router.shutdown();
+    assert_eq!(fleet.deadline_expired, 3, "every shed counted");
+    assert_eq!(
+        fleet.liveness.deadline_reaped, 3,
+        "the client reader must count worker-shed notices"
+    );
+    assert_eq!(
+        fleet.breaker_trips, 1,
+        "3 consecutive expiries on one slot trip its breaker once"
+    );
+    assert_eq!(fleet.fleet.requests, 0, "no request was ever served");
+    handle.shutdown();
+}
+
+/// A wedged-but-connected worker: the chaos plan freezes the pump on
+/// its first item (the first Pong), so the TCP connection stays open
+/// while replies and pongs starve. The heartbeat cycle must declare
+/// the stall within a few windows — the failure mode DESIGN §12's old
+/// "no steady-state read deadline" rule could never catch.
+#[test]
+fn heartbeat_detects_frozen_pump() {
+    let sm = model();
+    let worker = Worker::bind_with(
+        Arc::clone(&sm),
+        serve_cfg(Duration::from_millis(1)),
+        "127.0.0.1:0",
+        Some(FaultPlan::parse("freeze:0").unwrap()),
+    )
+    .unwrap();
+    let addr = worker.addr().to_string();
+    let handle = worker.spawn();
+
+    let replica = RemoteReplica::connect(
+        &addr,
+        Some(expect_of(&sm)),
+        RemoteOpts {
+            heartbeat_every: Some(Duration::from_millis(10)),
+            heartbeat_misses: 3,
+            ..RemoteOpts::default()
+        },
+        Arc::new(AtomicUsize::new(0)),
+    )
+    .unwrap();
+    assert!(replica.alive(), "handshake precedes the frozen pump");
+
+    let t0 = Instant::now();
+    while replica.alive() && t0.elapsed() < Duration::from_secs(10) {
+        thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        !replica.alive(),
+        "a frozen pump must be declared stalled by missed heartbeats"
+    );
+    let live = replica.liveness();
+    assert_eq!(live.hb_stalls, 1, "exactly one stall verdict");
+    assert_eq!(live.pongs, 0, "the frozen pump never ponged");
+    handle.shutdown();
+}
+
+/// A Pong whose id was never sent (a confused or malicious peer) is
+/// counted and logged — it neither crashes the reader nor counts as a
+/// solicited liveness proof. Regression test for the reader's old
+/// silent `FrameKind::Pong => {}` discard.
+#[test]
+fn unexpected_pong_is_counted_not_fatal() {
+    let sm = model();
+    let (img_len, classes) = expect_of(&sm);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let hello = Hello {
+            proto: PROTO_VERSION as u64,
+            model: "mlp/fake".into(),
+            img_len: img_len as u64,
+            classes: classes as u64,
+        };
+        write_frame(&mut conn, FrameKind::Hello, 0, &hello.encode())
+            .unwrap();
+        // a pong nobody asked for
+        write_frame(&mut conn, FrameKind::Pong, 42, &[]).unwrap();
+        // hold the connection open until the client goes away
+        let mut buf = [0u8; 64];
+        loop {
+            match std::io::Read::read(&mut conn, &mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+
+    let replica = RemoteReplica::connect(
+        &addr,
+        Some((img_len, classes)),
+        RemoteOpts {
+            heartbeat_every: None,
+            ..RemoteOpts::default()
+        },
+        Arc::new(AtomicUsize::new(0)),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    while replica.liveness().unexpected_pongs == 0
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        thread::sleep(Duration::from_millis(2));
+    }
+    let live = replica.liveness();
+    assert_eq!(live.unexpected_pongs, 1, "the stray pong is counted");
+    assert_eq!(live.pongs, 0, "it is NOT a solicited pong");
+    assert!(replica.alive(), "a stray pong is logged, not fatal");
+    drop(replica);
+    let _ = srv.join();
+}
+
+/// `WorkerSpec::Spawn` carries its banner deadline: a worker that
+/// never prints its banner fails the factory in the configured window,
+/// not the 30 s production default.
+#[test]
+fn banner_timeout_is_configurable_and_fast() {
+    let spec = WorkerSpec::Spawn {
+        cmd: "/bin/sleep".into(),
+        args: vec!["5".into()],
+        banner_timeout: Duration::from_millis(150),
+    };
+    let sup = Supervisor::new(
+        vec![spec],
+        ModelExpect { img_len: 8, classes: 2 },
+        RemoteOpts::default(),
+    );
+    let t0 = Instant::now();
+    let err = sup.factories()[0](Arc::new(AtomicUsize::new(0)))
+        .expect_err("/bin/sleep never prints a worker banner");
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "the 150 ms banner timeout must not cost the 30 s default \
+         (took {:?})",
+        t0.elapsed()
+    );
+    assert!(
+        format!("{err:#}").contains("banner"),
+        "the error must name the banner wait: {err:#}"
+    );
+    sup.shutdown();
+}
+
+/// The deterministic chaos matrix: one of two spawned workers carries
+/// a scripted `--fault-plan` (never a kill — the process stays up and
+/// misbehaves) while 400 requests flow. Every cell must end with zero
+/// dropped requests and bit-identical replies; the stall-shaped cells
+/// must additionally show the stall detected via missed heartbeats and
+/// the slot breaker tripped. Parameterized by env so CI fans the same
+/// test across its fault × routing matrix:
+///
+///   UNIQ_CHAOS_FAULT   stall | corrupt | delay | freeze  (default freeze)
+///   UNIQ_CHAOS_ROUTING rr | p2c                          (default rr)
+#[test]
+#[ignore = "chaos: run explicitly (CI chaos-matrix job) with -- chaos --ignored"]
+fn chaos_fault_plan_zero_drops_bit_identical() {
+    let fault = std::env::var("UNIQ_CHAOS_FAULT")
+        .unwrap_or_else(|_| "freeze".into());
+    let plan = match fault.as_str() {
+        // wedge the pump after 60 frames: heartbeats must catch it
+        "freeze" => "freeze:60",
+        // one 8 s write stall: starves replies AND pongs
+        "stall" => "stall:60:8000",
+        // one corrupted CRC: typed reader death, resubmit ledger
+        "corrupt" => "corrupt:40",
+        // every 3rd frame +20 ms: pure latency, nothing may die
+        "delay" => "delay:3:20",
+        other => panic!("unknown UNIQ_CHAOS_FAULT '{other}'"),
+    };
+    let routing = std::env::var("UNIQ_CHAOS_ROUTING")
+        .unwrap_or_else(|_| "rr".into());
+    let policy = match routing.as_str() {
+        "rr" => RoutingPolicy::RoundRobin,
+        "p2c" => RoutingPolicy::PowerOfTwo,
+        other => panic!("unknown UNIQ_CHAOS_ROUTING '{other}'"),
+    };
+
+    let sm = model();
+    let n = 400;
+    let imgs = images(&sm, 48, 23);
+    let expected: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|img| {
+            sm.graph
+                .forward(&sm.model, &sm.weights, img, 1, KernelMode::Lut)
+                .unwrap()
+        })
+        .collect();
+
+    let healthy = WorkerSpec::Spawn {
+        cmd: env!("CARGO_BIN_EXE_uniq").to_string(),
+        args: worker_args(),
+        banner_timeout: Duration::from_secs(30),
+    };
+    let mut chaos_args = worker_args();
+    chaos_args.extend(["--fault-plan".to_string(), plan.to_string()]);
+    let chaotic = WorkerSpec::Spawn {
+        cmd: env!("CARGO_BIN_EXE_uniq").to_string(),
+        args: chaos_args,
+        banner_timeout: Duration::from_secs(30),
+    };
+    let opts = RemoteOpts {
+        heartbeat_every: Some(Duration::from_millis(25)),
+        heartbeat_misses: 4,
+        request_timeout: Some(Duration::from_secs(2)),
+        ..RemoteOpts::default()
+    };
+    let sup = Supervisor::new(
+        vec![healthy, chaotic],
+        ModelExpect {
+            img_len: sm.image_len(),
+            classes: sm.model.classes,
+        },
+        opts.clone(),
+    );
+    let router = Router::start_with_backends(
+        RouterConfig {
+            replicas: 2,
+            policy,
+            queue_cap: 8192,
+            health_every: Duration::from_millis(3),
+            max_retries: 8,
+            seed: 29,
+            request_timeout: opts.request_timeout,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(100),
+            serve: serve_cfg(Duration::from_millis(1)),
+        },
+        sm.image_len(),
+        sup.factories(),
+    );
+
+    // Bounded in-flight window; a deadline expiry is an accounted
+    // outcome, not a drop — the image goes back in the queue until it
+    // is served, and every served reply must be bit-identical.
+    fn settle(
+        i: usize,
+        p: Pending,
+        expected: &[Vec<f32>],
+        served: &mut usize,
+        expired: &mut usize,
+        retry: &mut VecDeque<usize>,
+    ) {
+        match p.recv() {
+            Ok(reply) => {
+                assert_eq!(
+                    reply.logits,
+                    expected[i % expected.len()],
+                    "request {i}: fleet output differs from direct \
+                     forward"
+                );
+                *served += 1;
+            }
+            Err(SubmitError::DeadlineExceeded { .. }) => {
+                *expired += 1;
+                retry.push_back(i);
+            }
+            Err(e) => panic!("request {i} dropped: {e}"),
+        }
+    }
+
+    let mut queue: VecDeque<usize> = (0..n).collect();
+    let mut pending: VecDeque<(usize, Pending)> = VecDeque::new();
+    let (mut served, mut expired) = (0usize, 0usize);
+    while let Some(i) = queue.pop_front() {
+        assert!(
+            expired <= 4 * n,
+            "deadline expiries diverge: the fleet never recovered"
+        );
+        let img = &imgs[i % imgs.len()];
+        loop {
+            match router.submit(img) {
+                Ok(p) => {
+                    pending.push_back((i, p));
+                    break;
+                }
+                // transient while the fault propagates (breaker open,
+                // respawn in flight): drain one waiter, then retry
+                Err(SubmitError::Overloaded { .. })
+                | Err(SubmitError::NoReplica) => {
+                    match pending.pop_front() {
+                        Some((j, p)) => settle(
+                            j,
+                            p,
+                            &expected,
+                            &mut served,
+                            &mut expired,
+                            &mut queue,
+                        ),
+                        None => {
+                            thread::sleep(Duration::from_micros(500))
+                        }
+                    }
+                }
+                Err(e) => panic!("submit failed terminally: {e:?}"),
+            }
+        }
+        if pending.len() >= 64 {
+            let (j, p) = pending.pop_front().unwrap();
+            settle(
+                j,
+                p,
+                &expected,
+                &mut served,
+                &mut expired,
+                &mut queue,
+            );
+        }
+    }
+    while let Some((j, p)) = pending.pop_front() {
+        settle(j, p, &expected, &mut served, &mut expired, &mut queue);
+        assert!(
+            expired <= 4 * n,
+            "deadline expiries diverge: the fleet never recovered"
+        );
+        while let Some(i) = queue.pop_front() {
+            let img = &imgs[i % imgs.len()];
+            loop {
+                match router.submit(img) {
+                    Ok(p) => {
+                        pending.push_back((i, p));
+                        break;
+                    }
+                    Err(SubmitError::Overloaded { .. })
+                    | Err(SubmitError::NoReplica) => {
+                        thread::sleep(Duration::from_micros(500))
+                    }
+                    Err(e) => panic!("submit failed terminally: {e:?}"),
+                }
+            }
+        }
+    }
+    assert_eq!(served, n, "zero drops: every request must be answered");
+
+    let fleet = router.shutdown();
+    match fault.as_str() {
+        "freeze" | "stall" => {
+            assert!(
+                fleet.liveness.hb_stalls >= 1,
+                "a wedged pump must be detected via missed heartbeats"
+            );
+            assert!(
+                fleet.breaker_trips >= 1,
+                "a stall verdict must trip the slot's breaker"
+            );
+            assert!(
+                fleet.resubmits >= 1,
+                "in-flight traffic on the stalled slot must resubmit"
+            );
+        }
+        "corrupt" => assert!(
+            fleet.resubmits >= 1 || fleet.lost_in_flight >= 1,
+            "a corrupted frame must kill the reader and fire the \
+             resubmit ledger"
+        ),
+        _ => {}
+    }
+    // the acceptance surface: every liveness counter is visible in the
+    // fleet stats JSON
+    let stats = fleet.to_json().to_string();
+    for key in [
+        "deadline_expired",
+        "breaker_trips",
+        "resubmits",
+        "hb_stalls",
+        "deadline_reaped",
+        "pongs",
+    ] {
+        assert!(stats.contains(key), "fleet JSON lost the {key} key");
+    }
+    println!(
+        "chaos[{fault}/{routing}]: {n} served bit-identical, {expired} \
+         deadline expiries (requeued), {} resubmits, {} breaker trips, \
+         {} hb stalls, {} spawns",
+        fleet.resubmits,
+        fleet.breaker_trips,
+        fleet.liveness.hb_stalls,
+        sup.spawn_count(),
     );
     sup.shutdown();
 }

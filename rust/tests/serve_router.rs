@@ -41,12 +41,16 @@ fn router_cfg(
         health_every: Duration::ZERO,
         max_retries: 8,
         seed: 11,
+        request_timeout: None,
+        breaker_threshold: 3,
+        breaker_cooldown: Duration::from_millis(250),
         serve: ServeConfig {
             workers: 1,
             max_batch: 16,
             max_wait,
             mode: KernelMode::Lut,
             kernel_threads: 1,
+            shed_after: None,
         },
     }
 }
@@ -313,12 +317,16 @@ fn run_traffic(
             health_every: Duration::from_millis(3),
             max_retries: 8,
             seed: 29,
+            request_timeout: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
             serve: ServeConfig {
                 workers: 1,
                 max_batch: 16,
                 max_wait: Duration::from_millis(1),
                 mode: KernelMode::Lut,
                 kernel_threads: 1,
+                shed_after: None,
             },
         },
     );
