@@ -91,7 +91,7 @@ COMMANDS:
   infer      --model M [--ckpt C --frozen DIR --export DIR --bits-w B
               --quantizer Q --batch N --val-size N --synth --width W
               --aq none|uniform|quantile --aq-bits B --calib-size N
-              --engine v1|v2|v3 --stats out.json]
+              --data DIR --engine v1|v2|v3 --stats out.json]
                                native LUT inference of a frozen model:
                                parity vs dequantized f32, throughput, and
                                measured vs analytic BOPs at the real
@@ -99,14 +99,20 @@ COMMANDS:
                                --aq calibrates static per-layer
                                activation-quant tables (fused into the
                                GEMM epilogues) and --export ships them
-                               in the frozen format (v2); --stats writes
+                               in the frozen format (v2); --data DIR
+                               calibrates on real tensors (.npy or raw
+                               little-endian f32, validated against the
+                               model input shape) instead of the
+                               synthetic set, recording calibration
+                               provenance (source, sample count, content
+                               hash, UTC) in frozen.json; --stats writes
                                engine, parity, throughput and per-layer
                                LUT² product-table bytes as JSON
   serve      --model M [--requests N --workers W --max-batch B
               --max-wait-ms T --kernel-threads K --engine v1|v2|v3
               --replicas R --routing rr|least|p2c --queue-cap Q
               --aq none|uniform|quantile --aq-bits B --calib-size N
-              --synth --width W --stats out.json]
+              --data DIR --synth --width W --stats out.json]
                                batched native serving with latency stats
                                (v2: tiled/fused arena engine, default;
                                v1: the PR-1 baseline engine;
@@ -159,6 +165,28 @@ COMMANDS:
                                after --heartbeat-misses silent windows
                                (default 3); --banner-timeout-ms bounds
                                the spawned-worker banner wait
+  frontier   --model M [--frozen DIR --synth --width W --classes C
+              --seed S --quantizer Q --aq uniform|quantile
+              --bits-w B --bits-a B --min-bits-w B --min-bits-a B
+              --budget-gbops G --target-acc A --steps N --batch B
+              --calib-size N --data DIR --out report.json --export DIR]
+                               mixed-precision bit-allocation search
+                               (DESIGN.md §15): rank per-layer one-bit
+                               sensitivity on a calibration batch, then
+                               greedily drop the bit with the best
+                               served-BOPS-per-degradation ratio from
+                               the uniform w<bits-w>/a<bits-a> start
+                               until --budget-gbops is met, the top-1
+                               metric would fall below --target-acc, or
+                               the --min-bits floors stop play; prints
+                               the Pareto frontier (BOPS strictly
+                               decreasing, degradation increasing),
+                               --out writes the full report as JSON,
+                               --export freezes the selected allocation
+                               as an ordinary v2 model that v2/v3
+                               engines serve unchanged; --data DIR
+                               calibrates on real tensors with recorded
+                               provenance (same loader as infer/serve)
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

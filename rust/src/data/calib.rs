@@ -1,0 +1,529 @@
+//! Real-data calibration sets for activation-quant moment folding and
+//! frontier sensitivity measurement (`--data DIR` on `uniq infer`,
+//! `uniq serve` and `uniq frontier`).
+//!
+//! A calibration directory holds unlabelled image tensors in either of
+//! two formats, loaded in sorted filename order so the set (and its
+//! content hash) is deterministic:
+//!
+//! * **raw f32** (`.f32`, `.bin`, `.raw`): little-endian f32, any whole
+//!   number of `[h, w, c]` images per file;
+//! * **npy** (`.npy`): numpy v1/v2 headers, C-order `<f4` only, shape
+//!   `[h,w,c]`, `[n,h,w,c]`, `[image_len]` or `[n, image_len]`.
+//!
+//! Anything else fails **loudly** with a typed [`CalibError`] naming
+//! the offending file — calibrating activation statistics on garbage
+//! (wrong geometry, truncated file, NaN pixels) would silently poison
+//! every table exported from it. Files with other extensions are
+//! skipped (a README can live next to the tensors), but a directory
+//! with no loadable tensor at all is an error, not an empty set.
+//!
+//! The loader also fingerprints what it read: an FNV-1a-64 hash over
+//! every file's name and bytes, recorded (with source path, sample
+//! count and UTC timestamp) in the optional `calibration` provenance
+//! section of `frozen.json` (`infer::codebook::CalibProvenance`), so a
+//! frozen model can always answer "what was this calibrated on?".
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Typed calibration-load failure; every variant that concerns a file
+/// names it.
+#[derive(Debug)]
+pub enum CalibError {
+    /// directory missing or unreadable
+    Dir { dir: PathBuf, err: std::io::Error },
+    /// no `.npy` / `.f32` / `.bin` / `.raw` file in the directory
+    Empty { dir: PathBuf },
+    /// file unreadable
+    Io { file: PathBuf, err: std::io::Error },
+    /// raw-f32 file is not a whole number of images
+    BadLength {
+        file: PathBuf,
+        floats: usize,
+        image_len: usize,
+    },
+    /// npy header unparsable or an unsupported dtype/order
+    BadNpy { file: PathBuf, reason: String },
+    /// npy shape does not match the model's input geometry
+    BadShape {
+        file: PathBuf,
+        got: Vec<usize>,
+        want: Vec<usize>,
+    },
+    /// a NaN/∞ pixel: moment folding would propagate it into μ, σ
+    NonFinite { file: PathBuf, index: usize },
+}
+
+impl fmt::Display for CalibError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CalibError::Dir { dir, err } => {
+                write!(f, "calibration dir {}: {err}", dir.display())
+            }
+            CalibError::Empty { dir } => write!(
+                f,
+                "calibration dir {} holds no .npy/.f32/.bin/.raw tensor \
+                 files",
+                dir.display()
+            ),
+            CalibError::Io { file, err } => {
+                write!(f, "reading {}: {err}", file.display())
+            }
+            CalibError::BadLength { file, floats, image_len } => write!(
+                f,
+                "{}: {floats} floats is not a positive whole number of \
+                 {image_len}-float images",
+                file.display()
+            ),
+            CalibError::BadNpy { file, reason } => {
+                write!(f, "{}: {reason}", file.display())
+            }
+            CalibError::BadShape { file, got, want } => write!(
+                f,
+                "{}: tensor shape {got:?} does not match the model \
+                 input {want:?} (accepted: [h,w,c], [n,h,w,c], \
+                 [image_len] or [n,image_len])",
+                file.display()
+            ),
+            CalibError::NonFinite { file, index } => write!(
+                f,
+                "{}: non-finite value at flat index {index} — refusing \
+                 to calibrate activation statistics on it",
+                file.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CalibError {}
+
+/// A loaded calibration set: `n` images of `image` shape, flattened
+/// NHWC, plus the provenance ingredients.
+#[derive(Debug, Clone)]
+pub struct CalibSet {
+    pub images: Vec<f32>,
+    pub n: usize,
+    /// image shape `[h, w, c]` the set was validated against
+    pub image: Vec<usize>,
+    /// `(file name, images contributed)` in load (sorted) order
+    pub files: Vec<(String, usize)>,
+    /// FNV-1a-64 over every file's name + raw bytes, hex
+    pub content_hash: String,
+}
+
+/// Load every tensor file under `dir`, validating each against the
+/// model input shape `image` (`[h, w, c]`). See the module docs for
+/// the accepted formats and the rejection contract.
+pub fn load_dir(dir: &Path, image: &[usize]) -> Result<CalibSet, CalibError> {
+    let image_len: usize = image.iter().product();
+    let mut names: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|err| CalibError::Dir { dir: dir.to_path_buf(), err })?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            matches!(
+                p.extension().and_then(|e| e.to_str()),
+                Some("npy") | Some("f32") | Some("bin") | Some("raw")
+            )
+        })
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(CalibError::Empty { dir: dir.to_path_buf() });
+    }
+    let mut images = Vec::new();
+    let mut files = Vec::new();
+    let mut hash = Fnv1a::new();
+    for path in &names {
+        let bytes = std::fs::read(path)
+            .map_err(|err| CalibError::Io { file: path.clone(), err })?;
+        hash.update(path.file_name().unwrap_or_default().as_encoded_bytes());
+        hash.update(&bytes);
+        let vals = match path.extension().and_then(|e| e.to_str()) {
+            Some("npy") => parse_npy(path, &bytes, image)?,
+            _ => parse_raw_f32(path, &bytes, image_len)?,
+        };
+        if let Some(i) = vals.iter().position(|v| !v.is_finite()) {
+            return Err(CalibError::NonFinite {
+                file: path.clone(),
+                index: i,
+            });
+        }
+        let file_n = vals.len() / image_len;
+        files.push((
+            path.file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            file_n,
+        ));
+        images.extend_from_slice(&vals);
+    }
+    let n = images.len() / image_len;
+    Ok(CalibSet {
+        images,
+        n,
+        image: image.to_vec(),
+        files,
+        content_hash: hash.hex(),
+    })
+}
+
+/// Raw little-endian f32: must be a positive whole number of images.
+fn parse_raw_f32(
+    file: &Path,
+    bytes: &[u8],
+    image_len: usize,
+) -> Result<Vec<f32>, CalibError> {
+    let floats = bytes.len() / 4;
+    if bytes.len() % 4 != 0
+        || floats == 0
+        || image_len == 0
+        || floats % image_len != 0
+    {
+        return Err(CalibError::BadLength {
+            file: file.to_path_buf(),
+            floats,
+            image_len,
+        });
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Minimal npy reader: v1/v2 headers, C-order `<f4` data only.
+fn parse_npy(
+    file: &Path,
+    bytes: &[u8],
+    image: &[usize],
+) -> Result<Vec<f32>, CalibError> {
+    let bad = |reason: &str| CalibError::BadNpy {
+        file: file.to_path_buf(),
+        reason: reason.to_string(),
+    };
+    if bytes.len() < 10 || &bytes[0..6] != b"\x93NUMPY" {
+        return Err(bad("not an npy file (bad magic)"));
+    }
+    let major = bytes[6];
+    let (header_len, data_start) = match major {
+        1 => (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        ),
+        2 | 3 => {
+            if bytes.len() < 12 {
+                return Err(bad("truncated v2 header"));
+            }
+            (
+                u32::from_le_bytes([
+                    bytes[8], bytes[9], bytes[10], bytes[11],
+                ]) as usize,
+                12usize,
+            )
+        }
+        _ => return Err(bad("unsupported npy major version")),
+    };
+    let header_end = data_start
+        .checked_add(header_len)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| bad("header overruns file"))?;
+    let header = std::str::from_utf8(&bytes[data_start..header_end])
+        .map_err(|_| bad("header is not ascii"))?;
+    if !(header.contains("'<f4'") || header.contains("\"<f4\"")) {
+        return Err(bad("dtype is not little-endian f32 ('<f4')"));
+    }
+    if header.contains("'fortran_order': True") {
+        return Err(bad("fortran-order arrays are not supported"));
+    }
+    let shape = parse_npy_shape(header).ok_or_else(|| {
+        bad("could not parse 'shape' from the npy header")
+    })?;
+    // geometry check: per-image dims must match the model input
+    let image_len: usize = image.iter().product();
+    let per_image_ok = shape.as_slice() == image
+        || shape.as_slice() == [image_len]
+        || (shape.len() == image.len() + 1 && shape[1..] == *image)
+        || (shape.len() == 2 && shape[1] == image_len);
+    if !per_image_ok || shape.iter().product::<usize>() == 0 {
+        return Err(CalibError::BadShape {
+            file: file.to_path_buf(),
+            got: shape,
+            want: image.to_vec(),
+        });
+    }
+    let n_vals: usize = shape.iter().product();
+    let data = &bytes[header_end..];
+    if data.len() != n_vals * 4 {
+        return Err(bad(&format!(
+            "payload is {} bytes, shape {shape:?} needs {}",
+            data.len(),
+            n_vals * 4
+        )));
+    }
+    Ok(data
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Extract the `'shape': (…)` tuple from an npy header dict.
+fn parse_npy_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape'")?;
+    let rest = &header[at..];
+    let open = rest.find('(')?;
+    let close = rest[open..].find(')')? + open;
+    let inner = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue; // trailing comma of a 1-tuple
+        }
+        out.push(part.parse::<usize>().ok()?);
+    }
+    if out.is_empty() {
+        return None; // 0-d scalar: not an image tensor
+    }
+    Some(out)
+}
+
+/// FNV-1a 64-bit — the calibration-set fingerprint. Not cryptographic;
+/// it detects "different files" for provenance, nothing more.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// One-shot FNV-1a-64 over a byte buffer — the same fingerprint
+/// [`load_dir`] computes per directory, for callers that synthesize
+/// their calibration set in memory (synthetic provenance).
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.hex()
+}
+
+/// Current UTC wall clock as ISO-8601 (`2026-08-08T12:34:56Z`) — the
+/// provenance timestamp. No chrono in the vendor set; see
+/// [`unix_to_iso`].
+pub fn utc_now_iso() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    unix_to_iso(secs)
+}
+
+/// Unix seconds → ISO-8601 UTC, via the days-to-civil algorithm
+/// (proleptic Gregorian; exact for any u64 the clock can produce).
+pub fn unix_to_iso(secs: u64) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (hh, mm, ss) = (rem / 3600, (rem / 60) % 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + if m <= 2 { 1 } else { 0 };
+    format!("{y:04}-{m:02}-{d:02}T{hh:02}:{mm:02}:{ss:02}Z")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("uniq_calib_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_raw(dir: &Path, name: &str, vals: &[f32]) {
+        let mut b = Vec::new();
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join(name), b).unwrap();
+    }
+
+    fn npy_bytes(shape: &[usize], vals: &[f32]) -> Vec<u8> {
+        let shape_s = match shape.len() {
+            1 => format!("({},)", shape[0]),
+            _ => format!(
+                "({})",
+                shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': \
+             {shape_s}, }}"
+        );
+        // pad so 10 + len(header) is a multiple of 64, newline-terminated
+        while (10 + header.len() + 1) % 64 != 0 {
+            header.push(' ');
+        }
+        header.push('\n');
+        let mut b = Vec::new();
+        b.extend_from_slice(b"\x93NUMPY\x01\x00");
+        b.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        b.extend_from_slice(header.as_bytes());
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn raw_and_npy_load_in_sorted_order() {
+        let d = tmp("ok");
+        let img = [2usize, 2, 1];
+        write_raw(&d, "b.f32", &[4.0, 5.0, 6.0, 7.0]);
+        std::fs::write(
+            d.join("a.npy"),
+            npy_bytes(&[1, 2, 2, 1], &[0.0, 1.0, 2.0, 3.0]),
+        )
+        .unwrap();
+        std::fs::write(d.join("README.md"), "notes").unwrap();
+        let set = load_dir(&d, &img).unwrap();
+        assert_eq!(set.n, 2);
+        assert_eq!(
+            set.images,
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]
+        );
+        assert_eq!(
+            set.files,
+            vec![("a.npy".to_string(), 1), ("b.f32".to_string(), 1)]
+        );
+        // deterministic fingerprint: same files, same hash
+        let again = load_dir(&d, &img).unwrap();
+        assert_eq!(set.content_hash, again.content_hash);
+        assert_eq!(set.content_hash.len(), 16);
+    }
+
+    #[test]
+    fn npy_shape_variants_accepted() {
+        let d = tmp("shapes");
+        let img = [2usize, 2, 1];
+        std::fs::write(
+            d.join("hwc.npy"),
+            npy_bytes(&[2, 2, 1], &[0.0; 4]),
+        )
+        .unwrap();
+        std::fs::write(d.join("flat.npy"), npy_bytes(&[4], &[0.0; 4]))
+            .unwrap();
+        std::fs::write(
+            d.join("nflat.npy"),
+            npy_bytes(&[3, 4], &[0.5; 12]),
+        )
+        .unwrap();
+        let set = load_dir(&d, &img).unwrap();
+        assert_eq!(set.n, 5);
+    }
+
+    #[test]
+    fn empty_dir_is_a_typed_error_naming_the_dir() {
+        let d = tmp("empty");
+        std::fs::write(d.join("notes.txt"), "no tensors here").unwrap();
+        let err = load_dir(&d, &[2, 2, 1]).unwrap_err();
+        assert!(matches!(err, CalibError::Empty { .. }), "{err}");
+        assert!(err.to_string().contains("uniq_calib_empty"), "{err}");
+    }
+
+    #[test]
+    fn ragged_raw_file_names_the_file() {
+        let d = tmp("ragged");
+        write_raw(&d, "good.f32", &[0.0; 4]);
+        write_raw(&d, "short.f32", &[1.0, 2.0, 3.0]);
+        let err = load_dir(&d, &[2, 2, 1]).unwrap_err();
+        assert!(
+            matches!(err, CalibError::BadLength { floats: 3, .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("short.f32"), "{err}");
+    }
+
+    #[test]
+    fn wrong_npy_shape_names_the_file() {
+        let d = tmp("shape");
+        std::fs::write(
+            d.join("wrong.npy"),
+            npy_bytes(&[3, 3, 1], &[0.0; 9]),
+        )
+        .unwrap();
+        let err = load_dir(&d, &[2, 2, 1]).unwrap_err();
+        match &err {
+            CalibError::BadShape { got, want, .. } => {
+                assert_eq!(got, &vec![3, 3, 1]);
+                assert_eq!(want, &vec![2, 2, 1]);
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+        assert!(err.to_string().contains("wrong.npy"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_pixels_rejected() {
+        let d = tmp("nan");
+        write_raw(&d, "bad.f32", &[0.0, f32::NAN, 1.0, 2.0]);
+        let err = load_dir(&d, &[2, 2, 1]).unwrap_err();
+        assert!(
+            matches!(err, CalibError::NonFinite { index: 1, .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("bad.f32"), "{err}");
+    }
+
+    #[test]
+    fn npy_rejects_wrong_dtype_and_truncation() {
+        let d = tmp("dtype");
+        let mut b = npy_bytes(&[2, 2, 1], &[0.0; 4]);
+        // corrupt the dtype in place
+        let pos = b.windows(4).position(|w| w == b"<f4'").unwrap();
+        b[pos..pos + 3].copy_from_slice(b"<f8");
+        std::fs::write(d.join("f64.npy"), &b).unwrap();
+        let err = load_dir(&d, &[2, 2, 1]).unwrap_err();
+        assert!(matches!(err, CalibError::BadNpy { .. }), "{err}");
+
+        let d2 = tmp("trunc");
+        let mut t = npy_bytes(&[2, 2, 1], &[0.0; 4]);
+        t.truncate(t.len() - 5);
+        std::fs::write(d2.join("cut.npy"), &t).unwrap();
+        let err = load_dir(&d2, &[2, 2, 1]).unwrap_err();
+        assert!(err.to_string().contains("cut.npy"), "{err}");
+    }
+
+    #[test]
+    fn iso_timestamps_pinned() {
+        assert_eq!(unix_to_iso(0), "1970-01-01T00:00:00Z");
+        assert_eq!(unix_to_iso(1_000_000_000), "2001-09-09T01:46:40Z");
+        assert_eq!(unix_to_iso(1_767_225_599), "2025-12-31T23:59:59Z");
+        let now = utc_now_iso();
+        assert_eq!(now.len(), 20);
+        assert!(now.ends_with('Z'));
+    }
+}

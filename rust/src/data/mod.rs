@@ -1,12 +1,15 @@
 //! Data pipeline: synthetic CIFAR-like dataset, CIFAR binary loader,
-//! augmentation, shuffled batching and a double-buffered prefetcher.
+//! raw-f32/npy calibration-set loader, augmentation, shuffled batching
+//! and a double-buffered prefetcher.
 
 pub mod augment;
 pub mod batcher;
+pub mod calib;
 pub mod cifar;
 pub mod synth;
 
 pub use batcher::{Batch, Batcher};
+pub use calib::{CalibError, CalibSet};
 pub use synth::SynthDataset;
 
 /// An in-memory labelled image dataset, NHWC f32.

@@ -1,0 +1,917 @@
+//! Mixed-precision frontier search (`uniq frontier`): per-layer bit
+//! allocation over the accuracy-vs-served-BOPS plane.
+//!
+//! The paper's comparison — k-quantile vs uniform *as a function of
+//! BOPS* — only becomes a real experiment once bitwidths can differ
+//! per layer. Frozen format v2 already stores per-layer weight
+//! codebooks and per-layer activation tables, and every serving kernel
+//! reads each table's own `k`, so heterogeneous widths serve with no
+//! engine change; what was missing is the **policy**: which layer
+//! should give up a bit first? This module answers it in three parts
+//! (DESIGN.md §15):
+//!
+//! 1. **Sensitivity ranking** ([`FrontierCtx::sensitivity`]): from a
+//!    uniform start allocation, drop one bit from one layer at a time
+//!    (weights and activations independently) and measure the logit
+//!    degradation on a calibration batch against the start model's
+//!    logits. Activation statistics come from ONE calibration pass
+//!    (`actquant::calibrate` moment folding via
+//!    `Graph::forward_calibrate`); candidate tables are rebuilt
+//!    analytically from the stored `(μ, σ)` at the candidate width, so
+//!    no candidate ever re-runs calibration.
+//! 2. **Greedy Pareto search** ([`FrontierCtx::search`]): repeatedly
+//!    drop the single bit with the best ΔBOPS/Δdegradation ratio,
+//!    where ΔBOPS is the *served* complexity delta
+//!    (`Graph::served_complexity`: real per-layer `b_w × b_a` plus the
+//!    weight-fetch term — raw per-MAC BOPS would ignore that a layer's
+//!    input width is set by its *upstream* table). Stops at the BOPS
+//!    budget, the accuracy floor, or the bit floor.
+//! 3. **Frontier emission**: the greedy trajectory, Pareto-filtered
+//!    ([`pareto_filter`]: dominated points removed) so the emitted
+//!    frontier is monotone — BOPS strictly decreasing, degradation
+//!    strictly increasing — plus the selected allocation, as an
+//!    aligned-text table and JSON.
+//!
+//! Every candidate is realized as a true [`FrozenModel`] (quantizers
+//! re-fitted from the f32 weight basis at `2^b` levels, tables rebuilt
+//! from moments) and evaluated through the same v2 LUT forward the
+//! serving tier runs — the search measures what will actually ship,
+//! and the chosen allocation freezes/serves through v2/v3 unchanged.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::FreezeQuant;
+use crate::infer::actquant::{self, ActQuantModel, ActQuantTable, AqMode};
+use crate::infer::codebook::CalibProvenance;
+use crate::infer::kernels::argmax;
+use crate::infer::{
+    FrozenModel, Graph, KernelMode, LayerCodebook, PreparedWeights,
+};
+use crate::util::json::{num, obj, s, Json};
+
+use super::common::Table;
+
+/// Which side of a layer gives up a bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitDim {
+    Weight,
+    Act,
+}
+
+impl BitDim {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BitDim::Weight => "w",
+            BitDim::Act => "a",
+        }
+    }
+}
+
+/// A per-layer bit allocation: `w[q]` weight bits per qlayer, `a[q]`
+/// activation bits for layers whose output carries an aq table
+/// (`None` = no table; the final dense's logits stay f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub w: Vec<u8>,
+    pub a: Vec<Option<u8>>,
+}
+
+impl Allocation {
+    /// Compact display: `8,8,4` (weights) or `8,8,-` (activations).
+    fn fmt_w(&self) -> String {
+        self.w
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    fn fmt_a(&self) -> String {
+        self.a
+            .iter()
+            .map(|b| {
+                b.map(|b| b.to_string()).unwrap_or_else(|| "-".into())
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Search knobs. Start bits are the uniform allocation the search (and
+/// the degradation reference) begins from; floors stop a layer from
+/// dropping below a width the packed/u8 formats can serve.
+#[derive(Debug, Clone)]
+pub struct FrontierConfig {
+    pub start_bits_w: u32,
+    pub start_bits_a: u32,
+    pub min_bits_w: u32,
+    pub min_bits_a: u32,
+    pub mode: AqMode,
+    pub fq: FreezeQuant,
+    /// stop once served complexity reaches this many GBOPs/img
+    pub budget_gbops: Option<f64>,
+    /// refuse any step whose top-1 metric (accuracy when labels exist,
+    /// else agreement with the start model) would fall below this
+    pub target_acc: Option<f64>,
+    /// hard cap on greedy steps (each step drops exactly one bit)
+    pub max_steps: usize,
+    pub batch: usize,
+}
+
+impl Default for FrontierConfig {
+    fn default() -> FrontierConfig {
+        FrontierConfig {
+            start_bits_w: 8,
+            start_bits_a: 8,
+            min_bits_w: 1,
+            min_bits_a: 2,
+            mode: AqMode::Quantile,
+            fq: FreezeQuant::KQuantileGauss,
+            budget_gbops: None,
+            target_acc: None,
+            max_steps: 32,
+            batch: 16,
+        }
+    }
+}
+
+/// One point of the greedy trajectory / emitted frontier.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    /// greedy step index (0 = uniform start)
+    pub step: usize,
+    pub alloc: Allocation,
+    /// served complexity (GBOPs/img) at this allocation
+    pub gbops: f64,
+    /// model size (Mbit)
+    pub mbit: f64,
+    /// RMS logit error vs the uniform-start reference
+    pub degradation: f64,
+    /// top-1 agreement with the start model's predictions
+    pub agreement: f64,
+    /// top-1 accuracy vs labels, when the calibration set has them
+    pub accuracy: Option<f64>,
+    /// `(qlayer, dim)` the step dropped; `None` for the start point
+    pub dropped: Option<(usize, BitDim)>,
+}
+
+impl FrontierPoint {
+    /// The stopping/selection metric: accuracy when labels exist,
+    /// agreement with the reference otherwise.
+    fn metric(&self) -> f64 {
+        self.accuracy.unwrap_or(self.agreement)
+    }
+}
+
+/// One row of the sensitivity ranking.
+#[derive(Debug, Clone)]
+pub struct Sensitivity {
+    pub q: usize,
+    pub layer: String,
+    pub dim: BitDim,
+    /// degradation when this layer alone drops one bit from the start
+    pub delta_deg: f64,
+    /// served GBOPs saved by that drop
+    pub delta_gbops: f64,
+}
+
+/// Everything [`search`]/[`sensitivity`] produce, ready for rendering.
+#[derive(Debug, Clone)]
+pub struct FrontierResult {
+    pub sensitivity: Vec<Sensitivity>,
+    /// every greedy step in order (step 0 = start)
+    pub trajectory: Vec<FrontierPoint>,
+    /// Pareto filter of the trajectory: BOPS strictly decreasing,
+    /// degradation strictly increasing
+    pub frontier: Vec<FrontierPoint>,
+    /// index into `frontier` of the selected allocation
+    pub selected: usize,
+    pub selected_reason: String,
+}
+
+/// The search context: an immutable f32 weight basis + calibrated
+/// activation moments + a calibration batch, from which any candidate
+/// allocation can be realized as a servable [`FrozenModel`].
+pub struct FrontierCtx {
+    /// layers/aq are replaced per candidate; name, params, BN state,
+    /// image geometry ride along unchanged
+    template: FrozenModel,
+    graph: Graph,
+    /// f32 weight basis, one tensor per qlayer (pre-quantization
+    /// weights when available; a `--frozen` model's dequantized
+    /// codebook weights otherwise — see `cmd_frontier`)
+    raw: Vec<Vec<f32>>,
+    /// calibrated `(μ, σ)` per qlayer (None = no aq site, e.g. the
+    /// final dense) — the single-calibration basis every candidate's
+    /// tables rebuild from
+    moments: Vec<Option<(f32, f32)>>,
+    images: Vec<f32>,
+    labels: Option<Vec<i32>>,
+    pub provenance: Option<CalibProvenance>,
+    cfg: FrontierConfig,
+    /// logits of the uniform-start model on the calibration set
+    ref_logits: Vec<f32>,
+    ref_preds: Vec<usize>,
+    start_point: FrontierPoint,
+    /// codebook cache: fitting is deterministic per (layer, bits)
+    cb_cache: HashMap<(usize, u8), LayerCodebook>,
+}
+
+impl FrontierCtx {
+    /// Build the context: one calibration pass on the uniform-start
+    /// model fixes the activation moments and the degradation
+    /// reference. `raw` must hold one f32 weight tensor per qlayer of
+    /// `template`; `labels`, when given, must have one entry per
+    /// calibration image.
+    pub fn new(
+        template: FrozenModel,
+        raw: Vec<Vec<f32>>,
+        images: Vec<f32>,
+        labels: Option<Vec<i32>>,
+        cfg: FrontierConfig,
+    ) -> Result<FrontierCtx> {
+        if raw.len() != template.layers.len() {
+            return Err(anyhow!(
+                "weight basis has {} tensors for {} qlayers",
+                raw.len(),
+                template.layers.len()
+            ));
+        }
+        for (l, w) in template.layers.iter().zip(&raw) {
+            let want: usize = l.shape.iter().product();
+            if w.len() != want {
+                return Err(anyhow!(
+                    "{}: weight basis holds {} floats, shape {:?} \
+                     needs {want}",
+                    l.name,
+                    w.len(),
+                    l.shape
+                ));
+            }
+        }
+        let img_len: usize = template.image.iter().product();
+        if img_len == 0 || images.is_empty() || images.len() % img_len != 0
+        {
+            return Err(anyhow!(
+                "calibration set is {} floats, not a whole number of \
+                 {:?} images",
+                images.len(),
+                template.image
+            ));
+        }
+        let n_img = images.len() / img_len;
+        if let Some(l) = &labels {
+            if l.len() != n_img {
+                return Err(anyhow!(
+                    "{} labels for {n_img} calibration images",
+                    l.len()
+                ));
+            }
+        }
+        if !(1..=8).contains(&cfg.start_bits_w)
+            || !(1..=8).contains(&cfg.start_bits_a)
+            || cfg.min_bits_w < 1
+            || cfg.min_bits_a < 1
+            || cfg.min_bits_w > cfg.start_bits_w
+            || cfg.min_bits_a > cfg.start_bits_a
+        {
+            return Err(anyhow!(
+                "bit range (start w{} a{}, floor w{} a{}) outside \
+                 1..=8 or floor above start",
+                cfg.start_bits_w,
+                cfg.start_bits_a,
+                cfg.min_bits_w,
+                cfg.min_bits_a
+            ));
+        }
+        let graph = Graph::from_model(&template)?;
+
+        let mut ctx = FrontierCtx {
+            template,
+            graph,
+            raw,
+            moments: Vec::new(),
+            images,
+            labels,
+            provenance: None,
+            cfg,
+            ref_logits: Vec::new(),
+            ref_preds: Vec::new(),
+            start_point: FrontierPoint {
+                step: 0,
+                alloc: Allocation { w: vec![], a: vec![] },
+                gbops: 0.0,
+                mbit: 0.0,
+                degradation: 0.0,
+                agreement: 1.0,
+                accuracy: None,
+                dropped: None,
+            },
+            cb_cache: HashMap::new(),
+        };
+
+        // 1. uniform-start model without aq → calibrate moments once
+        let mut start = ctx.template.clone();
+        start.bits_w = ctx.cfg.start_bits_w as u8;
+        start.layers = (0..start.layers.len())
+            .map(|q| ctx.fit_layer(q, ctx.cfg.start_bits_w as u8))
+            .collect();
+        start.aq = None;
+        let weights = PreparedWeights::lut_only(&start, &ctx.graph);
+        let aq = actquant::calibrate(
+            &start,
+            &ctx.graph,
+            &weights,
+            &ctx.images,
+            ctx.cfg.batch,
+            ctx.cfg.mode,
+            ctx.cfg.start_bits_a,
+        )?;
+        ctx.moments = aq
+            .tables
+            .iter()
+            .map(|t| t.as_ref().map(|t| (t.mu, t.sigma)))
+            .collect();
+
+        // 2. the start allocation (uniform, tables where moments exist)
+        let start_alloc = Allocation {
+            w: vec![ctx.cfg.start_bits_w as u8; ctx.raw.len()],
+            a: ctx
+                .moments
+                .iter()
+                .map(|m| m.map(|_| ctx.cfg.start_bits_a as u8))
+                .collect(),
+        };
+        let (model, weights) = ctx.realize(&start_alloc)?;
+
+        // 3. reference logits + start point
+        let logits = ctx.forward_all(&model, &weights)?;
+        let classes = model.classes;
+        ctx.ref_preds = (0..n_img)
+            .map(|i| argmax(&logits[i * classes..(i + 1) * classes]))
+            .collect();
+        ctx.ref_logits = logits;
+        let c = ctx.graph.served_complexity(&model);
+        let accuracy = ctx.labels.as_ref().map(|ls| {
+            let hit = ls
+                .iter()
+                .zip(&ctx.ref_preds)
+                .filter(|(&y, &p)| y as usize == p)
+                .count();
+            hit as f64 / n_img as f64
+        });
+        ctx.start_point = FrontierPoint {
+            step: 0,
+            alloc: start_alloc,
+            gbops: c.gbops(),
+            mbit: c.mbit(),
+            degradation: 0.0,
+            agreement: 1.0,
+            accuracy,
+            dropped: None,
+        };
+        Ok(ctx)
+    }
+
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.template.layers.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    pub fn start_point(&self) -> &FrontierPoint {
+        &self.start_point
+    }
+
+    /// Fit qlayer `q`'s codebook at `bits` from the f32 basis (cached:
+    /// the fit is deterministic per (layer, bits)).
+    fn fit_layer(&mut self, q: usize, bits: u8) -> LayerCodebook {
+        if let Some(c) = self.cb_cache.get(&(q, bits)) {
+            return c.clone();
+        }
+        let l = &self.template.layers[q];
+        let quant = self.cfg.fq.fit(&self.raw[q], 1usize << bits);
+        let cb = LayerCodebook::from_weights(
+            &l.name,
+            &l.shape,
+            &self.raw[q],
+            &quant,
+        );
+        self.cb_cache.insert((q, bits), cb.clone());
+        cb
+    }
+
+    /// Realize an allocation as a servable model: re-fit each layer's
+    /// codebook from the f32 basis at its allocated width, rebuild
+    /// tables analytically from the calibrated moments, carry
+    /// provenance.
+    pub fn realize(
+        &mut self,
+        alloc: &Allocation,
+    ) -> Result<(FrozenModel, PreparedWeights)> {
+        if alloc.w.len() != self.raw.len()
+            || alloc.a.len() != self.raw.len()
+        {
+            return Err(anyhow!(
+                "allocation sized {}w/{}a for {} qlayers",
+                alloc.w.len(),
+                alloc.a.len(),
+                self.raw.len()
+            ));
+        }
+        let mut m = self.template.clone();
+        m.layers = (0..m.layers.len())
+            .map(|q| self.fit_layer(q, alloc.w[q]))
+            .collect();
+        m.bits_w = *alloc.w.iter().max().unwrap_or(&1);
+        let mut tables = Vec::with_capacity(self.moments.len());
+        for (q, mom) in self.moments.iter().enumerate() {
+            tables.push(match (mom, alloc.a[q]) {
+                (Some((mu, sigma)), Some(bits)) => {
+                    Some(ActQuantTable::from_stats(
+                        self.cfg.mode,
+                        bits as u32,
+                        *mu,
+                        *sigma,
+                    ))
+                }
+                _ => None,
+            });
+        }
+        m.aq = if tables.iter().any(|t| t.is_some()) {
+            Some(ActQuantModel {
+                mode: self.cfg.mode,
+                bits: alloc
+                    .a
+                    .iter()
+                    .filter_map(|b| *b)
+                    .max()
+                    .unwrap_or(self.cfg.start_bits_a as u8),
+                tables,
+            })
+        } else {
+            None
+        };
+        m.calibration = self.provenance.clone();
+        let weights = PreparedWeights::lut_only(&m, &self.graph);
+        Ok((m, weights))
+    }
+
+    /// Forward the whole calibration set, batched, on the v2 engine.
+    fn forward_all(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+    ) -> Result<Vec<f32>> {
+        let img_len: usize = m.image.iter().product();
+        let n_img = self.images.len() / img_len;
+        let mut out = Vec::with_capacity(n_img * m.classes);
+        let mut i0 = 0usize;
+        while i0 < n_img {
+            let b = self.cfg.batch.max(1).min(n_img - i0);
+            let x = &self.images[i0 * img_len..(i0 + b) * img_len];
+            let logits = self.graph.forward(
+                m,
+                weights,
+                x,
+                b,
+                KernelMode::Lut,
+            )?;
+            out.extend_from_slice(&logits);
+            i0 += b;
+        }
+        Ok(out)
+    }
+
+    /// Evaluate a candidate against the start reference:
+    /// `(degradation, agreement, accuracy)`.
+    fn eval(
+        &self,
+        m: &FrozenModel,
+        weights: &PreparedWeights,
+    ) -> Result<(f64, f64, Option<f64>)> {
+        let logits = self.forward_all(m, weights)?;
+        let classes = m.classes;
+        let n_img = self.ref_preds.len();
+        let mut se = 0.0f64;
+        for (a, b) in logits.iter().zip(&self.ref_logits) {
+            let d = (*a - *b) as f64;
+            se += d * d;
+        }
+        let degradation = (se / logits.len().max(1) as f64).sqrt();
+        let mut agree = 0usize;
+        let mut hit = 0usize;
+        for i in 0..n_img {
+            let p = argmax(&logits[i * classes..(i + 1) * classes]);
+            if p == self.ref_preds[i] {
+                agree += 1;
+            }
+            if let Some(ls) = &self.labels {
+                if ls[i] as usize == p {
+                    hit += 1;
+                }
+            }
+        }
+        let agreement = agree as f64 / n_img.max(1) as f64;
+        let accuracy = self
+            .labels
+            .as_ref()
+            .map(|_| hit as f64 / n_img.max(1) as f64);
+        Ok((degradation, agreement, accuracy))
+    }
+
+    /// All single-bit drops legal from `alloc` under the floors.
+    fn candidates(&self, alloc: &Allocation) -> Vec<(usize, BitDim)> {
+        let mut out = Vec::new();
+        for q in 0..alloc.w.len() {
+            if alloc.w[q] as u32 > self.cfg.min_bits_w {
+                out.push((q, BitDim::Weight));
+            }
+            if let Some(a) = alloc.a[q] {
+                if a as u32 > self.cfg.min_bits_a {
+                    out.push((q, BitDim::Act));
+                }
+            }
+        }
+        out
+    }
+
+    fn drop_bit(alloc: &Allocation, q: usize, dim: BitDim) -> Allocation {
+        let mut next = alloc.clone();
+        match dim {
+            BitDim::Weight => next.w[q] -= 1,
+            BitDim::Act => {
+                next.a[q] = next.a[q].map(|b| b - 1);
+            }
+        }
+        next
+    }
+
+    /// Measure one candidate allocation as a frontier point.
+    fn measure(
+        &mut self,
+        alloc: &Allocation,
+        step: usize,
+        dropped: Option<(usize, BitDim)>,
+    ) -> Result<FrontierPoint> {
+        let (m, weights) = self.realize(alloc)?;
+        let c = self.graph.served_complexity(&m);
+        let (degradation, agreement, accuracy) = self.eval(&m, &weights)?;
+        Ok(FrontierPoint {
+            step,
+            alloc: alloc.clone(),
+            gbops: c.gbops(),
+            mbit: c.mbit(),
+            degradation,
+            agreement,
+            accuracy,
+            dropped,
+        })
+    }
+
+    /// Phase 1 — sensitivity ranking: every layer/dim alone drops one
+    /// bit from the uniform start; rows sorted most-sensitive first
+    /// (largest degradation per saved GBOP).
+    pub fn sensitivity(&mut self) -> Result<Vec<Sensitivity>> {
+        let start = self.start_point.alloc.clone();
+        let base_gbops = self.start_point.gbops;
+        let mut rows = Vec::new();
+        for (q, dim) in self.candidates(&start) {
+            let cand = Self::drop_bit(&start, q, dim);
+            let p = self.measure(&cand, 0, Some((q, dim)))?;
+            rows.push(Sensitivity {
+                q,
+                layer: self.template.layers[q].name.clone(),
+                dim,
+                delta_deg: p.degradation,
+                delta_gbops: base_gbops - p.gbops,
+            });
+        }
+        rows.sort_by(|a, b| {
+            b.delta_deg
+                .partial_cmp(&a.delta_deg)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Ok(rows)
+    }
+
+    /// Phase 2+3 — greedy search and frontier emission.
+    pub fn search(&mut self) -> Result<FrontierResult> {
+        let sensitivity = self.sensitivity()?;
+        let mut cur = self.start_point.clone();
+        let mut trajectory = vec![cur.clone()];
+        let mut reason: Option<String> = None;
+        for step in 1..=self.cfg.max_steps {
+            if let Some(budget) = self.cfg.budget_gbops {
+                if cur.gbops <= budget {
+                    reason = Some("budget".into());
+                    break;
+                }
+            }
+            let cands = self.candidates(&cur.alloc);
+            if cands.is_empty() {
+                reason = Some("floor".into());
+                break;
+            }
+            // best ΔBOPS per unit of added degradation
+            let mut best: Option<(f64, FrontierPoint)> = None;
+            for (q, dim) in cands {
+                let next = Self::drop_bit(&cur.alloc, q, dim);
+                let p = self.measure(&next, step, Some((q, dim)))?;
+                let d_bops = (cur.gbops - p.gbops).max(0.0);
+                let d_deg = (p.degradation - cur.degradation).max(1e-12);
+                let ratio = d_bops / d_deg;
+                if best
+                    .as_ref()
+                    .map(|(r, _)| ratio > *r)
+                    .unwrap_or(true)
+                {
+                    best = Some((ratio, p));
+                }
+            }
+            let (_, p) = best.expect("candidates were non-empty");
+            if let Some(target) = self.cfg.target_acc {
+                if p.metric() < target {
+                    reason = Some("target-acc".into());
+                    break;
+                }
+            }
+            trajectory.push(p.clone());
+            cur = p;
+        }
+        let reason = reason.unwrap_or_else(|| "max-steps".into());
+        let frontier = pareto_filter(&trajectory);
+        // selection: the cheapest point meeting the stop criterion
+        let selected = match (self.cfg.budget_gbops, self.cfg.target_acc)
+        {
+            (Some(budget), _) => frontier
+                .iter()
+                .position(|p| p.gbops <= budget)
+                .unwrap_or(frontier.len() - 1),
+            (None, Some(target)) => frontier
+                .iter()
+                .rposition(|p| p.metric() >= target)
+                .unwrap_or(0),
+            (None, None) => frontier.len() - 1,
+        };
+        Ok(FrontierResult {
+            sensitivity,
+            trajectory,
+            frontier,
+            selected,
+            selected_reason: reason,
+        })
+    }
+}
+
+/// Pareto filter of a greedy trajectory (BOPS strictly decreasing by
+/// construction): keep a point iff its degradation is strictly below
+/// every later (cheaper) point's — the survivors are monotone in both
+/// axes: BOPS strictly decreasing AND degradation strictly increasing.
+/// A later point that regressed to equal-or-lower degradation
+/// dominates (same quality, fewer BOPS), so the earlier one is
+/// dropped.
+pub fn pareto_filter(traj: &[FrontierPoint]) -> Vec<FrontierPoint> {
+    let mut keep = vec![false; traj.len()];
+    let mut best = f64::INFINITY;
+    for i in (0..traj.len()).rev() {
+        if traj[i].degradation < best {
+            keep[i] = true;
+            best = traj[i].degradation;
+        }
+    }
+    traj.iter()
+        .zip(keep)
+        .filter(|(_, k)| *k)
+        .map(|(p, _)| p.clone())
+        .collect()
+}
+
+// -- rendering ------------------------------------------------------------
+
+fn fmt_acc(p: &FrontierPoint) -> String {
+    p.accuracy
+        .map(|a| format!("{:.1}", a * 100.0))
+        .unwrap_or_else(|| "-".into())
+}
+
+fn dropped_label(names: &[&str], d: Option<(usize, BitDim)>) -> String {
+    match d {
+        None => "(start)".into(),
+        Some((q, dim)) => format!("{}/{}", names[q], dim.name()),
+    }
+}
+
+/// The sensitivity ranking as an aligned table.
+pub fn sensitivity_table(rows: &[Sensitivity]) -> Table {
+    let mut t = Table::new(&[
+        "layer", "dim", "Δdeg", "ΔGBOPs", "GBOPs/deg",
+    ]);
+    for r in rows {
+        let ratio = r.delta_gbops / r.delta_deg.max(1e-12);
+        t.row(vec![
+            r.layer.clone(),
+            r.dim.name().into(),
+            format!("{:.4e}", r.delta_deg),
+            format!("{:.4}", r.delta_gbops),
+            format!("{:.3e}", ratio),
+        ]);
+    }
+    t
+}
+
+/// A frontier (or trajectory) as an aligned table.
+pub fn frontier_table(names: &[&str], points: &[FrontierPoint]) -> Table {
+    let mut t = Table::new(&[
+        "step", "dropped", "b_w", "b_a", "GBOPs", "Mbit", "deg",
+        "agree%", "acc%",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.step.to_string(),
+            dropped_label(names, p.dropped),
+            p.alloc.fmt_w(),
+            p.alloc.fmt_a(),
+            format!("{:.4}", p.gbops),
+            format!("{:.3}", p.mbit),
+            format!("{:.4e}", p.degradation),
+            format!("{:.1}", p.agreement * 100.0),
+            fmt_acc(p),
+        ]);
+    }
+    t
+}
+
+fn point_json(names: &[&str], p: &FrontierPoint) -> Json {
+    obj(vec![
+        ("step", num(p.step as f64)),
+        (
+            "dropped",
+            match p.dropped {
+                None => Json::Null,
+                Some(_) => s(&dropped_label(names, p.dropped)),
+            },
+        ),
+        (
+            "alloc",
+            obj(vec![
+                (
+                    "w",
+                    Json::Arr(
+                        p.alloc
+                            .w
+                            .iter()
+                            .map(|&b| num(b as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "a",
+                    Json::Arr(
+                        p.alloc
+                            .a
+                            .iter()
+                            .map(|b| {
+                                b.map(|b| num(b as f64))
+                                    .unwrap_or(Json::Null)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("gbops", num(p.gbops)),
+        ("mbit", num(p.mbit)),
+        ("degradation", num(p.degradation)),
+        ("agreement", num(p.agreement)),
+        (
+            "accuracy",
+            p.accuracy.map(num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// The full machine-readable report (`--out` / CI artifact).
+pub fn result_json(
+    model: &str,
+    names: &[&str],
+    cfg: &FrontierConfig,
+    provenance: Option<&CalibProvenance>,
+    r: &FrontierResult,
+) -> Json {
+    let sens = r
+        .sensitivity
+        .iter()
+        .map(|x| {
+            obj(vec![
+                ("layer", s(&x.layer)),
+                ("dim", s(x.dim.name())),
+                ("delta_deg", num(x.delta_deg)),
+                ("delta_gbops", num(x.delta_gbops)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("model", s(model)),
+        ("mode", s(cfg.mode.name())),
+        ("start_bits_w", num(cfg.start_bits_w as f64)),
+        ("start_bits_a", num(cfg.start_bits_a as f64)),
+        (
+            "budget_gbops",
+            cfg.budget_gbops.map(num).unwrap_or(Json::Null),
+        ),
+        (
+            "target_acc",
+            cfg.target_acc.map(num).unwrap_or(Json::Null),
+        ),
+        (
+            "calibration",
+            provenance
+                .map(|p| {
+                    obj(vec![
+                        ("source", s(&p.source)),
+                        ("samples", num(p.samples as f64)),
+                        ("content_hash", s(&p.content_hash)),
+                        ("utc", s(&p.utc)),
+                    ])
+                })
+                .unwrap_or(Json::Null),
+        ),
+        ("sensitivity", Json::Arr(sens)),
+        (
+            "trajectory",
+            Json::Arr(
+                r.trajectory
+                    .iter()
+                    .map(|p| point_json(names, p))
+                    .collect(),
+            ),
+        ),
+        (
+            "frontier",
+            Json::Arr(
+                r.frontier
+                    .iter()
+                    .map(|p| point_json(names, p))
+                    .collect(),
+            ),
+        ),
+        ("selected", point_json(names, &r.frontier[r.selected])),
+        ("selected_reason", s(&r.selected_reason)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(step: usize, gbops: f64, deg: f64) -> FrontierPoint {
+        FrontierPoint {
+            step,
+            alloc: Allocation { w: vec![4], a: vec![None] },
+            gbops,
+            mbit: 1.0,
+            degradation: deg,
+            agreement: 1.0,
+            accuracy: None,
+            dropped: None,
+        }
+    }
+
+    #[test]
+    fn pareto_filter_removes_dominated_points() {
+        // deg regresses at step 2 (0.5 after 0.7): step-1 point is
+        // dominated by the cheaper, equally-degraded step-2 point
+        let traj = vec![
+            pt(0, 10.0, 0.0),
+            pt(1, 8.0, 0.7),
+            pt(2, 6.0, 0.5),
+            pt(3, 4.0, 0.9),
+        ];
+        let f = pareto_filter(&traj);
+        let steps: Vec<usize> = f.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 2, 3]);
+        for w in f.windows(2) {
+            assert!(w[1].gbops < w[0].gbops);
+            assert!(w[1].degradation > w[0].degradation);
+        }
+    }
+
+    #[test]
+    fn pareto_filter_ties_keep_the_cheaper_point() {
+        let traj =
+            vec![pt(0, 10.0, 0.0), pt(1, 8.0, 0.3), pt(2, 6.0, 0.3)];
+        let f = pareto_filter(&traj);
+        let steps: Vec<usize> = f.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 2]);
+    }
+
+    #[test]
+    fn pareto_filter_keeps_monotone_trajectories_whole() {
+        let traj =
+            vec![pt(0, 10.0, 0.0), pt(1, 8.0, 0.1), pt(2, 6.0, 0.2)];
+        assert_eq!(pareto_filter(&traj).len(), 3);
+        assert_eq!(pareto_filter(&[]).len(), 0);
+        assert_eq!(pareto_filter(&[pt(0, 1.0, 0.0)]).len(), 1);
+    }
+}

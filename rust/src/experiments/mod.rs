@@ -4,9 +4,15 @@
 //! printing measured values next to the paper's reported numbers and
 //! writing a machine-readable copy under `results/`. See DESIGN.md §6
 //! for the experiment index and the expected shape-preservation claims.
+//!
+//! `frontier` is the one module here not in the `uniq exp` registry:
+//! the mixed-precision frontier search takes a model + calibration set
+//! rather than an artifacts dir, so it runs as its own subcommand
+//! (`uniq frontier`, wired in `main.rs`; DESIGN.md §15).
 
 pub mod common;
 pub mod fig1;
+pub mod frontier;
 pub mod fig_b1;
 pub mod fig_c1;
 pub mod table1;

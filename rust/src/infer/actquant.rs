@@ -133,6 +133,14 @@ impl ActQuantTable {
         self.levels.len()
     }
 
+    /// The activation bitwidth this table serves at (`⌈log₂ k⌉`) — the
+    /// b_a the served-BOPS accounting prices for edges reading this
+    /// table's output. Per-table, so mixed-width allocations price
+    /// honestly.
+    pub fn bits(&self) -> u32 {
+        super::packed::PackedBits::bits_for_k(self.levels.len()) as u32
+    }
+
     /// Borrow as the kernel-epilogue stage.
     pub fn ep(&self) -> ActEp<'_> {
         ActEp { thresholds: &self.thresholds, levels: &self.levels }
@@ -356,6 +364,55 @@ pub fn calibrate(
         })
         .collect();
     Ok(ActQuantModel { mode, bits: bits.clamp(1, 8) as u8, tables })
+}
+
+/// Collect raw (pre-quant) activation samples per qlayer — the same
+/// calibration pass as [`calibrate`], but keeping up to `cap` values
+/// per layer instead of folding moments. This is the measurement
+/// surface for the `stats::occupancy` per-bin balance check (how
+/// evenly a table's bins are populated by real traffic) — Balanced
+/// Quantization (Zhou et al. 2017) equalization, measured not assumed.
+/// Deterministic: the first `cap` values in execution order.
+pub fn sample_activations(
+    m: &FrozenModel,
+    graph: &Graph,
+    weights: &PreparedWeights,
+    images: &[f32],
+    batch: usize,
+    cap: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let img_len: usize = m.image.iter().product();
+    if img_len == 0 || images.is_empty() || images.len() % img_len != 0 {
+        return Err(anyhow!(
+            "activation-sample set is {} floats, not a whole number of \
+             {:?} images",
+            images.len(),
+            m.image
+        ));
+    }
+    let n_img = images.len() / img_len;
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); m.layers.len()];
+    let mut bufs = ExecBuffers::new();
+    let mut i0 = 0usize;
+    while i0 < n_img {
+        let b = batch.max(1).min(n_img - i0);
+        let x = &images[i0 * img_len..(i0 + b) * img_len];
+        graph.forward_calibrate(
+            m,
+            weights,
+            x,
+            b,
+            KernelMode::Lut,
+            &mut bufs,
+            &mut |q, act| {
+                let dst = &mut out[q];
+                let room = cap.saturating_sub(dst.len());
+                dst.extend_from_slice(&act[..room.min(act.len())]);
+            },
+        )?;
+        i0 += b;
+    }
+    Ok(out)
 }
 
 fn f32_arr(vs: &[f32]) -> Json {

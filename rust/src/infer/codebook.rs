@@ -11,10 +11,13 @@
 //!
 //! Format versioning: v1 (PR 1–4) had no `version` key; v2 adds an
 //! optional `act_quant` section (per-layer activation-quant tables,
-//! `infer::actquant`). Loading is backwards-compatible — a v1 file
-//! yields `aq = None` and serves bit-identically to the pre-aq engine;
-//! a file newer than [`FORMAT_VERSION`] is rejected instead of being
-//! silently misread.
+//! `infer::actquant`) and an optional `calibration` provenance section
+//! ([`CalibProvenance`]: what the tables were calibrated on). Loading
+//! is backwards-compatible — a v1 file yields `aq = None` and serves
+//! bit-identically to the pre-aq engine, a v2 file without
+//! `calibration` yields `calibration = None` — while a file newer than
+//! [`FORMAT_VERSION`] is rejected instead of being silently misread.
+//! DESIGN.md §15 carries the consolidated version table.
 
 use std::path::Path;
 
@@ -88,6 +91,46 @@ pub struct NamedTensor {
     pub data: Vec<f32>,
 }
 
+/// Provenance of the calibration set behind a model's aq tables (and
+/// any frontier-chosen bit allocation): an **optional** section of
+/// format v2 — `frozen.json` files without it still load with
+/// `calibration = None`, and pre-provenance readers ignore the key.
+/// Built by the `--data DIR` path (`data::calib`) so exported tables
+/// are auditable for real checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibProvenance {
+    /// where the tensors came from: a directory path, or
+    /// `synthetic:<seed>` for the built-in probe
+    pub source: String,
+    /// number of calibration images
+    pub samples: usize,
+    /// FNV-1a-64 over every file's name + raw bytes (hex); for
+    /// synthetic sets, over the generated buffer
+    pub content_hash: String,
+    /// UTC wall clock of the calibration run, ISO-8601
+    pub utc: String,
+}
+
+impl CalibProvenance {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("source", s(&self.source)),
+            ("samples", num(self.samples as f64)),
+            ("content_hash", s(&self.content_hash)),
+            ("utc", s(&self.utc)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CalibProvenance> {
+        Ok(CalibProvenance {
+            source: req_str(j, "source")?,
+            samples: req_usize(j, "samples")?,
+            content_hash: req_str(j, "content_hash")?,
+            utc: req_str(j, "utc")?,
+        })
+    }
+}
+
 /// Current on-disk format version written by [`FrozenModel::save`].
 pub const FORMAT_VERSION: usize = 2;
 
@@ -99,7 +142,10 @@ pub struct FrozenModel {
     /// input image shape [h, w, c]
     pub image: Vec<usize>,
     pub classes: usize,
-    /// weight bits the codebooks were built for (k = 2^bits levels)
+    /// weight bits the codebooks were built for (k = 2^bits levels).
+    /// For a mixed-precision allocation (frontier search) this is the
+    /// nominal **maximum**; the per-layer truth is each layer's
+    /// `indices.bits`, which is what `Graph::served_complexity` prices
     pub bits_w: u8,
     /// one entry per qlayer, manifest order
     pub layers: Vec<LayerCodebook>,
@@ -110,6 +156,9 @@ pub struct FrozenModel {
     /// activation-quant tables (format v2); `None` ⇒ f32 activations,
     /// bit-identical to the pre-aq engine
     pub aq: Option<ActQuantModel>,
+    /// calibration provenance (optional v2 section); `None` for files
+    /// that predate it or models never calibrated
+    pub calibration: Option<CalibProvenance>,
 }
 
 impl FrozenModel {
@@ -166,12 +215,14 @@ impl FrozenModel {
             params,
             state: st,
             aq: None,
+            calibration: None,
         })
     }
 
     /// Activation bitwidth b_a as served: the aq table width, or 32
-    /// (f32 activations) without activation quantization — what the
-    /// served-graph BOPS accounting multiplies b_w by.
+    /// (f32 activations) without activation quantization. Like
+    /// `bits_w`, nominal (the maximum) for mixed-width tables — the
+    /// served-graph BOPS accounting reads each table's own width.
     pub fn bits_a(&self) -> u32 {
         self.aq.as_ref().map(|a| a.bits as u32).unwrap_or(32)
     }
@@ -255,6 +306,13 @@ impl FrozenModel {
                     .map(|a| a.to_json())
                     .unwrap_or(Json::Null),
             ),
+            (
+                "calibration",
+                self.calibration
+                    .as_ref()
+                    .map(|c| c.to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ]);
         std::fs::write(dir.join("frozen.json"), meta.to_string())
             .with_context(|| format!("writing {}/frozen.json", dir.display()))?;
@@ -321,6 +379,12 @@ impl FrozenModel {
             None | Some(Json::Null) => None,
             Some(ja) => Some(ActQuantModel::from_json(ja)?),
         };
+        // the provenance section is optional in BOTH directions: absent
+        // (pre-provenance v2 files, v1 files) loads as None
+        let calibration = match j.get("calibration") {
+            None | Some(Json::Null) => None,
+            Some(jc) => Some(CalibProvenance::from_json(jc)?),
+        };
         if let Some(a) = &aq {
             // a short tables array would silently serve f32 activations
             // for the missing layers while bits_a() still claims the
@@ -342,6 +406,7 @@ impl FrozenModel {
             params: tensors("params")?,
             state: tensors("state")?,
             aq,
+            calibration,
         })
     }
 }
@@ -438,11 +503,40 @@ mod tests {
                 data: vec![-1.0, 0.0, 1.0],
             }],
             aq: None,
+            calibration: None,
         };
         let dir = std::env::temp_dir().join("uniq_frozen_test");
         model.save(&dir).unwrap();
         let loaded = FrozenModel::load(&dir).unwrap();
         assert_eq!(loaded, model);
+
+        // the optional calibration provenance section roundtrips too
+        let mut with_cal = model.clone();
+        with_cal.calibration = Some(CalibProvenance {
+            source: "/data/calib".into(),
+            samples: 128,
+            content_hash: "00ff00ff00ff00ff".into(),
+            utc: "2026-08-08T00:00:00Z".into(),
+        });
+        let dir_c = std::env::temp_dir().join("uniq_frozen_test_cal");
+        with_cal.save(&dir_c).unwrap();
+        assert_eq!(FrozenModel::load(&dir_c).unwrap(), with_cal);
+        // stripping the key from disk loads as None (backward compat)
+        let text =
+            std::fs::read_to_string(dir_c.join("frozen.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let stripped = match j {
+            Json::Obj(mut m) => {
+                m.remove("calibration");
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        std::fs::write(dir_c.join("frozen.json"), stripped.to_string())
+            .unwrap();
+        let no_cal = FrozenModel::load(&dir_c).unwrap();
+        assert_eq!(no_cal.calibration, None);
+        assert_eq!(no_cal.layers, with_cal.layers);
 
         // v2 with activation-quant tables: still a bit-exact roundtrip
         let mut with_aq = model.clone();
@@ -493,6 +587,7 @@ mod tests {
             params: vec![],
             state: vec![],
             aq: None,
+            calibration: None,
         };
         let dir = std::env::temp_dir().join("uniq_frozen_test_future");
         model.save(&dir).unwrap();
@@ -523,6 +618,7 @@ mod tests {
             params: vec![],
             state: vec![],
             aq: None,
+            calibration: None,
         };
         // 4-bit packing: 8x smaller than f32 (+ 64-byte codebook)
         assert_eq!(m.quantized_bytes(), 4096 / 2 + 4 * 16);

@@ -1428,59 +1428,76 @@ impl Graph {
         self.to_arch(m).layers.iter().map(|l| l.macs()).sum()
     }
 
-    /// Analytic BOPS of this model **as served**: real per-layer
-    /// `b_w × b_a` per MAC. A layer's activation width is that of the
-    /// tensor it READS: the first conv consumes the f32 input image
-    /// (32 bits), a layer fed by an activation-quantized output
-    /// consumes `m.bits_a()` levels, and the classifier consumes
-    /// global-avg-pooled values (averaging leaves the level grid ⇒ 32).
-    /// Without aq tables every input is 32-bit and this reduces to the
-    /// weight-only pricing the benches recorded before. The walk
-    /// mirrors the executor's aq sites: a GEMM's output is on the grid
-    /// iff its qlayer carries a table (the post-residual `ActQuant`
-    /// re-snaps the sum with conv2's table, so block outputs inherit
-    /// conv2's state).
-    pub fn served_complexity(&self, m: &FrozenModel) -> bops::Complexity {
-        let b_w = m.bits_w as u32;
-        let b_a = m.bits_a();
-        let quantized =
-            |q: usize| m.aq.as_ref().and_then(|a| a.table(q)).is_some();
-        let arch = self.to_arch(m);
-        // per priced layer (to_arch emission order): is its input on a
-        // level grid?
-        let mut in_q: Vec<bool> = Vec::with_capacity(arch.layers.len());
-        let mut cur_q = false; // the network input is the f32 image
-        let mut stack: Vec<bool> = Vec::new();
+    /// Real per-layer bitwidths of the served graph, in `to_arch`
+    /// emission order: `(qlayer, b_w, b_a_in)`. Each layer's weight
+    /// width is its OWN packed codebook width (`indices.bits`), not the
+    /// model-level `bits_w` — a mixed-precision allocation (frontier
+    /// search) prices every layer at what it actually stores. The
+    /// activation width is that of the tensor the layer READS: the
+    /// source layer's table width when that tensor sits on a level
+    /// grid, 32 for f32 seams (the input image, post-avg-pool features,
+    /// outputs of untabled layers). The walk mirrors the executor's aq
+    /// sites: a GEMM's output is on the grid iff its qlayer carries a
+    /// table (the post-residual `ActQuant` re-snaps the sum with
+    /// conv2's table, so block outputs inherit conv2's state), and a
+    /// downsample reads the *saved* pre-block tensor.
+    pub fn served_layer_bits(
+        &self,
+        m: &FrozenModel,
+    ) -> Vec<(usize, u32, u32)> {
+        let tbits = |q: usize| -> Option<u32> {
+            m.aq.as_ref()
+                .and_then(|a| a.table(q))
+                .map(|t| PackedBits::bits_for_k(t.k()) as u32)
+        };
+        let bw = |q: usize| m.layers[q].indices.bits as u32;
+        let mut out = Vec::new();
+        let mut cur: Option<u32> = None; // the input image is f32
+        let mut stack: Vec<Option<u32>> = Vec::new();
         for op in &self.ops {
             match *op {
                 Op::Conv { q, .. }
                 | Op::Dense { q, .. }
                 | Op::Depthwise { q, .. } => {
-                    in_q.push(cur_q);
-                    cur_q = quantized(q);
+                    out.push((q, bw(q), cur.unwrap_or(32)));
+                    cur = tbits(q);
                 }
                 Op::DownsampleResidual { q, .. } => {
                     // reads the saved (pre-block) tensor; its output is
                     // consumed only by the residual add
-                    in_q.push(stack.pop().unwrap_or(false));
-                    stack.push(quantized(q));
+                    let saved = stack.pop().flatten();
+                    out.push((q, bw(q), saved.unwrap_or(32)));
+                    stack.push(tbits(q));
                 }
-                Op::PushResidual => stack.push(cur_q),
+                Op::PushResidual => stack.push(cur),
                 Op::AddResidual => {
                     stack.pop();
                 }
-                Op::GlobalAvgPool => cur_q = false,
+                Op::GlobalAvgPool => cur = None,
                 Op::Flatten | Op::BatchNorm { .. } | Op::Relu => {}
             }
         }
-        debug_assert_eq!(in_q.len(), arch.layers.len());
+        out
+    }
+
+    /// Analytic BOPS of this model **as served**: real per-layer
+    /// `b_w × b_a` per MAC, both sides read off the model rather than
+    /// the nominal model-level widths (see [`Graph::served_layer_bits`]
+    /// for the edge-walk semantics). For a uniform allocation — every
+    /// codebook at `2^bits_w` levels, every table at `2^aq.bits` — this
+    /// reduces exactly to the global pricing the benches recorded
+    /// before; without aq tables every input is 32-bit and the result
+    /// is the weight-only pricing of the pre-aq engine.
+    pub fn served_complexity(&self, m: &FrozenModel) -> bops::Complexity {
+        let arch = self.to_arch(m);
+        let widths = self.served_layer_bits(m);
+        debug_assert_eq!(widths.len(), arch.layers.len());
         let mut bops = 0.0;
         let mut model_bits = 0.0;
         let mut params = 0u64;
         let mut macs = 0u64;
-        for (l, &qin) in arch.layers.iter().zip(&in_q) {
-            let ba = if qin { b_a } else { 32 };
-            bops += l.bops(b_w, ba);
+        for (l, &(_, b_w, b_a)) in arch.layers.iter().zip(&widths) {
+            bops += l.bops(b_w, b_a);
             // memory fetch + model size: weight-side, b_a-independent
             bops += l.params() as f64 * b_w as f64;
             model_bits += l.params() as f64 * b_w as f64;

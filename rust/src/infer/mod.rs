@@ -42,7 +42,9 @@ pub mod serve;
 pub mod synthetic;
 
 pub use actquant::{ActQuantModel, ActQuantTable, AqMode};
-pub use codebook::{FrozenModel, LayerCodebook, NamedTensor};
+pub use codebook::{
+    CalibProvenance, FrozenModel, LayerCodebook, NamedTensor,
+};
 pub use graph::{
     EdgeType, ExecBuffers, Graph, KernelMode, PreparedWeights, V3Layer,
 };

@@ -12,11 +12,16 @@ use uniq::cli::{Cli, USAGE};
 use uniq::coordinator::{
     FreezeQuant, SchedulePolicy, TrainConfig, Trainer,
 };
-use uniq::data::cifar;
+use uniq::data::{calib, cifar};
 use uniq::data::synth::{SynthConfig, SynthDataset};
 use uniq::data::{Batcher, Dataset};
 use uniq::experiments;
 use uniq::experiments::common::ExpCtx;
+use uniq::experiments::frontier::{
+    frontier_table, result_json, sensitivity_table, FrontierConfig,
+    FrontierCtx,
+};
+use uniq::infer::CalibProvenance;
 use uniq::infer::net::{
     FaultPlan, ModelExpect, RemoteOpts, Supervisor, Worker, WorkerSpec,
     DEFAULT_BANNER_TIMEOUT,
@@ -89,6 +94,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "bops" => cmd_bops(cli),
         "infer" => cmd_infer(cli),
         "serve" => cmd_serve(cli),
+        "frontier" => cmd_frontier(cli),
         "experiment" => cmd_experiment(cli),
         other => Err(anyhow!("unknown command '{other}'; try `uniq help`")),
     }
@@ -335,10 +341,73 @@ fn cmd_bops(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a calibration set for `infer`/`serve`/`frontier`:
+/// `--data DIR` loads real tensors (raw-f32 / `.npy`, each file
+/// validated against the model's input shape — a mismatch is a typed
+/// [`calib::CalibError`] naming the offending file), otherwise a
+/// deterministic synthetic set stands in. Returns the flattened
+/// images, labels when the source has them, and the provenance record
+/// the frozen file will carry.
+///
+/// Calibration data must match the MODEL's input shape, not the
+/// synthetic generator's default: the synthetic path uses the
+/// CIFAR-shaped task when the geometry fits (serving-like statistics)
+/// and a deterministic Gaussian probe for any other geometry.
+fn calib_images(
+    cli: &Cli,
+    image: &[usize],
+    classes: usize,
+) -> Result<(Vec<f32>, Option<Vec<i32>>, CalibProvenance)> {
+    if let Some(dir) = cli.get("data") {
+        let set = calib::load_dir(Path::new(dir), image)?;
+        println!(
+            "calibration: {} images from {dir} ({} files, hash {})",
+            set.n,
+            set.files.len(),
+            set.content_hash
+        );
+        let prov = CalibProvenance {
+            source: dir.to_string(),
+            samples: set.n,
+            content_hash: set.content_hash,
+            utc: calib::utc_now_iso(),
+        };
+        return Ok((set.images, None, prov));
+    }
+    let n = cli.get_usize("calib-size", 64).max(1);
+    let (images, labels) = if image == [32, 32, 3] {
+        let d = SynthDataset::generate(SynthConfig {
+            classes,
+            n,
+            // same synthetic task as the serving traffic, fresh samples
+            sample_seed: 977,
+            ..Default::default()
+        });
+        (d.images, Some(d.labels))
+    } else {
+        let img_len: usize = image.iter().product();
+        let mut rng = uniq::util::rng::Rng::new(977);
+        ((0..n * img_len).map(|_| rng.normal()).collect(), None)
+    };
+    let mut bytes = Vec::with_capacity(images.len() * 4);
+    for v in &images {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let prov = CalibProvenance {
+        source: "synthetic:977".to_string(),
+        samples: n,
+        content_hash: calib::fnv1a_hex(&bytes),
+        utc: calib::utc_now_iso(),
+    };
+    Ok((images, labels, prov))
+}
+
 /// Apply the `--aq none|uniform|quantile --aq-bits B` flags to a built
 /// [`ServeModel`]: absent flag keeps whatever the frozen file carried,
 /// `none` strips tables (bit-identical pre-aq serving), a mode
-/// calibrates fresh tables on a deterministic synthetic set.
+/// calibrates fresh tables — on `--data DIR` tensors when given, a
+/// deterministic synthetic set otherwise — and records calibration
+/// provenance on the model.
 fn apply_aq_flags(cli: &Cli, sm: &mut ServeModel) -> Result<()> {
     let Some(flag) = cli.get("aq") else { return Ok(()) };
     match AqMode::parse(flag)? {
@@ -351,34 +420,18 @@ fn apply_aq_flags(cli: &Cli, sm: &mut ServeModel) -> Result<()> {
                      2^bits levels in u8 bins)"
                 ));
             }
-            let n = cli.get_usize("calib-size", 64).max(1);
-            // calibration data must match the MODEL's input shape, not
-            // the synthetic generator's default: the CIFAR-shaped task
-            // when it fits (serving-like stats), a deterministic
-            // Gaussian probe for any other geometry
-            let images: Vec<f32> = if sm.model.image == [32, 32, 3] {
-                SynthDataset::generate(SynthConfig {
-                    classes: sm.model.classes,
-                    n,
-                    // same synthetic task as the serving traffic,
-                    // fresh samples
-                    sample_seed: 977,
-                    ..Default::default()
-                })
-                .images
-            } else {
-                let img_len: usize = sm.model.image.iter().product();
-                let mut rng = uniq::util::rng::Rng::new(977);
-                (0..n * img_len).map(|_| rng.normal()).collect()
-            };
+            let (images, _, prov) =
+                calib_images(cli, &sm.model.image, sm.model.classes)?;
             sm.calibrate_aq(mode, bits, &images, 16)?;
+            sm.model.calibration = Some(prov);
             let aq = sm.model.aq.as_ref().unwrap();
             println!(
                 "activation quant: {} at {} bits ({} layers calibrated \
-                 on {n} images)",
+                 on {} images)",
                 mode.name(),
                 aq.bits,
                 aq.n_tables(),
+                sm.model.calibration.as_ref().unwrap().samples,
             );
         }
     }
@@ -882,7 +935,7 @@ fn serve_remote_fleet(
         for flag in [
             "model", "width", "classes", "seed", "frozen", "artifacts",
             "ckpt", "bits-w", "quantizer", "aq", "aq-bits", "calib-size",
-            "engine", "workers", "max-batch", "max-wait-ms",
+            "data", "engine", "workers", "max-batch", "max-wait-ms",
             "kernel-threads", "shed-after-ms",
         ] {
             if let Some(v) = cli.get(flag) {
@@ -998,6 +1051,174 @@ fn drive_fleet(
         ]);
         std::fs::write(path, j.to_string())?;
         println!("stats -> {path}");
+    }
+    Ok(())
+}
+
+/// `uniq frontier`: mixed-precision bit-allocation search
+/// (`experiments::frontier`, DESIGN.md §15). Ranks per-layer one-bit
+/// sensitivity, walks the greedy ΔBOPS/Δdegradation frontier from a
+/// uniform start, prints the Pareto points and optionally freezes the
+/// selected allocation (`--export DIR`) as a normal v2 model.
+fn cmd_frontier(cli: &Cli) -> Result<()> {
+    let fq = parse_quantizer(cli.get("quantizer").unwrap_or("gauss"))?;
+    let start_w = cli.get_u32("bits-w", 8);
+    let start_a = cli.get_u32("bits-a", 8);
+
+    // model basis: a manifest/checkpoint's (or synthetic init's) f32
+    // weights preferred; a --frozen model's dequantized codebooks are
+    // the fallback basis (already quantized once, so re-fits at lower
+    // widths are slightly pessimistic — stated, not hidden)
+    let (template, raw) = if let Some(dir) = cli.get("frozen") {
+        let m = FrozenModel::load(Path::new(dir))?;
+        println!(
+            "note: --frozen basis is already quantized; the search \
+             re-fits codebooks on its dequantized weights"
+        );
+        let raw: Vec<Vec<f32>> =
+            m.layers.iter().map(|l| l.dequantize()).collect();
+        (m, raw)
+    } else {
+        let model = cli.get("model").unwrap_or("mobilenet_mini");
+        let dir = artifacts_dir(cli).join(model);
+        let (m, state) = if !cli.has("synth")
+            && dir.join("manifest.json").exists()
+        {
+            let m = uniq::runtime::Manifest::load(&dir)?;
+            let state = match cli.get("ckpt") {
+                Some(c) => ModelState::load(Path::new(c))?,
+                None => ModelState::load_init(&m, &dir)?,
+            };
+            (m, state)
+        } else {
+            if !cli.has("synth") {
+                println!(
+                    "note: {} not found; using a synthetic \
+                     (random-weight) {model}",
+                    dir.join("manifest.json").display()
+                );
+            }
+            let default_width = if model == "resnet8" { 8 } else { 16 };
+            infer::synthetic::model(
+                model,
+                cli.get_usize("width", default_width),
+                cli.get_usize("classes", 10),
+                cli.get_usize("seed", 7) as u64,
+            )?
+        };
+        let template = FrozenModel::export(&m, &state, fq, start_w)?;
+        let raw = (0..template.layers.len())
+            .map(|q| {
+                state
+                    .qlayer_weights(&m, q)
+                    .map(|w| w.to_vec())
+                    .ok_or_else(|| anyhow!("qlayer {q} has no weights"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        (template, raw)
+    };
+
+    let mode = match AqMode::parse(cli.get("aq").unwrap_or("quantile"))? {
+        Some(m) => m,
+        None => {
+            return Err(anyhow!(
+                "frontier needs activation quantization (--aq uniform \
+                 or quantile); --aq none leaves no activation bits to \
+                 allocate"
+            ))
+        }
+    };
+    let parse_opt_f64 = |flag: &str| -> Result<Option<f64>> {
+        match cli.get(flag) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow!("--{flag} '{v}' is not a number")),
+        }
+    };
+    let cfg = FrontierConfig {
+        start_bits_w: start_w,
+        start_bits_a: start_a,
+        min_bits_w: cli.get_u32("min-bits-w", 1),
+        min_bits_a: cli.get_u32("min-bits-a", 2),
+        mode,
+        fq,
+        budget_gbops: parse_opt_f64("budget-gbops")?,
+        target_acc: parse_opt_f64("target-acc")?,
+        max_steps: cli.get_usize("steps", 32),
+        batch: cli.get_usize("batch", 16),
+    };
+    let model_name = template.name.clone();
+    let (images, labels, prov) =
+        calib_images(cli, &template.image, template.classes)?;
+    let mut ctx =
+        FrontierCtx::new(template, raw, images, labels, cfg.clone())?;
+    ctx.provenance = Some(prov);
+    let names: Vec<String> = ctx
+        .layer_names()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let start = ctx.start_point().clone();
+    println!(
+        "start: uniform w{}/a{} = {:.4} GBOPs/img, {:.3} Mbit{}",
+        cfg.start_bits_w,
+        cfg.start_bits_a,
+        start.gbops,
+        start.mbit,
+        start
+            .accuracy
+            .map(|a| format!(", top-1 {:.1}%", a * 100.0))
+            .unwrap_or_default()
+    );
+    let result = ctx.search()?;
+    let sel = result.frontier[result.selected].clone();
+    if let Some(dir) = cli.get("export") {
+        // the selected allocation freezes into the ordinary v2 format
+        // (with calibration provenance) and serves unchanged
+        let (m, _) = ctx.realize(&sel.alloc)?;
+        m.save(Path::new(dir))?;
+        println!(
+            "frozen model (mixed precision) -> {dir}; serve it with \
+             `uniq infer --frozen {dir}`"
+        );
+    }
+
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    println!("\nsensitivity (one bit dropped from the uniform start):");
+    sensitivity_table(&result.sensitivity).print();
+    println!(
+        "\nfrontier ({} greedy steps, {} Pareto points, stop: {}):",
+        result.trajectory.len() - 1,
+        result.frontier.len(),
+        result.selected_reason
+    );
+    frontier_table(&name_refs, &result.frontier).print();
+    println!(
+        "selected: step {} at {:.4} GBOPs/img ({:.2}x under the w{}/a{} \
+         start), degradation {:.4e}, agreement {:.1}%{}",
+        sel.step,
+        sel.gbops,
+        start.gbops / sel.gbops.max(1e-12),
+        cfg.start_bits_w,
+        cfg.start_bits_a,
+        sel.degradation,
+        sel.agreement * 100.0,
+        sel.accuracy
+            .map(|a| format!(", top-1 {:.1}%", a * 100.0))
+            .unwrap_or_default()
+    );
+    if let Some(path) = cli.get("out") {
+        let j = result_json(
+            &model_name,
+            &name_refs,
+            &cfg,
+            ctx.provenance.as_ref(),
+            &result,
+        );
+        std::fs::write(path, j.to_string())?;
+        println!("frontier report -> {path}");
     }
     Ok(())
 }

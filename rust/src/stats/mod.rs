@@ -1,10 +1,13 @@
 //! Statistics substrate: normal distribution, Shapiro-Wilk normality test
-//! (Fig C.1), histograms and summary statistics.
+//! (Fig C.1), histograms, summary statistics and per-bin occupancy
+//! (the Balanced-Quantization equalization diagnostic).
 
 pub mod normal;
+pub mod occupancy;
 pub mod shapiro;
 pub mod summary;
 
 pub use normal::{norm_cdf, norm_icdf};
+pub use occupancy::{bin_occupancy, occupancy_balance};
 pub use shapiro::shapiro_wilk;
 pub use summary::{histogram, mean_std, Summary};

@@ -1,0 +1,469 @@
+//! Mixed-precision frontier suite (DESIGN.md §15).
+//!
+//! Gates:
+//!   * the greedy search emits a **monotone** frontier on all three
+//!     synthetic architectures — served BOPS strictly decreasing,
+//!     degradation strictly increasing — and its start point matches
+//!     the uniform allocation's served complexity;
+//!   * a genuinely mixed allocation freezes into the ordinary v2
+//!     format and serves **bit-identically** through the v2 AND v3
+//!     engines after reload, including through the batched `Server`;
+//!   * calibration provenance rides the frozen format both ways:
+//!     written by the search's export, absent-but-loadable for files
+//!     that predate it (the checked-in v1 fixture);
+//!   * per-layer served-BOPS pricing decomposes exactly over
+//!     `served_layer_bits`, and a mixed allocation is priced strictly
+//!     between its all-floor and all-start uniform envelopes;
+//!   * the sensitivity ranking covers every droppable (layer, dim)
+//!     exactly once, every drop saves BOPS, and rows sort by
+//!     degradation;
+//!   * a `--data`-style calibration dir with a malformed file fails
+//!     loudly with a typed error naming that file.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniq::coordinator::FreezeQuant;
+use uniq::data::calib;
+use uniq::experiments::frontier::{
+    Allocation, BitDim, FrontierConfig, FrontierCtx,
+};
+use uniq::infer::{
+    kernels, synthetic, AqMode, CalibProvenance, FrozenModel, Graph,
+    KernelMode, PackedBits, PreparedWeights, ServeConfig, ServeModel,
+    Server,
+};
+use uniq::util::rng::Rng;
+
+const ARCHS: [(&str, usize); 3] =
+    [("mlp", 16), ("resnet8", 8), ("mobilenet_mini", 8)];
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.2).collect()
+}
+
+/// Template + f32 weight basis + small calibration set for `name`.
+fn basis(
+    name: &str,
+    width: usize,
+    start_w: u32,
+    calib_n: usize,
+) -> (FrozenModel, Vec<Vec<f32>>, Vec<f32>) {
+    let (m, state) = synthetic::model(name, width, 10, 23).unwrap();
+    let template =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, start_w)
+            .unwrap();
+    let raw: Vec<Vec<f32>> = (0..template.layers.len())
+        .map(|q| state.qlayer_weights(&m, q).unwrap().to_vec())
+        .collect();
+    let img_len: usize = template.image.iter().product();
+    let images = randvec(calib_n * img_len, 91);
+    (template, raw, images)
+}
+
+fn small_cfg() -> FrontierConfig {
+    FrontierConfig {
+        start_bits_w: 4,
+        start_bits_a: 4,
+        min_bits_w: 2,
+        min_bits_a: 2,
+        max_steps: 4,
+        batch: 8,
+        ..FrontierConfig::default()
+    }
+}
+
+/// The acceptance-criterion gate: monotone frontier on every arch.
+#[test]
+fn frontier_monotone_all_archs() {
+    for (name, width) in ARCHS {
+        let (template, raw, images) = basis(name, width, 4, 8);
+        let mut ctx = FrontierCtx::new(
+            template, raw, images, None, small_cfg(),
+        )
+        .unwrap();
+        let start = ctx.start_point().clone();
+        assert_eq!(start.step, 0);
+        assert_eq!(start.degradation, 0.0);
+        assert_eq!(start.agreement, 1.0);
+        let r = ctx.search().unwrap();
+        assert!(
+            r.trajectory.len() >= 2,
+            "{name}: greedy made no progress"
+        );
+        assert_eq!(r.trajectory[0].alloc, start.alloc);
+        assert!(!r.frontier.is_empty());
+        assert!(r.selected < r.frontier.len(), "{name}");
+        for w in r.frontier.windows(2) {
+            assert!(
+                w[1].gbops < w[0].gbops,
+                "{name}: frontier BOPS not strictly decreasing: \
+                 {} -> {}",
+                w[0].gbops,
+                w[1].gbops
+            );
+            assert!(
+                w[1].degradation > w[0].degradation,
+                "{name}: frontier degradation not increasing: \
+                 {} -> {}",
+                w[0].degradation,
+                w[1].degradation
+            );
+        }
+        // each greedy step drops exactly one bit somewhere
+        for w in r.trajectory.windows(2) {
+            let bits = |a: &Allocation| -> u32 {
+                a.w.iter().map(|&b| b as u32).sum::<u32>()
+                    + a.a
+                        .iter()
+                        .filter_map(|b| b.map(|b| b as u32))
+                        .sum::<u32>()
+            };
+            assert_eq!(
+                bits(&w[1].alloc) + 1,
+                bits(&w[0].alloc),
+                "{name}: a step dropped != 1 bit"
+            );
+            assert!(w[1].dropped.is_some());
+        }
+    }
+}
+
+/// A BOPS budget stops the search at the first allocation under it,
+/// and the selected point honors the budget.
+#[test]
+fn frontier_budget_stops_and_selects_under_budget() {
+    let (template, raw, images) = basis("mlp", 16, 4, 8);
+    let mut probe =
+        FrontierCtx::new(template, raw, images, None, small_cfg())
+            .unwrap();
+    let start_gbops = probe.start_point().gbops;
+    let r0 = probe.search().unwrap();
+    let floor_gbops = r0.frontier.last().unwrap().gbops;
+    assert!(floor_gbops < start_gbops);
+    // a budget halfway between floor and start is reachable
+    let budget = 0.5 * (floor_gbops + start_gbops);
+
+    let (template, raw, images) = basis("mlp", 16, 4, 8);
+    let cfg = FrontierConfig {
+        budget_gbops: Some(budget),
+        ..small_cfg()
+    };
+    let mut ctx =
+        FrontierCtx::new(template, raw, images, None, cfg).unwrap();
+    let r = ctx.search().unwrap();
+    assert_eq!(r.selected_reason, "budget");
+    let sel = &r.frontier[r.selected];
+    assert!(
+        sel.gbops <= budget,
+        "selected {} exceeds budget {budget}",
+        sel.gbops
+    );
+    // the selected point is the FIRST (least degraded) one under budget
+    for p in &r.frontier[..r.selected] {
+        assert!(p.gbops > budget);
+    }
+}
+
+/// End-to-end acceptance gate: a mixed allocation realizes, freezes
+/// (v2, with provenance), reloads bit-exactly, and serves identical
+/// logits through v2, v3 and the batched Server.
+#[test]
+fn mixed_allocation_freezes_and_serves_bit_identically() {
+    let (template, raw, images) = basis("resnet8", 8, 4, 8);
+    let mut ctx = FrontierCtx::new(
+        template,
+        raw,
+        images,
+        None,
+        FrontierConfig {
+            mode: AqMode::Quantile, // v3 needs aq tables; quantile is
+            ..small_cfg()           // the paper-default mode
+        },
+    )
+    .unwrap();
+    ctx.provenance = Some(CalibProvenance {
+        source: "/data/calib".into(),
+        samples: 8,
+        content_hash: "00ff00ff00ff00ff".into(),
+        utc: "2026-08-08T00:00:00Z".into(),
+    });
+
+    // a deliberately heterogeneous allocation: alternating widths
+    let start = ctx.start_point().alloc.clone();
+    let mut alloc = start.clone();
+    for q in 0..alloc.w.len() {
+        if q % 2 == 0 {
+            alloc.w[q] -= 1;
+        }
+    }
+    for (q, a) in alloc.a.iter_mut().enumerate() {
+        if q % 3 == 0 {
+            *a = a.map(|b| b - 1);
+        }
+    }
+    assert_ne!(alloc, start);
+    let (m, weights) = ctx.realize(&alloc).unwrap();
+
+    // per-layer truth: codebook widths really differ across layers
+    let wbits: Vec<u8> =
+        m.layers.iter().map(|l| l.indices.bits).collect();
+    assert!(
+        wbits.iter().any(|&b| b != wbits[0]),
+        "allocation did not produce mixed weight widths: {wbits:?}"
+    );
+    let abits: Vec<usize> = m
+        .aq
+        .as_ref()
+        .unwrap()
+        .tables
+        .iter()
+        .filter_map(|t| t.as_ref().map(|t| t.k()))
+        .collect();
+    assert!(
+        abits.iter().any(|&k| k != abits[0]),
+        "allocation did not produce mixed table widths: {abits:?}"
+    );
+    assert_eq!(m.bits_w as u8, *alloc.w.iter().max().unwrap());
+
+    // freeze → reload: bit-exact, provenance intact
+    let dir = std::env::temp_dir().join("uniq_frontier_mixed_e2e");
+    m.save(&dir).unwrap();
+    let loaded = FrozenModel::load(&dir).unwrap();
+    assert_eq!(loaded, m, "mixed model must roundtrip bit-exactly");
+    assert_eq!(
+        loaded.calibration.as_ref().unwrap().content_hash,
+        "00ff00ff00ff00ff"
+    );
+
+    // v2 serving parity: original realize vs reloaded file
+    let graph = Graph::from_model(&m).unwrap();
+    let img_len: usize = m.image.iter().product();
+    let x = randvec(3 * img_len, 57);
+    let direct = graph
+        .forward(&m, &weights, &x, 3, KernelMode::Lut)
+        .unwrap();
+    let g2 = Graph::from_model(&loaded).unwrap();
+    let w2 = PreparedWeights::lut_only(&loaded, &g2);
+    let reloaded = g2
+        .forward(&loaded, &w2, &x, 3, KernelMode::Lut)
+        .unwrap();
+    assert_eq!(reloaded, direct, "reload changed served logits");
+
+    // v3 (integer-only LUT²) serves the same mixed model identically
+    let v3 = g2
+        .forward(&loaded, &w2, &x, 3, KernelMode::LutV3)
+        .unwrap();
+    assert_eq!(v3, direct, "v3 drifted from v2 on mixed widths");
+
+    // and through the batched serving tier, on both engines
+    for mode in [KernelMode::Lut, KernelMode::LutV3] {
+        let sm = Arc::new(ServeModel::lut_only(loaded.clone()).unwrap());
+        let srv = Server::start(
+            Arc::clone(&sm),
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                mode,
+                kernel_threads: 1,
+                shed_after: None,
+            },
+        );
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                srv.submit(x[i * img_len..(i + 1) * img_len].to_vec())
+                    .unwrap()
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let reply = h.recv().expect("reply");
+            let want = &direct[i * m.classes..(i + 1) * m.classes];
+            assert_eq!(
+                reply.logits, want,
+                "{mode:?}: served reply {i} drifted"
+            );
+            assert_eq!(reply.pred, kernels::argmax(want));
+        }
+        assert_eq!(srv.shutdown().requests, 3);
+    }
+}
+
+/// The v1 fixture (no version key, no calibration section) still loads
+/// with `calibration: None`; a v2 save without provenance writes a
+/// loadable file; provenance roundtrips when present.
+#[test]
+fn provenance_optional_both_directions() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/pre_aq_frozen");
+    let v1 = FrozenModel::load(&dir).unwrap();
+    assert!(v1.calibration.is_none(), "v1 fixture grew provenance");
+
+    let (m, state) = synthetic::model("mlp", 8, 10, 3).unwrap();
+    let mut frozen =
+        FrozenModel::export(&m, &state, FreezeQuant::KQuantileGauss, 4)
+            .unwrap();
+    let tmp = std::env::temp_dir().join("uniq_frontier_prov");
+    frozen.save(&tmp).unwrap();
+    assert!(FrozenModel::load(&tmp).unwrap().calibration.is_none());
+
+    frozen.calibration = Some(CalibProvenance {
+        source: "synthetic:977".into(),
+        samples: 64,
+        content_hash: "deadbeefdeadbeef".into(),
+        utc: "2026-08-08T12:00:00Z".into(),
+    });
+    frozen.save(&tmp).unwrap();
+    let back = FrozenModel::load(&tmp).unwrap();
+    assert_eq!(back.calibration, frozen.calibration);
+    assert_eq!(back, frozen);
+}
+
+/// Served pricing decomposes per layer: `served_complexity` equals the
+/// sum over `served_layer_bits` of `bops(b_w, b_a) + params·b_w`, and
+/// a mixed allocation lands strictly between its uniform envelopes.
+#[test]
+fn served_pricing_decomposes_over_per_layer_widths() {
+    let (template, raw, images) = basis("mobilenet_mini", 8, 4, 8);
+    let mut ctx =
+        FrontierCtx::new(template, raw, images, None, small_cfg())
+            .unwrap();
+    let start = ctx.start_point().alloc.clone();
+    let mut alloc = start.clone();
+    alloc.w[0] -= 1;
+    alloc.w[2] -= 2;
+    if let Some(b) = alloc.a[1] {
+        alloc.a[1] = Some(b - 1);
+    }
+    let (m, _w) = ctx.realize(&alloc).unwrap();
+    let graph = Graph::from_model(&m).unwrap();
+
+    let c = graph.served_complexity(&m);
+    let arch = graph.to_arch(&m);
+    let widths = graph.served_layer_bits(&m);
+    assert_eq!(widths.len(), arch.layers.len());
+    let mut bops = 0.0f64;
+    let mut bits = 0.0f64;
+    for (l, &(q, bw, ba)) in arch.layers.iter().zip(&widths) {
+        // the reported weight width is the layer's own codebook width
+        assert_eq!(
+            bw,
+            PackedBits::bits_for_k(m.layers[q].k()) as u32,
+            "layer {q} priced at a foreign weight width"
+        );
+        bops += l.bops(bw, ba) + l.params() as f64 * bw as f64;
+        bits += l.params() as f64 * bw as f64;
+    }
+    assert!(
+        (c.bops / bops - 1.0).abs() < 1e-12,
+        "served_complexity {} != per-layer sum {bops}",
+        c.bops
+    );
+    assert!((c.model_bits / bits - 1.0).abs() < 1e-12);
+
+    // strictly between the uniform envelopes
+    let (mstart, _) = ctx.realize(&start).unwrap();
+    let hi = graph.served_complexity(&mstart).bops;
+    let floor = Allocation {
+        w: vec![2; start.w.len()],
+        a: start.a.iter().map(|b| b.map(|_| 2)).collect(),
+    };
+    let (mfloor, _) = ctx.realize(&floor).unwrap();
+    let lo = graph.served_complexity(&mfloor).bops;
+    assert!(
+        lo < c.bops && c.bops < hi,
+        "mixed pricing {} outside envelopes [{lo}, {hi}]",
+        c.bops
+    );
+}
+
+/// Sensitivity covers every droppable (layer, dim) once; every drop
+/// saves BOPS; rows sort most-degrading first.
+#[test]
+fn sensitivity_ranking_is_complete_and_sorted() {
+    let (template, raw, images) = basis("resnet8", 8, 4, 8);
+    let n_layers = template.layers.len();
+    let mut ctx =
+        FrontierCtx::new(template, raw, images, None, small_cfg())
+            .unwrap();
+    let rows = ctx.sensitivity().unwrap();
+    // every layer's weights can drop (4 > floor 2); every aq site's
+    // activations can too — resnet8 has n_layers - 1 aq sites (final
+    // dense output stays f32)
+    let n_w =
+        rows.iter().filter(|r| r.dim == BitDim::Weight).count();
+    let n_a = rows.iter().filter(|r| r.dim == BitDim::Act).count();
+    assert_eq!(n_w, n_layers);
+    assert_eq!(n_a, n_layers - 1);
+    let mut seen: Vec<(usize, &'static str)> = rows
+        .iter()
+        .map(|r| (r.q, r.dim.name()))
+        .collect();
+    seen.sort();
+    seen.dedup();
+    assert_eq!(seen.len(), rows.len(), "duplicate sensitivity rows");
+    for r in &rows {
+        assert!(
+            r.delta_gbops > 0.0,
+            "{}/{}: dropping a bit saved no BOPS",
+            r.layer,
+            r.dim.name()
+        );
+        assert!(r.delta_deg.is_finite());
+    }
+    for w in rows.windows(2) {
+        assert!(
+            w[0].delta_deg >= w[1].delta_deg,
+            "sensitivity rows out of order"
+        );
+    }
+}
+
+/// The `--data DIR` contract: a malformed calibration file fails with
+/// a typed error naming that file, while a valid sibling dir loads.
+#[test]
+fn calib_dir_rejects_malformed_files_by_name() {
+    let image = [32usize, 32, 3];
+    let img_len: usize = image.iter().product();
+    let root =
+        std::env::temp_dir().join("uniq_frontier_calib_reject");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // valid dir: two raw-f32 files, one image each
+    let good = root.join("good");
+    std::fs::create_dir_all(&good).unwrap();
+    for (i, name) in ["a.f32", "b.f32"].iter().enumerate() {
+        let bytes: Vec<u8> = randvec(img_len, i as u64)
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        std::fs::write(good.join(name), bytes).unwrap();
+    }
+    let set = calib::load_dir(&good, &image).unwrap();
+    assert_eq!(set.n, 2);
+    assert_eq!(set.files.len(), 2);
+    assert_eq!(set.content_hash.len(), 16);
+
+    // ragged file: not a whole number of images → BadLength names it
+    let bad = root.join("bad");
+    std::fs::create_dir_all(&bad).unwrap();
+    std::fs::write(bad.join("ok.f32"), vec![0u8; img_len * 4]).unwrap();
+    std::fs::write(bad.join("ragged.f32"), vec![0u8; img_len * 4 - 4])
+        .unwrap();
+    let err = calib::load_dir(&bad, &image).unwrap_err();
+    match &err {
+        calib::CalibError::BadLength { file, .. } => {
+            assert!(
+                file.to_string_lossy().contains("ragged.f32"),
+                "error names the wrong file: {file:?}"
+            );
+        }
+        other => panic!("expected BadLength, got {other:?}"),
+    }
+    assert!(
+        err.to_string().contains("ragged.f32"),
+        "message must name the offending file: {err}"
+    );
+}

@@ -180,6 +180,7 @@ fn aq_activations_snap_to_level_budget() {
                 bits: bits as u8,
                 tables: vec![Some(table.clone())],
             }),
+            calibration: None,
         };
         // ops mirror build_mlp's non-final dense: relu'd => aq site
         let graph = Graph::new(
