@@ -205,15 +205,25 @@ def test_collect_medians_walks_any_nesting():
     }
 
 
+def marked(ratios):
+    """Baseline-side ratio table: every factor explicitly opted in as
+    {"kind": "ratio", "factor": N} — the only shape the gate accepts
+    from a baseline."""
+    return {
+        name: {"kind": "ratio", "factor": v} for name, v in ratios.items()
+    }
+
+
 RATIO_BASE = {"v3_vs_v2_batch1": 1.0, "v3_vs_v2_batch64": 1.0}
 
 
 def test_ratio_keys_gate_as_absolute_factors(tmp_path, capsys):
     """Ratio keys compare current_factor / baseline_factor directly:
     a measured speedup at/above the 1.0 floor passes, one below the
-    hard threshold fails the gate."""
+    hard threshold fails the gate. The baseline is marked; the current
+    run stays plain numbers (the rust bench's native output)."""
     base = write(
-        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+        tmp_path, "base.json", report(BASE, ratios=marked(RATIO_BASE))
     )
     good = {"v3_vs_v2_batch1": 1.4, "v3_vs_v2_batch64": 1.8}
     cur = write(tmp_path, "cur.json", report(BASE, ratios=good))
@@ -234,7 +244,7 @@ def test_ratio_regression_cannot_hide_inside_a_faster_runner(tmp_path):
     look great, but the v3-vs-v2 factor measured in the same run still
     says v3 lost its edge — the gate must see that."""
     base = write(
-        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+        tmp_path, "base.json", report(BASE, ratios=marked(RATIO_BASE))
     )
     fast_times = {k: v / 3 for k, v in BASE.items()}
     sick = {"v3_vs_v2_batch1": 0.5, "v3_vs_v2_batch64": 0.5}
@@ -246,7 +256,7 @@ def test_ratio_regression_cannot_hide_inside_a_faster_runner(tmp_path):
 
 def test_ratio_soft_band_warns_without_failing(tmp_path, capsys):
     base = write(
-        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+        tmp_path, "base.json", report(BASE, ratios=marked(RATIO_BASE))
     )
     mild = {"v3_vs_v2_batch1": 0.85, "v3_vs_v2_batch64": 1.2}
     cur = write(tmp_path, "cur.json", report(BASE, ratios=mild))
@@ -264,7 +274,7 @@ def test_ratio_keys_join_the_skip_accounting(tmp_path, capsys):
     base = write(
         tmp_path,
         "base.json",
-        report(BASE, ratios=dict(RATIO_BASE, old_ratio=1.0)),
+        report(BASE, ratios=marked(dict(RATIO_BASE, old_ratio=1.0))),
     )
     cur = write(
         tmp_path,
@@ -281,7 +291,7 @@ def test_ratio_only_overlap_still_lets_the_gate_run(tmp_path):
     """Zero overlapping time keys is not fatal when ratio keys still
     overlap — the gate compares what it can instead of refusing."""
     base = write(
-        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)
+        tmp_path, "base.json", report(BASE, ratios=marked(RATIO_BASE))
     )
     cur = write(
         tmp_path,
@@ -302,13 +312,89 @@ def test_collect_ratios_walks_any_nesting():
     tree = {
         "a": [{"ratios": {"x": 1.5}}],
         "b": {"c": {"ratios": {"y": 2.0, "skipme": "a-note"}}},
-        "ratios": {"z": 1.0},
+        "ratios": {"z": {"kind": "ratio", "factor": 1.0}},
     }
     assert bench_compare.collect_ratios(tree) == {
-        "x": 1.5,
-        "y": 2.0,
-        "z": 1.0,
+        "x": (1.5, False),
+        "y": (2.0, False),
+        "z": (1.0, True),
     }
+
+
+def test_collect_ratios_rejects_non_factor_shapes():
+    """A median-stats dict that wandered under 'ratios' (the misnamed
+    throughput key) is not a factor and must not be harvested; neither
+    are booleans or dicts missing the explicit kind tag."""
+    tree = {
+        "ratios": {
+            "m/lut/b1": {"median_ns": 1e6, "p10_ns": 0.0, "iters": 10},
+            "flagged": True,
+            "untagged": {"factor": 2.0},
+            "wrong_kind": {"kind": "throughput", "factor": 2.0},
+            "bool_factor": {"kind": "ratio", "factor": True},
+            "ok": {"kind": "ratio", "factor": 3.0},
+        }
+    }
+    assert bench_compare.collect_ratios(tree) == {"ok": (3.0, True)}
+
+
+def test_unmarked_baseline_ratio_is_a_gate_config_error(tmp_path, capsys):
+    """A plain number under 'ratios' in the BASELINE never gates: exit 2
+    (config error, like inverted thresholds) in gate mode, WARN + skip
+    in warn-only mode."""
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=RATIO_BASE)  # plain
+    )
+    cur = write(tmp_path, "cur.json", report(BASE, ratios=RATIO_BASE))
+    assert run(cur, base, "--fail-below", "0.7") == 2
+    out = capsys.readouterr().out
+    assert "refusing to gate on unmarked baseline ratios" in out
+    assert "v3_vs_v2_batch1" in out
+    # warn-only mode: skipped, never compared, still exit 0
+    assert run(cur, base) == 0
+    out = capsys.readouterr().out
+    assert "unmarked baseline ratios skipped" in out
+    assert "0 ratio keys" in out
+
+
+def test_misnamed_throughput_key_cannot_gate_as_ratio(tmp_path, capsys):
+    """The regression this PR fixes: a benchmark median that lands under
+    'ratios' (same name in both namespaces) must not silently become an
+    absolute-factor gate. 1.08e6 ns vs 1e6 ns read as factors would
+    'pass' 1.08x while the throughput comparison says 0.93x — the gate
+    refuses the ambiguity outright."""
+    base = write(
+        tmp_path,
+        "base.json",
+        report(BASE, ratios=marked({"m/lut/b1": 1_000_000.0})),
+    )
+    cur = write(
+        tmp_path,
+        "cur.json",
+        report(
+            dict(BASE, **{"m/lut/b1": 1_080_000.0}),
+            ratios={"m/lut/b1": 1_080_000.0},
+        ),
+    )
+    assert run(cur, base, "--fail-below", "0.7") == 2
+    out = capsys.readouterr().out
+    assert "both 'benchmarks' and 'ratios'" in out
+    # warn-only: the ambiguous key is dropped from ratio comparison but
+    # still gates as throughput; the run itself stays exit 0
+    assert run(cur, base) == 0
+    out = capsys.readouterr().out
+    assert "0 ratio keys" in out
+
+
+def test_marked_baseline_with_plain_current_gates_normally(tmp_path):
+    """Marking is a baseline property: the freshly measured side emits
+    plain factors and the gate still compares and fails on them."""
+    base = write(
+        tmp_path, "base.json", report(BASE, ratios=marked(RATIO_BASE))
+    )
+    sick = {k: 0.4 for k in RATIO_BASE}
+    cur = write(tmp_path, "cur.json", report(BASE, ratios=sick))
+    assert run(cur, base, "--fail-below", "0.7") == 1
 
 
 def test_inverted_thresholds_are_rejected(tmp_path):

@@ -12,13 +12,28 @@ per shared benchmark, the *relative throughput*
 ``baseline_median_ns / current_median_ns`` — 1.0 is parity, below 1.0 is
 slower than baseline.
 
-Reports may also carry ``{"ratios": {name: factor}}`` objects (nested
-anywhere): machine-independent ABSOLUTE speedup factors such as
+Reports may also carry ``{"ratios": {...}}`` tables (nested anywhere):
+machine-independent ABSOLUTE speedup factors such as
 ``v3_vs_v2_batch64`` = v2 median / v3 median measured in the same run.
 Those are compared as ``rel = current_factor / baseline_factor`` —
 NOT re-normalized through throughput — so a baseline of 1.0 asserts
 "v3 at least matches v2" on every runner, fast or slow: a uniformly
 faster machine cannot hide a relative v3 regression.
+
+A BASELINE ratio must be *explicitly marked* as one::
+
+    "ratios": {"v3_vs_v2_batch64": {"kind": "ratio", "factor": 1.0}}
+
+Gating on a ratio key semantically differs from gating on throughput
+(no median_ns normalization), so the baseline has to opt in per key —
+a number that merely *landed* under a ``ratios`` heading (a misnamed
+throughput stat, a stray count) must not silently become an
+absolute-factor gate. In gate mode an unmarked baseline ratio is a
+config error (exit 2); warn-only mode skips it with a WARN. The
+current (freshly measured) side may use plain numbers — marking is a
+property of the committed baseline, not of every bench run. A name
+that appears under both ``benchmarks`` and ``ratios`` in either file
+is ambiguous: exit 2 when gating, WARN + skip otherwise.
 
 Modes:
 
@@ -63,19 +78,37 @@ def collect_medians(node, prefix=""):
 
 
 def collect_ratios(node):
-    """Recursively harvest {ratio_name: factor} from a report tree.
+    """Recursively harvest {ratio_name: (factor, marked)} from a report.
 
-    Ratio entries are plain numbers (absolute speedup factors computed
-    inside one bench run), not ``median_ns`` stat dicts — the two
-    namespaces never mix.
+    Two entry shapes are accepted under a ``ratios`` table:
+
+    * ``{"kind": "ratio", "factor": 1.0}`` — an explicitly MARKED ratio
+      (``marked=True``); the only shape the baseline may gate on.
+    * a plain number — ``marked=False``; fine for the current run (the
+      rust bench emits plain factors) but never gateable as a baseline.
+
+    Anything else under ``ratios`` — strings, ``median_ns`` stat dicts
+    that wandered in from the benchmark namespace, booleans — is
+    dropped: it is not a speedup factor and must not be compared as
+    one.
     """
     found = {}
     if isinstance(node, dict):
         table = node.get("ratios")
         if isinstance(table, dict):
             for name, val in table.items():
-                if isinstance(val, (int, float)):
-                    found[name] = float(val)
+                if isinstance(val, dict):
+                    factor = val.get("factor")
+                    if (
+                        val.get("kind") == "ratio"
+                        and isinstance(factor, (int, float))
+                        and not isinstance(factor, bool)
+                    ):
+                        found[name] = (float(factor), True)
+                elif isinstance(val, (int, float)) and not isinstance(
+                    val, bool
+                ):
+                    found[name] = (float(val), False)
         for key, val in node.items():
             if key != "ratios":
                 found.update(collect_ratios(val))
@@ -156,6 +189,50 @@ def main(argv):
     baseline = collect_medians(base_tree)
     cur_ratios = collect_ratios(cur_tree)
     base_ratios = collect_ratios(base_tree)
+
+    # A name living in BOTH namespaces (benchmark medians and ratio
+    # factors, in either file) is ambiguous: gating it as a ratio skips
+    # the median_ns normalization, gating it as throughput applies it.
+    # Config error when gating; drop it from ratio comparison otherwise.
+    ambiguous = sorted(
+        (set(current) | set(baseline))
+        & (set(cur_ratios) | set(base_ratios))
+    )
+    if ambiguous:
+        print(
+            "bench-compare: key(s) present under both 'benchmarks' and "
+            f"'ratios': {', '.join(ambiguous)} — a throughput stat "
+            "cannot be gated as an absolute-factor ratio"
+        )
+        if gating:
+            return 2
+        for k in ambiguous:
+            cur_ratios.pop(k, None)
+            base_ratios.pop(k, None)
+
+    # The baseline must opt every gated ratio in explicitly (see module
+    # docstring): a plain number under 'ratios' in the BASELINE is a
+    # config error when gating, a skip otherwise. The current side may
+    # stay plain — the rust bench emits plain factors.
+    unmarked = sorted(
+        k for k, (_, marked) in base_ratios.items() if not marked
+    )
+    if unmarked:
+        print(
+            f"bench-compare: {len(unmarked)} baseline ratio key(s) not "
+            "marked {\"kind\": \"ratio\", \"factor\": ...}: "
+            f"{', '.join(unmarked)}"
+        )
+        if gating:
+            print(
+                "bench-compare: refusing to gate on unmarked baseline "
+                "ratios — mark them explicitly or remove them"
+            )
+            return 2
+        print("bench-compare: WARN unmarked baseline ratios skipped")
+        for k in unmarked:
+            del base_ratios[k]
+
     shared = sorted(set(current) & set(baseline))
     shared_r = sorted(set(cur_ratios) & set(base_ratios))
     if not shared and not shared_r:
@@ -218,7 +295,7 @@ def main(argv):
             f"{'now x':>10} {'rel':>8}"
         )
         for name in shared_r:
-            base, now = base_ratios[name], cur_ratios[name]
+            base, now = base_ratios[name][0], cur_ratios[name][0]
             rel = now / base if base > 0 else float("inf")
             flag = judge(f"ratio/{name}", rel)
             print(

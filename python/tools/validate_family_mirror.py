@@ -1,0 +1,538 @@
+#!/usr/bin/env python3
+"""Numeric mirror of the codebook-family layer (PR: family frontier).
+
+The rust side makes several *quantitative* claims that unit tests gate
+on — this script re-derives each one in python from an exact port of
+`util::rng::Rng` (SplitMix64 seeding + xoshiro256** + Box-Muller) and
+faithful f32/f64 mirrors of the five quantizer fits, so the claims are
+verified independently of the rust toolchain:
+
+  1. `PowerCompand { alpha: 1.0 }` produces EXACTLY the `Uniform` grid
+     (the delegation contract in quant/power.rs), with identical
+     occupancy on any sample.
+  2. Power thresholds are strictly increasing for every grid alpha.
+  3. `fit_best` on HEAVY-TAILED data (product of two normals) picks
+     alpha < 1 and strictly beats the uniform grid in reconstruction
+     MSE — while on a PURE Gaussian the identity alpha = 1.0 wins
+     (companding buys nothing there; this mirror caught the original
+     "alpha < 1 on Gaussian" test claim being false).
+  4. Power's occupancy balance beats Uniform's on the same heavy-tailed
+     data — the
+     `frontier_family_power_occupancy_beats_uniform_on_heavy_tails`
+     gate in rust/tests/frontier.rs.
+  5. KMeans (Lloyd on its own training set, quantile init) never leaves
+     an empty bin — the occupancy.rs property-test claim.
+  6. The empirical k-quantile's occupancy deficit vanishes as samples
+     grow (occupancy.rs property-test claim, gauss variant).
+  7. THE MIXING ARGMIN: `--synth-dist mixed` mlp weights (hidden 16,
+     seeds 23 and 7 — the test seed and the CLI default) reproduce
+     bit-for-bit, and the per-layer family argmin at k=16 over
+     [gauss, empirical, kmeans, uniform, power] (strict <, first-wins)
+     is [kmeans, empirical, kmeans]: the two-point layer reconstructs
+     with MSE exactly 0.0 under BOTH empirical and kmeans, and the tie
+     breaks to empirical by family order. This is the determinism the
+     `frontier_family_search_mixes_families` acceptance gate and the
+     family-matrix CI job lean on.
+
+Exits non-zero listing every failed check.
+"""
+
+import math
+import sys
+
+import numpy as np
+
+FAIL = []
+
+
+def check(name, cond, msg=""):
+    print(("PASS " if cond else "FAIL ") + name + (" " + msg if msg else ""))
+    if not cond:
+        FAIL.append(name)
+
+
+# ---------------------------------------------------------------------------
+# Exact port of rust util::rng::Rng
+# ---------------------------------------------------------------------------
+
+MASK = (1 << 64) - 1
+F64_EPS = 2.0 ** -52  # f64::EPSILON
+
+
+class Rng:
+    def __init__(self, seed):
+        x = seed & MASK
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (s[1] * 5) & MASK
+        r = ((r << 7) | (r >> 57)) & MASK
+        r = (r * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & MASK
+        return r
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        # Box-Muller, f64 internals, f32 result — as rust normal()
+        while True:
+            u1 = self.next_f64()
+            if u1 <= F64_EPS:
+                continue
+            u2 = self.next_f64()
+            r = math.sqrt(-2.0 * math.log(u1))
+            return np.float32(r * math.cos(2.0 * math.pi * u2))
+
+
+def gaussian(n, mu, sigma, seed):
+    """Mirror of the rust test helper: mu + sigma * rng.normal(), f32."""
+    rng = Rng(seed)
+    mu, sigma = np.float32(mu), np.float32(sigma)
+    return np.array(
+        [np.float32(mu + sigma * rng.normal()) for _ in range(n)],
+        dtype=np.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mirror of stats::normal (Giles 2010 erf_inv, same coefficients)
+# ---------------------------------------------------------------------------
+
+
+def erf_inv(y):
+    y = min(max(y, -1.0 + 1e-7), 1.0 - 1e-7)
+    w = -math.log((1.0 - y) * (1.0 + y))
+    if w < 5.0:
+        wc = w - 2.5
+        p = 2.81022636e-08
+        for c in (
+            3.43273939e-07, -3.5233877e-06, -4.39150654e-06, 0.00021858087,
+            -0.00125372503, -0.00417768164, 0.246640727, 1.50140941,
+        ):
+            p = c + p * wc
+    else:
+        wt = math.sqrt(w) - 3.0
+        p = -0.000200214257
+        for c in (
+            0.000100950558, 0.00134934322, -0.00367342844, 0.00573950773,
+            -0.0076224613, 0.00943887047, 1.00167406, 2.83297682,
+        ):
+            p = c + p * wt
+    return p * y
+
+
+def norm_icdf(u):
+    return math.sqrt(2.0) * erf_inv(2.0 * u - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer mirrors (thresholds, levels) — f32 arrays, rust op order
+# ---------------------------------------------------------------------------
+
+
+def mean_std64(xs):
+    """stats::mean_std — f64 population mean/std."""
+    x64 = xs.astype(np.float64)
+    mean = float(x64.mean())
+    var = float(np.mean((x64 - mean) ** 2))
+    return mean, math.sqrt(var)
+
+
+def bins_of(thresholds, xs):
+    """quant::bin_total — ties-right (searchsorted side='right')."""
+    return np.searchsorted(thresholds, xs, side="right")
+
+
+def mse(q, xs):
+    t, levels = q
+    d = (xs - levels[bins_of(t, xs)]).astype(np.float64)
+    return float(np.mean(d * d))
+
+
+def occupancy(thresholds, xs):
+    idx = bins_of(thresholds, xs)
+    return np.bincount(idx, minlength=len(thresholds) + 1)
+
+
+def balance(hist):
+    k = len(hist)
+    total = int(hist.sum())
+    if k <= 1 or total == 0:
+        return 1.0
+    p = hist[hist > 0] / total
+    return float(-(p * np.log(p)).sum() / math.log(k))
+
+
+def uniform_fit(xs, k):
+    mean, std = mean_std64(xs)
+    mu = np.float32(mean)
+    sigma = max(np.float32(std), np.float32(1e-8))
+    lo = np.float32(mu - np.float32(3.0) * sigma)
+    width = np.float32(np.float32(6.0) * sigma / np.float32(k))
+    t = np.array(
+        [np.float32(lo + width * np.float32(i)) for i in range(1, k)],
+        dtype=np.float32,
+    )
+    lv = np.array(
+        [np.float32(lo + width * np.float32(i + 0.5)) for i in range(k)],
+        dtype=np.float32,
+    )
+    return t, lv
+
+
+def gauss_fit(xs, k):
+    mean, std = mean_std64(xs)
+    sigma = max(std, 1e-8)  # f64 max, unlike Uniform
+    t = np.array(
+        [np.float32(mean + sigma * norm_icdf(i / k)) for i in range(1, k)],
+        dtype=np.float32,
+    )
+    lv = np.array(
+        [
+            np.float32(mean + sigma * norm_icdf((i + 0.5) / k))
+            for i in range(k)
+        ],
+        dtype=np.float32,
+    )
+    return t, lv
+
+
+def empirical_fit(xs, k):
+    srt = np.sort(xs)
+    n = len(srt)
+
+    def quantile(qq):
+        if n == 1:
+            return srt[0]
+        pos = qq * (n - 1)
+        lo_i, hi_i = int(math.floor(pos)), int(math.ceil(pos))
+        frac = np.float32(pos - lo_i)
+        return np.float32(
+            srt[lo_i] * (np.float32(1.0) - frac) + srt[hi_i] * frac
+        )
+
+    t = np.array([quantile(i / k) for i in range(1, k)], dtype=np.float32)
+    levels = []
+    start = 0
+    for i in range(k):
+        end = (
+            int(np.searchsorted(srt, t[i], side="left")) if i + 1 < k else n
+        )
+        if end > start:
+            sl = srt[start:end]
+            m = len(sl)
+            levels.append(
+                sl[m // 2]
+                if m % 2 == 1
+                else np.float32(
+                    np.float32(0.5) * (sl[m // 2 - 1] + sl[m // 2])
+                )
+            )
+        elif i > 0:
+            levels.append(levels[i - 1])
+        else:
+            levels.append(srt[0])
+        start = end
+    return t, np.array(levels, dtype=np.float32)
+
+
+def kmeans_fit(xs, k, iters=100):
+    srt = np.sort(xs.astype(np.float64))
+    n = len(srt)
+    levels = np.array(
+        [srt[min(int((i + 0.5) / k * n), n - 1)] for i in range(k)]
+    )
+    prefix = np.concatenate([[0.0], np.cumsum(srt)])
+    for _ in range(iters):
+        thresh = 0.5 * (levels[:-1] + levels[1:])
+        moved = 0.0
+        start = 0
+        for i in range(k):
+            end = (
+                int(np.searchsorted(srt, thresh[i], side="left"))
+                if i < k - 1
+                else n
+            )
+            if end > start:
+                c = (prefix[end] - prefix[start]) / (end - start)
+                moved = max(moved, abs(c - levels[i]))
+                levels[i] = c
+            start = end
+        if moved < 1e-10:
+            break
+    t = (0.5 * (levels[:-1] + levels[1:])).astype(np.float32)
+    return t, levels.astype(np.float32)
+
+
+ALPHA_GRID = [
+    np.float32(a) for a in (0.25, 0.4, 0.5, 2.0 / 3.0, 0.8, 1.0, 1.5)
+]
+
+
+def compand(alpha, xs):
+    return np.where(
+        xs == 0.0, np.float32(0.0), np.sign(xs) * np.abs(xs) ** alpha
+    ).astype(np.float32)
+
+
+def power_fit(alpha, xs, k):
+    if alpha == np.float32(1.0):
+        return uniform_fit(xs, k)
+    inv = np.float32(np.float32(1.0) / alpha)
+    t, lv = uniform_fit(compand(alpha, xs), k)
+    return compand(inv, t), compand(inv, lv)
+
+
+def power_fit_best(xs, k):
+    best = None
+    for alpha in ALPHA_GRID:
+        q = power_fit(alpha, xs, k)
+        m = mse(q, xs)
+        if best is None or m < best[2]:
+            best = (alpha, q, m)
+    return best[0], best[1]
+
+
+# family order = coordinator::trainer::FreezeQuant::ALL
+FAMILIES = [
+    ("gauss", gauss_fit),
+    ("empirical", empirical_fit),
+    ("kmeans", kmeans_fit),
+    ("uniform", uniform_fit),
+    ("power", lambda xs, k: power_fit_best(xs, k)[1]),
+]
+
+
+# ---------------------------------------------------------------------------
+# 1–2: alpha = 1 delegation + monotone thresholds
+# ---------------------------------------------------------------------------
+
+xs_g = gaussian(5_000, -0.2, 0.9, 13)
+for k in (4, 16):
+    tp, lp = power_fit(np.float32(1.0), xs_g, k)
+    tu, lu = uniform_fit(xs_g, k)
+    check(
+        f"power alpha=1 == uniform grid (k={k})",
+        np.array_equal(tp, tu) and np.array_equal(lp, lu),
+    )
+    check(
+        f"power alpha=1 occupancy identical (k={k})",
+        np.array_equal(occupancy(tp, xs_g), occupancy(tu, xs_g)),
+    )
+
+for alpha in ALPHA_GRID:
+    t, _ = power_fit(alpha, xs_g, 16)
+    check(
+        f"power thresholds strictly increasing (alpha={alpha:.3g})",
+        bool(np.all(np.diff(t) > 0)),
+    )
+
+# ---------------------------------------------------------------------------
+# 3: fit_best compresses on heavy tails (product-normal, the power.rs
+# test fixture: Rng(9), normal·normal·0.2, n=4000) — and on a PURE
+# Gaussian the identity alpha wins (the original "alpha < 1 on
+# Gaussian" claim was false; alpha=1 beats 0.8 by >= 7% MSE there)
+# ---------------------------------------------------------------------------
+
+
+def heavy_tailed(n, seed):
+    rng = Rng(seed)
+    return np.array(
+        [
+            np.float32(
+                np.float32(rng.normal() * rng.normal())
+                * np.float32(0.2)
+            )
+            for _ in range(n)
+        ],
+        dtype=np.float32,
+    )
+
+
+xs9 = heavy_tailed(4_000, 9)
+for k in (4, 8, 16):
+    alpha, q = power_fit_best(xs9, k)
+    pw, un = mse(q, xs9), mse(uniform_fit(xs9, k), xs9)
+    check(
+        f"fit_best alpha<1 and mse<uniform on heavy tails (k={k})",
+        alpha < 1.0 and pw < un,
+        f"alpha={alpha:.3g} power={pw:.3e} uniform={un:.3e}",
+    )
+
+xsg = gaussian(4_000, 0.0, 1.0, 9)
+for k in (4, 8, 16):
+    alpha, q = power_fit_best(xsg, k)
+    runner_up = min(
+        mse(power_fit(a, xsg, k), xsg)
+        for a in ALPHA_GRID
+        if a != np.float32(1.0)
+    )
+    identity = mse(q, xsg)
+    check(
+        f"fit_best on pure gaussian is the identity alpha (k={k})",
+        alpha == np.float32(1.0) and identity < runner_up,
+        f"margin {runner_up / identity:.4f}x",
+    )
+
+# ---------------------------------------------------------------------------
+# 4: power occupancy beats uniform on heavy tails — the
+# frontier_family test's fixture: Rng(33), normal·normal·0.2, n=20000
+# ---------------------------------------------------------------------------
+
+xs33 = heavy_tailed(20_000, 33)
+for k in (4, 16):
+    alpha, (tq, _) = power_fit_best(xs33, k)
+    bp = balance(occupancy(tq, xs33))
+    bu = balance(occupancy(uniform_fit(xs33, k)[0], xs33))
+    check(
+        f"power occupancy beats uniform on heavy tails (k={k})",
+        alpha < 1.0 and bp > bu,
+        f"alpha={alpha:.3g} power={bp:.4f} uniform={bu:.4f}",
+    )
+
+# ---------------------------------------------------------------------------
+# 5: kmeans never leaves an empty bin on its own training set
+# ---------------------------------------------------------------------------
+
+ok, worst = True, 1 << 60
+for seed in range(10):
+    data = gaussian(400, 0.0, 1.0, seed)
+    for k in (4, 8, 16):
+        h = occupancy(kmeans_fit(data, k)[0], data)
+        worst = min(worst, int(h.min()))
+        ok = ok and bool(np.all(h > 0))
+check(
+    "kmeans leaves no empty bin (10 seeds, k in {4,8,16})",
+    ok,
+    f"min occupancy {worst}",
+)
+
+# ---------------------------------------------------------------------------
+# 6: quantile occupancy deficit vanishes with sample count
+# ---------------------------------------------------------------------------
+
+
+def deficit(n):
+    data = gaussian(n, 0.1, 1.3, 29)
+    return 1.0 - balance(occupancy(gauss_fit(data, 16)[0], data))
+
+
+d_small, d_big = deficit(500), deficit(50_000)
+check(
+    "quantile occupancy -> uniform with samples",
+    d_big < d_small and d_big < 1e-3,
+    f"deficit(500)={d_small:.2e} deficit(50k)={d_big:.2e}",
+)
+
+# ---------------------------------------------------------------------------
+# 7: the mixing argmin on --synth-dist mixed mlp weights
+# (Builder draw order: fc1 dense gaussian fan 3072, fc2 two-point
+# fan 16, fc3 bounded-uniform fan 16; rng consumed only by he_normal)
+# ---------------------------------------------------------------------------
+
+
+def mixed_mlp_weights(hidden, classes, seed):
+    rng = Rng(seed)
+    d_in = 32 * 32 * 3
+
+    def scale_of(fan):
+        return np.float32(math.sqrt(np.float32(2.0) / np.float32(fan)))
+
+    s1 = scale_of(d_in)
+    fc1 = np.array(
+        [np.float32(rng.normal() * s1) for _ in range(d_in * hidden)],
+        dtype=np.float32,
+    )
+    s2 = scale_of(hidden)
+    fc2 = np.array(
+        [
+            -s2 if rng.next_f64() < 0.5 else s2
+            for _ in range(hidden * hidden)
+        ],
+        dtype=np.float32,
+    )
+    s3 = scale_of(hidden)
+    r3 = np.float32(math.sqrt(np.float32(3.0)))
+    fc3 = np.array(
+        [
+            np.float32(
+                np.float32(2.0 * rng.next_f64() - 1.0) * r3 * s3
+            )
+            for _ in range(hidden * classes)
+        ],
+        dtype=np.float32,
+    )
+    return [fc1, fc2, fc3], s2
+
+
+for seed in (23, 7):  # the rust test seed and the CLI default seed
+    layers, s2 = mixed_mlp_weights(16, 10, seed)
+    check(
+        f"fc2 is exactly two-point +-scale (seed {seed})",
+        bool(np.all(np.abs(layers[1]) == s2))
+        and bool((layers[1] > 0).any())
+        and bool((layers[1] < 0).any()),
+    )
+    k = 16  # 1 << start_bits_w
+    picks, tables = [], []
+    for xs in layers:
+        fits = [(name, mse(fit(xs, k), xs)) for name, fit in FAMILIES]
+        best = fits[0]
+        for f in fits[1:]:
+            if f[1] < best[1]:  # strict <, first-wins — as FrontierCtx
+                best = f
+        picks.append(best[0])
+        tables.append(fits)
+    check(
+        f"mixed-mlp family argmin is [kmeans, empirical, kmeans] "
+        f"(seed {seed}, k={k})",
+        picks == ["kmeans", "empirical", "kmeans"],
+        f"got {picks}",
+    )
+    fc2 = dict(tables[1])
+    check(
+        f"fc2: empirical and kmeans MSE exactly 0.0, others > 0 "
+        f"(seed {seed})",
+        fc2["empirical"] == 0.0
+        and fc2["kmeans"] == 0.0
+        and all(
+            fc2[f] > 0.0 for f in ("gauss", "uniform", "power")
+        ),
+        "mses "
+        + " ".join(f"{n}={m:.2e}" for n, m in tables[1]),
+    )
+    for li in (0, 2):
+        t = dict(tables[li])
+        margin = min(
+            t[f] / t["kmeans"]
+            for f in ("gauss", "empirical", "uniform", "power")
+        )
+        check(
+            f"fc{li + 1}: kmeans strictly wins (seed {seed})",
+            all(
+                t["kmeans"] < t[f]
+                for f in ("gauss", "empirical", "uniform", "power")
+            ),
+            f"runner-up/kmeans MSE ratio {margin:.4f}",
+        )
+
+print()
+if FAIL:
+    print(f"{len(FAIL)} check(s) FAILED: {FAIL}")
+    sys.exit(1)
+print("all family-mirror checks passed")

@@ -75,7 +75,8 @@ COMMANDS:
   train      --model M         run the gradual-quantization training loop
              [--steps N --stages S --iters I --bits-w B --bits-a B
               --lr F --policy gradual|simultaneous|fp --quantizer
-              gauss|empirical|kmeans|uniform --train-size N --val-size N
+              gauss|empirical|kmeans|uniform|power --train-size N
+              --val-size N
               --save ckpt.bin --metrics out.csv --data synth|DIR
               --export DIR]    backend auto-selects: PJRT when the AOT
                                artifacts compile, the pure-Rust native
@@ -90,7 +91,7 @@ COMMANDS:
                                BOPs/model-size for a full-size arch
   infer      --model M [--ckpt C --frozen DIR --export DIR --bits-w B
               --quantizer Q --batch N --val-size N --synth --width W
-              --aq none|uniform|quantile --aq-bits B --calib-size N
+              --aq none|uniform|quantile|power --aq-bits B --calib-size N
               --data DIR --engine v1|v2|v3 --stats out.json]
                                native LUT inference of a frozen model:
                                parity vs dequantized f32, throughput, and
@@ -111,7 +112,7 @@ COMMANDS:
   serve      --model M [--requests N --workers W --max-batch B
               --max-wait-ms T --kernel-threads K --engine v1|v2|v3
               --replicas R --routing rr|least|p2c --queue-cap Q
-              --aq none|uniform|quantile --aq-bits B --calib-size N
+              --aq none|uniform|quantile|power --aq-bits B --calib-size N
               --data DIR --synth --width W --stats out.json]
                                batched native serving with latency stats
                                (v2: tiled/fused arena engine, default;
@@ -166,27 +167,40 @@ COMMANDS:
                                (default 3); --banner-timeout-ms bounds
                                the spawned-worker banner wait
   frontier   --model M [--frozen DIR --synth --width W --classes C
-              --seed S --quantizer Q --aq uniform|quantile
+              --seed S --synth-dist normal|mixed --quantizer Q
+              --families all|q1,q2,... --aq uniform|quantile
               --bits-w B --bits-a B --min-bits-w B --min-bits-a B
               --budget-gbops G --target-acc A --steps N --batch B
               --calib-size N --data DIR --out report.json --export DIR]
                                mixed-precision bit-allocation search
-                               (DESIGN.md §15): rank per-layer one-bit
-                               sensitivity on a calibration batch, then
-                               greedily drop the bit with the best
-                               served-BOPS-per-degradation ratio from
-                               the uniform w<bits-w>/a<bits-a> start
-                               until --budget-gbops is met, the top-1
-                               metric would fall below --target-acc, or
-                               the --min-bits floors stop play; prints
-                               the Pareto frontier (BOPS strictly
-                               decreasing, degradation increasing),
-                               --out writes the full report as JSON,
-                               --export freezes the selected allocation
-                               as an ordinary v2 model that v2/v3
-                               engines serve unchanged; --data DIR
-                               calibrates on real tensors with recorded
-                               provenance (same loader as infer/serve)
+                               (DESIGN.md §15/§16): rank per-layer
+                               one-bit sensitivity on a calibration
+                               batch, then greedily drop the bit with
+                               the best served-BOPS-per-degradation
+                               ratio from the uniform w<bits-w>/
+                               a<bits-a> start until --budget-gbops is
+                               met, the top-1 metric would fall below
+                               --target-acc, or the --min-bits floors
+                               stop play; --families widens the search
+                               to per-layer codebook families (gauss,
+                               empirical, kmeans, uniform, power) —
+                               each weight move names both the new
+                               width and a family, the start picks the
+                               reconstruction-MSE argmin per layer;
+                               prints the Pareto frontier (BOPS
+                               strictly decreasing, degradation
+                               increasing), --out writes the full
+                               report as JSON (incl. per-layer family
+                               + occupancy_balance), --export freezes
+                               the selected allocation as an ordinary
+                               v2 model (per-layer families recorded
+                               in frozen.json) that v2/v3 engines
+                               serve unchanged; --data DIR calibrates
+                               on real tensors with recorded
+                               provenance (same loader as infer/serve);
+                               --synth-dist mixed draws heterogeneous
+                               synthetic weights (gaussian/bimodal/
+                               uniform by layer) so families disagree
   experiment <id> [key=val]    regenerate a paper table/figure:
                                table1 fig1 table2 table3 tableA1 figB1
                                figC1 all   (scale=2 doubles budgets)

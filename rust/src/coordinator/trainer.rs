@@ -14,8 +14,8 @@ use super::schedule::{Schedule, SchedulePolicy};
 use crate::data::batcher::Prefetcher;
 use crate::data::{Batcher, Dataset};
 use crate::quant::{
-    KMeans, KQuantileEmpirical, KQuantileGauss, Quantizer, QuantizerFit,
-    Uniform,
+    KMeans, KQuantileEmpirical, KQuantileGauss, PowerCompand, Quantizer,
+    QuantizerFit, Uniform,
 };
 use crate::runtime::state::StepConfig;
 use crate::runtime::{Backend, Engine, Manifest, ModelState, PjrtBackend};
@@ -24,7 +24,7 @@ use crate::train::NativeBackend;
 
 /// Which exact quantizer freezes layers (and supplies generic-noise
 /// thresholds for the Table 3 ablation).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FreezeQuant {
     /// paper default: Gaussian k-quantile (matches the in-graph kernel)
     KQuantileGauss,
@@ -34,9 +34,43 @@ pub enum FreezeQuant {
     KMeans,
     /// uniform bins on [-3σ, 3σ] (§4.3 ablation)
     Uniform,
+    /// uniform grid in the power-companded domain `sign(x)·|x|^alpha`,
+    /// alpha fit per layer by reconstruction-MSE grid search
+    Power,
 }
 
 impl FreezeQuant {
+    /// Every family the frontier can search over (`--families all`).
+    pub const ALL: [FreezeQuant; 5] = [
+        FreezeQuant::KQuantileGauss,
+        FreezeQuant::KQuantileEmpirical,
+        FreezeQuant::KMeans,
+        FreezeQuant::Uniform,
+        FreezeQuant::Power,
+    ];
+
+    /// Stable CLI / frozen.json token (round-trips through `parse`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FreezeQuant::KQuantileGauss => "gauss",
+            FreezeQuant::KQuantileEmpirical => "empirical",
+            FreezeQuant::KMeans => "kmeans",
+            FreezeQuant::Uniform => "uniform",
+            FreezeQuant::Power => "power",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FreezeQuant> {
+        match s {
+            "gauss" | "kquantile" => Some(FreezeQuant::KQuantileGauss),
+            "empirical" => Some(FreezeQuant::KQuantileEmpirical),
+            "kmeans" => Some(FreezeQuant::KMeans),
+            "uniform" => Some(FreezeQuant::Uniform),
+            "power" => Some(FreezeQuant::Power),
+            _ => None,
+        }
+    }
+
     pub fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
         match self {
             FreezeQuant::KQuantileGauss => KQuantileGauss.fit(xs, k),
@@ -58,6 +92,7 @@ impl FreezeQuant {
                 }
             }
             FreezeQuant::Uniform => Uniform.fit(xs, k),
+            FreezeQuant::Power => PowerCompand::fit_best(xs, k).1,
         }
     }
 
@@ -67,6 +102,7 @@ impl FreezeQuant {
         // because the in-graph path re-normalizes by per-layer (μ, σ)
         let base: Quantizer = match self {
             FreezeQuant::KMeans => KMeans::fit_gaussian(k, 200),
+            FreezeQuant::Power => PowerCompand::fit_best_gaussian(k).1,
             FreezeQuant::Uniform => {
                 let width = 6.0 / k as f32;
                 Quantizer {

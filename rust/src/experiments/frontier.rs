@@ -1,5 +1,6 @@
-//! Mixed-precision frontier search (`uniq frontier`): per-layer bit
-//! allocation over the accuracy-vs-served-BOPS plane.
+//! Mixed-precision frontier search (`uniq frontier`): joint per-layer
+//! (bits, codebook-family) allocation over the accuracy-vs-served-BOPS
+//! plane.
 //!
 //! The paper's comparison — k-quantile vs uniform *as a function of
 //! BOPS* — only becomes a real experiment once bitwidths can differ
@@ -32,11 +33,25 @@
 //!    strictly increasing — plus the selected allocation, as an
 //!    aligned-text table and JSON.
 //!
+//! With `--families` the search runs over a second axis: each weight
+//! move is a `(layer, bits−1, family)` candidate for every enabled
+//! codebook family ([`FreezeQuant::ALL`] under `--families all`), so a
+//! greedy step can change a layer's width, its family, or both — while
+//! still dropping exactly one bit, which keeps the trajectory monotone
+//! in served BOPS. The start allocation picks each layer's family by
+//! reconstruction-MSE argmin at the start width, the refit memo keys on
+//! (layer, bits, family), and the chosen per-layer families are
+//! recorded in `frozen.json` (optional `families` section) and in the
+//! JSON report next to each layer's `occupancy_balance` — the per-bin
+//! balance evidence for *why* a family won.
+//!
 //! Every candidate is realized as a true [`FrozenModel`] (quantizers
 //! re-fitted from the f32 weight basis at `2^b` levels, tables rebuilt
 //! from moments) and evaluated through the same v2 LUT forward the
 //! serving tier runs — the search measures what will actually ship,
-//! and the chosen allocation freezes/serves through v2/v3 unchanged.
+//! and the chosen allocation freezes/serves through v2/v3 unchanged
+//! (the codebook LUT stores decoded levels, so even the power-companded
+//! family needs no serving change — DESIGN.md §16).
 
 use std::collections::HashMap;
 
@@ -49,6 +64,7 @@ use crate::infer::kernels::argmax;
 use crate::infer::{
     FrozenModel, Graph, KernelMode, LayerCodebook, PreparedWeights,
 };
+use crate::stats::occupancy::{bin_occupancy, occupancy_balance};
 use crate::util::json::{num, obj, s, Json};
 
 use super::common::Table;
@@ -71,11 +87,13 @@ impl BitDim {
 
 /// A per-layer bit allocation: `w[q]` weight bits per qlayer, `a[q]`
 /// activation bits for layers whose output carries an aq table
-/// (`None` = no table; the final dense's logits stay f32).
+/// (`None` = no table; the final dense's logits stay f32), and
+/// `fam[q]` the codebook family the layer's weights refit under.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Allocation {
     pub w: Vec<u8>,
     pub a: Vec<Option<u8>>,
+    pub fam: Vec<FreezeQuant>,
 }
 
 impl Allocation {
@@ -97,6 +115,27 @@ impl Allocation {
             .collect::<Vec<_>>()
             .join(",")
     }
+
+    /// One letter per layer (`g,e,k,u,p` — the first letter of each
+    /// `FreezeQuant::name` token, all distinct).
+    pub fn fmt_fam(&self) -> String {
+        self.fam
+            .iter()
+            .map(|f| &f.name()[..1])
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// How many distinct families the allocation mixes.
+    pub fn distinct_families(&self) -> usize {
+        let mut seen: Vec<FreezeQuant> = Vec::new();
+        for f in &self.fam {
+            if !seen.contains(f) {
+                seen.push(*f);
+            }
+        }
+        seen.len()
+    }
 }
 
 /// Search knobs. Start bits are the uniform allocation the search (and
@@ -110,6 +149,10 @@ pub struct FrontierConfig {
     pub min_bits_a: u32,
     pub mode: AqMode,
     pub fq: FreezeQuant,
+    /// codebook families the weight axis searches over; empty means
+    /// `[fq]` (single-family search, the pre-family behavior). Order is
+    /// kept (first-wins on MSE ties), duplicates are dropped.
+    pub families: Vec<FreezeQuant>,
     /// stop once served complexity reaches this many GBOPs/img
     pub budget_gbops: Option<f64>,
     /// refuse any step whose top-1 metric (accuracy when labels exist,
@@ -129,6 +172,7 @@ impl Default for FrontierConfig {
             min_bits_a: 2,
             mode: AqMode::Quantile,
             fq: FreezeQuant::KQuantileGauss,
+            families: Vec::new(),
             budget_gbops: None,
             target_acc: None,
             max_steps: 32,
@@ -165,12 +209,26 @@ impl FrontierPoint {
     }
 }
 
+/// One legal greedy move: layer `q` drops one bit on `dim`. Weight
+/// moves also name the codebook family the layer refits under (the
+/// layer's current one, or a switch); act moves carry the current
+/// family unchanged. Either way exactly one bit leaves the allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Move {
+    pub q: usize,
+    pub dim: BitDim,
+    pub fam: FreezeQuant,
+}
+
 /// One row of the sensitivity ranking.
 #[derive(Debug, Clone)]
 pub struct Sensitivity {
     pub q: usize,
     pub layer: String,
     pub dim: BitDim,
+    /// the candidate's codebook family — `Some` for weight rows (one
+    /// row per enabled family), `None` for activation rows
+    pub family: Option<FreezeQuant>,
     /// degradation when this layer alone drops one bit from the start
     pub delta_deg: f64,
     /// served GBOPs saved by that drop
@@ -215,8 +273,12 @@ pub struct FrontierCtx {
     ref_logits: Vec<f32>,
     ref_preds: Vec<usize>,
     start_point: FrontierPoint,
-    /// codebook cache: fitting is deterministic per (layer, bits)
-    cb_cache: HashMap<(usize, u8), LayerCodebook>,
+    /// the effective family search set: `cfg.families` deduped, or
+    /// `[cfg.fq]` when none were requested
+    fams: Vec<FreezeQuant>,
+    /// codebook cache: fitting is deterministic per (layer, bits,
+    /// family)
+    cb_cache: HashMap<(usize, u8, FreezeQuant), LayerCodebook>,
 }
 
 impl FrontierCtx {
@@ -288,6 +350,38 @@ impl FrontierCtx {
         }
         let graph = Graph::from_model(&template)?;
 
+        let fams: Vec<FreezeQuant> = if cfg.families.is_empty() {
+            vec![cfg.fq]
+        } else {
+            let mut fs: Vec<FreezeQuant> = Vec::new();
+            for f in &cfg.families {
+                if !fs.contains(f) {
+                    fs.push(*f);
+                }
+            }
+            fs
+        };
+        // start family per layer: reconstruction-MSE argmin at the
+        // start width (strict <, first-wins — deterministic). A
+        // single-family search skips the extra fits entirely.
+        let start_fam: Vec<FreezeQuant> = if fams.len() == 1 {
+            vec![fams[0]; raw.len()]
+        } else {
+            let k = 1usize << cfg.start_bits_w;
+            raw.iter()
+                .map(|xs| {
+                    let mut best = (fams[0], f64::INFINITY);
+                    for &f in &fams {
+                        let mse = f.fit(xs, k).mse(xs);
+                        if mse < best.1 {
+                            best = (f, mse);
+                        }
+                    }
+                    best.0
+                })
+                .collect()
+        };
+
         let mut ctx = FrontierCtx {
             template,
             graph,
@@ -301,7 +395,7 @@ impl FrontierCtx {
             ref_preds: Vec::new(),
             start_point: FrontierPoint {
                 step: 0,
-                alloc: Allocation { w: vec![], a: vec![] },
+                alloc: Allocation { w: vec![], a: vec![], fam: vec![] },
                 gbops: 0.0,
                 mbit: 0.0,
                 degradation: 0.0,
@@ -309,6 +403,7 @@ impl FrontierCtx {
                 accuracy: None,
                 dropped: None,
             },
+            fams,
             cb_cache: HashMap::new(),
         };
 
@@ -316,7 +411,9 @@ impl FrontierCtx {
         let mut start = ctx.template.clone();
         start.bits_w = ctx.cfg.start_bits_w as u8;
         start.layers = (0..start.layers.len())
-            .map(|q| ctx.fit_layer(q, ctx.cfg.start_bits_w as u8))
+            .map(|q| {
+                ctx.fit_layer(q, ctx.cfg.start_bits_w as u8, start_fam[q])
+            })
             .collect();
         start.aq = None;
         let weights = PreparedWeights::lut_only(&start, &ctx.graph);
@@ -343,6 +440,7 @@ impl FrontierCtx {
                 .iter()
                 .map(|m| m.map(|_| ctx.cfg.start_bits_a as u8))
                 .collect(),
+            fam: start_fam,
         };
         let (model, weights) = ctx.realize(&start_alloc)?;
 
@@ -383,21 +481,27 @@ impl FrontierCtx {
         &self.start_point
     }
 
-    /// Fit qlayer `q`'s codebook at `bits` from the f32 basis (cached:
-    /// the fit is deterministic per (layer, bits)).
-    fn fit_layer(&mut self, q: usize, bits: u8) -> LayerCodebook {
-        if let Some(c) = self.cb_cache.get(&(q, bits)) {
+    /// Fit qlayer `q`'s codebook at `bits` under `fam` from the f32
+    /// basis (cached: the fit is deterministic per (layer, bits,
+    /// family)).
+    fn fit_layer(
+        &mut self,
+        q: usize,
+        bits: u8,
+        fam: FreezeQuant,
+    ) -> LayerCodebook {
+        if let Some(c) = self.cb_cache.get(&(q, bits, fam)) {
             return c.clone();
         }
         let l = &self.template.layers[q];
-        let quant = self.cfg.fq.fit(&self.raw[q], 1usize << bits);
+        let quant = fam.fit(&self.raw[q], 1usize << bits);
         let cb = LayerCodebook::from_weights(
             &l.name,
             &l.shape,
             &self.raw[q],
             &quant,
         );
-        self.cb_cache.insert((q, bits), cb.clone());
+        self.cb_cache.insert((q, bits, fam), cb.clone());
         cb
     }
 
@@ -411,19 +515,24 @@ impl FrontierCtx {
     ) -> Result<(FrozenModel, PreparedWeights)> {
         if alloc.w.len() != self.raw.len()
             || alloc.a.len() != self.raw.len()
+            || alloc.fam.len() != self.raw.len()
         {
             return Err(anyhow!(
-                "allocation sized {}w/{}a for {} qlayers",
+                "allocation sized {}w/{}a/{}fam for {} qlayers",
                 alloc.w.len(),
                 alloc.a.len(),
+                alloc.fam.len(),
                 self.raw.len()
             ));
         }
         let mut m = self.template.clone();
         m.layers = (0..m.layers.len())
-            .map(|q| self.fit_layer(q, alloc.w[q]))
+            .map(|q| self.fit_layer(q, alloc.w[q], alloc.fam[q]))
             .collect();
         m.bits_w = *alloc.w.iter().max().unwrap_or(&1);
+        m.families = Some(
+            alloc.fam.iter().map(|f| f.name().to_string()).collect(),
+        );
         let mut tables = Vec::with_capacity(self.moments.len());
         for (q, mom) in self.moments.iter().enumerate() {
             tables.push(match (mom, alloc.a[q]) {
@@ -520,31 +629,60 @@ impl FrontierCtx {
         Ok((degradation, agreement, accuracy))
     }
 
-    /// All single-bit drops legal from `alloc` under the floors.
-    fn candidates(&self, alloc: &Allocation) -> Vec<(usize, BitDim)> {
+    /// All single-bit moves legal from `alloc` under the floors: for
+    /// every layer that can spare a weight bit, one candidate per
+    /// enabled family (drop a bit keeping the family, or drop a bit
+    /// *and* switch — both price the same served BOPS, the measured
+    /// degradation decides); activation drops are family-neutral.
+    fn candidates(&self, alloc: &Allocation) -> Vec<Move> {
         let mut out = Vec::new();
         for q in 0..alloc.w.len() {
             if alloc.w[q] as u32 > self.cfg.min_bits_w {
-                out.push((q, BitDim::Weight));
+                for &fam in &self.fams {
+                    out.push(Move { q, dim: BitDim::Weight, fam });
+                }
             }
             if let Some(a) = alloc.a[q] {
                 if a as u32 > self.cfg.min_bits_a {
-                    out.push((q, BitDim::Act));
+                    out.push(Move {
+                        q,
+                        dim: BitDim::Act,
+                        fam: alloc.fam[q],
+                    });
                 }
             }
         }
         out
     }
 
-    fn drop_bit(alloc: &Allocation, q: usize, dim: BitDim) -> Allocation {
+    fn drop_bit(alloc: &Allocation, mv: Move) -> Allocation {
         let mut next = alloc.clone();
-        match dim {
-            BitDim::Weight => next.w[q] -= 1,
+        match mv.dim {
+            BitDim::Weight => {
+                next.w[mv.q] -= 1;
+                next.fam[mv.q] = mv.fam;
+            }
             BitDim::Act => {
-                next.a[q] = next.a[q].map(|b| b - 1);
+                next.a[mv.q] = next.a[mv.q].map(|b| b - 1);
             }
         }
         next
+    }
+
+    /// Per-layer occupancy balance (normalized bin entropy over the f32
+    /// weight basis, `stats::occupancy`) of an allocation's fitted
+    /// codebooks — the report's evidence for *why* a family won.
+    pub fn occupancy(&self, alloc: &Allocation) -> Vec<f64> {
+        (0..self.raw.len())
+            .map(|q| {
+                let quant =
+                    alloc.fam[q].fit(&self.raw[q], 1usize << alloc.w[q]);
+                occupancy_balance(&bin_occupancy(
+                    &self.raw[q],
+                    &quant.thresholds,
+                ))
+            })
+            .collect()
     }
 
     /// Measure one candidate allocation as a frontier point.
@@ -552,7 +690,7 @@ impl FrontierCtx {
         &mut self,
         alloc: &Allocation,
         step: usize,
-        dropped: Option<(usize, BitDim)>,
+        dropped: Option<Move>,
     ) -> Result<FrontierPoint> {
         let (m, weights) = self.realize(alloc)?;
         let c = self.graph.served_complexity(&m);
@@ -565,24 +703,26 @@ impl FrontierCtx {
             degradation,
             agreement,
             accuracy,
-            dropped,
+            dropped: dropped.map(|m| (m.q, m.dim)),
         })
     }
 
-    /// Phase 1 — sensitivity ranking: every layer/dim alone drops one
-    /// bit from the uniform start; rows sorted most-sensitive first
-    /// (largest degradation per saved GBOP).
+    /// Phase 1 — sensitivity ranking: every legal move alone drops one
+    /// bit from the uniform start (weight moves once per enabled
+    /// family); rows sorted most-sensitive first (largest degradation
+    /// per saved GBOP).
     pub fn sensitivity(&mut self) -> Result<Vec<Sensitivity>> {
         let start = self.start_point.alloc.clone();
         let base_gbops = self.start_point.gbops;
         let mut rows = Vec::new();
-        for (q, dim) in self.candidates(&start) {
-            let cand = Self::drop_bit(&start, q, dim);
-            let p = self.measure(&cand, 0, Some((q, dim)))?;
+        for mv in self.candidates(&start) {
+            let cand = Self::drop_bit(&start, mv);
+            let p = self.measure(&cand, 0, Some(mv))?;
             rows.push(Sensitivity {
-                q,
-                layer: self.template.layers[q].name.clone(),
-                dim,
+                q: mv.q,
+                layer: self.template.layers[mv.q].name.clone(),
+                dim: mv.dim,
+                family: (mv.dim == BitDim::Weight).then_some(mv.fam),
                 delta_deg: p.degradation,
                 delta_gbops: base_gbops - p.gbops,
             });
@@ -615,9 +755,9 @@ impl FrontierCtx {
             }
             // best ΔBOPS per unit of added degradation
             let mut best: Option<(f64, FrontierPoint)> = None;
-            for (q, dim) in cands {
-                let next = Self::drop_bit(&cur.alloc, q, dim);
-                let p = self.measure(&next, step, Some((q, dim)))?;
+            for mv in cands {
+                let next = Self::drop_bit(&cur.alloc, mv);
+                let p = self.measure(&next, step, Some(mv))?;
                 let d_bops = (cur.gbops - p.gbops).max(0.0);
                 let d_deg = (p.degradation - cur.degradation).max(1e-12);
                 let ratio = d_bops / d_deg;
@@ -705,13 +845,14 @@ fn dropped_label(names: &[&str], d: Option<(usize, BitDim)>) -> String {
 /// The sensitivity ranking as an aligned table.
 pub fn sensitivity_table(rows: &[Sensitivity]) -> Table {
     let mut t = Table::new(&[
-        "layer", "dim", "Δdeg", "ΔGBOPs", "GBOPs/deg",
+        "layer", "dim", "family", "Δdeg", "ΔGBOPs", "GBOPs/deg",
     ]);
     for r in rows {
         let ratio = r.delta_gbops / r.delta_deg.max(1e-12);
         t.row(vec![
             r.layer.clone(),
             r.dim.name().into(),
+            r.family.map(|f| f.name()).unwrap_or("-").into(),
             format!("{:.4e}", r.delta_deg),
             format!("{:.4}", r.delta_gbops),
             format!("{:.3e}", ratio),
@@ -723,7 +864,7 @@ pub fn sensitivity_table(rows: &[Sensitivity]) -> Table {
 /// A frontier (or trajectory) as an aligned table.
 pub fn frontier_table(names: &[&str], points: &[FrontierPoint]) -> Table {
     let mut t = Table::new(&[
-        "step", "dropped", "b_w", "b_a", "GBOPs", "Mbit", "deg",
+        "step", "dropped", "b_w", "b_a", "fam", "GBOPs", "Mbit", "deg",
         "agree%", "acc%",
     ]);
     for p in points {
@@ -732,6 +873,7 @@ pub fn frontier_table(names: &[&str], points: &[FrontierPoint]) -> Table {
             dropped_label(names, p.dropped),
             p.alloc.fmt_w(),
             p.alloc.fmt_a(),
+            p.alloc.fmt_fam(),
             format!("{:.4}", p.gbops),
             format!("{:.3}", p.mbit),
             format!("{:.4e}", p.degradation),
@@ -778,6 +920,16 @@ fn point_json(names: &[&str], p: &FrontierPoint) -> Json {
                             .collect(),
                     ),
                 ),
+                (
+                    "fam",
+                    Json::Arr(
+                        p.alloc
+                            .fam
+                            .iter()
+                            .map(|f| s(f.name()))
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         ("gbops", num(p.gbops)),
@@ -792,11 +944,15 @@ fn point_json(names: &[&str], p: &FrontierPoint) -> Json {
 }
 
 /// The full machine-readable report (`--out` / CI artifact).
+/// `occupancy` is the selected allocation's per-layer occupancy
+/// balance ([`FrontierCtx::occupancy`], layer order) — the "why this
+/// family won" evidence next to the per-layer `fam` names.
 pub fn result_json(
     model: &str,
     names: &[&str],
     cfg: &FrontierConfig,
     provenance: Option<&CalibProvenance>,
+    occupancy: Option<&[f64]>,
     r: &FrontierResult,
 ) -> Json {
     let sens = r
@@ -806,14 +962,34 @@ pub fn result_json(
             obj(vec![
                 ("layer", s(&x.layer)),
                 ("dim", s(x.dim.name())),
+                (
+                    "family",
+                    x.family
+                        .map(|f| s(f.name()))
+                        .unwrap_or(Json::Null),
+                ),
                 ("delta_deg", num(x.delta_deg)),
                 ("delta_gbops", num(x.delta_gbops)),
             ])
         })
         .collect();
+    let searched: Vec<Json> = if cfg.families.is_empty() {
+        vec![s(cfg.fq.name())]
+    } else {
+        cfg.families.iter().map(|f| s(f.name())).collect()
+    };
     obj(vec![
         ("model", s(model)),
         ("mode", s(cfg.mode.name())),
+        ("families_searched", Json::Arr(searched)),
+        (
+            "occupancy_balance",
+            occupancy
+                .map(|os| {
+                    Json::Arr(os.iter().map(|&o| num(o)).collect())
+                })
+                .unwrap_or(Json::Null),
+        ),
         ("start_bits_w", num(cfg.start_bits_w as f64)),
         ("start_bits_a", num(cfg.start_bits_a as f64)),
         (
@@ -868,7 +1044,11 @@ mod tests {
     fn pt(step: usize, gbops: f64, deg: f64) -> FrontierPoint {
         FrontierPoint {
             step,
-            alloc: Allocation { w: vec![4], a: vec![None] },
+            alloc: Allocation {
+                w: vec![4],
+                a: vec![None],
+                fam: vec![FreezeQuant::KQuantileGauss],
+            },
             gbops,
             mbit: 1.0,
             degradation: deg,

@@ -41,13 +41,24 @@ pub enum AqMode {
     /// Gaussian k-quantile (equiprobable bins, bin-median levels) — the
     /// static form of the training-path `fake_quant` kernel
     Quantile,
+    /// equal-width bins in the power-companded domain `sign(x)·|x|^α`
+    /// over `[μ−3σ, μ+3σ]`, decoded back — denser bins near zero, the
+    /// activation twin of `quant::PowerCompand`
+    Power,
 }
+
+/// Fixed activation-side companding exponent. Weights grid-search alpha
+/// per layer against the raw tensor; the activation calibration only
+/// keeps (μ, σ), so the activation table uses one exponent — 1/2, the
+/// sweet spot of the weight-side grid on bell-shaped data.
+pub const ACT_POWER_ALPHA: f32 = 0.5;
 
 impl AqMode {
     pub fn name(&self) -> &'static str {
         match self {
             AqMode::Uniform => "uniform",
             AqMode::Quantile => "quantile",
+            AqMode::Power => "power",
         }
     }
 
@@ -58,10 +69,11 @@ impl AqMode {
             "none" => None,
             "uniform" => Some(AqMode::Uniform),
             "quantile" => Some(AqMode::Quantile),
+            "power" => Some(AqMode::Power),
             other => {
                 return Err(anyhow!(
-                    "unknown --aq '{other}' (expected none, uniform or \
-                     quantile)"
+                    "unknown --aq '{other}' (expected none, uniform, \
+                     quantile or power)"
                 ))
             }
         })
@@ -122,6 +134,28 @@ impl ActQuantTable {
                     (1..k).map(|i| lo + width * i as f32).collect(),
                     (0..k)
                         .map(|i| lo + width * (i as f32 + 0.5))
+                        .collect(),
+                )
+            }
+            AqMode::Power => {
+                // Uniform layout in the companded domain over
+                // [c(μ−3σ), c(μ+3σ)], decoded back through the strictly
+                // monotone inverse — thresholds stay ascending and each
+                // level stays inside its own bin, so the table serves
+                // through ActEp/product_table like any other.
+                use crate::quant::power::{compand, decompand};
+                let a = ACT_POWER_ALPHA;
+                let lo = compand(a, mu - 3.0 * sigma);
+                let width =
+                    (compand(a, mu + 3.0 * sigma) - lo) / k as f32;
+                (
+                    (1..k)
+                        .map(|i| decompand(a, lo + width * i as f32))
+                        .collect(),
+                    (0..k)
+                        .map(|i| {
+                            decompand(a, lo + width * (i as f32 + 0.5))
+                        })
                         .collect(),
                 )
             }
@@ -477,7 +511,7 @@ mod tests {
     /// re-binning consistently.
     #[test]
     fn levels_bin_to_their_own_index() {
-        for mode in [AqMode::Uniform, AqMode::Quantile] {
+        for mode in [AqMode::Uniform, AqMode::Quantile, AqMode::Power] {
             for bits in [1u32, 2, 4, 8] {
                 let t = ActQuantTable::from_stats(mode, bits, 0.3, 0.7);
                 let ep = t.ep();
@@ -564,6 +598,7 @@ mod tests {
             AqMode::parse("quantile").unwrap(),
             Some(AqMode::Quantile)
         );
+        assert_eq!(AqMode::parse("power").unwrap(), Some(AqMode::Power));
         assert!(AqMode::parse("8bit").is_err());
     }
 }

@@ -11,13 +11,15 @@
 //!
 //! Format versioning: v1 (PR 1–4) had no `version` key; v2 adds an
 //! optional `act_quant` section (per-layer activation-quant tables,
-//! `infer::actquant`) and an optional `calibration` provenance section
-//! ([`CalibProvenance`]: what the tables were calibrated on). Loading
-//! is backwards-compatible — a v1 file yields `aq = None` and serves
+//! `infer::actquant`), an optional `calibration` provenance section
+//! ([`CalibProvenance`]: what the tables were calibrated on), and an
+//! optional `families` section (the per-layer codebook family the
+//! frontier's joint (bits, family) search chose). Loading is
+//! backwards-compatible — a v1 file yields `aq = None` and serves
 //! bit-identically to the pre-aq engine, a v2 file without
-//! `calibration` yields `calibration = None` — while a file newer than
-//! [`FORMAT_VERSION`] is rejected instead of being silently misread.
-//! DESIGN.md §15 carries the consolidated version table.
+//! `calibration`/`families` yields `None` for those — while a file
+//! newer than [`FORMAT_VERSION`] is rejected instead of being silently
+//! misread. DESIGN.md §15 carries the consolidated version table.
 
 use std::path::Path;
 
@@ -159,6 +161,12 @@ pub struct FrozenModel {
     /// calibration provenance (optional v2 section); `None` for files
     /// that predate it or models never calibrated
     pub calibration: Option<CalibProvenance>,
+    /// per-layer codebook family names (`FreezeQuant::name` tokens,
+    /// manifest order) chosen by the frontier's joint (bits, family)
+    /// search — an optional v2 section, purely descriptive: the
+    /// codebooks already carry the decoded levels, so serving never
+    /// reads this. `None` for single-family exports and older files
+    pub families: Option<Vec<String>>,
 }
 
 impl FrozenModel {
@@ -216,6 +224,7 @@ impl FrozenModel {
             state: st,
             aq: None,
             calibration: None,
+            families: None,
         })
     }
 
@@ -313,6 +322,15 @@ impl FrozenModel {
                     .map(|c| c.to_json())
                     .unwrap_or(Json::Null),
             ),
+            (
+                "families",
+                self.families
+                    .as_ref()
+                    .map(|fs| {
+                        Json::Arr(fs.iter().map(|f| s(f)).collect())
+                    })
+                    .unwrap_or(Json::Null),
+            ),
         ]);
         std::fs::write(dir.join("frozen.json"), meta.to_string())
             .with_context(|| format!("writing {}/frozen.json", dir.display()))?;
@@ -385,6 +403,31 @@ impl FrozenModel {
             None | Some(Json::Null) => None,
             Some(jc) => Some(CalibProvenance::from_json(jc)?),
         };
+        // optional v2 section like `calibration`: absent loads as None
+        let families = match j.get("families") {
+            None | Some(Json::Null) => None,
+            Some(jf) => {
+                let arr = jf
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("families not an array"))?;
+                let fs: Vec<String> = arr
+                    .iter()
+                    .map(|v| {
+                        v.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("families holds a non-string")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if fs.len() != layers.len() {
+                    return Err(anyhow!(
+                        "families names {} entries for {} layers",
+                        fs.len(),
+                        layers.len()
+                    ));
+                }
+                Some(fs)
+            }
+        };
         if let Some(a) = &aq {
             // a short tables array would silently serve f32 activations
             // for the missing layers while bits_a() still claims the
@@ -407,6 +450,7 @@ impl FrozenModel {
             state: tensors("state")?,
             aq,
             calibration,
+            families,
         })
     }
 }
@@ -504,11 +548,25 @@ mod tests {
             }],
             aq: None,
             calibration: None,
+            families: None,
         };
         let dir = std::env::temp_dir().join("uniq_frozen_test");
         model.save(&dir).unwrap();
         let loaded = FrozenModel::load(&dir).unwrap();
         assert_eq!(loaded, model);
+
+        // the optional per-layer families section roundtrips, and a
+        // length mismatch with the layer count is rejected on load
+        let mut with_fam = model.clone();
+        with_fam.families = Some(vec!["power".into()]);
+        let dir_f = std::env::temp_dir().join("uniq_frozen_test_fam");
+        with_fam.save(&dir_f).unwrap();
+        assert_eq!(FrozenModel::load(&dir_f).unwrap(), with_fam);
+        let mut bad_fam = model.clone();
+        bad_fam.families = Some(vec!["power".into(), "gauss".into()]);
+        bad_fam.save(&dir_f).unwrap();
+        let err = FrozenModel::load(&dir_f).unwrap_err();
+        assert!(err.to_string().contains("families"), "{err:#}");
 
         // the optional calibration provenance section roundtrips too
         let mut with_cal = model.clone();
@@ -588,6 +646,7 @@ mod tests {
             state: vec![],
             aq: None,
             calibration: None,
+            families: None,
         };
         let dir = std::env::temp_dir().join("uniq_frozen_test_future");
         model.save(&dir).unwrap();
@@ -619,6 +678,7 @@ mod tests {
             state: vec![],
             aq: None,
             calibration: None,
+            families: None,
         };
         // 4-bit packing: 8x smaller than f32 (+ 64-byte codebook)
         assert_eq!(m.quantized_bytes(), 4096 / 2 + 4 * 16);

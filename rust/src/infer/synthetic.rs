@@ -13,6 +13,31 @@ use crate::runtime::manifest::{Manifest, ParamMeta};
 use crate::runtime::ModelState;
 use crate::util::rng::Rng;
 
+/// Which per-qlayer weight distribution family the builder draws from.
+/// `Normal` is the python-parity He-normal init every existing caller
+/// gets; `Mixed` cycles gaussian / bimodal / bounded-uniform by qlayer
+/// index (all variance-matched to He's `2 / fan_in`), giving the
+/// frontier's family search genuinely heterogeneous layers to
+/// disagree over — no single codebook family fits all three shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightDist {
+    Normal,
+    Mixed,
+}
+
+impl WeightDist {
+    pub fn parse(v: &str) -> Result<WeightDist> {
+        match v {
+            "normal" => Ok(WeightDist::Normal),
+            "mixed" => Ok(WeightDist::Mixed),
+            other => Err(anyhow!(
+                "unknown --synth-dist '{other}' (expected normal or \
+                 mixed)"
+            )),
+        }
+    }
+}
+
 struct Builder {
     params: Vec<ParamMeta>,
     pvals: Vec<Vec<f32>>,
@@ -21,10 +46,11 @@ struct Builder {
     qlayers: Vec<String>,
     rng: Rng,
     offset: usize,
+    dist: WeightDist,
 }
 
 impl Builder {
-    fn new(seed: u64) -> Builder {
+    fn new(seed: u64, dist: WeightDist) -> Builder {
         Builder {
             params: Vec::new(),
             pvals: Vec::new(),
@@ -33,6 +59,7 @@ impl Builder {
             qlayers: Vec::new(),
             rng: Rng::new(seed),
             offset: 0,
+            dist,
         }
     }
 
@@ -75,9 +102,41 @@ impl Builder {
         self.svals.push(data);
     }
 
+    /// Weight init for the qlayer just opened: He-normal, or (`Mixed`)
+    /// one of three variance-matched shapes cycled by qlayer index, so
+    /// every distribution keeps He's `E[w²] = 2 / fan_in` and forward
+    /// magnitudes stay comparable across dists.
     fn he_normal(&mut self, n: usize, fan_in: usize) -> Vec<f32> {
         let scale = (2.0 / fan_in as f32).sqrt();
-        (0..n).map(|_| self.rng.normal() * scale).collect()
+        let kind = match self.dist {
+            WeightDist::Normal => 0,
+            WeightDist::Mixed => (self.qlayers.len() - 1) % 3,
+        };
+        match kind {
+            // gaussian (He-normal, python parity)
+            0 => (0..n).map(|_| self.rng.normal() * scale).collect(),
+            // two-point bimodal: exactly ±scale (E[w²] = scale² with no
+            // renormalization) — the shape of an already-binarized /
+            // distilled layer, and an exact-reconstruction case for
+            // data-driven codebooks (k-quantile reproduces ±scale with
+            // zero error at any k ≥ 2)
+            1 => (0..n)
+                .map(|_| {
+                    if self.rng.next_f64() < 0.5 {
+                        -scale
+                    } else {
+                        scale
+                    }
+                })
+                .collect(),
+            // bounded uniform on [-√3·scale, √3·scale]
+            _ => (0..n)
+                .map(|_| {
+                    let u = (2.0 * self.rng.next_f64() - 1.0) as f32;
+                    u * 3.0f32.sqrt() * scale
+                })
+                .collect(),
+        }
     }
 
     fn qlayer(&mut self, name: &str) -> usize {
@@ -141,7 +200,16 @@ impl Builder {
 
 /// MLP (python/compile/mlp.py): three quantizable dense layers.
 pub fn mlp(hidden: usize, classes: usize, seed: u64) -> (Manifest, ModelState) {
-    let mut b = Builder::new(seed);
+    mlp_dist(hidden, classes, seed, WeightDist::Normal)
+}
+
+pub fn mlp_dist(
+    hidden: usize,
+    classes: usize,
+    seed: u64,
+    dist: WeightDist,
+) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed, dist);
     let d_in = 32 * 32 * 3;
     b.dense("fc1", d_in, hidden);
     b.dense("fc2", hidden, hidden);
@@ -151,7 +219,16 @@ pub fn mlp(hidden: usize, classes: usize, seed: u64) -> (Manifest, ModelState) {
 
 /// ResNet-8 (python/compile/resnet.py `resnet8`): 3 groups × 1 block.
 pub fn resnet8(width: usize, classes: usize, seed: u64) -> (Manifest, ModelState) {
-    let mut b = Builder::new(seed);
+    resnet8_dist(width, classes, seed, WeightDist::Normal)
+}
+
+pub fn resnet8_dist(
+    width: usize,
+    classes: usize,
+    seed: u64,
+    dist: WeightDist,
+) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed, dist);
     let widths = [width, width * 2, width * 4];
     b.conv("conv1", 3, widths[0], 3);
     b.batchnorm("bn1", widths[0]);
@@ -180,7 +257,16 @@ pub fn mobilenet_mini(
     classes: usize,
     seed: u64,
 ) -> (Manifest, ModelState) {
-    let mut b = Builder::new(seed);
+    mobilenet_mini_dist(width, classes, seed, WeightDist::Normal)
+}
+
+pub fn mobilenet_mini_dist(
+    width: usize,
+    classes: usize,
+    seed: u64,
+    dist: WeightDist,
+) -> (Manifest, ModelState) {
+    let mut b = Builder::new(seed, dist);
     b.conv("conv1", 3, width, 3);
     b.batchnorm("bn1", width);
     let cfg = [
@@ -208,10 +294,29 @@ pub fn model(
     classes: usize,
     seed: u64,
 ) -> Result<(Manifest, ModelState)> {
+    model_dist(name, width, classes, seed, WeightDist::Normal)
+}
+
+/// Synthetic variant by artifact name, with an explicit weight
+/// distribution (`--synth-dist`).
+pub fn model_dist(
+    name: &str,
+    width: usize,
+    classes: usize,
+    seed: u64,
+    dist: WeightDist,
+) -> Result<(Manifest, ModelState)> {
     match name {
-        "mlp" => Ok(mlp(if width > 0 { width * 16 } else { 256 }, classes, seed)),
-        "resnet8" => Ok(resnet8(width.max(1), classes, seed)),
-        "mobilenet_mini" => Ok(mobilenet_mini(width.max(1), classes, seed)),
+        "mlp" => Ok(mlp_dist(
+            if width > 0 { width * 16 } else { 256 },
+            classes,
+            seed,
+            dist,
+        )),
+        "resnet8" => Ok(resnet8_dist(width.max(1), classes, seed, dist)),
+        "mobilenet_mini" => {
+            Ok(mobilenet_mini_dist(width.max(1), classes, seed, dist))
+        }
         other => Err(anyhow!(
             "no synthetic builder for '{other}' \
              (available: mlp, resnet8, mobilenet_mini)"
@@ -250,6 +355,40 @@ mod tests {
         assert!(!m.qlayers.contains(&"g0b0/down".to_string()));
         // 3x3 conv1 + 3 blocks x (2 convs) + 2 downsamples + fc
         assert_eq!(m.qlayers.len(), 1 + 6 + 2 + 1);
+    }
+
+    #[test]
+    fn mixed_dist_cycles_shapes_and_keeps_he_variance() {
+        let (m, s) = mlp_dist(256, 10, 3, WeightDist::Mixed);
+        let weight = |name: &str| -> (&Vec<f32>, usize) {
+            let i = m.params.iter().position(|p| p.name == name).unwrap();
+            (&s.params[i], m.params[i].shape[0])
+        };
+        for name in ["fc1/w", "fc2/w", "fc3/w"] {
+            let (w, fan_in) = weight(name);
+            let want = 2.0 / fan_in as f32;
+            let var: f32 =
+                w.iter().map(|v| v * v).sum::<f32>() / w.len() as f32;
+            assert!(
+                (var - want).abs() < want * 0.2,
+                "{name} variance {var} vs {want}"
+            );
+        }
+        // fc2 (qlayer 1) is two-point bimodal: every weight is exactly
+        // ±scale, and both modes occur.
+        let (w2, fan2) = weight("fc2/w");
+        let scale2 = (2.0 / fan2 as f32).sqrt();
+        assert!(w2.iter().all(|&v| v == scale2 || v == -scale2));
+        assert!(w2.iter().any(|&v| v > 0.0) && w2.iter().any(|&v| v < 0.0));
+        // fc3 (qlayer 2) is bounded uniform on ±√3·scale.
+        let (w3, fan3) = weight("fc3/w");
+        let bound = 3.0f32.sqrt() * (2.0 / fan3 as f32).sqrt();
+        assert!(w3.iter().all(|v| v.abs() <= bound * 1.0001));
+        // fc1 (qlayer 0) is gaussian: has tail mass beyond the
+        // uniform bound, unlike the other two shapes.
+        let (w1, fan1) = weight("fc1/w");
+        let b1 = 3.0f32.sqrt() * (2.0 / fan1 as f32).sqrt();
+        assert!(w1.iter().any(|v| v.abs() > b1));
     }
 
     #[test]

@@ -55,13 +55,20 @@ fn parse_policy(s: &str) -> Result<SchedulePolicy> {
 }
 
 fn parse_quantizer(s: &str) -> Result<FreezeQuant> {
-    Ok(match s {
-        "gauss" | "kquantile" => FreezeQuant::KQuantileGauss,
-        "empirical" => FreezeQuant::KQuantileEmpirical,
-        "kmeans" => FreezeQuant::KMeans,
-        "uniform" => FreezeQuant::Uniform,
-        _ => return Err(anyhow!("unknown quantizer {s}")),
-    })
+    FreezeQuant::parse(s).ok_or_else(|| anyhow!("unknown quantizer {s}"))
+}
+
+/// `--families` value for `uniq frontier`: `all` or a comma-separated
+/// subset of quantizer names (same vocabulary as `--quantizer`).
+fn parse_families(s: &str) -> Result<Vec<FreezeQuant>> {
+    if s == "all" {
+        return Ok(FreezeQuant::ALL.to_vec());
+    }
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(parse_quantizer)
+        .collect()
 }
 
 fn load_data(cli: &Cli, classes: usize, n: usize) -> Result<Dataset> {
@@ -1099,11 +1106,15 @@ fn cmd_frontier(cli: &Cli) -> Result<()> {
                 );
             }
             let default_width = if model == "resnet8" { 8 } else { 16 };
-            infer::synthetic::model(
+            let dist = infer::synthetic::WeightDist::parse(
+                cli.get("synth-dist").unwrap_or("normal"),
+            )?;
+            infer::synthetic::model_dist(
                 model,
                 cli.get_usize("width", default_width),
                 cli.get_usize("classes", 10),
                 cli.get_usize("seed", 7) as u64,
+                dist,
             )?
         };
         let template = FrozenModel::export(&m, &state, fq, start_w)?;
@@ -1137,6 +1148,10 @@ fn cmd_frontier(cli: &Cli) -> Result<()> {
                 .map_err(|_| anyhow!("--{flag} '{v}' is not a number")),
         }
     };
+    let families = match cli.get("families") {
+        Some(v) => parse_families(v)?,
+        None => Vec::new(),
+    };
     let cfg = FrontierConfig {
         start_bits_w: start_w,
         start_bits_a: start_a,
@@ -1144,6 +1159,7 @@ fn cmd_frontier(cli: &Cli) -> Result<()> {
         min_bits_a: cli.get_u32("min-bits-a", 2),
         mode,
         fq,
+        families,
         budget_gbops: parse_opt_f64("budget-gbops")?,
         target_acc: parse_opt_f64("target-acc")?,
         max_steps: cli.get_usize("steps", 32),
@@ -1174,6 +1190,13 @@ fn cmd_frontier(cli: &Cli) -> Result<()> {
     );
     let result = ctx.search()?;
     let sel = result.frontier[result.selected].clone();
+    if sel.alloc.distinct_families() > 1 {
+        println!(
+            "selected allocation mixes {} codebook families: {}",
+            sel.alloc.distinct_families(),
+            sel.alloc.fmt_fam()
+        );
+    }
     if let Some(dir) = cli.get("export") {
         // the selected allocation freezes into the ordinary v2 format
         // (with calibration provenance) and serves unchanged
@@ -1210,11 +1233,13 @@ fn cmd_frontier(cli: &Cli) -> Result<()> {
             .unwrap_or_default()
     );
     if let Some(path) = cli.get("out") {
+        let occ = ctx.occupancy(&sel.alloc);
         let j = result_json(
             &model_name,
             &name_refs,
             &cfg,
             ctx.provenance.as_ref(),
+            Some(&occ),
             &result,
         );
         std::fs::write(path, j.to_string())?;

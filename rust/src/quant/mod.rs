@@ -11,13 +11,17 @@
 //!   * `KQuantileEmpirical` — same, with empirical quantiles/medians.
 //!   * `Uniform` — equal-width bins on `[-3σ, 3σ]`, midpoint levels.
 //!   * `KMeans` — Lloyd-Max (ℓ₂-optimal) quantizer.
+//!   * `PowerCompand` — uniform grid in the power-companded domain
+//!     `sign(x)·|x|^alpha`, alpha grid-fit per layer (PowerQuant-style).
 
 pub mod kmeans;
 pub mod kquantile;
+pub mod power;
 pub mod uniform;
 
 pub use kmeans::KMeans;
 pub use kquantile::{KQuantileEmpirical, KQuantileGauss};
+pub use power::PowerCompand;
 pub use uniform::Uniform;
 
 /// A fitted scalar quantizer: a set of increasing thresholds partitioning

@@ -1,0 +1,232 @@
+//! Power-law companding quantizer family (PowerQuant-style automorphism;
+//! LCQ's fixed-form cousin): weights are quantized on a uniform grid in
+//! the companded domain `y = sign(x)·|x|^alpha`, and the thresholds and
+//! levels are mapped back through the inverse before they leave the fit.
+//!
+//! Because the map is strictly monotone, binning in x against the mapped
+//! thresholds is equivalent to binning the companded value in y — and the
+//! codebook LUT stores the *decoded* levels, so serving absorbs the
+//! inverse map for free: v2/v3 execute a power-companded layer exactly
+//! like any other codebook, bit-identically (DESIGN §16).
+
+use super::{Quantizer, QuantizerFit, Uniform};
+use crate::stats::norm_icdf;
+
+/// Alpha grid searched by `fit_best`. Contains 1.0 (the identity map),
+/// so power-compand never loses to the plain uniform grid in
+/// reconstruction MSE; values < 1 densify bins near zero (where weight
+/// mass concentrates), 1.5 spreads them toward the tails.
+pub const ALPHA_GRID: [f32; 7] = [0.25, 0.4, 0.5, 2.0 / 3.0, 0.8, 1.0, 1.5];
+
+/// `sign(x)·|x|^alpha` — strictly increasing for alpha > 0, odd, fixes 0.
+pub fn compand(alpha: f32, x: f32) -> f32 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x.signum() * x.abs().powf(alpha)
+    }
+}
+
+/// Inverse of `compand(alpha, ·)` (same family with exponent 1/alpha).
+pub fn decompand(alpha: f32, y: f32) -> f32 {
+    compand(1.0 / alpha, y)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCompand {
+    pub alpha: f32,
+}
+
+impl Default for PowerCompand {
+    fn default() -> Self {
+        PowerCompand { alpha: 0.5 }
+    }
+}
+
+impl PowerCompand {
+    /// Grid-search alpha minimizing reconstruction MSE. Strict `<` with
+    /// first-wins ties keeps the result deterministic, and since the
+    /// grid contains 1.0 the winner is never worse than `Uniform`.
+    pub fn fit_best(xs: &[f32], k: usize) -> (f32, Quantizer) {
+        let mut best: Option<(f32, Quantizer, f64)> = None;
+        for &alpha in ALPHA_GRID.iter() {
+            let q = PowerCompand { alpha }.fit(xs, k);
+            let mse = q.mse(xs);
+            if best.as_ref().map_or(true, |(_, _, m)| mse < *m) {
+                best = Some((alpha, q, mse));
+            }
+        }
+        let (alpha, q, _) = best.unwrap();
+        (alpha, q)
+    }
+
+    /// Data-free fit on the standard normal: alpha-grid search over a
+    /// centre-of-mass sample grid (`norm_icdf((i+0.5)/n)`, the same grid
+    /// the Uniform coverage test uses). Scale by σ and shift by μ at the
+    /// use site, like `KMeans::fit_gaussian`.
+    pub fn fit_best_gaussian(k: usize) -> (f32, Quantizer) {
+        let n = 4001usize;
+        let xs: Vec<f32> = (0..n)
+            .map(|i| norm_icdf((i as f64 + 0.5) / n as f64) as f32)
+            .collect();
+        Self::fit_best(&xs, k)
+    }
+}
+
+impl QuantizerFit for PowerCompand {
+    fn fit(&self, xs: &[f32], k: usize) -> Quantizer {
+        assert!(k >= 2 && !xs.is_empty());
+        assert!(
+            self.alpha.is_finite() && self.alpha > 0.0,
+            "compand alpha must be positive, got {}",
+            self.alpha
+        );
+        // alpha == 1 must *reduce exactly* to the uniform grid; the
+        // powf(1.0) float round-trip is not guaranteed bit-identical,
+        // so delegate instead of companding through the identity.
+        if self.alpha == 1.0 {
+            return Uniform.fit(xs, k);
+        }
+        let ys: Vec<f32> = xs.iter().map(|&x| compand(self.alpha, x)).collect();
+        let q = Uniform.fit(&ys, k);
+        Quantizer {
+            thresholds: q
+                .thresholds
+                .iter()
+                .map(|&t| decompand(self.alpha, t))
+                .collect(),
+            levels: q
+                .levels
+                .iter()
+                .map(|&l| decompand(self.alpha, l))
+                .collect(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "power-compand"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn alpha_one_is_exactly_the_uniform_grid() {
+        let xs = gaussian(2000, 11);
+        for k in [2usize, 4, 16] {
+            let p = PowerCompand { alpha: 1.0 }.fit(&xs, k);
+            let u = Uniform.fit(&xs, k);
+            assert_eq!(p.thresholds, u.thresholds, "k={k}");
+            assert_eq!(p.levels, u.levels, "k={k}");
+        }
+    }
+
+    #[test]
+    fn compand_is_odd_and_strictly_monotone() {
+        for &alpha in ALPHA_GRID.iter() {
+            let pts: Vec<f32> =
+                (-20..=20).map(|i| i as f32 * 0.17).collect();
+            for w in pts.windows(2) {
+                assert!(
+                    compand(alpha, w[0]) < compand(alpha, w[1]),
+                    "alpha {alpha}: not increasing at {w:?}"
+                );
+            }
+            for &x in pts.iter() {
+                assert_eq!(compand(alpha, -x), -compand(alpha, x));
+                let rt = decompand(alpha, compand(alpha, x));
+                assert!((rt - x).abs() <= 1e-4 * x.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_sorted_levels_interleave_for_all_alphas() {
+        let xs = gaussian(3000, 5);
+        for &alpha in ALPHA_GRID.iter() {
+            let q = PowerCompand { alpha }.fit(&xs, 16);
+            assert_eq!(q.k(), 16);
+            for w in q.thresholds.windows(2) {
+                assert!(w[0] < w[1], "alpha {alpha}: {:?}", q.thresholds);
+            }
+            for i in 0..q.thresholds.len() {
+                assert!(
+                    q.levels[i] < q.thresholds[i]
+                        && q.thresholds[i] < q.levels[i + 1],
+                    "alpha {alpha}: level/threshold interleaving broken"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn levels_quantize_to_themselves() {
+        let xs = gaussian(2000, 3);
+        for &alpha in ALPHA_GRID.iter() {
+            let q = PowerCompand { alpha }.fit(&xs, 8);
+            for (i, &l) in q.levels.iter().enumerate() {
+                assert_eq!(q.bin(l), i, "alpha {alpha} level {i}");
+            }
+        }
+    }
+
+    /// Heavy-tailed data (product of two normals, excess kurtosis like
+    /// a trained weight tensor with outliers): companding wins, and by
+    /// a wide margin (mirror-verified pw/un ratios 0.42–0.74).
+    #[test]
+    fn best_alpha_on_heavy_tails_compresses_and_beats_uniform() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f32> =
+            (0..4000).map(|_| r.normal() * r.normal() * 0.2).collect();
+        for k in [4usize, 8, 16] {
+            let (alpha, q) = PowerCompand::fit_best(&xs, k);
+            let un = Uniform.fit(&xs, k).mse(&xs);
+            let pw = q.mse(&xs);
+            assert!(pw < un, "k={k}: power {pw} not below uniform {un}");
+            assert!(
+                alpha < 1.0,
+                "k={k}: heavy tails should prefer compression, got {alpha}"
+            );
+        }
+    }
+
+    /// On a PURE Gaussian the identity map wins: alpha < 1 piles
+    /// resolution into a neighbourhood of zero that a Gaussian doesn't
+    /// overweight enough to pay for the coarsened shoulders. fit_best
+    /// must therefore return alpha = 1.0 (never worse than Uniform by
+    /// construction) — a regression test for the grid containing 1.0.
+    #[test]
+    fn best_alpha_on_pure_gaussian_is_identity() {
+        let xs = gaussian(4000, 9);
+        for k in [4usize, 8, 16] {
+            let (alpha, q) = PowerCompand::fit_best(&xs, k);
+            assert_eq!(alpha, 1.0, "k={k}");
+            let un = Uniform.fit(&xs, k);
+            assert_eq!(q.thresholds, un.thresholds, "k={k}");
+            assert_eq!(q.levels, un.levels, "k={k}");
+        }
+    }
+
+    #[test]
+    fn gaussian_table_is_symmetric_and_ordered() {
+        let (_, q) = PowerCompand::fit_best_gaussian(8);
+        for i in 0..4 {
+            assert!(
+                (q.levels[i] + q.levels[7 - i]).abs() < 2e-2,
+                "{:?}",
+                q.levels
+            );
+        }
+        for w in q.levels.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -109,4 +109,61 @@ mod tests {
         );
         assert!(hi / lo < 1.05, "empirical quantile bins ragged: {he:?}");
     }
+
+    /// Consistency property: the k-quantile fit's occupancy deficit
+    /// `1 - balance` vanishes as the sample grows — more data can only
+    /// place the Gaussian-quantile thresholds better.
+    #[test]
+    fn quantile_occupancy_approaches_uniform_with_samples() {
+        let k = 16usize;
+        let deficit = |n: usize| -> f64 {
+            let xs = gaussian(n, 0.1, 1.3, 29);
+            let q = crate::quant::KQuantileGauss.fit(&xs, k);
+            1.0 - occupancy_balance(&bin_occupancy(&xs, &q.thresholds))
+        };
+        let small = deficit(500);
+        let large = deficit(50_000);
+        assert!(
+            large < small,
+            "occupancy deficit grew with samples: {small} -> {large}"
+        );
+        assert!(large < 1e-3, "50k-sample deficit too large: {large}");
+    }
+
+    /// Lloyd's with k-quantile init never abandons a bin on its own
+    /// training set: every level keeps at least one training sample.
+    #[test]
+    fn kmeans_never_leaves_an_empty_bin_on_training_data() {
+        for seed in 0..10u64 {
+            let xs = gaussian(400, 0.0, 1.0, seed);
+            for k in [4usize, 8, 16] {
+                let q = crate::quant::KMeans::default().fit(&xs, k);
+                let h = bin_occupancy(&xs, &q.thresholds);
+                assert_eq!(h.len(), k);
+                assert!(
+                    h.iter().all(|&c| c > 0),
+                    "seed {seed} k={k}: empty bin in {h:?}"
+                );
+            }
+        }
+    }
+
+    /// Power companding at alpha = 1 is the identity map, so its grid —
+    /// thresholds, levels, and therefore measured occupancy — is
+    /// exactly the uniform [-3σ, 3σ] grid's.
+    #[test]
+    fn power_alpha_one_matches_uniform_grid_occupancy() {
+        let xs = gaussian(5_000, -0.2, 0.9, 13);
+        for k in [4usize, 16] {
+            let qp = crate::quant::PowerCompand { alpha: 1.0 }.fit(&xs, k);
+            let qu = crate::quant::Uniform.fit(&xs, k);
+            assert_eq!(qp.thresholds, qu.thresholds, "k={k}");
+            assert_eq!(qp.levels, qu.levels, "k={k}");
+            assert_eq!(
+                bin_occupancy(&xs, &qp.thresholds),
+                bin_occupancy(&xs, &qu.thresholds),
+                "k={k}"
+            );
+        }
+    }
 }

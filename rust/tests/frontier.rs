@@ -18,7 +18,15 @@
 //!     exactly once, every drop saves BOPS, and rows sort by
 //!     degradation;
 //!   * a `--data`-style calibration dir with a malformed file fails
-//!     loudly with a typed error naming that file.
+//!     loudly with a typed error naming that file;
+//!   * the family axis (`frontier_family_*`, DESIGN.md §16): every
+//!     codebook family's export re-serves bit-identically through v2
+//!     AND v3 (env-drivable per CI matrix cell via `UNIQ_FAMILY` /
+//!     `UNIQ_FAMILY_BITS`), the best power-compand fit beats the
+//!     uniform grid's occupancy balance on Gaussian weights, and
+//!     `--families all` on a heterogeneous synthetic mlp yields a
+//!     frontier point mixing ≥ 2 distinct families whose export
+//!     round-trips and serves identically on both engines.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -29,11 +37,14 @@ use uniq::data::calib;
 use uniq::experiments::frontier::{
     Allocation, BitDim, FrontierConfig, FrontierCtx,
 };
+use uniq::infer::synthetic::WeightDist;
 use uniq::infer::{
     kernels, synthetic, AqMode, CalibProvenance, FrozenModel, Graph,
     KernelMode, PackedBits, PreparedWeights, ServeConfig, ServeModel,
     Server,
 };
+use uniq::quant::{power, QuantizerFit, Uniform};
+use uniq::stats::occupancy::{bin_occupancy, occupancy_balance};
 use uniq::util::rng::Rng;
 
 const ARCHS: [(&str, usize); 3] =
@@ -369,6 +380,7 @@ fn served_pricing_decomposes_over_per_layer_widths() {
     let floor = Allocation {
         w: vec![2; start.w.len()],
         a: start.a.iter().map(|b| b.map(|_| 2)).collect(),
+        fam: start.fam.clone(),
     };
     let (mfloor, _) = ctx.realize(&floor).unwrap();
     let lo = graph.served_complexity(&mfloor).bops;
@@ -419,6 +431,220 @@ fn sensitivity_ranking_is_complete_and_sorted() {
             "sensitivity rows out of order"
         );
     }
+}
+
+/// v2-vs-v3 logit parity for one realized model against a forward
+/// that was computed before save/reload.
+fn assert_reserves_bit_identically(
+    m: &FrozenModel,
+    weights: &PreparedWeights,
+    dir: &Path,
+    label: &str,
+) {
+    let graph = Graph::from_model(m).unwrap();
+    let img_len: usize = m.image.iter().product();
+    let x = randvec(3 * img_len, 57);
+    let direct = graph
+        .forward(m, weights, &x, 3, KernelMode::Lut)
+        .unwrap();
+    m.save(dir).unwrap();
+    let loaded = FrozenModel::load(dir).unwrap();
+    assert_eq!(&loaded, m, "{label}: save/load not bit-exact");
+    let g2 = Graph::from_model(&loaded).unwrap();
+    let w2 = PreparedWeights::lut_only(&loaded, &g2);
+    let v2 = g2
+        .forward(&loaded, &w2, &x, 3, KernelMode::Lut)
+        .unwrap();
+    assert_eq!(v2, direct, "{label}: reload changed v2 logits");
+    let v3 = g2
+        .forward(&loaded, &w2, &x, 3, KernelMode::LutV3)
+        .unwrap();
+    assert_eq!(v3, direct, "{label}: v3 drifted from v2");
+}
+
+/// Family-matrix CI gate: each codebook family × each weight width
+/// exports through the frontier's realize path and re-serves
+/// bit-identically through v2 AND v3. `UNIQ_FAMILY` /
+/// `UNIQ_FAMILY_BITS` pin one (family, bits) cell per CI job; unset,
+/// the whole matrix runs.
+#[test]
+fn frontier_family_export_serves_bit_identically_v2_v3() {
+    let combos: Vec<(FreezeQuant, u32)> = match (
+        std::env::var("UNIQ_FAMILY"),
+        std::env::var("UNIQ_FAMILY_BITS"),
+    ) {
+        (Ok(f), Ok(b)) => vec![(
+            FreezeQuant::parse(&f)
+                .unwrap_or_else(|| panic!("bad UNIQ_FAMILY '{f}'")),
+            b.parse().expect("bad UNIQ_FAMILY_BITS"),
+        )],
+        _ => FreezeQuant::ALL
+            .iter()
+            .flat_map(|&f| [(f, 2u32), (f, 4u32)])
+            .collect(),
+    };
+    for (fam, bits) in combos {
+        let label = format!("{}@w{bits}", fam.name());
+        let (m, state) = synthetic::model("mlp", 2, 10, 23).unwrap();
+        let template =
+            FrozenModel::export(&m, &state, fam, bits).unwrap();
+        let raw: Vec<Vec<f32>> = (0..template.layers.len())
+            .map(|q| state.qlayer_weights(&m, q).unwrap().to_vec())
+            .collect();
+        let img_len: usize = template.image.iter().product();
+        let images = randvec(8 * img_len, 91);
+        let n_layers = template.layers.len();
+        let mut ctx = FrontierCtx::new(
+            template,
+            raw,
+            images,
+            None,
+            FrontierConfig {
+                start_bits_w: bits,
+                start_bits_a: 4,
+                min_bits_w: 2,
+                min_bits_a: 2,
+                mode: AqMode::Quantile, // v3 needs aq tables
+                fq: fam,
+                batch: 8,
+                ..FrontierConfig::default()
+            },
+        )
+        .unwrap();
+        let start = ctx.start_point().alloc.clone();
+        assert_eq!(start.fam, vec![fam; n_layers], "{label}");
+        let (frozen, weights) = ctx.realize(&start).unwrap();
+        assert_eq!(
+            frozen.families,
+            Some(vec![fam.name().to_string(); n_layers]),
+            "{label}: frozen.json families section"
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("uniq_frontier_fam_{}_{bits}", fam.name()));
+        assert_reserves_bit_identically(&frozen, &weights, &dir, &label);
+    }
+}
+
+/// The family-matrix job's quantitative claim: on HEAVY-TAILED weights
+/// (product of two normals — excess kurtosis like a trained layer's
+/// outlier-laden tensor) the best power-compand fit uses alpha < 1
+/// (finer bins where the mass concentrates) and spreads the weights
+/// across its bins strictly better than the uniform [-3σ, 3σ] grid.
+/// On a PURE Gaussian the identity alpha = 1 wins fit_best — companding
+/// buys nothing there (verified in validate_family_mirror.py + the
+/// power.rs unit tests) — so the fixture must actually have tails.
+#[test]
+fn frontier_family_power_occupancy_beats_uniform_on_heavy_tails() {
+    let mut rng = Rng::new(33);
+    let xs: Vec<f32> = (0..20_000)
+        .map(|_| rng.normal() * rng.normal() * 0.2)
+        .collect();
+    for k in [4usize, 16] {
+        let (alpha, qp) = power::fit_best(&xs, k);
+        assert!(
+            alpha < 1.0,
+            "k={k}: best alpha {alpha} did not compress the tails"
+        );
+        let qu = Uniform.fit(&xs, k);
+        let bp = occupancy_balance(&bin_occupancy(&xs, &qp.thresholds));
+        let bu = occupancy_balance(&bin_occupancy(&xs, &qu.thresholds));
+        assert!(
+            bp > bu,
+            "k={k}: power balance {bp} <= uniform balance {bu}"
+        );
+    }
+}
+
+/// Acceptance gate: `--families all` on a heterogeneous mlp
+/// (`--synth-dist mixed`: gaussian / two-point / bounded-uniform
+/// layers) emits a frontier with ≥ 1 point mixing ≥ 2 distinct
+/// families, and the selected allocation's export re-serves
+/// bit-identically through v2 and v3. The mix is deterministic: the
+/// two-point layer reconstructs *exactly* (MSE 0) under the empirical
+/// k-quantile family, which wins that tie by family order, while the
+/// gaussian layer's argmin is a data-driven fit with strictly lower
+/// MSE than the empirical medians.
+#[test]
+fn frontier_family_search_mixes_families() {
+    let (m, state) =
+        synthetic::model_dist("mlp", 1, 10, 23, WeightDist::Mixed)
+            .unwrap();
+    let template = FrozenModel::export(
+        &m,
+        &state,
+        FreezeQuant::KQuantileGauss,
+        4,
+    )
+    .unwrap();
+    let raw: Vec<Vec<f32>> = (0..template.layers.len())
+        .map(|q| state.qlayer_weights(&m, q).unwrap().to_vec())
+        .collect();
+    let img_len: usize = template.image.iter().product();
+    let images = randvec(8 * img_len, 91);
+    let mut ctx = FrontierCtx::new(
+        template,
+        raw,
+        images,
+        None,
+        FrontierConfig {
+            families: FreezeQuant::ALL.to_vec(),
+            mode: AqMode::Quantile,
+            ..small_cfg()
+        },
+    )
+    .unwrap();
+
+    // the start allocation already mixes: per-layer MSE argmin differs
+    // across the heterogeneous layers
+    let start = ctx.start_point().clone();
+    assert!(
+        start.alloc.distinct_families() >= 2,
+        "start did not mix families: {:?}",
+        start.alloc.fam
+    );
+    assert_eq!(
+        start.alloc.fam[1],
+        FreezeQuant::KQuantileEmpirical,
+        "two-point fc2 must pick the exact-reconstruction family"
+    );
+
+    let r = ctx.search().unwrap();
+    assert!(
+        r.frontier
+            .iter()
+            .any(|p| p.alloc.distinct_families() >= 2),
+        "no frontier point mixes families"
+    );
+    let sel = r.frontier[r.selected].clone();
+
+    // per-layer occupancy evidence: one balance score per layer in (0,1]
+    let occ = ctx.occupancy(&sel.alloc);
+    assert_eq!(occ.len(), sel.alloc.w.len());
+    assert!(
+        occ.iter().all(|&o| o > 0.0 && o <= 1.0 + 1e-12),
+        "occupancy balance out of range: {occ:?}"
+    );
+
+    // the selected export records its families and re-serves
+    // bit-identically on both engines
+    let (frozen, weights) = ctx.realize(&sel.alloc).unwrap();
+    assert_eq!(
+        frozen.families,
+        Some(
+            sel.alloc
+                .fam
+                .iter()
+                .map(|f| f.name().to_string())
+                .collect::<Vec<_>>()
+        )
+    );
+    let dir = std::env::temp_dir().join("uniq_frontier_fam_mixed");
+    assert_reserves_bit_identically(
+        &frozen,
+        &weights,
+        &dir,
+        "families-all selected",
+    );
 }
 
 /// The `--data DIR` contract: a malformed calibration file fails with

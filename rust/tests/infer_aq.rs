@@ -1,7 +1,7 @@
 //! Activation-quantization parity suite — the CI bitwidth matrix runs
 //! this file once per (mode, bits) cell via `UNIQ_AQ_MODE` /
-//! `UNIQ_AQ_BITS` (both uniform and quantile at 4 bits when unset, so a
-//! plain `cargo test` still covers both families).
+//! `UNIQ_AQ_BITS` (uniform, quantile and power at 4 bits when unset, so
+//! a plain `cargo test` still covers every family).
 //!
 //! Gates, per cell:
 //!   * `aq = off` stays **bit-identical** to the PR-4 engine (v1 == v2,
@@ -52,7 +52,11 @@ fn matrix_cfgs() -> Vec<(AqMode, u32)> {
                 .expect("UNIQ_AQ_MODE must not be 'none'"),
             bits,
         )],
-        Err(_) => vec![(AqMode::Uniform, bits), (AqMode::Quantile, bits)],
+        Err(_) => vec![
+            (AqMode::Uniform, bits),
+            (AqMode::Quantile, bits),
+            (AqMode::Power, bits),
+        ],
     }
 }
 
@@ -181,6 +185,7 @@ fn aq_activations_snap_to_level_budget() {
                 tables: vec![Some(table.clone())],
             }),
             calibration: None,
+            families: None,
         };
         // ops mirror build_mlp's non-final dense: relu'd => aq site
         let graph = Graph::new(
